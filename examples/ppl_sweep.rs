@@ -1,0 +1,28 @@
+//! Perplexity sweep driver — regenerates paper Tables 1, 2 and 5.
+//!
+//!     cargo run --release --example ppl_sweep -- --table 1 [--tokens 4096]
+
+use tpcc::tables::{common, table1, table2, table5};
+use tpcc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let table = args.get_usize("table", 1);
+    let tokens = args.get_usize("tokens", common::eval_tokens(4096));
+    match table {
+        1 => {
+            let t = table1::run(tokens)?;
+            table1::print(&t);
+        }
+        2 => {
+            let rows = table2::run(tokens)?;
+            table2::print(&rows);
+        }
+        5 => {
+            let rows = table5::run(tokens)?;
+            table5::print(&rows);
+        }
+        _ => anyhow::bail!("--table must be 1, 2 or 5"),
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! End-to-end serving validation (DESIGN.md): replay a synthetic request
+//! trace (Poisson arrivals, mixed prompt lengths sampled from the test
+//! corpus) through the full coordinator — continuous batcher, KV-cache
+//! pool, TP engine — once with uncompressed collectives and once with
+//! the paper's FP4 scheme. Reports TTFT/TPOT/throughput percentiles.
+//!
+//!     cargo run --release --example serve_trace -- --requests 24 --rate 4
+
+use std::time::Instant;
+
+use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest};
+use tpcc::model::weights::Weights;
+use tpcc::runtime::Runtime;
+use tpcc::tables::common;
+use tpcc::tp::{EngineOptions, TpEngine};
+use tpcc::util::cli::Args;
+use tpcc::util::rng::Rng;
+
+struct TraceResult {
+    compress: String,
+    ttft_p50: f64,
+    ttft_p95: f64,
+    tpot_p50: f64,
+    throughput_tok_s: f64,
+    wire_mb: f64,
+    saved_mb: f64,
+}
+
+fn run_trace(compress: &str, n_requests: usize, rate_per_s: f64) -> anyhow::Result<TraceResult> {
+    let corpus = common::corpus("test")?;
+    let spec = compress.to_string();
+    let (handle, join) = spawn(
+        move || {
+            let root = common::artifacts_root()?;
+            let rt = Runtime::load(&root)?;
+            let weights = Weights::load(&root.join("weights/micro"))?;
+            TpEngine::new(
+                rt,
+                &weights,
+                EngineOptions::new("micro", 2)
+                    .with_compress(&spec)
+                    .with_profile("l4"),
+            )
+        },
+        CoordinatorOptions { decode_batch: 8, ..Default::default() },
+    )?;
+
+    let mut rng = Rng::new(42);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        // prompt: random corpus slice of 16..200 bytes; 8..32 new tokens
+        let len = 16 + rng.below(184);
+        let start = rng.below(corpus.len() - 300);
+        let prompt: String = corpus[start..].chars().take(len).collect();
+        let max_new = 8 + rng.below(24);
+        pending.push(handle.submit(GenRequest {
+            prompt,
+            max_new_tokens: max_new,
+            greedy: true,
+            stop_token: -1,
+        }));
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            rng.exponential(rate_per_s),
+        ));
+    }
+    let mut total_tokens = 0usize;
+    for rx in pending {
+        let resp = rx.recv()?;
+        total_tokens += resp.new_tokens;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = handle.metrics.clone();
+    let ttft = m.ttft.snapshot();
+    let tpot = m.tpot.snapshot();
+    let out = TraceResult {
+        compress: compress.to_string(),
+        ttft_p50: ttft.percentile(50.0),
+        ttft_p95: ttft.percentile(95.0),
+        tpot_p50: tpot.percentile(50.0),
+        throughput_tok_s: total_tokens as f64 / wall,
+        wire_mb: m.comm_bytes_sent.get() as f64 / 1e6,
+        saved_mb: m.comm_bytes_saved.get() as f64 / 1e6,
+    };
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap()?;
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 24);
+    let rate = args.get_f64("rate", 4.0);
+    println!("serve_trace: {n} requests, Poisson rate {rate}/s, micro model, TP=2, decode batch 8");
+
+    let mut rows = Vec::new();
+    for compress in ["none", "fp4_e2m1_b32_e8m0"] {
+        println!("... replaying trace with compress={compress}");
+        rows.push(run_trace(compress, n, rate)?);
+    }
+
+    println!(
+        "\n{:<22} {:>10} {:>10} {:>10} {:>12} {:>10} {:>10}",
+        "compress", "ttft p50", "ttft p95", "tpot p50", "tok/s", "wire MB", "saved MB"
+    );
+    println!("{}", "-".repeat(92));
+    for r in &rows {
+        println!(
+            "{:<22} {:>9.3}s {:>9.3}s {:>8.1}ms {:>12.1} {:>10.2} {:>10.2}",
+            r.compress,
+            r.ttft_p50,
+            r.ttft_p95,
+            r.tpot_p50 * 1e3,
+            r.throughput_tok_s,
+            r.wire_mb,
+            r.saved_mb
+        );
+    }
+    println!("\nserve_trace OK — record these rows in EXPERIMENTS.md");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! SoTA comparison driver — regenerates paper Table 4 (MX4 vs the Bian
+//! et al. baselines: channel-wise INT4 and TopK-3x).
+//!
+//!     cargo run --release --example sota_compare -- [--tokens 4096]
+
+use tpcc::tables::{common, table4};
+use tpcc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let tokens = args.get_usize("tokens", common::eval_tokens(4096));
+    let t = table4::run(tokens)?;
+    table4::print(&t);
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! TTFT profiling driver — regenerates paper Table 3 (analytic paper-
+//! scale deployments + live CPU-PJRT runs) and, with `--crossover`, the
+//! §5.2/§6 claim that compression stops paying off once the interconnect
+//! is fast enough: sweeps link bandwidth and prints the speedup curve.
+//!
+//!     cargo run --release --example ttft_sweep -- [--crossover] [--reps 5]
+
+use tpcc::interconnect::{HwProfile, LinkModel};
+use tpcc::model::perf_model::{Scenario, LLAMA2_70B};
+use tpcc::mxfmt::baselines::Fp16;
+use tpcc::mxfmt::{MxCodec, MxScheme};
+use tpcc::tables::table3;
+use tpcc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+
+    let rows = table3::run_analytic();
+    table3::print(&rows, "analytic, paper-scale");
+
+    if args.has("crossover") {
+        println!("\nCrossover sweep — Llama-2 70B, TP=8, 2x128, FP4 E2M1/b32:");
+        println!("{:>14} {:>12} {:>12} {:>9}", "link GB/s", "uncomp TTFT", "comp TTFT", "speedup");
+        println!("{}", "-".repeat(52));
+        let mx = MxCodec::new(MxScheme::parse(table3::PAPER_SCHEME).unwrap());
+        let base = *HwProfile::by_name("l4").unwrap();
+        for gbps in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0] {
+            let mut prof = base;
+            prof.link = LinkModel { alpha_s: prof.link.alpha_s, beta_bytes_per_s: gbps * 1e9 };
+            // leak: benches are short-lived; HwProfile is Copy but Scenario
+            // wants &'static — use Box::leak for the sweep points.
+            let prof: &'static HwProfile = Box::leak(Box::new(prof));
+            let sc = Scenario { model: LLAMA2_70B, profile: prof, tp: 8, batch: 2, seq: 128 };
+            let unc = sc.ttft(&Fp16).total();
+            let cmp = sc.ttft(&mx).total();
+            println!("{:>14.0} {:>11.3}s {:>11.3}s {:>8.2}x", gbps, unc, cmp, unc / cmp);
+        }
+        println!("(speedup > 1 only while the link is slow: the paper's §6 limitation)");
+    }
+
+    // live section: micro model, bucket 8x128, l4 + a100 + cpu profiles
+    let reps = args.get_usize("reps", 5);
+    let mut live = Vec::new();
+    for profile in ["l4", "a100"] {
+        live.push(table3::run_live(profile, 2, 8, 128, reps, true)?);
+    }
+    table3::print(&live, "live micro model on CPU PJRT, virtual interconnect");
+    Ok(())
+}

@@ -1,0 +1,303 @@
+"""AOT exporter: lower every TP stage to HLO text + write the manifest.
+
+This is the compile-path boundary of the three-layer architecture:
+python runs here ONCE (`make artifacts`), and never again — the rust
+coordinator loads `artifacts/manifest.json`, compiles each HLO with the
+PJRT CPU client on first use, and serves requests with no python in the
+process.
+
+Interchange format is HLO **text** (not serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Exports, per model in configs.MODELS:
+  stages    — embed / attn(tp) / mlp(tp) / final over every shape bucket
+  comm ops  — reduce_add(tp) (uncompressed) and, for FUSED_SCHEMES,
+              quantize + dequant_reduce_add(tp) (compressed, Fig. 1b)
+  goldens   — MX codec vectors for the rust bit-exactness cross-check,
+              and staged-forward logits for the rust integration test
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (
+    BATCH_BUCKETS,
+    FUSED_SCHEMES,
+    MODELS,
+    SEQ_BUCKETS,
+    TP_DEGREES,
+    ModelConfig,
+)
+from .kernels import ref
+from .kernels.formats import BLOCK_SIZES, ELEM_FORMATS, SCALE_FORMATS, MxScheme, scheme
+
+F32 = jnp.float32
+I32 = jnp.int32
+U8 = jnp.uint8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Exporter:
+    def __init__(self, out_root: str):
+        self.out_root = out_root
+        self.entries = []
+        self.n_lowered = 0
+
+    def export(self, name: str, fn, in_specs, meta: dict):
+        """Lower fn(*in_specs) to HLO text at artifacts/hlo/<name>.hlo.txt."""
+        path = os.path.join("hlo", name + ".hlo.txt")
+        full = os.path.join(self.out_root, path)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(full, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_shape, (tuple, list)):
+            out_shape = (out_shape,)
+        self.entries.append(
+            {
+                "name": name,
+                "path": path,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+                ],
+                "outputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in out_shape
+                ],
+                **meta,
+            }
+        )
+        self.n_lowered += 1
+
+    def write_manifest(self, extra: dict):
+        manifest = {"version": 1, "artifacts": self.entries, **extra}
+        with open(os.path.join(self.out_root, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+
+# TP=2 is the primary serving degree (full bucket grid); other degrees are
+# exported over a reduced grid (decode + the 128-token prefill bucket) to
+# keep `make artifacts` fast -- Table 5's parallelism axis and the TTFT
+# sweep only need those.
+PRIMARY_TP = 2
+REDUCED_BUCKETS = [(1, 1), (8, 1), (1, 128), (8, 128)]
+
+
+def export_model_stages(ex: Exporter, cfg: ModelConfig):
+    d, hd, t, v = cfg.d_model, cfg.head_dim, cfg.max_seq, cfg.vocab
+    buckets = [(b, s) for b in BATCH_BUCKETS for s in SEQ_BUCKETS]
+
+    for b, s in buckets:
+        meta = {"model": cfg.name, "batch": b, "seq": s}
+        ex.export(
+            f"{cfg.name}/embed_b{b}_s{s}",
+            M.embed_stage,
+            [spec((b, s), I32), spec((v, d))],
+            {"kind": "embed", **meta},
+        )
+        ex.export(
+            f"{cfg.name}/final_b{b}_s{s}",
+            functools.partial(M.final_stage, cfg),
+            [spec((b, s, d)), spec((d,)), spec((d, v))],
+            {"kind": "final", **meta},
+        )
+        for tp in TP_DEGREES:
+            if tp != PRIMARY_TP and (b, s) not in REDUCED_BUCKETS:
+                continue
+            hn, fn_ = cfg.shard_heads(tp), cfg.shard_ff(tp)
+            wspecs = [
+                spec((d,)),
+                spec((d, hn * hd)),
+                spec((d, hn * hd)),
+                spec((d, hn * hd)),
+                spec((hn * hd, d)),
+            ]
+            if s > 1:
+                # prefill: no KV history flows through PJRT (TTFT path)
+                ex.export(
+                    f"{cfg.name}/attn_prefill_tp{tp}_b{b}_s{s}",
+                    functools.partial(M.attn_prefill_stage, cfg, tp),
+                    [spec((b, s, d))] + wspecs + [spec((b,), I32)],
+                    {"kind": "attn_prefill", "tp": tp, **meta},
+                )
+            else:
+                # decode: history cache as input, new-token slice as output
+                ex.export(
+                    f"{cfg.name}/attn_tp{tp}_b{b}_s{s}",
+                    functools.partial(M.attn_stage, cfg, tp),
+                    [spec((b, s, d))]
+                    + wspecs
+                    + [spec((b, hn, t, hd)), spec((b, hn, t, hd)), spec((b,), I32)],
+                    {"kind": "attn", "tp": tp, **meta},
+                )
+            ex.export(
+                f"{cfg.name}/mlp_tp{tp}_b{b}_s{s}",
+                functools.partial(M.mlp_stage, cfg, tp),
+                [spec((b, s, d)), spec((d,)), spec((d, fn_)), spec((d, fn_)), spec((fn_, d))],
+                {"kind": "mlp", "tp": tp, **meta},
+            )
+            ex.export(
+                f"{cfg.name}/reduce_add_tp{tp}_b{b}_s{s}",
+                M.reduce_add,
+                [spec((b, s, d)), spec((tp, b, s, d))],
+                {"kind": "reduce_add", "tp": tp, **meta},
+            )
+
+        # fused compressed-communication ops (paper Fig. 1b) for the
+        # headline schemes; the full sweep uses the bit-exact rust codec.
+        if (b, s) not in REDUCED_BUCKETS:
+            continue
+        for sname in FUSED_SCHEMES:
+            sch = parse_scheme(sname)
+            nb = d // sch.block
+            ex.export(
+                f"{cfg.name}/quant_{sname}_b{b}_s{s}",
+                functools.partial(M.quantize_op, s=sch),
+                [spec((b, s, d))],
+                {"kind": "quantize", "scheme": sname, **meta},
+            )
+            for tp in (2, 4):
+                ex.export(
+                    f"{cfg.name}/dqra_{sname}_tp{tp}_b{b}_s{s}",
+                    functools.partial(M.dequant_reduce_add, s=sch),
+                    [
+                        spec((b, s, d)),
+                        spec((tp, b, s, d), U8),
+                        spec((tp, b, s, nb), U8),
+                    ],
+                    {"kind": "dequant_reduce_add", "scheme": sname, "tp": tp, **meta},
+                )
+
+
+def parse_scheme(name: str) -> MxScheme:
+    """'fp4_e2m1_b32_e8m0' -> MxScheme."""
+    parts = name.split("_")
+    scale = parts[-1]
+    block = int(parts[-2][1:])
+    elem = "_".join(parts[:-2])
+    return scheme(elem, block, scale)
+
+
+def export_codec_goldens(out_root: str):
+    """Bit-exactness vectors for the rust MX codec, all schemes."""
+    gdir = os.path.join(out_root, "golden", "codec")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(2024)
+    base = rng.standard_normal((64, 96)).astype(np.float32)
+    spreadv = np.exp(rng.standard_normal((64, 96)) * 3).astype(np.float32)
+    x = base * spreadv
+    # salt in exact zeros, tiny and huge values (edge cases)
+    x[0, :8] = 0.0
+    x[1, 0] = 3e38
+    x[2, 0] = 1e-38
+    np.save(os.path.join(gdir, "x.npy"), x)
+    index = []
+    for en in ELEM_FORMATS:
+        for blk in BLOCK_SIZES:
+            for sn in SCALE_FORMATS:
+                sch = scheme(en, blk, sn)
+                codes, scales = ref.quantize_ref(jnp.asarray(x), sch)
+                deq = ref.dequantize_ref(codes, scales, sch)
+                tag = sch.name
+                np.save(os.path.join(gdir, f"{tag}.codes.npy"), np.asarray(codes))
+                np.save(os.path.join(gdir, f"{tag}.scales.npy"), np.asarray(scales))
+                np.save(os.path.join(gdir, f"{tag}.deq.npy"), np.asarray(deq))
+                index.append(tag)
+    with open(os.path.join(gdir, "index.json"), "w") as f:
+        json.dump({"schemes": index, "x": "x.npy"}, f, indent=1)
+
+
+def export_forward_goldens(out_root: str, weights_root: str):
+    """Staged-forward logits for the rust end-to-end integration test."""
+    gdir = os.path.join(out_root, "golden", "forward")
+    os.makedirs(gdir, exist_ok=True)
+    name = "nano"
+    cfg = MODELS[name]
+    wdir = os.path.join(weights_root, name)
+    if not os.path.exists(os.path.join(wdir, "train_log.json")):
+        print("forward goldens: weights missing, skipped")
+        return
+    p = {
+        os.path.splitext(f)[0]: jnp.asarray(np.load(os.path.join(wdir, f)))
+        for f in os.listdir(wdir)
+        if f.endswith(".npy")
+    }
+    rng = np.random.default_rng(5)
+    tokens = rng.integers(0, cfg.vocab, size=(1, 16)).astype(np.int32)
+    np.save(os.path.join(gdir, "tokens.npy"), tokens)
+    logits = M.tp_forward(cfg, p, jnp.asarray(tokens), tp=2, scheme=None)
+    np.save(os.path.join(gdir, "logits_tp2.npy"), np.asarray(logits))
+    sch = parse_scheme("fp4_e2m1_b32_e8m0")
+    logits_q = M.tp_forward(cfg, p, jnp.asarray(tokens), tp=2, scheme=sch)
+    np.save(os.path.join(gdir, "logits_tp2_fp4.npy"), np.asarray(logits_q))
+    with open(os.path.join(gdir, "meta.json"), "w") as f:
+        json.dump({"model": name, "tp": 2, "scheme": "fp4_e2m1_b32_e8m0"}, f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--skip-stages", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ex = Exporter(args.out)
+    if not args.skip_stages:
+        for mn in args.models.split(","):
+            tm = time.time()
+            export_model_stages(ex, MODELS[mn])
+            print(f"[aot] {mn}: {ex.n_lowered} artifacts so far ({time.time()-tm:.0f}s)", flush=True)
+    ex.write_manifest(
+        {
+            "models": {
+                n: {
+                    "vocab": c.vocab,
+                    "d_model": c.d_model,
+                    "n_layers": c.n_layers,
+                    "n_heads": c.n_heads,
+                    "head_dim": c.head_dim,
+                    "d_ff": c.d_ff,
+                    "max_seq": c.max_seq,
+                    "params": c.params,
+                }
+                for n, c in MODELS.items()
+            },
+            "tp_degrees": list(TP_DEGREES),
+            "seq_buckets": list(SEQ_BUCKETS),
+            "batch_buckets": list(BATCH_BUCKETS),
+            "fused_schemes": list(FUSED_SCHEMES),
+        }
+    )
+    export_codec_goldens(args.out)
+    export_forward_goldens(args.out, os.path.join(args.out, "weights"))
+    print(f"[aot] done: {ex.n_lowered} HLO artifacts in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Model family + shape-bucket configuration shared by train/aot/export.
+
+Three byte-level Llama-architecture models stand in for the paper's
+Llama-3.1 / Gemma-2 / Mistral families (DESIGN.md substitution table).
+Dims are chosen so that heads and FFN split evenly across every TP
+degree we export (1, 2, 4, 8) and the model dim is a multiple of every
+MX block size (8, 16, 32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    max_seq: int = 320  # KV-cache capacity
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def params(self) -> int:
+        d, h, hd, f = self.d_model, self.n_heads, self.head_dim, self.d_ff
+        per_layer = d * h * hd * 3 + h * hd * d + 3 * d * f + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+    def shard_heads(self, tp: int) -> int:
+        assert self.n_heads % tp == 0, (self.name, tp)
+        return self.n_heads // tp
+
+    def shard_ff(self, tp: int) -> int:
+        assert self.d_ff % tp == 0, (self.name, tp)
+        return self.d_ff // tp
+
+
+MODELS = {
+    # name                vocab  d    L  H  hd   ff
+    "nano": ModelConfig("nano", 256, 128, 2, 8, 16, 384),
+    "micro": ModelConfig("micro", 256, 192, 3, 8, 24, 512),
+    "small": ModelConfig("small", 256, 256, 3, 8, 32, 704),
+}
+
+TP_DEGREES = (1, 2, 4, 8)
+
+# Shape buckets exported to HLO (static PJRT shapes). S=1 is the decode
+# bucket; the rest serve prefill. The scheduler pads to the next bucket.
+SEQ_BUCKETS = (1, 16, 64, 128, 256)
+BATCH_BUCKETS = (1, 8)
+
+# Schemes that also get *fused* quantize / dequant+reduce HLO executables
+# (the full sweep runs through the bit-exact rust codec instead).
+FUSED_SCHEMES = ("fp4_e2m1_b32_e8m0", "fp5_e2m2_b32_e8m0")
+
+# Training hyper-parameters (build-time; one-core CPU budget).
+TRAIN = {
+    "nano": dict(steps=240, batch=8, seq=128, lr=3e-3),
+    "micro": dict(steps=200, batch=8, seq=128, lr=2e-3),
+    "small": dict(steps=160, batch=8, seq=128, lr=2e-3),
+}

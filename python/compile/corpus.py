@@ -1,0 +1,164 @@
+"""Deterministic synthetic wikitext-like corpus.
+
+Substitute for Wikitext-2 (offline image has no datasets; see DESIGN.md
+substitution table). A seeded generator expands encyclopedic sentence
+templates over invented entity tables, yielding text with natural-language
+statistics (heading structure, varied sentence lengths, numbers, named
+entities, punctuation) -- enough for the byte-level LMs to reach a
+non-trivial perplexity so that quantization damage is measurable and
+ordered the way the paper's Table 1/5 axes order it.
+
+The split mirrors the paper's protocol: a *train* portion (we evaluate
+scheme search on a 10% slice of it, like the paper) and a held-out
+*test* portion for the final Table 2/4 numbers.
+"""
+
+from __future__ import annotations
+
+import random
+
+FIRST = [
+    "Aldery", "Brimwick", "Caldens", "Dorvale", "Elmira", "Fenwick", "Garlan",
+    "Hartwell", "Iverness", "Jorvik", "Kestrel", "Lorwyn", "Marlow", "Norvell",
+    "Ostrand", "Pellam", "Quardon", "Rivenhall", "Selwyn", "Tormund",
+]
+SURN = [
+    "Ashworth", "Blackwood", "Carmody", "Draven", "Ellsworth", "Fairburn",
+    "Greaves", "Holloway", "Ingram", "Jessop", "Kirkland", "Lockhart",
+    "Mercer", "Northam", "Ormsby", "Pemberton", "Quill", "Ravenscroft",
+    "Standish", "Thorne",
+]
+PLACES = [
+    "Avonmere", "Bexley Cross", "Carrow Fen", "Dunmore", "Eastvale",
+    "Farrowgate", "Glenholm", "Harrowfield", "Istermouth", "Juneberry Hollow",
+    "Kilnmarsh", "Larkspur", "Mossbridge", "Netherby", "Oakhaven",
+    "Pellbrook", "Quarry Hill", "Redmarch", "Silverstrand", "Thornbury",
+]
+FIELDS = [
+    "astronomy", "botany", "cartography", "geology", "linguistics",
+    "mathematics", "medicine", "meteorology", "music theory", "philosophy",
+    "physics", "zoology", "archaeology", "chemistry", "economics",
+]
+INSTITUTIONS = [
+    "the Royal Academy", "the National Institute", "the Provincial College",
+    "the Observatory of %s" % PLACES[3], "the Museum of Natural History",
+    "the Society of Letters", "the Polytechnic School",
+]
+RIVERS = ["Arlen", "Brev", "Calder", "Dunwash", "Esk", "Fallow", "Grenn", "Hollis"]
+ADJ = [
+    "notable", "prominent", "influential", "celebrated", "controversial",
+    "prolific", "renowned", "early", "pioneering", "obscure",
+]
+WORKS = [
+    "treatise", "monograph", "survey", "compendium", "atlas", "catalogue",
+    "lexicon", "chronicle", "commentary", "almanac",
+]
+
+BIO_TEMPLATES = [
+    "{first} {surn} ( {by} – {dy} ) was a {adj} {field} scholar from {place} . "
+    "{surn} studied at {inst} , where {pron} published {pron_pos} first {work} in {wy} . ",
+    "{first} {surn} was born in {place} in {by} , the {ord} child of a {prof} . "
+    "After moving to {place2} in {my} , {pron} devoted {pron_pos} career to {field} . ",
+    "The {work} of {first} {surn} , completed in {wy} , remains a standard reference in {field} . "
+    "It catalogued {num} specimens collected along the river {river} . ",
+    "In {wy} , {surn} was elected to {inst} , an honour rarely extended to scholars of {field} at the time . ",
+    "{surn} 's later work turned to {field2} , producing a {adj} {work} that ran to {num} pages . ",
+]
+
+PLACE_TEMPLATES = [
+    "{place} is a market town on the river {river} , first recorded in {fy} . "
+    "The town grew around a {prof2} 's bridge and reached a population of {pop} by {cy} . ",
+    "The parish church of {place} , rebuilt in {fy} , is a {adj} example of regional masonry . "
+    "Its tower stands {num} feet above the churchyard . ",
+    "{place} lies {num} miles from {place2} along the old {field} road . "
+    "A weekly market has been held there since {fy} . ",
+    "During the floods of {cy} , the {river} rose {snum} feet at {place} , "
+    "damaging {num} dwellings and the lower mill . ",
+    "The railway reached {place} in {cy} , linking it to {place2} and ending the era of the {prof2} coaches . ",
+]
+
+EVENT_TEMPLATES = [
+    "The {ord} Congress of {field} convened at {place} in {cy} , drawing {num} delegates . "
+    "Its proceedings , edited by {surn} , filled three volumes . ",
+    "A {adj} dispute between {surn} and {surn2} over the classification of {field} "
+    "occupied the journals from {cy} to {cy2} . ",
+    "The {inst} prize of {cy} was awarded jointly to {surn} and {surn2} "
+    "for their {work} on the {river} valley . ",
+]
+
+PROFESSIONS = ["weaver", "printer", "surveyor", "apothecary", "clockmaker", "miller", "engraver"]
+ORDINALS = ["first", "second", "third", "fourth", "fifth", "sixth", "seventh"]
+
+
+def _sentence(rng: random.Random) -> str:
+    kind = rng.random()
+    if kind < 0.45:
+        t = rng.choice(BIO_TEMPLATES)
+    elif kind < 0.8:
+        t = rng.choice(PLACE_TEMPLATES)
+    else:
+        t = rng.choice(EVENT_TEMPLATES)
+    by = rng.randint(1680, 1890)
+    pron = rng.choice(["he", "she"])
+    return t.format(
+        first=rng.choice(FIRST),
+        surn=rng.choice(SURN),
+        surn2=rng.choice(SURN),
+        place=rng.choice(PLACES),
+        place2=rng.choice(PLACES),
+        field=rng.choice(FIELDS),
+        field2=rng.choice(FIELDS),
+        inst=rng.choice(INSTITUTIONS),
+        river=rng.choice(RIVERS),
+        adj=rng.choice(ADJ),
+        work=rng.choice(WORKS),
+        prof=rng.choice(PROFESSIONS),
+        prof2=rng.choice(PROFESSIONS),
+        ord=rng.choice(ORDINALS),
+        pron=pron,
+        pron_pos="his" if pron == "he" else "her",
+        by=by,
+        dy=by + rng.randint(40, 80),
+        wy=by + rng.randint(20, 40),
+        my=by + rng.randint(15, 30),
+        fy=rng.randint(1100, 1600),
+        cy=rng.randint(1700, 1900),
+        cy2=rng.randint(1700, 1900),
+        num=rng.randint(2, 900),
+        snum=rng.randint(2, 30),
+        pop=rng.randint(300, 20000),
+    )
+
+
+def _article(rng: random.Random) -> str:
+    title = f"{rng.choice(FIRST)} {rng.choice(SURN)}" if rng.random() < 0.5 else rng.choice(PLACES)
+    lines = [f" = {title} = \n\n"]
+    for _ in range(rng.randint(2, 4)):
+        if rng.random() < 0.4:
+            lines.append(f" = = {rng.choice(FIELDS).title()} = = \n\n")
+        para = " ".join(_sentence(rng) for _ in range(rng.randint(2, 5)))
+        lines.append(para + "\n\n")
+    return "".join(lines)
+
+
+def generate(n_bytes: int, seed: int = 0) -> str:
+    """Generate at least n_bytes of corpus text, deterministically."""
+    rng = random.Random(seed)
+    parts: list[str] = []
+    total = 0
+    while total < n_bytes:
+        a = _article(rng)
+        parts.append(a)
+        total += len(a)
+    return "".join(parts)
+
+
+def train_test(train_bytes: int = 400_000, test_bytes: int = 48_000, seed: int = 1234):
+    """Disjoint train/test streams (different seeds => different articles)."""
+    return generate(train_bytes, seed), generate(test_bytes, seed + 1)
+
+
+if __name__ == "__main__":
+    tr, te = train_test()
+    print(tr[:600])
+    print(f"train={len(tr)} test={len(te)} bytes")

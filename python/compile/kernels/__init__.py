@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + formats + jnp reference oracles."""
+
+from . import formats, matmul, mx, ref, rmsnorm  # noqa: F401

@@ -1,0 +1,157 @@
+"""MX (OCP Microscaling) format specifications.
+
+Shared by the pure-jnp reference (ref.py), the Pallas kernels (mx.py), the
+AOT exporter (golden vectors for the rust codec cross-check), and tests.
+
+An MX scheme = (element format, scale format, block size):
+
+  * element format -- tiny float ``ExMy`` (1 sign, x exponent, y mantissa
+    bits, no inf/nan, subnormals supported) or sign-magnitude ``INTk``.
+  * scale format   -- ``EdM0``: a power-of-two scale stored as a d-bit
+    biased exponent (exponent-only float, M=0).
+  * block size     -- number of consecutive values sharing one scale.
+
+Effective bits (paper Table 1/4.2):  elem_bits + scale_bits / block_size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ElemFormat:
+    """Element (value) data type of an MX block."""
+
+    name: str
+    is_float: bool
+    ebits: int  # exponent bits (float) -- 0 for INT
+    mbits: int  # mantissa bits (float) / magnitude bits (INT, excl. sign)
+
+    @property
+    def bits(self) -> int:
+        """Total storage bits per element, including the sign bit."""
+        return 1 + self.ebits + self.mbits
+
+    @property
+    def bias(self) -> int:
+        assert self.is_float
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        """Largest unbiased exponent (MX spec: no inf/nan, full code space).
+
+        For ExMy this is 2^(ebits-1); for INTk we define emax as
+        floor(log2(qmax)) = mbits - 1 + (qmax == 2^mbits - 1 ... ) -- the
+        exponent of the largest representable magnitude, used to map the
+        block amax onto the top of the code range.
+        """
+        if self.is_float:
+            return 1 << (self.ebits - 1)
+        # INTk: largest magnitude is 2^mbits - 1, floor(log2) = mbits - 1
+        return self.mbits - 1
+
+    @property
+    def emin(self) -> int:
+        """Smallest *normal* unbiased exponent (floats only)."""
+        assert self.is_float
+        return 1 - self.bias
+
+    @property
+    def max_value(self) -> float:
+        """Largest representable magnitude."""
+        if self.is_float:
+            # top exponent, all-ones mantissa (no inf/nan in MX elem types)
+            return float(2.0**self.emax * (2.0 - 2.0**-self.mbits))
+        return float((1 << self.mbits) - 1)
+
+    @property
+    def int_qmax(self) -> int:
+        assert not self.is_float
+        return (1 << self.mbits) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleFormat:
+    """EdM0 power-of-two scale: a d-bit biased exponent."""
+
+    ebits: int
+
+    @property
+    def name(self) -> str:
+        return f"E{self.ebits}M0"
+
+    @property
+    def bits(self) -> int:
+        return self.ebits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        # Symmetric clamp range [-(2^(d-1)-1), +(2^(d-1)-1)]; for E8M0 this
+        # matches the MX spec's [-127, 127] with 0xFF reserved for NaN.
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def emin(self) -> int:
+        return -self.emax
+
+
+# --- the paper's element dtype zoo (Section 4.1) -------------------------
+ELEM_FORMATS = {
+    "fp5_e3m1": ElemFormat("fp5_e3m1", True, 3, 1),
+    "fp5_e2m2": ElemFormat("fp5_e2m2", True, 2, 2),
+    "fp5_e1m3": ElemFormat("fp5_e1m3", True, 1, 3),
+    "fp4_e2m1": ElemFormat("fp4_e2m1", True, 2, 1),
+    "fp4_e1m2": ElemFormat("fp4_e1m2", True, 1, 2),
+    "fp3_e1m1": ElemFormat("fp3_e1m1", True, 1, 1),
+    "int3": ElemFormat("int3", False, 0, 2),
+    "int4": ElemFormat("int4", False, 0, 3),
+    "int5": ElemFormat("int5", False, 0, 4),
+}
+
+SCALE_FORMATS = {f"e{d}m0": ScaleFormat(d) for d in (4, 5, 6, 7, 8)}
+
+BLOCK_SIZES = (8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class MxScheme:
+    """A complete MX quantization scheme."""
+
+    elem: ElemFormat
+    scale: ScaleFormat
+    block: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.elem.name}_b{self.block}_{self.scale.name.lower()}"
+
+    @property
+    def effective_bits(self) -> float:
+        return self.elem.bits + self.scale.bits / self.block
+
+    @property
+    def compression_ratio(self) -> float:
+        """vs fp16 activations (the paper's uncompressed baseline)."""
+        return 16.0 / self.effective_bits
+
+    def wire_bytes(self, n_values: int) -> int:
+        """Bit-packed wire size for n_values (must be block-aligned)."""
+        assert n_values % self.block == 0
+        nblocks = n_values // self.block
+        bits = nblocks * (self.block * self.elem.bits + self.scale.bits)
+        return (bits + 7) // 8
+
+
+def scheme(elem: str, block: int, scale: str = "e8m0") -> MxScheme:
+    return MxScheme(ELEM_FORMATS[elem], SCALE_FORMATS[scale], block)
+
+
+# The paper's headline scheme for TTFT profiling (Table 3): FP4 E2M1,
+# block 32, E8M0 scale -> 4.25 effective bits.
+PAPER_TTFT_SCHEME = scheme("fp4_e2m1", 32, "e8m0")

@@ -1,0 +1,71 @@
+"""Blocked matmul Pallas kernel used by the TP linear layers.
+
+MXU-shaped: 128x128 output tiles with a K-loop over 128-wide slabs.
+The K axis is the innermost grid dimension and the output BlockSpec does
+not map it, so the same output tile stays resident in VMEM across the
+K-loop and serves as the accumulator (the classic Pallas matmul
+pattern; on real TPUs the MXU consumes bf16 operands -- here operands
+stay f32 because the CPU interpret path is our execution target, see
+DESIGN.md #Hardware-Adaptation).
+
+The row-parallel TP layers call this and hand the output tile straight
+to the MX quantizer (mx.py) while it is still in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tile sizes; shrunk automatically for small operands.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _pick(tile: int, dim: int) -> int:
+    t = min(tile, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Grid (m, n, k): accumulate x[m,k] @ w[k,n] into the (m,n) tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f32[M, K] @ f32[K, N] -> f32[M, N] (2-D only; callers flatten)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tm, tn, tk = _pick(TILE_M, m), _pick(TILE_N, n), _pick(TILE_K, k)
+    nk = k // tk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_flat(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Matmul over the last axis of an arbitrarily-batched x."""
+    lead = x.shape[:-1]
+    out = matmul(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(lead + (w.shape[-1],))

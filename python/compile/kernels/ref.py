@@ -1,0 +1,200 @@
+"""Pure-jnp bit-exact reference (oracle) for the MX quantization kernels.
+
+Every operation here is chosen to be exactly reproducible in the rust
+codec (rust/src/mxfmt/):
+
+  * floor(log2(x)) is computed from the f32 bit pattern (biased exponent
+    field), never via libm ``log2`` (whose last-ulp behaviour differs
+    between XLA and rust libm).
+  * powers of two are materialized by bit-assembling the f32 exponent
+    field, so scaling/unscaling multiplications are exact.
+  * mantissa rounding is round-to-nearest, ties-to-even (numpy/XLA
+    ``round`` == rust ``f32::round_ties_even``).
+
+The wire format produced by ``quantize_ref`` is (codes, scales):
+  codes  -- uint8, one element code per value: sign<<(e+m) | exp<<m | mant
+            for floats, sign<<m_bits | magnitude for INTs.
+  scales -- uint8, the biased scale exponent per block (bias of the
+            EdM0 format).
+Bit-packing to the true wire width happens in the rust codec; effective
+bits are accounted analytically everywhere else.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import ElemFormat, MxScheme, ScaleFormat
+
+
+def _floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(|x|)) for x > 0 via the f32 exponent field.
+
+    For normal f32 this is exactly the unbiased exponent. Subnormal f32
+    inputs (|x| < 2^-126) are mapped to -127 -- fine for activations,
+    and mirrored exactly by the rust codec.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _exp2i(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e for integer e in [-126, 127], by assembling f32 bits."""
+    e = jnp.clip(e, -126, 127)
+    return jax.lax.bitcast_convert_type(((e + 127) << 23).astype(jnp.int32), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# scale selection
+# --------------------------------------------------------------------------
+
+def block_scale_exp(amax: jnp.ndarray, elem: ElemFormat, scale: ScaleFormat) -> jnp.ndarray:
+    """Shared (unbiased) power-of-two exponent for a block given its amax.
+
+    MX spec: shared_exp = floor(log2(amax)) - emax_elem, so the largest
+    value in the block lands in the top binade of the element format.
+    Clamped into the EdM0 representable range; amax == 0 maps to the
+    smallest representable scale (codes will be all-zero anyway).
+    """
+    raw = _floor_log2(amax) - elem.emax
+    raw = jnp.where(amax > 0, raw, scale.emin)
+    return jnp.clip(raw, scale.emin, scale.emax)
+
+
+# --------------------------------------------------------------------------
+# element quantize / encode / decode
+# --------------------------------------------------------------------------
+
+def quantize_elem_float(v: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    """Round v (already divided by the block scale) onto the ExMy grid.
+
+    Returns the exactly-representable f32 value (not the bit code).
+    """
+    sign = jnp.where(v < 0, -1.0, 1.0).astype(jnp.float32)
+    a = jnp.abs(v.astype(jnp.float32))
+    maxv = jnp.float32(elem.max_value)
+    # exponent of the target binade; clamp to the normal/subnormal floor
+    e = jnp.clip(_floor_log2(a), elem.emin, elem.emax)
+    # quantization step in that binade: 2^(e - mbits)
+    step = _exp2i(e - elem.mbits)
+    q = jnp.round(a / step) * step  # ties-to-even; carry to next binade ok
+    q = jnp.minimum(q, maxv)  # saturate (MX: no inf)
+    q = jnp.where(a == 0, 0.0, q)
+    return sign * q
+
+
+def quantize_elem_int(v: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    """Round v onto the signed-magnitude INTk grid (integers)."""
+    qmax = jnp.float32(elem.int_qmax)
+    q = jnp.round(v.astype(jnp.float32))
+    return jnp.clip(q, -qmax, qmax)
+
+
+def encode_elem_float(q: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    """Bit-encode an exactly-representable ExMy value to its uint8 code."""
+    sign = (q < 0).astype(jnp.int32)
+    a = jnp.abs(q)
+    e = _floor_log2(a)
+    is_sub = (a == 0) | (e < elem.emin)
+    # normal: exp_field = e + bias, mant = a/2^(e-M) - 2^M
+    mant_n = jnp.round(a / _exp2i(e - elem.mbits)).astype(jnp.int32) - (1 << elem.mbits)
+    exp_n = e + elem.bias
+    # subnormal: exp_field = 0, mant = a / 2^(emin - M)
+    mant_s = jnp.round(a / _exp2i(jnp.full_like(e, elem.emin - elem.mbits))).astype(jnp.int32)
+    exp_f = jnp.where(is_sub, 0, exp_n)
+    mant_f = jnp.where(is_sub, mant_s, mant_n)
+    code = (sign << (elem.ebits + elem.mbits)) | (exp_f << elem.mbits) | mant_f
+    return code.astype(jnp.uint8)
+
+
+def decode_elem_float(code: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    code = code.astype(jnp.int32)
+    sign = (code >> (elem.ebits + elem.mbits)) & 1
+    exp_f = (code >> elem.mbits) & ((1 << elem.ebits) - 1)
+    mant = code & ((1 << elem.mbits) - 1)
+    # normal: (2^M + mant) * 2^(exp_f - bias - M); subnormal: mant * 2^(emin - M)
+    mag_n = ((1 << elem.mbits) + mant).astype(jnp.float32) * _exp2i(exp_f - elem.bias - elem.mbits)
+    mag_s = mant.astype(jnp.float32) * _exp2i(jnp.full_like(exp_f, elem.emin - elem.mbits))
+    mag = jnp.where(exp_f == 0, mag_s, mag_n)
+    return jnp.where(sign == 1, -mag, mag)
+
+
+def encode_elem_int(q: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    sign = (q < 0).astype(jnp.int32)
+    mag = jnp.abs(q).astype(jnp.int32)
+    return ((sign << elem.mbits) | mag).astype(jnp.uint8)
+
+
+def decode_elem_int(code: jnp.ndarray, elem: ElemFormat) -> jnp.ndarray:
+    code = code.astype(jnp.int32)
+    sign = (code >> elem.mbits) & 1
+    mag = (code & ((1 << elem.mbits) - 1)).astype(jnp.float32)
+    return jnp.where(sign == 1, -mag, mag)
+
+
+# --------------------------------------------------------------------------
+# full-tensor reference quantize / dequantize
+# --------------------------------------------------------------------------
+
+def _to_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    assert x.shape[-1] % block == 0, (x.shape, block)
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // block, block))
+
+
+def quantize_ref(x: jnp.ndarray, s: MxScheme):
+    """Reference MX quantize: x -> (codes uint8, scales uint8).
+
+    codes has x's shape; scales has shape x.shape[:-1] + (C/block,).
+    """
+    xb = _to_blocks(x.astype(jnp.float32), s.block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    sexp = block_scale_exp(amax, s.elem, s.scale)
+    inv = _exp2i(-sexp)[..., None]  # exact: scale is a power of two
+    v = xb * inv
+    if s.elem.is_float:
+        q = quantize_elem_float(v, s.elem)
+        codes = encode_elem_float(q, s.elem)
+    else:
+        q = quantize_elem_int(v, s.elem)
+        codes = encode_elem_int(q, s.elem)
+    scales = (sexp + s.scale.bias).astype(jnp.uint8)
+    return codes.reshape(x.shape), scales
+
+
+def dequantize_ref(codes: jnp.ndarray, scales: jnp.ndarray, s: MxScheme) -> jnp.ndarray:
+    cb = _to_blocks(codes, s.block)
+    if s.elem.is_float:
+        v = decode_elem_float(cb, s.elem)
+    else:
+        v = decode_elem_int(cb, s.elem)
+    sexp = scales.astype(jnp.int32) - s.scale.bias
+    out = v * _exp2i(sexp)[..., None]
+    return out.reshape(codes.shape).astype(jnp.float32)
+
+
+def fake_quantize_ref(x: jnp.ndarray, s: MxScheme) -> jnp.ndarray:
+    """quantize -> dequantize round trip (the error-injection view)."""
+    codes, scales = quantize_ref(x, s)
+    return dequantize_ref(codes, scales, s)
+
+
+# --------------------------------------------------------------------------
+# reference versions of the model kernels (oracles for pallas)
+# --------------------------------------------------------------------------
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def rmsnorm_ref(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def dequant_reduce_ref(codes: jnp.ndarray, scales: jnp.ndarray, s: MxScheme) -> jnp.ndarray:
+    """Decompress N gathered worker shards and sum them (paper Fig 1b).
+
+    codes: [N, ...], scales: [N, ...] -> sum over N of dequantized tensors.
+    """
+    return jnp.sum(jax.vmap(lambda c, sc: dequantize_ref(c, sc, s))(codes, scales), axis=0)

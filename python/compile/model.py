@@ -1,0 +1,356 @@
+"""L2: Llama-architecture model as explicit tensor-parallel worker stages.
+
+The model is written twice, on purpose:
+
+  * ``full_forward`` -- the monolithic reference used for training and as
+    the TP-equivalence oracle in tests (plain jnp, differentiable).
+  * the ``*_stage`` functions -- the per-worker shard programs that get
+    AOT-lowered to HLO and executed by the rust coordinator. Each stage
+    ends exactly where the paper's communication happens: the output of a
+    *row-parallel* linear layer is a partial sum that must be all-gathered
+    across the TP group and reduced (Fig. 1a). The compressed variants
+    fuse the Pallas MX quantizer into the producing stage and the
+    dequantize+reduce into the consuming side (Fig. 1b).
+
+Stages call the L1 Pallas kernels (matmul / rmsnorm / mx) so the lowered
+HLO exercises the same code the kernel tests verify.
+
+TP layout (Megatron-style):
+  attn:  wq/wk/wv column-parallel  [d, (H/n)*hd]  (heads split)
+         wo      row-parallel      [(H/n)*hd, d]  -> partial out
+  mlp :  w_gate/w_up column-parallel [d, f/n]
+         w_down  row-parallel        [f/n, d]     -> partial out
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import matmul as pk_matmul
+from .kernels import mx as pk_mx
+from .kernels import rmsnorm as pk_rmsnorm
+from .kernels.formats import MxScheme
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Flat name->array param dict (names match the npy export layout)."""
+    d, hd, nh, f, v = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.d_ff, cfg.vocab
+    qkv_dim = nh * hd
+    keys = jax.random.split(key, 4 + cfg.n_layers * 9)
+    p: Dict[str, jnp.ndarray] = {}
+
+    def norm_init(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    p["embed"] = norm_init(keys[0], 1.0, (v, d)) * 0.5
+    p["final_norm"] = jnp.ones((d,), jnp.float32)
+    p["lm_head"] = norm_init(keys[1], d, (d, v))
+    ki = 4
+    for l in range(cfg.n_layers):
+        p[f"l{l}.attn_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"l{l}.wq"] = norm_init(keys[ki + 0], d, (d, qkv_dim))
+        p[f"l{l}.wk"] = norm_init(keys[ki + 1], d, (d, qkv_dim))
+        p[f"l{l}.wv"] = norm_init(keys[ki + 2], d, (d, qkv_dim))
+        p[f"l{l}.wo"] = norm_init(keys[ki + 3], qkv_dim, (qkv_dim, d))
+        p[f"l{l}.mlp_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"l{l}.w_gate"] = norm_init(keys[ki + 4], d, (d, f))
+        p[f"l{l}.w_up"] = norm_init(keys[ki + 5], d, (d, f))
+        p[f"l{l}.w_down"] = norm_init(keys[ki + 6], f, (f, d))
+        ki += 9
+    return p
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def rope_angles(cfg: ModelConfig, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given positions: [S, hd/2]."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, S, hd]; rotate pairs (even, odd) halves."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _attention(q, k, v, q_pos, kv_len):
+    """q: [B,H,S,hd], k/v: [B,H,T,hd]; causal vs absolute kv positions.
+
+    q_pos: i32[B, S] absolute position of each query token;
+    kv_len: i32[B] number of valid cache slots per sequence.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    t = k.shape[2]
+    kv_pos = jnp.arange(t)  # [T]
+    causal = kv_pos[None, None, :] <= q_pos[:, :, None]  # [B, S, T]
+    valid = kv_pos[None, :] < kv_len[:, None]  # [B, T]
+    mask = causal & valid[:, None, :]
+    logits = jnp.where(mask[:, None], logits, jnp.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v)
+
+
+# --------------------------------------------------------------------------
+# monolithic reference forward (training / oracle)
+# --------------------------------------------------------------------------
+
+def full_forward(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens i32[B, S] -> logits f32[B, S, V]; pure jnp (differentiable)."""
+    b, s = tokens.shape
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = p["embed"][tokens]
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(cfg, pos)
+
+    def rms(x, g):
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + cfg.eps) * g
+
+    for l in range(cfg.n_layers):
+        h = rms(x, p[f"l{l}.attn_norm"])
+        q = (h @ p[f"l{l}.wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        k = (h @ p[f"l{l}.wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        v = (h @ p[f"l{l}.wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        qp = jnp.broadcast_to(pos[None, :], (b, s))
+        o = _attention(q, k, v, qp, jnp.full((b,), s, jnp.int32))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+        x = x + o @ p[f"l{l}.wo"]
+        h = rms(x, p[f"l{l}.mlp_norm"])
+        g = jax.nn.silu(h @ p[f"l{l}.w_gate"]) * (h @ p[f"l{l}.w_up"])
+        x = x + g @ p[f"l{l}.w_down"]
+
+    x = rms(x, p["final_norm"])
+    return x @ p["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# TP worker stages (AOT-exported; Pallas kernels inside)
+# --------------------------------------------------------------------------
+
+def embed_stage(tokens: jnp.ndarray, embed: jnp.ndarray) -> jnp.ndarray:
+    """tokens i32[B,S], embed f32[V,D] -> x f32[B,S,D] (replicated)."""
+    return embed[tokens]
+
+
+def _qkv_rope(cfg: ModelConfig, tp: int, x, norm_w, wq, wk, wv, pos):
+    """Shared front half: norm -> QKV projections -> RoPE.
+
+    Returns q, k, v as [B, Hn, S, hd] plus q_pos [B, S]. pos is a
+    *per-sequence* i32[B] vector so the continuous batcher can mix
+    sequences of different lengths in one batch.
+    """
+    b, s, _ = x.shape
+    hn = cfg.shard_heads(tp)
+    hd = cfg.head_dim
+
+    h = pk_rmsnorm.rmsnorm(x, norm_w, cfg.eps)
+    q = pk_matmul.matmul_flat(h, wq).reshape(b, s, hn, hd).transpose(0, 2, 1, 3)
+    k = pk_matmul.matmul_flat(h, wk).reshape(b, s, hn, hd).transpose(0, 2, 1, 3)
+    v = pk_matmul.matmul_flat(h, wv).reshape(b, s, hn, hd).transpose(0, 2, 1, 3)
+
+    q_pos = pos[:, None] + jnp.arange(s)[None, :]  # [B, S]
+    half = hd // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = q_pos.astype(jnp.float32)[..., None] * freqs  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, None], jnp.sin(ang)[:, None]  # [B, 1, S, hd/2]
+
+    def rot(t):
+        t1, t2 = jnp.split(t, 2, axis=-1)
+        return jnp.concatenate([t1 * cos - t2 * sin, t1 * sin + t2 * cos], axis=-1)
+
+    return rot(q), rot(k), v, q_pos
+
+
+def attn_prefill_stage(
+    cfg: ModelConfig,
+    tp: int,
+    x: jnp.ndarray,      # f32[B, S, D] (replicated input)
+    norm_w: jnp.ndarray, # f32[D]
+    wq: jnp.ndarray,     # f32[D, Hn*hd]  column shard
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,     # f32[Hn*hd, D]  row shard
+    pos: jnp.ndarray,    # i32[B]
+):
+    """Prefill attention (no KV history): -> (partial, k, v).
+
+    k/v are the [B, Hn, S, hd] slices for the rust-side cache (the
+    authoritative cache lives in the coordinator, so the TTFT-critical
+    prefill path moves NO cache-sized tensors through PJRT).
+    """
+    b, s, _ = x.shape
+    hn = cfg.shard_heads(tp)
+    q, k, v, q_pos = _qkv_rope(cfg, tp, x, norm_w, wq, wk, wv, pos)
+    o = _attention(q, k, v, q_pos, pos + s)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hn * cfg.head_dim)
+    partial = pk_matmul.matmul_flat(o, wo)  # row-parallel partial sum
+    return partial, k, v
+
+
+def attn_stage(
+    cfg: ModelConfig,
+    tp: int,
+    x: jnp.ndarray,        # f32[B, S, D]
+    norm_w: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    k_cache: jnp.ndarray,  # f32[B, Hn, T, hd] -- history only (input)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,      # i32[B]
+):
+    """Decode attention with KV history: -> (partial, k_new, v_new).
+
+    k_new/v_new are only the [B, Hn, S, hd] slices for the new tokens;
+    the coordinator mirrors the cache update on its side (the full cache
+    is never an HLO *output*, which keeps per-step PJRT traffic small).
+    """
+    b, s, _ = x.shape
+    hn = cfg.shard_heads(tp)
+    q, k, v, q_pos = _qkv_rope(cfg, tp, x, norm_w, wq, wk, wv, pos)
+
+    # write new k/v into each sequence's cache slice at [pos_b, pos_b+s)
+    def upd(cache, new, p):
+        return jax.lax.dynamic_update_slice(cache, new, (0, p, 0))
+
+    k_full = jax.vmap(upd)(k_cache, k, pos)
+    v_full = jax.vmap(upd)(v_cache, v, pos)
+
+    o = _attention(q, k_full, v_full, q_pos, pos + s)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hn * cfg.head_dim)
+    partial = pk_matmul.matmul_flat(o, wo)
+    return partial, k, v
+
+
+def mlp_stage(
+    cfg: ModelConfig,
+    tp: int,
+    x: jnp.ndarray,       # f32[B, S, D]
+    norm_w: jnp.ndarray,  # f32[D]
+    w_gate: jnp.ndarray,  # f32[D, Fn] column shard
+    w_up: jnp.ndarray,    # f32[D, Fn]
+    w_down: jnp.ndarray,  # f32[Fn, D] row shard
+) -> jnp.ndarray:
+    """One worker's SwiGLU MLP -> partial f32[B,S,D] (row-parallel)."""
+    h = pk_rmsnorm.rmsnorm(x, norm_w, cfg.eps)
+    g = jax.nn.silu(pk_matmul.matmul_flat(h, w_gate)) * pk_matmul.matmul_flat(h, w_up)
+    return pk_matmul.matmul_flat(g, w_down)
+
+
+def final_stage(cfg: ModelConfig, x: jnp.ndarray, norm_w: jnp.ndarray, lm_head: jnp.ndarray) -> jnp.ndarray:
+    """Final RMSNorm + LM head -> logits f32[B, S, V] (leader only)."""
+    h = pk_rmsnorm.rmsnorm(x, norm_w, cfg.eps)
+    return pk_matmul.matmul_flat(h, lm_head)
+
+
+# --- communication ops (exported as standalone executables) ----------------
+
+def reduce_add(x: jnp.ndarray, partials: jnp.ndarray) -> jnp.ndarray:
+    """Uncompressed path: x + sum_n partials[n] (residual + TP reduce)."""
+    return x + jnp.sum(partials, axis=0)
+
+
+def quantize_op(x: jnp.ndarray, s: MxScheme):
+    """Compress one worker's partial before the all-gather (Fig 1b 'encode')."""
+    return pk_mx.mx_quantize(x, s)
+
+
+def dequant_reduce_add(x: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray, s: MxScheme):
+    """Decompress N gathered shards, reduce, add residual (Fig 1b 'decode+sum')."""
+    return x + pk_mx.mx_dequant_reduce(codes, scales, s)
+
+
+# --------------------------------------------------------------------------
+# python-side TP-sharded forward (oracle for rust; used in tests)
+# --------------------------------------------------------------------------
+
+def shard_params(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tp: int, rank: int) -> Dict[str, jnp.ndarray]:
+    """Slice the full param dict into worker `rank`'s TP shard."""
+    hn, hd, fn = cfg.shard_heads(tp), cfg.head_dim, cfg.shard_ff(tp)
+    qa, qb = rank * hn * hd, (rank + 1) * hn * hd
+    fa, fb = rank * fn, (rank + 1) * fn
+    sp: Dict[str, jnp.ndarray] = {
+        "embed": p["embed"],
+        "final_norm": p["final_norm"],
+        "lm_head": p["lm_head"],
+    }
+    for l in range(cfg.n_layers):
+        sp[f"l{l}.attn_norm"] = p[f"l{l}.attn_norm"]
+        sp[f"l{l}.wq"] = p[f"l{l}.wq"][:, qa:qb]
+        sp[f"l{l}.wk"] = p[f"l{l}.wk"][:, qa:qb]
+        sp[f"l{l}.wv"] = p[f"l{l}.wv"][:, qa:qb]
+        sp[f"l{l}.wo"] = p[f"l{l}.wo"][qa:qb, :]
+        sp[f"l{l}.mlp_norm"] = p[f"l{l}.mlp_norm"]
+        sp[f"l{l}.w_gate"] = p[f"l{l}.w_gate"][:, fa:fb]
+        sp[f"l{l}.w_up"] = p[f"l{l}.w_up"][:, fa:fb]
+        sp[f"l{l}.w_down"] = p[f"l{l}.w_down"][fa:fb, :]
+    return sp
+
+
+def tp_forward(
+    cfg: ModelConfig,
+    p: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    tp: int,
+    scheme: MxScheme | None = None,
+) -> jnp.ndarray:
+    """Full forward assembled from the worker stages, with (optionally
+    compressed) reduce at every row-parallel boundary. This is the oracle
+    the rust coordinator must match (tests/test_tp_equivalence.py and the
+    rust integration tests both pin against it)."""
+    b, s = tokens.shape
+    shards = [shard_params(cfg, p, tp, r) for r in range(tp)]
+    x = embed_stage(tokens, p["embed"])
+    pos = jnp.zeros((b,), jnp.int32)
+
+    def comm(x, partials: List[jnp.ndarray]) -> jnp.ndarray:
+        stacked = jnp.stack(partials)
+        if scheme is None:
+            return reduce_add(x, stacked)
+        cs = [quantize_op(pt, scheme) for pt in partials]
+        codes = jnp.stack([c for c, _ in cs])
+        scales = jnp.stack([sc for _, sc in cs])
+        return dequant_reduce_add(x, codes, scales, scheme)
+
+    for l in range(cfg.n_layers):
+        parts = []
+        for r in range(tp):
+            pa, _, _ = attn_prefill_stage(
+                cfg, tp, x,
+                shards[r][f"l{l}.attn_norm"], shards[r][f"l{l}.wq"],
+                shards[r][f"l{l}.wk"], shards[r][f"l{l}.wv"], shards[r][f"l{l}.wo"],
+                pos,
+            )
+            parts.append(pa)
+        x = comm(x, parts)
+        parts = [
+            mlp_stage(
+                cfg, tp, x,
+                shards[r][f"l{l}.mlp_norm"], shards[r][f"l{l}.w_gate"],
+                shards[r][f"l{l}.w_up"], shards[r][f"l{l}.w_down"],
+            )
+            for r in range(tp)
+        ]
+        x = comm(x, parts)
+
+    return final_stage(cfg, x, p["final_norm"], p["lm_head"])

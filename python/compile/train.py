@@ -1,0 +1,114 @@
+"""Build-time pretraining of the three byte-level LMs.
+
+Runs ONCE under ``make artifacts`` (skipped when weights already exist).
+Trains each ModelConfig on the synthetic corpus with Adam + cosine decay,
+logs the loss curve to artifacts/weights/<model>/train_log.json, and
+saves every parameter as a .npy file the rust loader can parse.
+
+This is tooling, not the request path: the serving system never imports
+python (DESIGN.md three-layer contract). Training uses the monolithic
+jnp ``full_forward`` for speed; the exported *inference* stages run the
+Pallas kernels and are pinned against this model by the equivalence
+tests.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import MODELS, TRAIN, ModelConfig
+from .model import full_forward, init_params
+
+
+def loss_fn(cfg: ModelConfig, p, tokens):
+    """Next-byte cross-entropy over [B, S+1] token windows."""
+    logits = full_forward(cfg, p, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def adam_init(p):
+    zeros = jax.tree.map(jnp.zeros_like, p)
+    return zeros, jax.tree.map(jnp.zeros_like, p)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2, 3))
+def train_step(cfg: ModelConfig, p, m, v, tokens, step, lr_base, total_steps):
+    loss, grads = jax.value_and_grad(lambda q: loss_fn(cfg, q, tokens))(p)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t = step + 1
+    # cosine decay with short warmup
+    warm = jnp.minimum(1.0, t / 20.0)
+    lr = lr_base * warm * 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(t / total_steps, 1.0)))
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    p = jax.tree.map(lambda w, a, b: w - lr * a / (jnp.sqrt(b) + eps), p, mh, vh)
+    return p, m, v, loss
+
+
+def batches(data: np.ndarray, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(data) - (seq + 1)
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([data[i : i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def train_model(cfg: ModelConfig, data: np.ndarray, out_dir: str) -> dict:
+    hp = TRAIN[cfg.name]
+    key = jax.random.PRNGKey(42)
+    p = init_params(cfg, key)
+    m, v = adam_init(p)
+    it = batches(data, hp["batch"], hp["seq"], seed=7)
+    log = {"model": cfg.name, "params": cfg.params, "steps": [], "loss": []}
+    t0 = time.time()
+    for step in range(hp["steps"]):
+        tokens = jnp.asarray(next(it))
+        p, m, v, loss = train_step(cfg, p, m, v, tokens, step, hp["lr"], hp["steps"])
+        if step % 10 == 0 or step == hp["steps"] - 1:
+            lv = float(loss)
+            log["steps"].append(step)
+            log["loss"].append(round(lv, 4))
+            print(f"[{cfg.name}] step {step:4d} loss {lv:.4f} ({time.time()-t0:.0f}s)", flush=True)
+    log["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    for name, arr in p.items():
+        np.save(os.path.join(out_dir, name.replace("/", "_") + ".npy"), np.asarray(arr))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return log
+
+
+def main(out_root: str = "../artifacts/weights"):
+    train_text, test_text = corpus.train_test()
+    os.makedirs(out_root, exist_ok=True)
+    with open(os.path.join(out_root, "corpus_train.txt"), "w") as f:
+        f.write(train_text)
+    with open(os.path.join(out_root, "corpus_test.txt"), "w") as f:
+        f.write(test_text)
+    data = np.frombuffer(train_text.encode("utf-8"), dtype=np.uint8)
+    for name, cfg in MODELS.items():
+        out_dir = os.path.join(out_root, name)
+        if os.path.exists(os.path.join(out_dir, "train_log.json")):
+            print(f"[{name}] weights exist, skipping")
+            continue
+        train_model(cfg, data, out_dir)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/weights")

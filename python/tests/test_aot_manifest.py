@@ -1,0 +1,145 @@
+"""AOT exporter contract tests: validate artifacts/manifest.json against
+the configs the rust runtime depends on (no re-export needed — pure
+reads; skipped when `make artifacts` has not run)."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import BATCH_BUCKETS, FUSED_SCHEMES, MODELS, SEQ_BUCKETS, TP_DEGREES
+from compile.aot import PRIMARY_TP, REDUCED_BUCKETS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_names_unique_and_files_exist(manifest):
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert len(names) == len(set(names))
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["path"])), a["path"]
+
+
+def test_models_section_matches_configs(manifest):
+    for name, cfg in MODELS.items():
+        m = manifest["models"][name]
+        assert m["d_model"] == cfg.d_model
+        assert m["n_layers"] == cfg.n_layers
+        assert m["params"] == cfg.params
+        assert m["max_seq"] == cfg.max_seq
+
+
+def test_primary_tp_has_full_bucket_grid(manifest):
+    """The serving TP degree must cover every (batch, seq) bucket for
+    every stage kind the engine calls."""
+    arts = manifest["artifacts"]
+    for model in MODELS:
+        for b in BATCH_BUCKETS:
+            for s in SEQ_BUCKETS:
+                kinds = {"embed", "final", "mlp", "reduce_add"}
+                kinds.add("attn" if s == 1 else "attn_prefill")
+                for kind in kinds:
+                    found = [
+                        a
+                        for a in arts
+                        if a["model"] == model
+                        and a["kind"] == kind
+                        and a["batch"] == b
+                        and a["seq"] == s
+                        and (a.get("tp", PRIMARY_TP) in (PRIMARY_TP, 0) or kind in ("embed", "final"))
+                    ]
+                    assert found, f"{model}/{kind} missing bucket b{b} s{s}"
+
+
+def test_reduced_buckets_cover_all_tp_degrees(manifest):
+    arts = manifest["artifacts"]
+    for model in MODELS:
+        for tp in TP_DEGREES:
+            for (b, s) in REDUCED_BUCKETS:
+                kind = "attn" if s == 1 else "attn_prefill"
+                found = [
+                    a
+                    for a in arts
+                    if a["model"] == model and a["kind"] == kind and a.get("tp") == tp
+                    and a["batch"] == b and a["seq"] == s
+                ]
+                assert found, f"{model} tp{tp} missing {kind} b{b} s{s}"
+
+
+def test_attn_prefill_signature_shapes(manifest):
+    """Input/output shapes recorded in the manifest must match the stage
+    contract the rust engine builds literals for."""
+    for a in manifest["artifacts"]:
+        if a["kind"] != "attn_prefill":
+            continue
+        cfg = MODELS[a["model"]]
+        b, s, tp = a["batch"], a["seq"], a["tp"]
+        hn = cfg.n_heads // tp
+        ins = [tuple(i["shape"]) for i in a["inputs"]]
+        assert ins[0] == (b, s, cfg.d_model)  # x
+        assert ins[1] == (cfg.d_model,)  # norm
+        assert ins[2] == (cfg.d_model, hn * cfg.head_dim)  # wq
+        assert ins[-1] == (b,)  # pos vector
+        outs = [tuple(o["shape"]) for o in a["outputs"]]
+        assert outs[0] == (b, s, cfg.d_model)  # partial
+        assert outs[1] == (b, hn, s, cfg.head_dim)  # k slice
+        assert outs[2] == (b, hn, s, cfg.head_dim)  # v slice
+
+
+def test_decode_attn_takes_cache(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"] != "attn":
+            continue
+        cfg = MODELS[a["model"]]
+        assert a["seq"] == 1
+        ins = [tuple(i["shape"]) for i in a["inputs"]]
+        hn = cfg.n_heads // a["tp"]
+        assert (a["batch"], hn, cfg.max_seq, cfg.head_dim) in ins  # k_cache
+
+
+def test_fused_schemes_exported(manifest):
+    arts = manifest["artifacts"]
+    for model in MODELS:
+        for scheme in FUSED_SCHEMES:
+            q = [a for a in arts if a["model"] == model and a["kind"] == "quantize" and a["scheme"] == scheme]
+            d = [a for a in arts if a["model"] == model and a["kind"] == "dequant_reduce_add" and a["scheme"] == scheme]
+            assert q and d, f"{model}/{scheme} fused ops missing"
+            # quantize outputs: codes (uint8, same shape) + scales
+            o = q[0]["outputs"]
+            assert o[0]["dtype"] == "uint8"
+            assert o[1]["dtype"] == "uint8"
+
+
+def test_golden_dirs_present():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("run `make artifacts` first")
+    assert os.path.exists(os.path.join(ART, "golden/codec/index.json"))
+    assert os.path.exists(os.path.join(ART, "golden/forward/tokens.npy"))
+    with open(os.path.join(ART, "golden/codec/index.json")) as f:
+        idx = json.load(f)
+    # full scheme grid: 9 elem formats x 3 blocks x 5 scale widths
+    assert len(idx["schemes"]) == 9 * 3 * 5
+
+
+def test_weights_and_corpus_present():
+    wroot = os.path.join(ART, "weights")
+    if not os.path.exists(wroot):
+        pytest.skip("run `make artifacts` first")
+    for model in MODELS:
+        d = os.path.join(wroot, model)
+        assert os.path.exists(os.path.join(d, "train_log.json")), model
+        with open(os.path.join(d, "train_log.json")) as f:
+            log = json.load(f)
+        # training must actually have reduced the loss
+        assert log["loss"][0] > 2 * log["loss"][-1], (model, log["loss"][:1], log["loss"][-1:])
+    assert os.path.getsize(os.path.join(wroot, "corpus_train.txt")) > 100_000
+    assert os.path.getsize(os.path.join(wroot, "corpus_test.txt")) > 10_000

@@ -1,0 +1,73 @@
+"""Pallas matmul / rmsnorm kernels vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, rmsnorm
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 16, 8), (128, 128, 128), (48, 96, 160), (256, 128, 64), (1, 64, 32), (130, 70, 90)],
+)
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    got = np.array(matmul.matmul(a, b))
+    want = np.array(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.array(matmul.matmul(a, b)),
+        np.array(ref.matmul_ref(a, b)),
+        rtol=1e-4,
+        atol=1e-4 * max(1, k // 8),
+    )
+
+
+def test_matmul_flat_batched():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 5, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    got = np.array(matmul.matmul_flat(x, w))
+    want = np.array(jnp.einsum("bsk,kn->bsn", x, w))
+    assert got.shape == (2, 5, 16)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rows,d", [(1, 16), (128, 256), (37, 64), (300, 128)])
+def test_rmsnorm_matches_ref(rows, d):
+    rng = np.random.default_rng(rows + d)
+    x = jnp.asarray(rng.standard_normal((rows, d)).astype(np.float32) * 3)
+    g = jnp.asarray(rng.standard_normal((d,)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.array(rmsnorm.rmsnorm(x, g)),
+        np.array(ref.rmsnorm_ref(x, g)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(cx) == RMSNorm(x) for c > 0 (up to eps effects)."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    g = jnp.ones((64,), jnp.float32)
+    a = np.array(rmsnorm.rmsnorm(x, g))
+    b = np.array(rmsnorm.rmsnorm(x * 100.0, g))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,205 @@
+"""Pallas MX kernels vs the pure-jnp oracle: the CORE correctness signal.
+
+Hypothesis sweeps shapes, dtypes, block sizes, scale widths and value
+distributions; every case asserts the Pallas kernel output is *bit-equal*
+to ref.py (codes, scales) and that dequantization round-trips within the
+format's worst-case error bound.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mx, ref
+from compile.kernels.formats import (
+    BLOCK_SIZES,
+    ELEM_FORMATS,
+    SCALE_FORMATS,
+    MxScheme,
+    scheme,
+)
+
+ALL_SCHEMES = [
+    scheme(e, b, s)
+    for e in ELEM_FORMATS
+    for b in BLOCK_SIZES
+    for s in ("e8m0", "e5m0")
+]
+KEY_SCHEMES = [
+    scheme("fp4_e2m1", 32, "e8m0"),
+    scheme("fp5_e2m2", 32, "e8m0"),
+    scheme("fp3_e1m1", 8, "e8m0"),
+    scheme("int4", 16, "e5m0"),
+]
+
+
+def _rand(rng, shape, spread=4.0):
+    """Activations with outliers: normal * lognormal exponent spread."""
+    base = rng.standard_normal(shape).astype(np.float32)
+    scale = np.exp(rng.standard_normal(shape) * spread / 2).astype(np.float32)
+    return base * scale
+
+
+# --------------------------------------------------------------------------
+# bit-exactness pallas == ref
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", ALL_SCHEMES, ids=lambda s: s.name)
+def test_pallas_matches_ref_bitexact(s: MxScheme):
+    rng = np.random.default_rng(hash(s.name) % 2**31)
+    x = jnp.asarray(_rand(rng, (16, 4 * s.block)))
+    c_ref, sc_ref = ref.quantize_ref(x, s)
+    c_pal, sc_pal = mx.mx_quantize(x, s)
+    np.testing.assert_array_equal(np.array(c_ref), np.array(c_pal))
+    np.testing.assert_array_equal(np.array(sc_ref), np.array(sc_pal))
+    d_ref = ref.dequantize_ref(c_ref, sc_ref, s)
+    d_pal = mx.mx_dequantize(c_pal, sc_pal, s)
+    np.testing.assert_array_equal(np.array(d_ref), np.array(d_pal))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    nblk=st.integers(1, 8),
+    elem=st.sampled_from(sorted(ELEM_FORMATS)),
+    block=st.sampled_from(BLOCK_SIZES),
+    sbits=st.sampled_from(sorted(SCALE_FORMATS)),
+    seed=st.integers(0, 2**16),
+    spread=st.floats(0.1, 8.0),
+)
+def test_pallas_matches_ref_hypothesis(rows, nblk, elem, block, sbits, seed, spread):
+    s = scheme(elem, block, sbits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand(rng, (rows, nblk * block), spread))
+    c_ref, sc_ref = ref.quantize_ref(x, s)
+    c_pal, sc_pal = mx.mx_quantize(x, s)
+    np.testing.assert_array_equal(np.array(c_ref), np.array(c_pal))
+    np.testing.assert_array_equal(np.array(sc_ref), np.array(sc_pal))
+    np.testing.assert_array_equal(
+        np.array(ref.dequantize_ref(c_ref, sc_ref, s)),
+        np.array(mx.mx_dequantize(c_pal, sc_pal, s)),
+    )
+
+
+# --------------------------------------------------------------------------
+# quantization-error invariants
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", KEY_SCHEMES, ids=lambda s: s.name)
+def test_roundtrip_error_bound(s: MxScheme):
+    """Per-block relative error is bounded by the format's ulp at amax.
+
+    With shared exponent at the amax binade, the worst-case absolute
+    error within a block is ~0.5 ulp of the top binade (float) or 0.5
+    scale step (int), i.e. amax * 2^-(mbits) for floats.
+    """
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (32, 8 * s.block), spread=2.0)
+    d = np.array(ref.fake_quantize_ref(jnp.asarray(x), s))
+    xb = x.reshape(-1, s.block)
+    db = d.reshape(-1, s.block)
+    amax = np.abs(xb).max(axis=1)
+    if s.elem.is_float:
+        bound = amax * 2.0 ** (-s.elem.mbits) * 1.01
+    else:
+        bound = amax / s.elem.int_qmax * 1.01
+    err = np.abs(xb - db).max(axis=1)
+    assert (err <= np.maximum(bound, 1e-30)).all()
+
+
+def test_exact_values_survive():
+    """Values already on the grid must pass through unchanged."""
+    s = scheme("fp4_e2m1", 8)
+    # E2M1 grid: 0, 0.5, 1, 1.5, 2, 3, 4, 6 (x scale)
+    x = jnp.asarray(np.array([[0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]], np.float32))
+    d = np.array(ref.fake_quantize_ref(x, s))
+    np.testing.assert_array_equal(d, np.array(x))
+    # negatives too
+    d2 = np.array(ref.fake_quantize_ref(-x, s))
+    np.testing.assert_array_equal(d2, -np.array(x))
+
+
+def test_zero_block():
+    for s in KEY_SCHEMES:
+        x = jnp.zeros((4, 2 * s.block), jnp.float32)
+        c, sc = ref.quantize_ref(x, s)
+        d = np.array(ref.dequantize_ref(c, sc, s))
+        np.testing.assert_array_equal(d, 0.0)
+
+
+def test_saturation_on_outlier_block():
+    """An outlier dominates its block's scale; everything clamps, nothing is inf/nan."""
+    s = scheme("fp4_e2m1", 8, "e8m0")
+    x = np.full((1, 8), 1.0, np.float32)
+    x[0, 3] = 3.0e38  # near f32 max
+    d = np.array(ref.fake_quantize_ref(jnp.asarray(x), s))
+    assert np.isfinite(d).all()
+    assert d[0, 3] > 0
+
+
+def test_scale_clamp_small_values():
+    """Tiny blocks clamp to the scale format's emin (Table 5 scale-bits axis)."""
+    big = scheme("fp4_e2m1", 8, "e8m0")
+    small = scheme("fp4_e2m1", 8, "e4m0")
+    x = jnp.asarray(np.full((1, 8), 2.0**-30, np.float32))
+    d_big = np.array(ref.fake_quantize_ref(x, big))
+    d_small = np.array(ref.fake_quantize_ref(x, small))
+    # e8m0 can represent 2^-32 scales; e4m0 bottoms out at 2^-7
+    assert np.abs(d_big - np.array(x)).max() < 2.0**-31
+    assert (d_small == 0).all() or np.abs(d_small - np.array(x)).max() > np.abs(d_big - np.array(x)).max()
+
+
+@pytest.mark.parametrize("s", KEY_SCHEMES, ids=lambda s: s.name)
+def test_error_monotone_in_block_size(s: MxScheme):
+    """Averaged over many blocks, larger blocks cannot beat smaller ones
+    (coarser scale granularity) -- the paper's block-size axis."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(_rand(rng, (64, 96), spread=4.0))
+    errs = []
+    for b in (8, 16, 32):
+        sb = MxScheme(s.elem, s.scale, b)
+        d = ref.fake_quantize_ref(x, sb)
+        errs.append(float(jnp.mean((d - x) ** 2)))
+    assert errs[0] <= errs[1] * 1.05 and errs[1] <= errs[2] * 1.05
+
+
+def test_effective_bits_accounting():
+    assert scheme("fp4_e2m1", 32, "e8m0").effective_bits == pytest.approx(4.25)
+    assert scheme("fp4_e2m1", 8, "e8m0").effective_bits == pytest.approx(5.0)
+    assert scheme("fp5_e2m2", 32, "e8m0").effective_bits == pytest.approx(5.25)
+    assert scheme("int4", 16, "e5m0").effective_bits == pytest.approx(4.3125)
+    # wire bytes bit-packing
+    s = scheme("fp4_e2m1", 32, "e8m0")
+    assert s.wire_bytes(32) == (32 * 4 + 8 + 7) // 8
+    assert s.compression_ratio == pytest.approx(16 / 4.25)
+
+
+# --------------------------------------------------------------------------
+# fused dequant+reduce (the Fig 1b op)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+def test_dequant_reduce_matches_ref(n):
+    s = scheme("fp4_e2m1", 32)
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(_rand(rng, (n, 16, 2 * s.block)))
+    c, sc = mx.mx_quantize(x, s)
+    out_pal = mx.mx_dequant_reduce(c, sc, s)
+    out_ref = ref.dequant_reduce_ref(c, sc, s)
+    np.testing.assert_allclose(np.array(out_pal), np.array(out_ref), rtol=0, atol=1e-5)
+
+
+def test_dequant_reduce_equals_sum_of_dequant():
+    s = scheme("fp5_e2m2", 16)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(_rand(rng, (4, 8, 4 * s.block)))
+    c, sc = mx.mx_quantize(x, s)
+    fused = np.array(mx.mx_dequant_reduce(c, sc, s))
+    manual = sum(np.array(mx.mx_dequantize(c[i], sc[i], s)) for i in range(4))
+    np.testing.assert_allclose(fused, manual, rtol=0, atol=1e-5)

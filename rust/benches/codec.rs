@@ -1,0 +1,50 @@
+//! Codec microbenchmarks: encode/decode throughput of the MX codec and
+//! the Bian et al. baselines. The encode+decode path sits directly on
+//! the TP collective (the paper's "compression overhead"), so these
+//! numbers bound the achievable TTFT win — tracked in EXPERIMENTS.md
+//! §Perf.
+
+use tpcc::bench::{fmt_throughput, Bench};
+use tpcc::mxfmt::{compressor_from_spec, Compressor};
+use tpcc::util::rng::Rng;
+
+fn main() {
+    let n = 1 << 20; // 1M values = one 70B-scale partial (2x64xd8192)
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0f32; n];
+    rng.fill_activations(&mut x, 3.0);
+
+    let specs = [
+        "fp4_e2m1_b32_e8m0",
+        "fp4_e2m1_b8_e8m0",
+        "fp5_e2m2_b32_e8m0",
+        "fp3_e1m1_b32_e8m0",
+        "int4_b32_e8m0",
+        "int4_channelwise",
+        "topk3",
+        "fp16",
+    ];
+
+    Bench::header();
+    let b = Bench::default();
+    for spec in specs {
+        let codec: Box<dyn Compressor> = compressor_from_spec(spec).unwrap();
+        let mut wire = Vec::new();
+        let r = b.run(&format!("encode/{spec}/1M"), || {
+            codec.encode(&x, &mut wire);
+            std::hint::black_box(&wire);
+        });
+        println!(
+            "    -> {} ({} wire bytes, {:.2} eff bits)",
+            fmt_throughput(n * 4, r.median_s),
+            wire.len(),
+            codec.effective_bits(n)
+        );
+        let mut acc = vec![0.0f32; n];
+        let r = b.run(&format!("decode_add/{spec}/1M"), || {
+            codec.decode_add(&wire, n, &mut acc);
+            std::hint::black_box(&acc);
+        });
+        println!("    -> {}", fmt_throughput(n * 4, r.median_s));
+    }
+}

@@ -1,0 +1,55 @@
+//! Collective benchmark: all-gather + (de)compress + reduce at the
+//! message sizes the TP layers actually produce, across TP degrees.
+//! The link component is simulated (α+β model); the codec component is
+//! real measured work.
+
+use tpcc::bench::Bench;
+use tpcc::collective::all_gather_reduce_add;
+use tpcc::interconnect::HwProfile;
+use tpcc::mxfmt::{compressor_from_spec, Compressor};
+use tpcc::util::rng::Rng;
+
+fn main() {
+    let link = &HwProfile::by_name("l4").unwrap().link;
+    let mut rng = Rng::new(3);
+
+    Bench::header();
+    let b = Bench::default();
+    // message sizes: micro prefill 8x128xd192; paper-scale 2x128xd8192
+    for (label, len) in [("8x128xd192", 8 * 128 * 192), ("2x128xd8192", 2 * 128 * 8192)] {
+        for tp in [2usize, 4, 8] {
+            let x = vec![0.0f32; len];
+            let mut parts = vec![vec![0.0f32; len]; tp];
+            for p in &mut parts {
+                rng.fill_activations(p, 2.0);
+            }
+            for spec in ["none", "fp4_e2m1_b32_e8m0"] {
+                let comp: Option<Box<dyn Compressor>> = if spec == "none" {
+                    None
+                } else {
+                    Some(compressor_from_spec(spec).unwrap())
+                };
+                let mut out = Vec::new();
+                let mut wire = Vec::new();
+                let mut link_s = 0.0;
+                let r = b.run(&format!("allgather/{label}/tp{tp}/{spec}"), || {
+                    let rep = all_gather_reduce_add(
+                        &x,
+                        &parts,
+                        comp.as_deref(),
+                        link,
+                        &mut out,
+                        &mut wire,
+                    );
+                    link_s = rep.link_s;
+                    std::hint::black_box(&out);
+                });
+                println!(
+                    "    -> codec(work) {:.3}ms + link(model) {:.3}ms",
+                    r.median_s * 1e3,
+                    link_s * 1e3
+                );
+            }
+        }
+    }
+}

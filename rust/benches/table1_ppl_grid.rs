@@ -1,0 +1,16 @@
+//! Regenerates paper Table 1: the compression-scheme grid search
+//! (PPL degradation on the train slice). Token budget via
+//! TPCC_EVAL_TOKENS (default 4096).
+
+use tpcc::tables::{common, table1};
+
+fn main() {
+    let tokens = common::eval_tokens(4096);
+    match table1::run(tokens) {
+        Ok(t) => table1::print(&t),
+        Err(e) => {
+            eprintln!("table1 failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    }
+}

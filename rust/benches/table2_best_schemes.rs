@@ -1,0 +1,15 @@
+//! Regenerates paper Table 2: best-scheme selection (<3% rule on the
+//! train slice) evaluated on the held-out test split.
+
+use tpcc::tables::{common, table2};
+
+fn main() {
+    let tokens = common::eval_tokens(4096);
+    match table2::run(tokens) {
+        Ok(rows) => table2::print(&rows),
+        Err(e) => {
+            eprintln!("table2 failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    }
+}

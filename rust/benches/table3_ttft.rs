@@ -1,0 +1,30 @@
+//! Regenerates paper Table 3: TTFT with and without communication
+//! compression — analytic paper-scale deployments plus live CPU-PJRT
+//! runs of the trained models under the simulated interconnects.
+
+use tpcc::tables::table3;
+
+fn main() {
+    let rows = table3::run_analytic();
+    table3::print(&rows, "analytic, paper-scale");
+
+    let reps = std::env::var("TPCC_TTFT_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let mut live = Vec::new();
+    for (profile, tp) in [("l4", 2), ("l4", 4), ("a100", 4)] {
+        // measured-overhead row (this CPU's codec/link regime) and
+        // analytic row (rescaled to the target accelerator's roofline +
+        // quantizer throughput — the paper's regime)
+        for analytic in [false, true] {
+            match table3::run_live(profile, tp, 8, 128, reps, analytic) {
+                Ok(r) => live.push(r),
+                Err(e) => eprintln!("live row {profile}/tp{tp} failed: {e:#}"),
+            }
+        }
+    }
+    if !live.is_empty() {
+        table3::print(&live, "live, micro model on CPU PJRT (median of reps)");
+    }
+}

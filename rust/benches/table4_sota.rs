@@ -1,0 +1,15 @@
+//! Regenerates paper Table 4: MX4 vs Bian et al. channel-wise INT4 and
+//! TopK-3x (perplexity on the test split + TTFT speedups).
+
+use tpcc::tables::{common, table4};
+
+fn main() {
+    let tokens = common::eval_tokens(4096);
+    match table4::run(tokens) {
+        Ok(t) => table4::print(&t),
+        Err(e) => {
+            eprintln!("table4 failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    }
+}

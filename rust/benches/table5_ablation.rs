@@ -1,0 +1,15 @@
+//! Regenerates paper Table 5 (appendix): the hyper-parameter ablation
+//! over scale bits, value dtype, block size and TP degree.
+
+use tpcc::tables::{common, table5};
+
+fn main() {
+    let tokens = common::eval_tokens(2048);
+    match table5::run(tokens) {
+        Ok(rows) => table5::print(&rows),
+        Err(e) => {
+            eprintln!("table5 failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    }
+}

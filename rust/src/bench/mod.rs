@@ -1,0 +1,129 @@
+//! Hand-rolled benchmark harness (the offline vendor set has no
+//! criterion). `cargo bench` targets use `harness = false` and call
+//! [`Bench::run`], which warms up, measures wall time per iteration with
+//! outlier-robust statistics, and prints aligned rows.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, min_iters: 10, max_iters: 1000, target_secs: 1.0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 50, target_secs: 0.3 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.target_secs && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let median = times[n / 2];
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            median_s: median,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            min_s: times[0],
+        };
+        println!(
+            "{:<48} {:>10} {:>12} {:>12} {:>6}",
+            r.name,
+            fmt_time(r.median_s),
+            fmt_time(r.mean_s),
+            fmt_time(r.stddev_s),
+            r.iters
+        );
+        r
+    }
+
+    pub fn header() {
+        println!(
+            "{:<48} {:>10} {:>12} {:>12} {:>6}",
+            "benchmark", "median", "mean", "stddev", "iters"
+        );
+        println!("{}", "-".repeat(92));
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s.is_nan() {
+        "-".into()
+    } else if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Throughput helper: bytes/sec pretty printer.
+pub fn fmt_throughput(bytes: usize, secs: f64) -> String {
+    let bps = bytes as f64 / secs;
+    if bps >= 1e9 {
+        format!("{:.2} GB/s", bps / 1e9)
+    } else if bps >= 1e6 {
+        format!("{:.2} MB/s", bps / 1e6)
+    } else {
+        format!("{:.2} KB/s", bps / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::quick();
+        let r = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0025), "2.500ms");
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,352 @@
+//! The serving coordinator: request queue → continuous batcher →
+//! TP engine (prefill/decode) → sampled tokens → responses.
+//!
+//! Mirrors the vLLM router/engine split: [`Coordinator`] owns the
+//! engine loop on a dedicated thread (the `xla` client is not `Send`);
+//! front ends (HTTP server, trace replayer, examples) submit
+//! [`GenRequest`]s over a channel and receive [`GenResponse`]s on a
+//! per-request reply channel.
+
+pub mod sampler;
+pub mod scheduler;
+pub mod session;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::Registry;
+use crate::tokenizer::ByteTokenizer;
+use crate::tp::{BatchKv, StepTiming, TpEngine};
+
+pub use sampler::{Sampler, Sampling};
+pub use session::{Session, SessionState};
+
+/// A generation request, as submitted by a front end.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub greedy: bool,
+    /// optional stop byte (-1 = none)
+    pub stop_token: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    pub ttft_s: f64,
+    pub e2e_s: f64,
+    pub tpot_s: f64,
+    /// virtual (interconnect-modeled) time spent in this request's
+    /// prefill — the Table-3 "TTFT" under the simulated hardware profile
+    pub virtual_prefill_s: f64,
+}
+
+pub struct CoordinatorOptions {
+    /// decode batch group size (must be an exported batch bucket)
+    pub decode_batch: usize,
+    /// max seconds a queued request waits before a partial prefill flush
+    pub max_wait_s: f64,
+    pub sampling: Sampling,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            decode_batch: 8,
+            max_wait_s: 0.05,
+            sampling: Sampling::Greedy,
+            seed: 0,
+        }
+    }
+}
+
+type Submission = (GenRequest, Sender<GenResponse>);
+
+/// Handle used by front ends to submit work (cheaply cloneable).
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: Sender<Submission>,
+    pub metrics: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl CoordinatorHandle {
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send((req, rtx));
+        rrx
+    }
+
+    /// Blocking convenience call.
+    pub fn generate(&self, req: GenRequest) -> anyhow::Result<GenResponse> {
+        let rx = self.submit(req);
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The engine loop. Owns the TpEngine; runs until shutdown + drained.
+pub struct Coordinator {
+    eng: TpEngine,
+    opts: CoordinatorOptions,
+    metrics: Arc<Registry>,
+    rx: Receiver<Submission>,
+    shutdown: Arc<AtomicBool>,
+    next_id: u64,
+    sampler: Sampler,
+    tokenizer: ByteTokenizer,
+}
+
+struct ActiveSlot {
+    session: Session,
+    reply: Sender<GenResponse>,
+    virtual_prefill_s: f64,
+}
+
+impl Coordinator {
+    /// Build the coordinator plus its submission handle. Call
+    /// [`Coordinator::run`] on a thread that owns the engine.
+    pub fn new(eng: TpEngine, opts: CoordinatorOptions) -> (Coordinator, CoordinatorHandle) {
+        let (tx, rx) = channel();
+        let metrics = Arc::new(Registry::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = CoordinatorHandle {
+            tx,
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+        };
+        let seed = opts.seed;
+        (
+            Coordinator {
+                eng,
+                opts,
+                metrics,
+                rx,
+                shutdown,
+                next_id: 1,
+                sampler: Sampler::new(seed),
+                tokenizer: ByteTokenizer,
+            },
+            handle,
+        )
+    }
+
+    /// Run the continuous-batching loop until shutdown and drained.
+    pub fn run(mut self) -> anyhow::Result<()> {
+        let cfg = self.eng.cfg.clone();
+        let db = self.opts.decode_batch;
+        let tp = self.eng.opts.tp;
+        let mut decode_kv = BatchKv::new(&cfg, tp, db);
+        let mut slots: Vec<Option<ActiveSlot>> = (0..db).map(|_| None).collect();
+        let mut waiting: Vec<(Session, Sender<GenResponse>)> = Vec::new();
+
+        let seq_buckets = self.eng.rt.manifest.seq_buckets.clone();
+        let batch_buckets = self.eng.rt.manifest.batch_buckets.clone();
+        let max_prompt = *seq_buckets.iter().max().unwrap_or(&256);
+
+        loop {
+            // ---- intake ----
+            loop {
+                match self.rx.try_recv() {
+                    Ok((req, reply)) => {
+                        let mut toks = self.tokenizer.encode(&req.prompt);
+                        toks.truncate(max_prompt);
+                        if toks.is_empty() {
+                            toks.push(0);
+                        }
+                        let mut s = Session::new(self.next_id, toks, req.max_new_tokens.max(1));
+                        s.stop_token = req.stop_token;
+                        self.next_id += 1;
+                        self.metrics.requests_received.inc();
+                        waiting.push((s, reply));
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        if waiting.is_empty() && slots.iter().all(Option::is_none) {
+                            return Ok(());
+                        }
+                        break;
+                    }
+                }
+            }
+
+            let free: Vec<usize> =
+                (0..db).filter(|&i| slots[i].is_none()).collect();
+            let oldest_wait = waiting
+                .first()
+                .map(|(s, _)| s.arrived.elapsed().as_secs_f64())
+                .unwrap_or(0.0);
+            let n_admit = scheduler::admit_count(
+                waiting.len(),
+                free.len(),
+                *batch_buckets.iter().max().unwrap_or(&8),
+            );
+
+            // ---- prefill a batch of admitted requests ----
+            if scheduler::should_flush(oldest_wait, n_admit, free.len().min(8), self.opts.max_wait_s)
+                && n_admit > 0
+            {
+                let admitted: Vec<(Session, Sender<GenResponse>)> =
+                    waiting.drain(..n_admit).collect();
+                self.prefill_admit(admitted, &free, &mut slots, &mut decode_kv)?;
+            }
+
+            // ---- decode step over active slots ----
+            let active: Vec<usize> = (0..db).filter(|&i| slots[i].is_some()).collect();
+            if active.is_empty() {
+                if self.shutdown.load(Ordering::SeqCst) && waiting.is_empty() {
+                    return Ok(());
+                }
+                if waiting.is_empty() {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                continue;
+            }
+
+            let mut tokens = vec![0i32; db];
+            let mut pos = vec![0i32; db];
+            for &i in &active {
+                let slot = slots[i].as_ref().unwrap();
+                tokens[i] = *slot.session.generated.last().unwrap();
+                pos[i] = slot.session.pos as i32;
+            }
+            let (logits, timing) = self.eng.decode(&tokens, &pos, &mut decode_kv)?;
+            self.metrics.batches_executed.inc();
+            self.record_comm(&timing);
+            let v = cfg.vocab;
+            for &i in &active {
+                let slot = slots[i].as_mut().unwrap();
+                let row = &logits[i * v..(i + 1) * v];
+                let tok = self.sampler.sample(row, self.sampling_for());
+                slot.session.record_token(tok);
+                self.metrics.tokens_generated.inc();
+                if slot.session.is_done() || slot.session.pos + 1 >= cfg.max_seq {
+                    let done = slots[i].take().unwrap();
+                    decode_kv.clear_slot(i);
+                    self.finish(done);
+                }
+            }
+        }
+    }
+
+    fn sampling_for(&self) -> Sampling {
+        self.opts.sampling
+    }
+
+    fn prefill_admit(
+        &mut self,
+        admitted: Vec<(Session, Sender<GenResponse>)>,
+        free: &[usize],
+        slots: &mut [Option<ActiveSlot>],
+        decode_kv: &mut BatchKv,
+    ) -> anyhow::Result<()> {
+        let cfg = self.eng.cfg.clone();
+        let lens: Vec<usize> = admitted.iter().map(|(s, _)| s.prompt_tokens.len()).collect();
+        let seq_buckets = self.eng.rt.manifest.seq_buckets.clone();
+        let batch_buckets = self.eng.rt.manifest.batch_buckets.clone();
+        let (bb, sb) = scheduler::pick_prefill_bucket(&lens, &batch_buckets, &seq_buckets)
+            .ok_or_else(|| anyhow::anyhow!("prompt exceeds largest bucket"))?;
+
+        let mut tokens = vec![0i32; bb * sb];
+        for (row, (s, _)) in admitted.iter().enumerate() {
+            tokens[row * sb..row * sb + s.prompt_tokens.len()]
+                .copy_from_slice(&s.prompt_tokens);
+        }
+        let mut kv = BatchKv::new(&cfg, self.eng.opts.tp, bb);
+        let t0 = Instant::now();
+        let (logits, timing) =
+            self.eng.prefill(&tokens, bb, sb, &vec![0; bb], Some(&mut kv))?;
+        let _ = t0;
+        self.record_comm(&timing);
+        self.metrics.batches_executed.inc();
+
+        let v = cfg.vocab;
+        for (row, (mut session, reply)) in admitted.into_iter().enumerate() {
+            let len = session.prompt_tokens.len();
+            self.metrics.prefill_tokens.add(len as u64);
+            self.metrics
+                .queue_wait
+                .record(session.arrived.elapsed().as_secs_f64() - timing.wall_s);
+            let row_logits = &logits[(row * sb + len - 1) * v..(row * sb + len) * v];
+            let tok = self.sampler.sample(row_logits, self.sampling_for());
+            session.record_first_token(tok);
+            self.metrics.tokens_generated.inc();
+            if let Some(ttft) = session.ttft() {
+                self.metrics.ttft.record(ttft);
+            }
+            let slot_idx = free[row];
+            decode_kv.adopt_slot(slot_idx, &kv, row, len);
+            session.slot = Some(slot_idx);
+            let active = ActiveSlot {
+                session,
+                reply,
+                virtual_prefill_s: timing.virtual_total(),
+            };
+            if active.session.is_done() {
+                self.finish(active);
+            } else {
+                slots[slot_idx] = Some(active);
+            }
+        }
+        Ok(())
+    }
+
+    fn record_comm(&self, t: &StepTiming) {
+        self.metrics.comm_bytes_sent.add(t.wire_bytes);
+        self.metrics.comm_bytes_saved.add(t.raw_bytes.saturating_sub(t.wire_bytes));
+    }
+
+    fn finish(&self, slot: ActiveSlot) {
+        let s = &slot.session;
+        let resp = GenResponse {
+            id: s.id,
+            text: self.tokenizer.decode(&s.generated),
+            prompt_tokens: s.prompt_tokens.len(),
+            new_tokens: s.generated.len(),
+            ttft_s: s.ttft().unwrap_or(f64::NAN),
+            e2e_s: s.e2e().unwrap_or(f64::NAN),
+            tpot_s: s.tpot().unwrap_or(f64::NAN),
+            virtual_prefill_s: slot.virtual_prefill_s,
+        };
+        self.metrics.requests_completed.inc();
+        if let Some(e2e) = s.e2e() {
+            self.metrics.e2e_latency.record(e2e);
+        }
+        if let Some(tpot) = s.tpot() {
+            self.metrics.tpot.record(tpot);
+        }
+        let _ = slot.reply.send(resp);
+    }
+}
+
+/// Spawn the coordinator on its own engine thread. The engine (and its
+/// non-Send XLA client) must be *constructed* on that thread, so the
+/// caller passes a builder closure.
+pub fn spawn<F>(build: F, opts: CoordinatorOptions) -> anyhow::Result<(CoordinatorHandle, std::thread::JoinHandle<anyhow::Result<()>>)>
+where
+    F: FnOnce() -> anyhow::Result<TpEngine> + Send + 'static,
+{
+    let (htx, hrx) = channel();
+    let join = std::thread::Builder::new()
+        .name("tpcc-engine".into())
+        .spawn(move || -> anyhow::Result<()> {
+            let eng = build()?;
+            let (coord, handle) = Coordinator::new(eng, opts);
+            htx.send(handle).map_err(|_| anyhow::anyhow!("handle channel closed"))?;
+            coord.run()
+        })?;
+    let handle = hrx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("engine thread failed during startup"))?;
+    Ok((handle, join))
+}

@@ -1,0 +1,95 @@
+//! Token sampling from final-stage logits.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    Greedy,
+    /// softmax temperature + optional top-k truncation
+    Temperature { t: f32, top_k: usize },
+}
+
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Sampler {
+        Sampler { rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32], mode: Sampling) -> i32 {
+        match mode {
+            Sampling::Greedy => argmax(logits) as i32,
+            Sampling::Temperature { t, top_k } => {
+                let t = t.max(1e-3);
+                let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
+                // top-k indices by logit
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(k);
+                let m = logits[idx[0]];
+                let weights: Vec<f64> =
+                    idx.iter().map(|&i| (((logits[i] - m) / t) as f64).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = self.rng.f64() * total;
+                for (j, w) in weights.iter().enumerate() {
+                    u -= w;
+                    if u <= 0.0 {
+                        return idx[j] as i32;
+                    }
+                }
+                idx[k - 1] as i32
+            }
+        }
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::new(1);
+        let mut l = vec![0.0f32; 10];
+        l[6] = 3.0;
+        assert_eq!(s.sample(&l, Sampling::Greedy), 6);
+    }
+
+    #[test]
+    fn temperature_prefers_high_logits() {
+        let mut s = Sampler::new(2);
+        let mut l = vec![0.0f32; 8];
+        l[2] = 6.0;
+        let mut hits = 0;
+        for _ in 0..200 {
+            if s.sample(&l, Sampling::Temperature { t: 1.0, top_k: 0 }) == 2 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 180, "{hits}");
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut s = Sampler::new(3);
+        let l = vec![5.0f32, 4.0, -10.0, -10.0];
+        for _ in 0..100 {
+            let t = s.sample(&l, Sampling::Temperature { t: 2.0, top_k: 2 });
+            assert!(t == 0 || t == 1);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Admission + bucketing policy for the continuous batcher.
+//!
+//! vLLM-style two-queue design scaled to this engine: a FIFO waiting
+//! queue feeds prefill batches (bucketed to the exported static shapes);
+//! decoding sessions occupy slots of a fixed decode batch group.
+
+/// Decide the (batch, seq) prefill bucket for a set of prompt lengths,
+/// given the exported buckets. Returns None if any prompt exceeds the
+/// largest seq bucket (caller truncates or rejects).
+pub fn pick_prefill_bucket(
+    lens: &[usize],
+    batch_buckets: &[usize],
+    seq_buckets: &[usize],
+) -> Option<(usize, usize)> {
+    let maxlen = *lens.iter().max()?;
+    let seq = seq_buckets.iter().copied().filter(|&s| s > 1 && s >= maxlen).min()?;
+    let batch = batch_buckets.iter().copied().filter(|&b| b >= lens.len()).min()?;
+    Some((batch, seq))
+}
+
+/// How many queued requests to admit this round: bounded by free decode
+/// slots and the largest prefill batch bucket.
+pub fn admit_count(queued: usize, free_slots: usize, max_prefill_batch: usize) -> usize {
+    queued.min(free_slots).min(max_prefill_batch)
+}
+
+/// Cost-model-guided check: is it worth running a partial prefill batch
+/// now, or waiting for more arrivals? We run immediately when any
+/// request has waited longer than `max_wait_s`, or the batch is full.
+pub fn should_flush(oldest_wait_s: f64, count: usize, max_batch: usize, max_wait_s: f64) -> bool {
+    count >= max_batch || (count > 0 && oldest_wait_s >= max_wait_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BB: &[usize] = &[1, 8];
+    const SB: &[usize] = &[1, 16, 64, 128, 256];
+
+    #[test]
+    fn bucket_covers_longest_prompt() {
+        assert_eq!(pick_prefill_bucket(&[10, 60], BB, SB), Some((8, 64)));
+        assert_eq!(pick_prefill_bucket(&[5], BB, SB), Some((1, 16)));
+        assert_eq!(pick_prefill_bucket(&[200; 8], BB, SB), Some((8, 256)));
+        assert_eq!(pick_prefill_bucket(&[300], BB, SB), None);
+    }
+
+    #[test]
+    fn never_picks_decode_bucket_for_prefill() {
+        // seq bucket 1 is the decode shape; a 1-token prompt still
+        // prefills at 16
+        assert_eq!(pick_prefill_bucket(&[1], BB, SB), Some((1, 16)));
+    }
+
+    #[test]
+    fn admit_respects_slots() {
+        assert_eq!(admit_count(10, 3, 8), 3);
+        assert_eq!(admit_count(2, 8, 8), 2);
+        assert_eq!(admit_count(20, 16, 8), 8);
+    }
+
+    #[test]
+    fn flush_policy() {
+        assert!(should_flush(0.0, 8, 8, 0.05));
+        assert!(!should_flush(0.01, 3, 8, 0.05));
+        assert!(should_flush(0.06, 3, 8, 0.05));
+        assert!(!should_flush(10.0, 0, 8, 0.05));
+    }
+}

@@ -1,0 +1,121 @@
+//! Generation sessions: one per in-flight request.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Done,
+}
+
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    pub prompt_tokens: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub state: SessionState,
+    /// absolute position of the next token to be written (== tokens seen)
+    pub pos: usize,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// slot in the decode batch group (when Decoding)
+    pub slot: Option<usize>,
+    /// stop byte (e.g. b'\n' for line-oriented demos); 0 disables
+    pub stop_token: i32,
+}
+
+impl Session {
+    pub fn new(id: u64, prompt_tokens: Vec<i32>, max_new_tokens: usize) -> Session {
+        Session {
+            id,
+            prompt_tokens,
+            generated: Vec::new(),
+            max_new_tokens,
+            state: SessionState::Queued,
+            pos: 0,
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+            slot: None,
+            stop_token: -1,
+        }
+    }
+
+    pub fn record_first_token(&mut self, tok: i32) {
+        self.first_token_at = Some(Instant::now());
+        self.generated.push(tok);
+        self.pos = self.prompt_tokens.len();
+        self.state = SessionState::Decoding;
+        self.maybe_finish(tok);
+    }
+
+    pub fn record_token(&mut self, tok: i32) {
+        self.generated.push(tok);
+        self.pos += 1;
+        self.maybe_finish(tok);
+    }
+
+    fn maybe_finish(&mut self, tok: i32) {
+        if self.generated.len() >= self.max_new_tokens || (self.stop_token >= 0 && tok == self.stop_token)
+        {
+            self.state = SessionState::Done;
+            self.finished_at = Some(Instant::now());
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == SessionState::Done
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| (t - self.arrived).as_secs_f64())
+    }
+
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished_at.map(|t| (t - self.arrived).as_secs_f64())
+    }
+
+    /// time-per-output-token over the decode phase
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token_at, self.finished_at) {
+            (Some(f), Some(e)) if self.generated.len() > 1 => {
+                Some((e - f).as_secs_f64() / (self.generated.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut s = Session::new(1, vec![1, 2, 3], 2);
+        assert_eq!(s.state, SessionState::Queued);
+        s.record_first_token(42);
+        assert_eq!(s.state, SessionState::Decoding);
+        assert_eq!(s.pos, 3);
+        assert!(s.ttft().is_some());
+        s.record_token(43);
+        assert!(s.is_done());
+        assert_eq!(s.generated, vec![42, 43]);
+        assert!(s.e2e().unwrap() >= s.ttft().unwrap());
+    }
+
+    #[test]
+    fn stop_token_ends_early() {
+        let mut s = Session::new(1, vec![1], 100);
+        s.stop_token = 10;
+        s.record_first_token(5);
+        assert!(!s.is_done());
+        s.record_token(10);
+        assert!(s.is_done());
+        assert_eq!(s.generated.len(), 2);
+    }
+}

@@ -1,0 +1,134 @@
+//! Perplexity evaluation harness (paper §4.2/§5.1).
+//!
+//! Streams corpus text through the TP engine's prefill path — the same
+//! AOT artifacts and compressed collectives the serving path uses — and
+//! computes byte-level cross-entropy in rust from the returned logits.
+//! Quantization error enters exactly where the paper injects it: at the
+//! two row-parallel collectives per layer.
+
+use crate::tokenizer::ByteTokenizer;
+use crate::tp::TpEngine;
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub nll: f64,
+    pub tokens: usize,
+    pub batches: usize,
+    pub wall_s: f64,
+}
+
+impl PplResult {
+    pub fn ppl(&self) -> f64 {
+        (self.nll / self.tokens as f64).exp()
+    }
+
+    /// Relative increase vs a baseline, in percent (paper Tables 1/2/5).
+    pub fn increase_pct(&self, baseline: &PplResult) -> f64 {
+        (self.ppl() / baseline.ppl() - 1.0) * 100.0
+    }
+}
+
+/// Evaluation options. `seq`/`batch` must be exported buckets for the
+/// engine's model+TP; `max_tokens` bounds the slice of `text` scored.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOptions {
+    pub seq: usize,
+    pub batch: usize,
+    pub max_tokens: usize,
+    /// stride between window starts (== seq for the wikitext protocol)
+    pub stride: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { seq: 128, batch: 8, max_tokens: 2048, stride: 128 }
+    }
+}
+
+/// Score `text` and return total NLL over predicted tokens.
+pub fn perplexity(eng: &mut TpEngine, text: &str, opt: EvalOptions) -> anyhow::Result<PplResult> {
+    let tok = ByteTokenizer;
+    let ids = tok.encode(text);
+    anyhow::ensure!(ids.len() > opt.seq + 1, "text too short");
+    let t0 = std::time::Instant::now();
+
+    let v = eng.cfg.vocab;
+    let (bb, sb) = (opt.batch, opt.seq);
+    let mut nll = 0.0f64;
+    let mut scored = 0usize;
+    let mut batches = 0usize;
+
+    // windows of seq+1 bytes: score positions 0..seq-1 predicting 1..seq
+    let mut windows: Vec<usize> = Vec::new();
+    let mut start = 0usize;
+    while start + opt.seq + 1 <= ids.len() && windows.len() * (opt.seq - 1) < opt.max_tokens {
+        windows.push(start);
+        start += opt.stride;
+    }
+
+    for chunk in windows.chunks(bb) {
+        let mut tokens = vec![0i32; bb * sb];
+        for (row, &w) in chunk.iter().enumerate() {
+            tokens[row * sb..(row + 1) * sb].copy_from_slice(&ids[w..w + sb]);
+        }
+        let (logits, _) = eng.prefill(&tokens, bb, sb, &vec![0; bb], None)?;
+        for (row, &w) in chunk.iter().enumerate() {
+            for s in 0..sb - 1 {
+                if scored >= opt.max_tokens {
+                    break;
+                }
+                let target = ids[w + s + 1] as usize;
+                let row_logits = &logits[(row * sb + s) * v..(row * sb + s + 1) * v];
+                nll += nll_of(row_logits, target);
+                scored += 1;
+            }
+        }
+        batches += 1;
+        if scored >= opt.max_tokens {
+            break;
+        }
+    }
+
+    Ok(PplResult { nll, tokens: scored, batches, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// -log p(target | logits) with a numerically-stable log-softmax.
+pub fn nll_of(logits: &[f32], target: usize) -> f64 {
+    let mut m = f32::NEG_INFINITY;
+    for &l in logits {
+        m = m.max(l);
+    }
+    let mut lse = 0.0f64;
+    for &l in logits {
+        lse += ((l - m) as f64).exp();
+    }
+    (m as f64 + lse.ln()) - logits[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_uniform() {
+        let logits = vec![0.0f32; 256];
+        let nll = nll_of(&logits, 7);
+        assert!((nll - (256f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_confident() {
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 20.0;
+        assert!(nll_of(&logits, 3) < 1e-6);
+        assert!(nll_of(&logits, 4) > 19.0);
+    }
+
+    #[test]
+    fn ppl_math() {
+        let r = PplResult { nll: 100.0 * (2.0f64).ln(), tokens: 100, batches: 1, wall_s: 0.0 };
+        assert!((r.ppl() - 2.0).abs() < 1e-9);
+        let b = PplResult { nll: 100.0 * (1.6f64).ln(), tokens: 100, batches: 1, wall_s: 0.0 };
+        assert!((r.increase_pct(&b) - 25.0).abs() < 1e-9);
+    }
+}

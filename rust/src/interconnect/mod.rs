@@ -1,0 +1,125 @@
+//! Inter-accelerator interconnect simulation.
+//!
+//! Substitute for the paper's physical links (8xL4 over PCIe Gen4 x16 at
+//! 64 GB/s; 4xA100 over NVLink at 600 GB/s — §5.2): communication time
+//! for a collective is a pure α+β function of message size and topology,
+//! so it can be *modeled exactly* while the payload itself moves by
+//! memcpy between worker threads. The simulator returns virtual
+//! durations that the TTFT accounting adds to measured/modeled compute.
+
+pub mod profile;
+
+pub use profile::{HwProfile, PROFILES};
+
+/// Ring all-gather cost: each of the N workers sends its shard around the
+/// ring in N-1 steps; per step a worker transmits `bytes` over one link.
+/// time = (N-1) * (α + bytes / β_link).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// per-message latency (s)
+    pub alpha_s: f64,
+    /// link bandwidth (bytes/s), unidirectional per GPU pair
+    pub beta_bytes_per_s: f64,
+}
+
+impl LinkModel {
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.alpha_s + bytes as f64 / self.beta_bytes_per_s
+    }
+
+    /// All-gather of `shard_bytes` per worker across `n` workers (ring).
+    pub fn all_gather_time(&self, shard_bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * self.transfer_time(shard_bytes)
+    }
+
+    /// All-reduce modeled as reduce-scatter + all-gather (2(N-1) steps of
+    /// bytes/N each). Used by the analytic perf model's baseline where
+    /// uncompressed TP uses NCCL all-reduce.
+    pub fn all_reduce_time(&self, bytes: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1) as f64 * self.transfer_time(bytes / n)
+    }
+}
+
+/// A virtual clock accumulating simulated communication time alongside
+/// real compute time. The TTFT tables report `virtual_elapsed`.
+#[derive(Debug, Default, Clone)]
+pub struct VirtualClock {
+    comm_s: f64,
+    compute_s: f64,
+    comm_events: u64,
+    bytes_on_wire: u64,
+    bytes_saved: u64,
+}
+
+impl VirtualClock {
+    pub fn add_comm(&mut self, seconds: f64, wire_bytes: usize, uncompressed_bytes: usize) {
+        self.comm_s += seconds;
+        self.comm_events += 1;
+        self.bytes_on_wire += wire_bytes as u64;
+        self.bytes_saved += uncompressed_bytes.saturating_sub(wire_bytes) as u64;
+    }
+
+    pub fn add_compute(&mut self, seconds: f64) {
+        self.compute_s += seconds;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.comm_s + self.compute_s
+    }
+    pub fn comm(&self) -> f64 {
+        self.comm_s
+    }
+    pub fn compute(&self) -> f64 {
+        self.compute_s
+    }
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes_on_wire
+    }
+    pub fn saved_bytes(&self) -> u64 {
+        self.bytes_saved
+    }
+    pub fn reset(&mut self) {
+        *self = VirtualClock::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_gather_scales_with_workers() {
+        let l = LinkModel { alpha_s: 1e-5, beta_bytes_per_s: 64e9 };
+        let t2 = l.all_gather_time(1 << 20, 2);
+        let t4 = l.all_gather_time(1 << 20, 4);
+        let t8 = l.all_gather_time(1 << 20, 8);
+        assert!(t2 < t4 && t4 < t8);
+        assert_eq!(l.all_gather_time(1 << 20, 1), 0.0);
+        // (N-1) proportionality
+        assert!((t8 / t2 - 7.0 / 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let slow = LinkModel { alpha_s: 1e-5, beta_bytes_per_s: 64e9 };
+        let fast = LinkModel { alpha_s: 1e-5, beta_bytes_per_s: 600e9 };
+        let b = 128 << 20;
+        assert!(slow.transfer_time(b) > 8.0 * fast.transfer_time(b) * 0.9);
+    }
+
+    #[test]
+    fn virtual_clock_accumulates() {
+        let mut c = VirtualClock::default();
+        c.add_compute(0.5);
+        c.add_comm(0.25, 100, 400);
+        assert!((c.elapsed() - 0.75).abs() < 1e-12);
+        assert_eq!(c.wire_bytes(), 100);
+        assert_eq!(c.saved_bytes(), 300);
+    }
+}

@@ -1,0 +1,90 @@
+//! Hardware profiles for the paper's evaluation testbeds (§5.2) plus the
+//! compute-side roofline numbers used by the analytic perf model.
+
+use super::LinkModel;
+
+/// One accelerator type + its interconnect, as deployed in the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// peak dense f16 tensor throughput per GPU (FLOP/s)
+    pub peak_flops: f64,
+    /// achievable fraction of peak for transformer prefill GEMMs
+    pub mfu: f64,
+    /// HBM bandwidth (bytes/s) — bounds the memory-bound decode phase
+    pub hbm_bytes_per_s: f64,
+    pub link: LinkModel,
+    /// throughput of the quantize/dequant kernels (values/s) — the
+    /// compression overhead term. Calibrated so the A100 slowdown in
+    /// Table 3 reproduces (quant ~ memory-bound elementwise op).
+    pub quant_values_per_s: f64,
+}
+
+impl HwProfile {
+    pub fn by_name(name: &str) -> Option<&'static HwProfile> {
+        PROFILES.iter().find(|p| p.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// L4: PCIe Gen4 x16 ~64 GB/s per the paper; FP16 tensor 121 TFLOPs
+/// (realistic dense ~0.35 MFU on prefill), HBM 300 GB/s.
+/// A100 (SXM, 80GB): NVLink 600 GB/s bidirectional any-to-any; FP16
+/// tensor 312 TFLOPs, HBM 2.0 TB/s.
+pub const PROFILES: &[HwProfile] = &[
+    HwProfile {
+        name: "l4",
+        peak_flops: 121e12,
+        mfu: 0.35,
+        hbm_bytes_per_s: 300e9,
+        // PCIe Gen4: paper quotes 64 GB/s node-level, but effective
+        // per-pair P2P bandwidth with 8 GPUs staging through host memory
+        // and contending for the same host links is far lower. β is
+        // calibrated on the paper's *uncompressed* Table 3 rows
+        // (70B/8xL4 2x64 -> 0.58 s): β_eff ≈ 4.3 GB/s.
+        link: LinkModel { alpha_s: 20e-6, beta_bytes_per_s: 4.3e9 },
+        quant_values_per_s: 15e9,
+    },
+    HwProfile {
+        name: "a100",
+        peak_flops: 312e12,
+        mfu: 0.45,
+        hbm_bytes_per_s: 2.0e12,
+        // NVLink3 600 GB/s bidirectional; effective collective bandwidth
+        // for ~4 MB eager-mode messages calibrated on the paper's
+        // uncompressed 4xA100 rows (2x128 -> 0.09 s): β_eff ≈ 74 GB/s.
+        link: LinkModel { alpha_s: 10e-6, beta_bytes_per_s: 74e9 },
+        // same (torch, unfused) microxcaling quant kernels as L4 —
+        // this is what makes compression a net loss on NVLink (Table 3).
+        quant_values_per_s: 15e9,
+    },
+    // our live CPU testbed: a profile that matches the single-core CPU
+    // so live-mode virtual time is self-consistent.
+    HwProfile {
+        name: "cpu",
+        peak_flops: 25e9,
+        mfu: 1.0,
+        hbm_bytes_per_s: 8e9,
+        link: LinkModel { alpha_s: 5e-6, beta_bytes_per_s: 2e9 },
+        quant_values_per_s: 500e6,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert!(HwProfile::by_name("l4").is_some());
+        assert!(HwProfile::by_name("A100").is_some());
+        assert!(HwProfile::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn paper_bandwidth_ordering() {
+        let l4 = HwProfile::by_name("l4").unwrap();
+        let a100 = HwProfile::by_name("a100").unwrap();
+        assert!(a100.link.beta_bytes_per_s / l4.link.beta_bytes_per_s > 8.0);
+        assert!(a100.peak_flops > l4.peak_flops);
+    }
+}

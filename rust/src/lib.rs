@@ -1,0 +1,47 @@
+//! tpcc — Tensor-Parallel Communication Compression serving stack.
+//!
+//! Full-system reproduction of *"Communication Compression for Tensor
+//! Parallel LLM Inference"* (Hansen-Palmus et al., 2024): a rust serving
+//! coordinator that executes AOT-compiled XLA stage programs (JAX +
+//! Pallas, lowered at build time) across a tensor-parallel worker group,
+//! compressing the row-parallel all-gather traffic with OCP Microscaling
+//! (MX) block quantization.
+//!
+//! Layer map (DESIGN.md):
+//! * [`runtime`]    — PJRT CPU client, manifest-driven artifact loading.
+//! * [`tp`]         — TP worker group executing per-shard stage programs.
+//! * [`collective`] — all-gather + reduce with pluggable compression.
+//! * [`mxfmt`]      — MX codec (bit-exact vs the Pallas kernels) + the
+//!                    Bian et al. baselines (channel-wise INT, TopK).
+//! * [`interconnect`] — α/β link simulator with hardware profiles.
+//! * [`coordinator`]  — continuous batcher, KV-cache pool, sessions.
+//! * [`server`]     — minimal HTTP/1.1 front end.
+//! * [`eval`]       — perplexity harness (Tables 1/2/5).
+//! * [`model`]      — model configs, weight loading, analytic perf model.
+//! * [`tables`]     — generators for every paper table (benches wrap these).
+
+pub mod bench;
+pub mod collective;
+pub mod coordinator;
+pub mod eval;
+pub mod interconnect;
+pub mod metrics;
+pub mod model;
+pub mod mxfmt;
+pub mod runtime;
+pub mod server;
+pub mod tables;
+pub mod tokenizer;
+pub mod tp;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Repo-root-relative artifact dir, overridable via `TPCC_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("TPCC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

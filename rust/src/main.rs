@@ -1,0 +1,185 @@
+//! tpcc CLI — leader entrypoint for the serving stack and the paper's
+//! experiment drivers.
+//!
+//! Commands:
+//!   serve   --model micro --tp 2 --compress fp4_e2m1_b32_e8m0 --addr 127.0.0.1:8080
+//!   gen     --model micro --tp 2 --prompt "..." [--max-tokens 48]
+//!   eval    --model small --tp 2 --compress <spec> [--split test] [--tokens 4096]
+//!   table1|table2|table3|table4|table5   (regenerate a paper table)
+//!   info    (artifact + model inventory)
+
+use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest, Sampling};
+use tpcc::model::weights::Weights;
+use tpcc::runtime::Runtime;
+use tpcc::server::Server;
+use tpcc::tables::{common, table1, table2, table3, table4, table5};
+use tpcc::tp::{EngineOptions, TpEngine};
+use tpcc::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
+    let model = args.get_or("model", "micro").to_string();
+    let tp = args.get_usize("tp", 2);
+    let compress = args.get_or("compress", "none").to_string();
+    let profile = args.get_or("profile", "cpu").to_string();
+    let root = common::artifacts_root()?;
+    let rt = Runtime::load(&root)?;
+    let weights = Weights::load(&root.join("weights").join(&model))?;
+    let opts = EngineOptions::new(&model, tp)
+        .with_compress(&compress)
+        .with_profile(&profile);
+    TpEngine::new(rt, &weights, opts)
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "serve" => {
+            let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+            let model = args.get_or("model", "micro").to_string();
+            let tp = args.get_usize("tp", 2);
+            let compress = args.get_or("compress", "none").to_string();
+            let profile = args.get_or("profile", "cpu").to_string();
+            let copts = CoordinatorOptions {
+                decode_batch: args.get_usize("decode-batch", 8),
+                sampling: if args.has("greedy") {
+                    Sampling::Greedy
+                } else {
+                    Sampling::Temperature { t: 0.8, top_k: 40 }
+                },
+                ..Default::default()
+            };
+            let (handle, _join) = spawn(
+                move || {
+                    let root = common::artifacts_root()?;
+                    let rt = Runtime::load(&root)?;
+                    let weights = Weights::load(&root.join("weights").join(&model))?;
+                    TpEngine::new(
+                        rt,
+                        &weights,
+                        EngineOptions::new(&model, tp)
+                            .with_compress(&compress)
+                            .with_profile(&profile),
+                    )
+                },
+                copts,
+            )?;
+            let server = Server::bind(&addr, handle)?;
+            println!("tpcc serving on http://{addr}  (POST /generate, GET /metrics)");
+            server.serve_forever()
+        }
+        "gen" => {
+            let prompt = args.get_or("prompt", "The parish church of ").to_string();
+            let max_tokens = args.get_usize("max-tokens", 48);
+            let args2 = args.clone();
+            let (handle, t) = spawn(
+                move || build_engine(&args2),
+                CoordinatorOptions::default(),
+            )?;
+            let resp = handle.generate(GenRequest {
+                prompt: prompt.clone(),
+                max_new_tokens: max_tokens,
+                greedy: true,
+                stop_token: -1,
+            })?;
+            println!("prompt : {prompt}");
+            println!("output : {}", resp.text);
+            println!(
+                "ttft {:.3}s  e2e {:.3}s  tpot {:.1}ms  virtual-prefill {:.4}s",
+                resp.ttft_s,
+                resp.e2e_s,
+                resp.tpot_s * 1e3,
+                resp.virtual_prefill_s
+            );
+            handle.shutdown();
+            drop(handle);
+            t.join().unwrap()?;
+            Ok(())
+        }
+        "eval" => {
+            let split = args.get_or("split", "test");
+            let tokens = args.get_usize("tokens", 4096);
+            let mut eng = build_engine(&args)?;
+            let text = common::corpus(split)?;
+            let r = tpcc::eval::perplexity(
+                &mut eng,
+                &text,
+                tpcc::eval::EvalOptions { max_tokens: tokens, ..Default::default() },
+            )?;
+            println!(
+                "model={} tp={} compress={} split={split}: ppl {:.4} over {} tokens ({:.1}s)",
+                eng.cfg.name,
+                eng.opts.tp,
+                eng.compressor_name(),
+                r.ppl(),
+                r.tokens,
+                r.wall_s
+            );
+            Ok(())
+        }
+        "table1" => {
+            let t = table1::run(common::eval_tokens(4096))?;
+            table1::print(&t);
+            Ok(())
+        }
+        "table2" => {
+            let rows = table2::run(common::eval_tokens(4096))?;
+            table2::print(&rows);
+            Ok(())
+        }
+        "table3" => {
+            let rows = table3::run_analytic();
+            table3::print(&rows, "analytic, paper-scale");
+            let live = table3::run_live("l4", 2, 8, 128, args.get_usize("reps", 5), true)?;
+            table3::print(&[live], "live micro model on CPU PJRT");
+            Ok(())
+        }
+        "table4" => {
+            let t = table4::run(common::eval_tokens(4096))?;
+            table4::print(&t);
+            Ok(())
+        }
+        "table5" => {
+            let rows = table5::run(common::eval_tokens(2048))?;
+            table5::print(&rows);
+            Ok(())
+        }
+        "info" => {
+            let root = common::artifacts_root()?;
+            let rt = Runtime::load(&root)?;
+            println!("tpcc {} — artifacts at {}", tpcc::version(), root.display());
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            println!("seq buckets: {:?}", rt.manifest.seq_buckets);
+            println!("batch buckets: {:?}", rt.manifest.batch_buckets);
+            println!("tp degrees: {:?}", rt.manifest.tp_degrees);
+            if let Some(models) = rt.manifest.raw.get("models").and_then(|m| m.as_obj()) {
+                for (name, m) in models {
+                    println!(
+                        "model {name}: d={} L={} H={} params={}",
+                        m.get("d_model").and_then(|v| v.as_i64()).unwrap_or(0),
+                        m.get("n_layers").and_then(|v| v.as_i64()).unwrap_or(0),
+                        m.get("n_heads").and_then(|v| v.as_i64()).unwrap_or(0),
+                        m.get("params").and_then(|v| v.as_i64()).unwrap_or(0),
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "tpcc {} — TP communication-compression serving stack\n\
+                 commands: serve | gen | eval | table1..table5 | info\n\
+                 common flags: --model nano|micro|small --tp N --compress SPEC --profile l4|a100|cpu",
+                tpcc::version()
+            );
+            Ok(())
+        }
+    }
+}

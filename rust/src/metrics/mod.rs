@@ -1,0 +1,197 @@
+//! Telemetry: counters, gauges and latency histograms with percentile
+//! queries. Lock-free-ish (atomics for counters, mutex for histograms —
+//! histograms are touched once per request, not per token).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::{self, Json};
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Reservoir-less recording histogram: keeps all samples (benchmark-scale
+/// cardinality) and answers exact percentiles.
+#[derive(Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        self.samples.lock().unwrap().push(v);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut s = self.samples.lock().unwrap().clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        HistogramSnapshot { sorted: s }
+    }
+
+    pub fn clear(&self) {
+        self.samples.lock().unwrap().clear();
+    }
+}
+
+pub struct HistogramSnapshot {
+    sorted: Vec<f64>,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0 * (self.sorted.len() - 1) as f64).round() as usize;
+        self.sorted[rank.min(self.sorted.len() - 1)]
+    }
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(f64::NAN)
+    }
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(f64::NAN)
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.sorted.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sorted.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.sorted.len() - 1) as f64)
+            .sqrt()
+    }
+}
+
+/// The serving stack's metric registry (one per coordinator).
+#[derive(Default)]
+pub struct Registry {
+    pub requests_received: Counter,
+    pub requests_completed: Counter,
+    pub tokens_generated: Counter,
+    pub prefill_tokens: Counter,
+    pub batches_executed: Counter,
+    pub comm_bytes_sent: Counter,
+    pub comm_bytes_saved: Counter,
+    pub kv_blocks_in_use: Counter,
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e_latency: Histogram,
+    pub queue_wait: Histogram,
+    custom: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Registry {
+    pub fn set(&self, key: &str, v: f64) {
+        self.custom.lock().unwrap().insert(key.to_string(), v);
+    }
+
+    /// JSON snapshot served at `/metrics`.
+    pub fn to_json(&self) -> Json {
+        let ttft = self.ttft.snapshot();
+        let tpot = self.tpot.snapshot();
+        let e2e = self.e2e_latency.snapshot();
+        let mut pairs = vec![
+            ("requests_received", json::num(self.requests_received.get() as f64)),
+            ("requests_completed", json::num(self.requests_completed.get() as f64)),
+            ("tokens_generated", json::num(self.tokens_generated.get() as f64)),
+            ("prefill_tokens", json::num(self.prefill_tokens.get() as f64)),
+            ("batches_executed", json::num(self.batches_executed.get() as f64)),
+            ("comm_bytes_sent", json::num(self.comm_bytes_sent.get() as f64)),
+            ("comm_bytes_saved", json::num(self.comm_bytes_saved.get() as f64)),
+            ("ttft_p50_s", json::num(ttft.percentile(50.0))),
+            ("ttft_p95_s", json::num(ttft.percentile(95.0))),
+            ("tpot_p50_s", json::num(tpot.percentile(50.0))),
+            ("e2e_p50_s", json::num(e2e.percentile(50.0))),
+            ("e2e_p95_s", json::num(e2e.percentile(95.0))),
+        ];
+        let custom = self.custom.lock().unwrap();
+        for (k, v) in custom.iter() {
+            pairs.push((k.as_str(), json::num(*v)));
+        }
+        let mut obj = BTreeMap::new();
+        for (k, v) in pairs {
+            obj.insert(k.to_string(), v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = Histogram::default();
+        assert!(h.snapshot().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn registry_json() {
+        let r = Registry::default();
+        r.requests_received.inc();
+        r.ttft.record(0.25);
+        r.set("custom_metric", 1.5);
+        let j = r.to_json();
+        assert_eq!(j.get("requests_received").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("ttft_p50_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("custom_metric").unwrap().as_f64(), Some(1.5));
+    }
+}

@@ -1,0 +1,80 @@
+//! Model-side plumbing: runtime configs (mirroring python configs.py via
+//! the manifest), weight loading + TP sharding, and the analytic
+//! performance model for paper-scale Llama-2 deployments (Table 3).
+
+pub mod perf_model;
+pub mod weights;
+
+use crate::util::json::Json;
+
+/// Runtime model configuration, read from `artifacts/manifest.json`
+/// (written by the AOT exporter from python `configs.MODELS`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(name: &str, manifest: &Json) -> anyhow::Result<ModelConfig> {
+        let m = manifest
+            .path(&format!("models.{name}"))
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))?;
+        let g = |k: &str| -> anyhow::Result<usize> {
+            m.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing models.{name}.{k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            head_dim: g("head_dim")?,
+            d_ff: g("d_ff")?,
+            max_seq: g("max_seq")?,
+            params: g("params")?,
+        })
+    }
+
+    pub fn shard_heads(&self, tp: usize) -> usize {
+        assert_eq!(self.n_heads % tp, 0, "{} heads not divisible by tp={}", self.n_heads, tp);
+        self.n_heads / tp
+    }
+
+    pub fn shard_ff(&self, tp: usize) -> usize {
+        assert_eq!(self.d_ff % tp, 0);
+        self.d_ff / tp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Json {
+        Json::parse(
+            r#"{"models": {"nano": {"vocab": 256, "d_model": 128, "n_layers": 2,
+                "n_heads": 8, "head_dim": 16, "d_ff": 384, "max_seq": 320,
+                "params": 490000}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_from_manifest() {
+        let c = ModelConfig::from_manifest("nano", &manifest()).unwrap();
+        assert_eq!(c.d_model, 128);
+        assert_eq!(c.shard_heads(4), 2);
+        assert_eq!(c.shard_ff(8), 48);
+        assert!(ModelConfig::from_manifest("bogus", &manifest()).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Weight loading (.npy, saved by python train.py) + Megatron-style TP
+//! shard slicing, mirroring python `model.shard_params` exactly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::ModelConfig;
+use crate::util::npy::Npy;
+
+/// A named f32 tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    /// Slice columns [a, b) of a 2-D tensor.
+    pub fn col_slice(&self, a: usize, b: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(b <= c && a < b);
+        let w = b - a;
+        let mut data = Vec::with_capacity(r * w);
+        for row in 0..r {
+            data.extend_from_slice(&self.data[row * c + a..row * c + b]);
+        }
+        Tensor { shape: vec![r, w], data }
+    }
+
+    /// Slice rows [a, b) of a 2-D tensor.
+    pub fn row_slice(&self, a: usize, b: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        Tensor { shape: vec![b - a, c], data: self.data[a * c..b * c].to_vec() }
+    }
+}
+
+/// All weights of one model, keyed by the python export names
+/// (`l0.wq`, `final_norm`, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(dir: &Path) -> anyhow::Result<Weights> {
+        let mut tensors = BTreeMap::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("npy") {
+                continue;
+            }
+            let name = path.file_stem().unwrap().to_string_lossy().to_string();
+            let npy = Npy::load(&path)?;
+            let data = npy
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("{name}: expected float tensor"))?;
+            tensors.insert(name, Tensor { shape: npy.shape, data });
+        }
+        anyhow::ensure!(!tensors.is_empty(), "no .npy weights in {}", dir.display());
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight {name}"))
+    }
+
+    /// Worker `rank`'s TP shard (mirrors python `shard_params`):
+    /// wq/wk/wv/w_gate/w_up column-split, wo/w_down row-split, norms and
+    /// embed/head replicated.
+    pub fn shard(&self, cfg: &ModelConfig, tp: usize, rank: usize) -> anyhow::Result<Weights> {
+        let hn = cfg.shard_heads(tp);
+        let fn_ = cfg.shard_ff(tp);
+        let hd = cfg.head_dim;
+        let (qa, qb) = (rank * hn * hd, (rank + 1) * hn * hd);
+        let (fa, fb) = (rank * fn_, (rank + 1) * fn_);
+        let mut out = BTreeMap::new();
+        for key in ["embed", "final_norm", "lm_head"] {
+            out.insert(key.to_string(), self.get(key)?.clone());
+        }
+        for l in 0..cfg.n_layers {
+            let g = |n: &str| self.get(&format!("l{l}.{n}"));
+            out.insert(format!("l{l}.attn_norm"), g("attn_norm")?.clone());
+            out.insert(format!("l{l}.mlp_norm"), g("mlp_norm")?.clone());
+            out.insert(format!("l{l}.wq"), g("wq")?.col_slice(qa, qb));
+            out.insert(format!("l{l}.wk"), g("wk")?.col_slice(qa, qb));
+            out.insert(format!("l{l}.wv"), g("wv")?.col_slice(qa, qb));
+            out.insert(format!("l{l}.wo"), g("wo")?.row_slice(qa, qb));
+            out.insert(format!("l{l}.w_gate"), g("w_gate")?.col_slice(fa, fb));
+            out.insert(format!("l{l}.w_up"), g("w_up")?.col_slice(fa, fb));
+            out.insert(format!("l{l}.w_down"), g("w_down")?.row_slice(fa, fb));
+        }
+        Ok(Weights { tensors: out })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| i as f32).collect() }
+    }
+
+    #[test]
+    fn col_slice() {
+        let a = t(&[2, 4]); // [[0,1,2,3],[4,5,6,7]]
+        let s = a.col_slice(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn row_slice() {
+        let a = t(&[3, 2]);
+        let s = a.row_slice(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn shards_tile_weight_exactly() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 4,
+            head_dim: 2,
+            d_ff: 8,
+            max_seq: 16,
+            params: 0,
+        };
+        let mut w = Weights::default();
+        w.tensors.insert("embed".into(), t(&[16, 8]));
+        w.tensors.insert("final_norm".into(), t(&[8]));
+        w.tensors.insert("lm_head".into(), t(&[8, 16]));
+        for n in ["wq", "wk", "wv"] {
+            w.tensors.insert(format!("l0.{n}"), t(&[8, 8]));
+        }
+        w.tensors.insert("l0.wo".into(), t(&[8, 8]));
+        w.tensors.insert("l0.attn_norm".into(), t(&[8]));
+        w.tensors.insert("l0.mlp_norm".into(), t(&[8]));
+        w.tensors.insert("l0.w_gate".into(), t(&[8, 8]));
+        w.tensors.insert("l0.w_up".into(), t(&[8, 8]));
+        w.tensors.insert("l0.w_down".into(), t(&[8, 8]));
+
+        let tp = 2;
+        let shards: Vec<Weights> = (0..tp).map(|r| w.shard(&cfg, tp, r).unwrap()).collect();
+        // wq column split: concatenating shard columns reproduces original
+        let full = w.get("l0.wq").unwrap();
+        let s0 = shards[0].get("l0.wq").unwrap();
+        let s1 = shards[1].get("l0.wq").unwrap();
+        for row in 0..8 {
+            for c in 0..4 {
+                assert_eq!(s0.data[row * 4 + c], full.data[row * 8 + c]);
+                assert_eq!(s1.data[row * 4 + c], full.data[row * 8 + 4 + c]);
+            }
+        }
+        // wo row split
+        let full_o = w.get("l0.wo").unwrap();
+        let o1 = shards[1].get("l0.wo").unwrap();
+        assert_eq!(o1.data[..], full_o.data[4 * 8..]);
+    }
+}

@@ -1,0 +1,346 @@
+//! SoTA comparison codecs from Bian et al. 2024 (paper §5.3, Table 4):
+//! channel-wise INT quantization and TopK sparsification, plus an FP16
+//! truncation baseline.
+
+use super::Compressor;
+
+/// Channel-wise INTk: one f32 absmax scale per channel (the last-axis
+/// stride), symmetric integer codes. For a `[rows, channels]` partial
+/// activation this is the paper's "channel-wise INT4": coarse-grained —
+/// one scale per channel over *all* rows — which is exactly why it
+/// degrades worse than MX block scaling (Table 4) while being cheaper.
+pub struct ChannelInt {
+    pub bits: u32,
+    /// channel count; set per-tensor via `with_channels` or inferred as
+    /// sqrt-ish fallback. The collective knows the row length and always
+    /// sets it.
+    pub channels: usize,
+}
+
+impl ChannelInt {
+    pub fn new(bits: u32) -> ChannelInt {
+        ChannelInt { bits, channels: 0 }
+    }
+
+    pub fn with_channels(bits: u32, channels: usize) -> ChannelInt {
+        ChannelInt { bits, channels }
+    }
+
+    fn qmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1) as f32
+    }
+
+    fn resolve_channels(&self, n: usize) -> usize {
+        if self.channels > 0 && n % self.channels == 0 {
+            self.channels
+        } else {
+            n // degenerate: one scale per value-row of 1 channel... treat whole tensor as one channel row
+        }
+    }
+}
+
+impl Compressor for ChannelInt {
+    fn name(&self) -> String {
+        format!("int{}_channelwise", self.bits)
+    }
+
+    /// k bits per value + 32-bit scale per channel amortized over rows.
+    fn effective_bits(&self, n: usize) -> f64 {
+        let ch = self.resolve_channels(n);
+        let rows = n / ch;
+        self.bits as f64 + 32.0 / rows as f64
+    }
+
+    /// Wire: per-channel f32 scales, then row-major i8 codes (one byte
+    /// per value regardless of k<=8; accounted size uses effective_bits).
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        let ch = self.resolve_channels(x.len());
+        let rows = x.len() / ch;
+        out.clear();
+        out.reserve(ch * 4 + x.len());
+        let qmax = self.qmax();
+        // channel c = column index; scale over all rows of that column
+        let mut scales = vec![0.0f32; ch];
+        for r in 0..rows {
+            for c in 0..ch {
+                scales[c] = scales[c].max(x[r * ch + c].abs());
+            }
+        }
+        for s in &mut scales {
+            *s = if *s > 0.0 { *s / qmax } else { 1.0 };
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for r in 0..rows {
+            for c in 0..ch {
+                let q = (x[r * ch + c] / scales[c]).round_ties_even().clamp(-qmax, qmax);
+                out.push(q as i8 as u8);
+            }
+        }
+    }
+
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        let ch = self.resolve_channels(n_values);
+        let rows = n_values / ch;
+        let mut scales = vec![0.0f32; ch];
+        for (c, chunk) in wire[..ch * 4].chunks_exact(4).enumerate() {
+            scales[c] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        let codes = &wire[ch * 4..ch * 4 + n_values];
+        for r in 0..rows {
+            for c in 0..ch {
+                acc[r * ch + c] += (codes[r * ch + c] as i8) as f32 * scales[c];
+            }
+        }
+    }
+
+    /// Plain per-channel scale+round: far fewer ops than MX block-wise
+    /// exponent extraction + sub-byte packing (paper §5.3: "INT4 ...
+    /// minimal computational overhead").
+    fn compute_cost_factor(&self) -> f64 {
+        0.35
+    }
+}
+
+/// TopK sparsification: keep the `1/ratio_den` largest-magnitude values
+/// (value f32 + index u32 each), zero the rest. "TopK 3x" in the paper
+/// means 3x wire compression vs fp16 => keep fraction = 16 / (3 * 64).
+pub struct TopK {
+    /// compression factor vs fp16 (paper's "3x")
+    pub compression: f64,
+}
+
+impl TopK {
+    pub fn new(compression: f64) -> TopK {
+        TopK { compression }
+    }
+
+    pub fn keep_count(&self, n: usize) -> usize {
+        // each kept value costs 64 wire bits; match 16/compression bits/value
+        let frac = 16.0 / (self.compression * 64.0);
+        ((n as f64 * frac).round() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk{:.0}x", self.compression)
+    }
+
+    fn effective_bits(&self, n: usize) -> f64 {
+        self.keep_count(n) as f64 * 64.0 / n as f64
+    }
+
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        let k = self.keep_count(x.len());
+        // partial selection: indices of the k largest |x|
+        let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            x[b as usize]
+                .abs()
+                .partial_cmp(&x[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out.clear();
+        out.reserve(k * 8);
+        for &i in &idx[..k] {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&x[i as usize].to_le_bytes());
+        }
+    }
+
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        let k = self.keep_count(n_values);
+        for rec in wire.chunks_exact(8).take(k) {
+            let i = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+            let v = f32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]);
+            acc[i] += v;
+        }
+    }
+
+    /// selection pass over all values, but trivial decode
+    fn compute_cost_factor(&self) -> f64 {
+        0.8
+    }
+}
+
+/// FP16 truncation (the paper's *uncompressed* baseline: TP traffic is
+/// fp16 activations; our tensors are f32 in memory, so "uncompressed"
+/// on the wire = fp16, 16 effective bits).
+pub struct Fp16;
+
+fn f32_to_f16_bits(v: f32) -> u16 {
+    // round-to-nearest-even f32 -> IEEE binary16
+    let b = v.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xFF) as i32;
+    let mant = b & 0x7F_FFFF;
+    if exp == 0xFF {
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x80_0000;
+        let shift = 14 - e;
+        let half = 1u32 << (shift - 1);
+        let rounded = (m + half - 1 + ((m >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    let half = 0x1000u32;
+    let m = mant + (half - 1) + ((mant >> 13) & 1);
+    if m & 0x80_0000 != 0 {
+        // mantissa carry bumps the exponent
+        let e2 = e + 1;
+        if e2 >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e2 as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | (m >> 13) as u16
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match exp {
+        0 => {
+            if mant == 0 {
+                sign
+            } else {
+                // subnormal: value = mant * 2^-24; normalize (k shifts to
+                // set bit 10) => (1+frac) * 2^(-14-k), biased = 113 - k.
+                let mut k = 0i32;
+                let mut m = mant;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    k += 1;
+                }
+                m &= 0x3FF;
+                sign | (((113 - k) as u32) << 23) | (m << 13)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (mant << 13),
+        _ => sign | ((exp as u32 + 127 - 15) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+impl Compressor for Fp16 {
+    fn name(&self) -> String {
+        "fp16".into()
+    }
+    fn effective_bits(&self, _n: usize) -> f64 {
+        16.0
+    }
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(x.len() * 2);
+        for &v in x {
+            out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        for (i, c) in wire.chunks_exact(2).take(n_values).enumerate() {
+            acc[i] += f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channelwise_int4_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (rows, ch) = (64, 32);
+        let mut x = vec![0.0f32; rows * ch];
+        rng.fill_activations(&mut x, 2.0);
+        let c = ChannelInt::with_channels(4, ch);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let out = c.decode(&wire, x.len());
+        // per-channel error bound: scale = amax/7 => max err 0.5*scale
+        for col in 0..ch {
+            let amax = (0..rows).fold(0.0f32, |a, r| a.max(x[r * ch + col].abs()));
+            for r in 0..rows {
+                let err = (x[r * ch + col] - out[r * ch + col]).abs();
+                assert!(err <= amax / 7.0 * 0.51 + 1e-6);
+            }
+        }
+        // effective bits ~ 4 + 32/rows
+        assert!((c.effective_bits(x.len()) - (4.0 + 32.0 / 64.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn channelwise_outlier_poisons_channel() {
+        // the Table 4 failure mode: one outlier crushes its whole channel
+        let ch = 8;
+        let rows = 16;
+        let mut x = vec![0.1f32; rows * ch];
+        x[3] = 1000.0; // outlier in channel 3
+        let c = ChannelInt::with_channels(4, ch);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let out = c.decode(&wire, x.len());
+        // channel 3's small values are destroyed (quantized to 0)
+        assert_eq!(out[ch + 3], 0.0);
+        // other channels survive
+        assert!((out[ch + 4] - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, -0.3, 0.05, 1.0, 0.0];
+        let t = TopK::new(16.0); // keep 16/(16*64) = 1/64 -> clamps to 1
+        assert_eq!(t.keep_count(x.len()), 1);
+        let mut wire = Vec::new();
+        t.encode(&x, &mut wire);
+        let out = t.decode(&wire, x.len());
+        assert_eq!(out[1], -5.0);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn topk_3x_effective_bits() {
+        let t = TopK::new(3.0);
+        let n = 1200;
+        let eb = t.effective_bits(n);
+        assert!((eb - 16.0 / 3.0).abs() < 0.2, "{eb}");
+    }
+
+    #[test]
+    fn fp16_roundtrip_exact_for_halves() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, -2.75, 1e-5] {
+            let h = f32_to_f16_bits(v);
+            let back = f16_bits_to_f32(h);
+            let rel = if v == 0.0 { back.abs() } else { ((back - v) / v).abs() };
+            // subnormals (|v| < 2^-14) only carry mantissa bits of the
+            // fixed 2^-24 grid -> coarser relative error
+            let tol = if v != 0.0 && v.abs() < 6.1e-5 { 1e-2 } else { 1e-3 };
+            assert!(rel < tol, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn fp16_compressor_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0f32; 512];
+        rng.fill_activations(&mut x, 2.0);
+        let c = Fp16;
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        assert_eq!(wire.len(), 1024);
+        let out = c.decode(&wire, 512);
+        for (a, b) in x.iter().zip(&out) {
+            assert!(((a - b) / a.abs().max(1e-6)).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! The MX quantize/dequantize codec — bit-exact twin of ref.py.
+
+use super::packed::{pack_bits, unpack_into};
+use super::types::{exp2i, floor_log2, ElemFormat, MxScheme};
+use super::Compressor;
+
+/// Stateless MX codec for one scheme. Wire layout (per message):
+/// `[codes: ceil(n*elem_bits/8) bytes][scales: nblocks bytes]`
+/// (scales are stored byte-per-block on the wire for decode speed; the
+///  *accounted* size uses `MxScheme::wire_bytes`, which bit-packs both —
+///  the interconnect simulator charges the accounted size.)
+#[derive(Debug, Clone, Copy)]
+pub struct MxCodec {
+    pub scheme: MxScheme,
+}
+
+impl MxCodec {
+    pub fn new(scheme: MxScheme) -> MxCodec {
+        MxCodec { scheme }
+    }
+
+    /// Quantize one block-scale-worth of values into (code, scale) bytes.
+    /// Exposed unpacked for the golden-vector tests.
+    ///
+    /// Hot path (§Perf): element quantize+encode are fused into a direct
+    /// integer-code computation (`quantize_code_float`) — one exponent
+    /// extraction, one multiply, one round per element; binade carries
+    /// and saturation fall out of integer-code arithmetic. Bit-equal to
+    /// the two-step reference path (golden-vector tests enforce it).
+    pub fn quantize_unpacked(&self, x: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
+        let s = &self.scheme;
+        assert_eq!(x.len() % s.block, 0, "input not block-aligned");
+        codes.clear();
+        scales.clear();
+        codes.reserve(x.len());
+        scales.reserve(x.len() / s.block);
+        let e = &s.elem;
+        for blk in x.chunks_exact(s.block) {
+            let mut amax = 0.0f32;
+            for &v in blk {
+                amax = amax.max(v.abs());
+            }
+            let sexp = block_scale_exp(amax, s);
+            let inv = exp2i(-sexp);
+            scales.push((sexp + s.scale.bias()) as u8);
+            if e.is_float {
+                for &v in blk {
+                    codes.push(quantize_code_float(v * inv, e));
+                }
+            } else {
+                for &v in blk {
+                    codes.push(quantize_code_int(v * inv, e));
+                }
+            }
+        }
+    }
+
+    /// Inverse of `quantize_unpacked`.
+    pub fn dequantize_unpacked(&self, codes: &[u8], scales: &[u8], out: &mut Vec<f32>) {
+        let s = &self.scheme;
+        out.clear();
+        out.reserve(codes.len());
+        for (bi, blk) in codes.chunks_exact(s.block).enumerate() {
+            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
+            if s.elem.is_float {
+                for &c in blk {
+                    out.push(decode_elem_float(c, &s.elem) * scale);
+                }
+            } else {
+                for &c in blk {
+                    out.push(decode_elem_int(c, &s.elem) * scale);
+                }
+            }
+        }
+    }
+
+    /// quantize -> dequantize round trip (error-injection view; used by
+    /// the eval harness when simulating compression without the wire).
+    pub fn fake_quantize(&self, x: &mut [f32]) {
+        let s = &self.scheme;
+        assert_eq!(x.len() % s.block, 0);
+        for blk in x.chunks_exact_mut(s.block) {
+            let mut amax = 0.0f32;
+            for &v in blk.iter() {
+                amax = amax.max(v.abs());
+            }
+            let sexp = block_scale_exp(amax, s);
+            let inv = exp2i(-sexp);
+            let scale = exp2i(sexp);
+            if s.elem.is_float {
+                for v in blk.iter_mut() {
+                    *v = quantize_elem_float(*v * inv, &s.elem) * scale;
+                }
+            } else {
+                for v in blk.iter_mut() {
+                    *v = quantize_elem_int(*v * inv, &s.elem) * scale;
+                }
+            }
+        }
+    }
+}
+
+/// MX shared exponent: floor(log2(amax)) - emax_elem, clamped to EdM0.
+#[inline]
+pub fn block_scale_exp(amax: f32, s: &MxScheme) -> i32 {
+    let raw = if amax > 0.0 {
+        floor_log2(amax) - s.elem.emax()
+    } else {
+        s.scale.emin()
+    };
+    raw.clamp(s.scale.emin(), s.scale.emax())
+}
+
+/// Round v (pre-divided by the block scale) onto the ExMy grid.
+/// Mirrors ref.quantize_elem_float exactly.
+#[inline]
+pub fn quantize_elem_float(v: f32, e: &ElemFormat) -> f32 {
+    let sign = if v < 0.0 { -1.0f32 } else { 1.0 };
+    let a = v.abs();
+    if a == 0.0 {
+        return 0.0;
+    }
+    let maxv = e.max_value();
+    let be = floor_log2(a).clamp(e.emin(), e.emax());
+    let step = exp2i(be - e.mbits as i32);
+    let q = ((a / step).round_ties_even() * step).min(maxv);
+    sign * q
+}
+
+/// Round v onto the signed-magnitude INTk grid.
+#[inline]
+pub fn quantize_elem_int(v: f32, e: &ElemFormat) -> f32 {
+    let qmax = e.int_qmax() as f32;
+    v.round_ties_even().clamp(-qmax, qmax)
+}
+
+/// Fused quantize+encode: v (pre-divided by the block scale) -> ExMy
+/// code. Equivalent to `encode_elem_float(quantize_elem_float(v))` but
+/// one pass: with code = ((be+bias-1)<<M) + round(a * 2^(M-be)),
+/// mantissa carries roll into the exponent field automatically and
+/// over-the-top carries saturate. Bit-exact vs the two-step path.
+#[inline]
+pub fn quantize_code_float(v: f32, e: &ElemFormat) -> u8 {
+    let sign = ((v < 0.0) as u32) << (e.ebits + e.mbits);
+    let a = v.abs();
+    let be = floor_log2(a).clamp(e.emin(), e.emax());
+    // `as u32` saturates for huge a (then min(max_mag) clamps — same
+    // result as the reference's min(q, maxv) saturation)
+    let m = (a * exp2i(e.mbits as i32 - be)).round_ties_even() as u32;
+    // (be + bias - 1) << M; for subnormals (be == emin, bias+emin == 1)
+    // this is 0 and m itself is the code; a == 0 gives m == 0.
+    let mag = (((be + e.bias() - 1) as u32) << e.mbits).saturating_add(m);
+    let max_mag = (((e.emax() + e.bias()) as u32) << e.mbits) | ((1 << e.mbits) - 1);
+    let mag = mag.min(max_mag);
+    // values that quantize to zero drop the sign (ref path: -0.0 < 0 is
+    // false, so the reference also emits +0)
+    if mag == 0 {
+        0
+    } else {
+        (sign | mag) as u8
+    }
+}
+
+/// Fused quantize+encode for sign-magnitude INTk.
+#[inline]
+pub fn quantize_code_int(v: f32, e: &ElemFormat) -> u8 {
+    let sign = ((v < 0.0) as u32) << e.mbits;
+    let m = (v.abs().round_ties_even() as u32).min(e.int_qmax() as u32);
+    if m == 0 {
+        0
+    } else {
+        (sign | m) as u8
+    }
+}
+
+/// Bit-encode an exactly-representable ExMy value (sign|exp|mant).
+#[inline]
+pub fn encode_elem_float(q: f32, e: &ElemFormat) -> u8 {
+    let sign = (q < 0.0) as u32;
+    let a = q.abs();
+    let be = floor_log2(a);
+    let (exp_f, mant) = if a == 0.0 || be < e.emin() {
+        // subnormal: mant = a / 2^(emin - M)
+        let m = (a / exp2i(e.emin() - e.mbits as i32)).round_ties_even() as u32;
+        (0u32, m)
+    } else {
+        let m = (a / exp2i(be - e.mbits as i32)).round_ties_even() as u32 - (1 << e.mbits);
+        ((be + e.bias()) as u32, m)
+    };
+    ((sign << (e.ebits + e.mbits)) | (exp_f << e.mbits) | mant) as u8
+}
+
+#[inline]
+pub fn decode_elem_float(code: u8, e: &ElemFormat) -> f32 {
+    let c = code as u32;
+    let sign = (c >> (e.ebits + e.mbits)) & 1;
+    let exp_f = (c >> e.mbits) & ((1 << e.ebits) - 1);
+    let mant = c & ((1 << e.mbits) - 1);
+    let mag = if exp_f == 0 {
+        mant as f32 * exp2i(e.emin() - e.mbits as i32)
+    } else {
+        ((1u32 << e.mbits) + mant) as f32 * exp2i(exp_f as i32 - e.bias() - e.mbits as i32)
+    };
+    if sign == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+#[inline]
+pub fn encode_elem_int(q: f32, e: &ElemFormat) -> u8 {
+    let sign = (q < 0.0) as u32;
+    let mag = q.abs() as u32;
+    ((sign << e.mbits) | mag) as u8
+}
+
+#[inline]
+pub fn decode_elem_int(code: u8, e: &ElemFormat) -> f32 {
+    let c = code as u32;
+    let sign = (c >> e.mbits) & 1;
+    let mag = (c & ((1 << e.mbits) - 1)) as f32;
+    if sign == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+impl Compressor for MxCodec {
+    fn name(&self) -> String {
+        self.scheme.name()
+    }
+
+    fn effective_bits(&self, _n: usize) -> f64 {
+        self.scheme.effective_bits()
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> usize {
+        self.scheme.wire_bytes(n_values)
+    }
+
+    /// Wire: bit-packed codes, then byte-per-block scales.
+    ///
+    /// §Perf note: a fused quantize+pack single-pass variant was tried
+    /// and measured SLOWER than this two-pass form (193 vs 242 MB/s —
+    /// the byte-at-a-time accumulator store defeats vectorization of
+    /// the quantize loop); see EXPERIMENTS.md §Perf iteration log.
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        self.quantize_unpacked(x, &mut codes, &mut scales);
+        out.clear();
+        pack_bits(&codes, self.scheme.elem.bits(), out);
+        out.extend_from_slice(&scales);
+    }
+
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        let s = &self.scheme;
+        let nb = s.elem.bits();
+        let code_bytes = (n_values * nb as usize).div_ceil(8);
+        let nblocks = n_values / s.block;
+        let scales = &wire[code_bytes..code_bytes + nblocks];
+        let mut codes = vec![0u8; n_values];
+        unpack_into(&wire[..code_bytes], nb, &mut codes);
+        for (bi, blk) in codes.chunks_exact(s.block).enumerate() {
+            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
+            let dst = &mut acc[bi * s.block..(bi + 1) * s.block];
+            if s.elem.is_float {
+                for (d, &c) in dst.iter_mut().zip(blk) {
+                    *d += decode_elem_float(c, &s.elem) * scale;
+                }
+            } else {
+                for (d, &c) in dst.iter_mut().zip(blk) {
+                    *d += decode_elem_int(c, &s.elem) * scale;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn codec(name: &str) -> MxCodec {
+        MxCodec::new(MxScheme::parse(name).unwrap())
+    }
+
+    #[test]
+    fn fp4_grid_values_survive() {
+        // E2M1 representable magnitudes: 0, .5, 1, 1.5, 2, 3, 4, 6
+        let c = codec("fp4_e2m1_b8_e8m0");
+        let x = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        c.quantize_unpacked(&x, &mut codes, &mut scales);
+        let mut out = Vec::new();
+        c.dequantize_unpacked(&codes, &scales, &mut out);
+        assert_eq!(out, x);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        c.quantize_unpacked(&neg, &mut codes, &mut scales);
+        c.dequantize_unpacked(&codes, &scales, &mut out);
+        assert_eq!(out, neg);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(42);
+        for name in ["fp4_e2m1_b32_e8m0", "fp5_e2m2_b16_e8m0", "int4_b8_e5m0", "fp3_e1m1_b8_e8m0"] {
+            let c = codec(name);
+            let n = 4096;
+            let mut x = vec![0.0f32; n];
+            rng.fill_activations(&mut x, 3.0);
+            let mut codes = Vec::new();
+            let mut scales = Vec::new();
+            c.quantize_unpacked(&x, &mut codes, &mut scales);
+            let mut out = Vec::new();
+            c.dequantize_unpacked(&codes, &scales, &mut out);
+            for (blk_i, blk) in x.chunks_exact(c.scheme.block).enumerate() {
+                let amax = blk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let bound = if c.scheme.elem.is_float {
+                    amax * 2.0f32.powi(-(c.scheme.elem.mbits as i32)) * 1.01
+                } else {
+                    amax / c.scheme.elem.int_qmax() as f32 * 1.01
+                };
+                for (j, &v) in blk.iter().enumerate() {
+                    let err = (v - out[blk_i * c.scheme.block + j]).abs();
+                    assert!(err <= bound.max(1e-30), "{name}: err {err} > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_via_compressor_trait() {
+        let mut rng = Rng::new(7);
+        let c = codec("fp4_e2m1_b32_e8m0");
+        let n = 1024;
+        let mut x = vec![0.0f32; n];
+        rng.fill_activations(&mut x, 2.0);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        // accounted size: 4.25 bits/value
+        assert_eq!(c.wire_bytes(n), (n * 4 + (n / 32) * 8) / 8);
+        let decoded = c.decode(&wire, n);
+        // must equal the unpacked path exactly
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        c.quantize_unpacked(&x, &mut codes, &mut scales);
+        let mut direct = Vec::new();
+        c.dequantize_unpacked(&codes, &scales, &mut direct);
+        assert_eq!(decoded, direct);
+    }
+
+    #[test]
+    fn decode_add_accumulates() {
+        let c = codec("fp5_e2m2_b8_e8m0");
+        let x = vec![1.0f32; 16];
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let mut acc = vec![0.5f32; 16];
+        c.decode_add(&wire, 16, &mut acc);
+        for v in acc {
+            assert!((v - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zeros_and_extremes() {
+        for name in ["fp4_e2m1_b8_e8m0", "int4_b8_e4m0", "fp5_e1m3_b8_e8m0"] {
+            let c = codec(name);
+            let x = [0.0f32, 0.0, 3e38, -3e38, 1e-38, -1e-38, 1.0, -1.0];
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            let out = c.decode(&wire, 8);
+            assert!(out.iter().all(|v| v.is_finite()), "{name}: {out:?}");
+            assert_eq!(out[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn fake_quantize_matches_roundtrip() {
+        let mut rng = Rng::new(3);
+        let c = codec("fp4_e2m1_b32_e8m0");
+        let mut x = vec![0.0f32; 256];
+        rng.fill_activations(&mut x, 4.0);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let via_wire = c.decode(&wire, 256);
+        c.fake_quantize(&mut x);
+        assert_eq!(x, via_wire);
+    }
+
+    #[test]
+    fn scale_clamp_small_scale_format() {
+        // e4m0 bottoms out at 2^-7: tiny blocks flush toward zero
+        let c = codec("fp4_e2m1_b8_e4m0");
+        let x = [2.0f32.powi(-30); 8];
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let out = c.decode(&wire, 8);
+        // representable magnitude is at least 2^-7 * 0.5 or 0 (flush)
+        for v in out {
+            assert!(v == 0.0 || v >= exp2i(-8), "{v}");
+        }
+    }
+
+    #[test]
+    fn error_ordering_fp5_fp4_fp3() {
+        // Table 1's dtype axis: FP5 < FP4 < FP3 damage on the same data.
+        let mut rng = Rng::new(11);
+        let n = 8192;
+        let mut x = vec![0.0f32; n];
+        rng.fill_activations(&mut x, 3.0);
+        let mut errs = Vec::new();
+        for name in ["fp5_e2m2_b32_e8m0", "fp4_e2m1_b32_e8m0", "fp3_e1m1_b32_e8m0"] {
+            let c = codec(name);
+            let mut y = x.clone();
+            c.fake_quantize(&mut y);
+            let mse: f64 = x
+                .iter()
+                .zip(&y)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / n as f64;
+            errs.push(mse);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+}

@@ -1,0 +1,113 @@
+//! OCP Microscaling (MX) quantization codec + SoTA baselines.
+//!
+//! This is the rust twin of `python/compile/kernels/ref.py` / the Pallas
+//! kernels: every arithmetic step (exponent extraction, power-of-two
+//! assembly, ties-to-even rounding) mirrors the jnp reference so the two
+//! implementations are **bit-exact** — enforced by the golden-vector
+//! tests (`artifacts/golden/codec`, exported at AOT time).
+//!
+//! The codec runs on the collective path: each TP worker encodes its
+//! row-parallel partial result before the all-gather and decodes the
+//! N-1 received shards before the reduce (paper Fig. 1b). Encode /
+//! decode throughput therefore IS the paper's "compression overhead"
+//! term, and is benchmarked (`benches/codec.rs`) and perf-tuned
+//! (EXPERIMENTS.md §Perf).
+
+pub mod baselines;
+pub mod codec;
+pub mod packed;
+pub mod types;
+
+pub use baselines::{ChannelInt, TopK};
+pub use codec::MxCodec;
+pub use packed::{pack_bits, unpack_bits, PackedMx};
+pub use types::{ElemFormat, MxScheme, ScaleFormat, ELEM_FORMATS};
+
+/// Any compression applied to TP collective traffic.
+///
+/// `encode` returns the wire representation; `decode_add` accumulates the
+/// decoded tensor into `acc` (fused decompress+reduce, like the Pallas
+/// `mx_dequant_reduce` kernel).
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> String;
+    /// Bits per source value on the wire (the paper's "effective bits").
+    fn effective_bits(&self, n_values: usize) -> f64;
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>);
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]);
+
+    /// Relative encode+decode cost per value vs the MX codec (=1.0).
+    /// Drives the analytic perf model's compression-overhead term:
+    /// channel-wise INT is a plain scale+round (cheap, which is exactly
+    /// why the paper's Table 4 shows it faster despite worse PPL);
+    /// TopK pays a selection pass.
+    fn compute_cost_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Wire bytes for an n-value message (defaults to effective-bits math).
+    fn wire_bytes(&self, n_values: usize) -> usize {
+        ((self.effective_bits(n_values) * n_values as f64) / 8.0).ceil() as usize
+    }
+
+    /// Convenience: decode into a fresh zeroed buffer.
+    fn decode(&self, wire: &[u8], n_values: usize) -> Vec<f32> {
+        let mut out = vec![0.0; n_values];
+        self.decode_add(wire, n_values, &mut out);
+        out
+    }
+}
+
+/// The identity "compressor": f32 pass-through (uncompressed baseline).
+pub struct NoCompress;
+
+impl Compressor for NoCompress {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+    fn effective_bits(&self, _n: usize) -> f64 {
+        32.0
+    }
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(x.len() * 4);
+        for v in x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        assert!(wire.len() >= n_values * 4);
+        for (i, c) in wire.chunks_exact(4).take(n_values).enumerate() {
+            acc[i] += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+}
+
+/// Parse a compressor spec string:
+/// `none` | `fp16` | `<elem>_b<block>_<scale>` (MX) | `int4_channelwise` |
+/// `topk<ratio>` (e.g. `topk3`).
+///
+/// `channels` is the per-row channel count of the tensors this
+/// compressor will see (the model's hidden dim for TP partials) —
+/// required by the channel-wise baselines, ignored by the rest.
+pub fn compressor_from_spec_ch(
+    spec: &str,
+    channels: usize,
+) -> anyhow::Result<Box<dyn Compressor>> {
+    match spec {
+        "none" | "fp32" => Ok(Box::new(NoCompress)),
+        "fp16" => Ok(Box::new(baselines::Fp16)),
+        "int4_channelwise" => Ok(Box::new(ChannelInt::with_channels(4, channels))),
+        "int8_channelwise" => Ok(Box::new(ChannelInt::with_channels(8, channels))),
+        s if s.starts_with("topk") => {
+            let ratio: f64 = s[4..].parse()?;
+            Ok(Box::new(TopK::new(ratio)))
+        }
+        s => Ok(Box::new(MxCodec::new(MxScheme::parse(s)?))),
+    }
+}
+
+/// [`compressor_from_spec_ch`] without a known channel count (fine for
+/// every spec except the channel-wise baselines).
+pub fn compressor_from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    compressor_from_spec_ch(spec, 0)
+}

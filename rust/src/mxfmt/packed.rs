@@ -1,0 +1,95 @@
+//! Bit-packing for sub-byte element codes (the real wire format).
+//!
+//! Codes are packed LSB-first into a little-endian bit stream: code `i`
+//! occupies bits `[i*w, (i+1)*w)`. This is what actually crosses the
+//! (simulated) interconnect, so compressed message sizes are real, not
+//! just accounted.
+
+/// Pack `codes` (each < 2^width) into `out` as a contiguous bit stream.
+pub fn pack_bits(codes: &[u8], width: u32, out: &mut Vec<u8>) {
+    let w = width as usize;
+    out.resize((codes.len() * w).div_ceil(8), 0);
+    let mut bitpos = 0usize;
+    for &c in codes {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + w > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += w;
+    }
+}
+
+/// Unpack a bit stream produced by [`pack_bits`] into `out` (len = count).
+pub fn unpack_into(wire: &[u8], width: u32, out: &mut [u8]) {
+    let w = width as usize;
+    let mask = ((1u16 << w) - 1) as u16;
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let lo = wire[byte] as u16 >> off;
+        let val = if off + w > 8 {
+            lo | ((wire[byte + 1] as u16) << (8 - off))
+        } else {
+            lo
+        };
+        *o = (val & mask) as u8;
+        bitpos += w;
+    }
+}
+
+/// Unpack allocating.
+pub fn unpack_bits(wire: &[u8], width: u32, count: usize) -> Vec<u8> {
+    let mut out = vec![0u8; count];
+    unpack_into(wire, width, &mut out);
+    out
+}
+
+/// A packed MX message (codes + scales), used by tests and tools.
+#[derive(Debug, Clone)]
+pub struct PackedMx {
+    pub codes: Vec<u8>,
+    pub scales: Vec<u8>,
+    pub n_values: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(5);
+        for w in 1..=8u32 {
+            let n = 257; // deliberately not a multiple of 8
+            let codes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & ((1 << w) - 1)) as u8).collect();
+            let mut wire = Vec::new();
+            pack_bits(&codes, w, &mut wire);
+            assert_eq!(wire.len(), (n * w as usize).div_ceil(8));
+            let back = unpack_bits(&wire, w, n);
+            assert_eq!(back, codes, "width {w}");
+        }
+    }
+
+    #[test]
+    fn packed_density() {
+        // 4-bit codes: exactly 2 per byte
+        let codes = vec![0xFu8; 100];
+        let mut wire = Vec::new();
+        pack_bits(&codes, 4, &mut wire);
+        assert_eq!(wire.len(), 50);
+        assert!(wire.iter().all(|&b| b == 0xFF));
+    }
+
+    #[test]
+    fn three_bit_cross_byte() {
+        let codes = vec![0b101u8, 0b011, 0b110, 0b001];
+        let mut wire = Vec::new();
+        pack_bits(&codes, 3, &mut wire);
+        let back = unpack_bits(&wire, 3, 4);
+        assert_eq!(back, codes);
+    }
+}

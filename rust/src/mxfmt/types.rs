@@ -1,0 +1,211 @@
+//! MX format descriptors — rust twin of `python/compile/kernels/formats.py`.
+
+/// Element (value) data type of an MX block: tiny float `ExMy` or
+/// sign-magnitude `INTk`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElemFormat {
+    pub name: &'static str,
+    pub is_float: bool,
+    /// exponent bits (floats; 0 for INT)
+    pub ebits: u32,
+    /// mantissa bits (floats) / magnitude bits excl. sign (INT)
+    pub mbits: u32,
+}
+
+impl ElemFormat {
+    /// Total storage bits per element including sign.
+    pub const fn bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent (MX: no inf/nan; see formats.py).
+    pub const fn emax(&self) -> i32 {
+        if self.is_float {
+            1 << (self.ebits - 1)
+        } else {
+            self.mbits as i32 - 1
+        }
+    }
+
+    /// Smallest normal unbiased exponent (floats).
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    pub fn max_value(&self) -> f32 {
+        if self.is_float {
+            exp2i(self.emax()) * (2.0 - exp2i(-(self.mbits as i32)))
+        } else {
+            self.int_qmax() as f32
+        }
+    }
+
+    pub const fn int_qmax(&self) -> i32 {
+        (1 << self.mbits) - 1
+    }
+}
+
+pub const ELEM_FORMATS: &[ElemFormat] = &[
+    ElemFormat { name: "fp5_e3m1", is_float: true, ebits: 3, mbits: 1 },
+    ElemFormat { name: "fp5_e2m2", is_float: true, ebits: 2, mbits: 2 },
+    ElemFormat { name: "fp5_e1m3", is_float: true, ebits: 1, mbits: 3 },
+    ElemFormat { name: "fp4_e2m1", is_float: true, ebits: 2, mbits: 1 },
+    ElemFormat { name: "fp4_e1m2", is_float: true, ebits: 1, mbits: 2 },
+    ElemFormat { name: "fp3_e1m1", is_float: true, ebits: 1, mbits: 1 },
+    ElemFormat { name: "int3", is_float: false, ebits: 0, mbits: 2 },
+    ElemFormat { name: "int4", is_float: false, ebits: 0, mbits: 3 },
+    ElemFormat { name: "int5", is_float: false, ebits: 0, mbits: 4 },
+];
+
+pub fn elem_by_name(name: &str) -> Option<ElemFormat> {
+    ELEM_FORMATS.iter().copied().find(|e| e.name == name)
+}
+
+/// `EdM0` power-of-two scale: d-bit biased exponent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleFormat {
+    pub ebits: u32,
+}
+
+impl ScaleFormat {
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+    /// Symmetric clamp range (E8M0: [-127, 127], 0xFF reserved).
+    pub const fn emax(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+    pub const fn emin(&self) -> i32 {
+        -self.emax()
+    }
+    pub fn name(&self) -> String {
+        format!("e{}m0", self.ebits)
+    }
+}
+
+/// A complete MX scheme (element dtype × scale dtype × block size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MxScheme {
+    pub elem: ElemFormat,
+    pub scale: ScaleFormat,
+    pub block: usize,
+}
+
+impl MxScheme {
+    pub fn new(elem: &str, block: usize, scale_ebits: u32) -> anyhow::Result<MxScheme> {
+        let elem = elem_by_name(elem)
+            .ok_or_else(|| anyhow::anyhow!("unknown elem format {elem}"))?;
+        anyhow::ensure!(block > 0, "block must be positive");
+        Ok(MxScheme { elem, scale: ScaleFormat { ebits: scale_ebits }, block })
+    }
+
+    /// Parse `fp4_e2m1_b32_e8m0`.
+    pub fn parse(name: &str) -> anyhow::Result<MxScheme> {
+        let parts: Vec<&str> = name.split('_').collect();
+        anyhow::ensure!(parts.len() >= 3, "bad scheme name {name}");
+        let scale_part = parts[parts.len() - 1];
+        let block_part = parts[parts.len() - 2];
+        let elem = parts[..parts.len() - 2].join("_");
+        anyhow::ensure!(
+            block_part.starts_with('b') && scale_part.starts_with('e') && scale_part.ends_with("m0"),
+            "bad scheme name {name}"
+        );
+        let block: usize = block_part[1..].parse()?;
+        let sb: u32 = scale_part[1..scale_part.len() - 2].parse()?;
+        MxScheme::new(&elem, block, sb)
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}_b{}_{}", self.elem.name, self.block, self.scale.name())
+    }
+
+    /// Paper §4.2: value bits + amortized scale bits.
+    pub fn effective_bits(&self) -> f64 {
+        self.elem.bits() as f64 + self.scale.ebits as f64 / self.block as f64
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        16.0 / self.effective_bits()
+    }
+
+    /// Bit-packed wire size for a block-aligned value count.
+    pub fn wire_bytes(&self, n_values: usize) -> usize {
+        assert_eq!(n_values % self.block, 0);
+        let nblocks = n_values / self.block;
+        let bits = nblocks * (self.block * self.elem.bits() as usize + self.scale.ebits as usize);
+        bits.div_ceil(8)
+    }
+}
+
+/// Exact 2^e for e in [-126, 127] by assembling the f32 exponent field —
+/// identical to ref.py `_exp2i` (clamped, never subnormal/inf).
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    let e = e.clamp(-126, 127);
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// floor(log2(|x|)) via the f32 exponent field — identical to ref.py
+/// `_floor_log2` (subnormals map to -127).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    ((x.to_bits() >> 23) & 0xFF) as i32 - 127
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_bits_match_paper() {
+        // FP4 E2M1 b32 e8m0 -> 4.25 effective bits (paper Table 3 caption)
+        let s = MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap();
+        assert!((s.effective_bits() - 4.25).abs() < 1e-12);
+        // FP4 b8 -> 5.0, FP5 b32 -> 5.25 (Table 1 "Eff. Bits" column family)
+        assert_eq!(MxScheme::parse("fp4_e2m1_b8_e8m0").unwrap().effective_bits(), 5.0);
+        assert_eq!(MxScheme::parse("fp5_e2m2_b32_e8m0").unwrap().effective_bits(), 5.25);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for e in ELEM_FORMATS {
+            for b in [8usize, 16, 32] {
+                for sb in [4u32, 5, 8] {
+                    let s = MxScheme::new(e.name, b, sb).unwrap();
+                    let r = MxScheme::parse(&s.name()).unwrap();
+                    assert_eq!(s, r);
+                }
+            }
+        }
+        assert!(MxScheme::parse("bogus").is_err());
+        assert!(MxScheme::parse("fp4_e2m1_x32_e8m0").is_err());
+    }
+
+    #[test]
+    fn format_ranges() {
+        let e2m1 = elem_by_name("fp4_e2m1").unwrap();
+        assert_eq!(e2m1.emax(), 2);
+        assert_eq!(e2m1.max_value(), 6.0); // MX spec FP4 max
+        let e8m0 = ScaleFormat { ebits: 8 };
+        assert_eq!(e8m0.emax(), 127);
+        assert_eq!(e8m0.bias(), 127);
+        let int4 = elem_by_name("int4").unwrap();
+        assert_eq!(int4.int_qmax(), 7);
+        assert_eq!(int4.bits(), 4);
+    }
+
+    #[test]
+    fn exp2_floor_log2_exact() {
+        for e in -126..=127 {
+            assert_eq!(exp2i(e), (e as f32).exp2());
+            assert_eq!(floor_log2(exp2i(e)), e);
+        }
+        assert_eq!(floor_log2(3.999), 1);
+        assert_eq!(floor_log2(4.0), 2);
+        assert_eq!(floor_log2(0.75), -1);
+    }
+}

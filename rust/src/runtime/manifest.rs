@@ -1,0 +1,217 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! exporter and the rust runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    pub model: String,
+    pub tp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub scheme: Option<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+    by_name: HashMap<String, usize>,
+    pub raw: Json,
+    pub seq_buckets: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub tp_degrees: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let raw = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(raw)
+    }
+
+    pub fn from_json(raw: Json) -> anyhow::Result<Manifest> {
+        let mut artifacts = Vec::new();
+        let list = raw
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        for a in list {
+            let io = |key: &str| -> Vec<IoSpec> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|s| IoSpec {
+                                shape: s
+                                    .get("shape")
+                                    .and_then(|v| v.as_arr())
+                                    .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                                    .unwrap_or_default(),
+                                dtype: s
+                                    .get("dtype")
+                                    .and_then(|v| v.as_str())
+                                    .unwrap_or("")
+                                    .to_string(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactInfo {
+                name: a.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                path: a.get("path").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                model: a.get("model").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                tp: a.get("tp").and_then(|v| v.as_usize()).unwrap_or(0),
+                batch: a.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                seq: a.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+                scheme: a.get("scheme").and_then(|v| v.as_str()).map(str::to_string),
+                inputs: io("inputs"),
+                outputs: io("outputs"),
+            });
+        }
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        let usizes = |key: &str| -> Vec<usize> {
+            raw.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        Ok(Manifest {
+            seq_buckets: usizes("seq_buckets"),
+            batch_buckets: usizes("batch_buckets"),
+            tp_degrees: usizes("tp_degrees"),
+            artifacts,
+            by_name,
+            raw,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    /// Stage lookup by coordinates.
+    pub fn stage(
+        &self,
+        model: &str,
+        kind: &str,
+        tp: usize,
+        batch: usize,
+        seq: usize,
+        scheme: Option<&str>,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.model == model
+                && a.kind == kind
+                && a.batch == batch
+                && a.seq == seq
+                && (a.tp == tp || a.tp == 0 && (kind == "embed" || kind == "final" || kind == "quantize"))
+                && a.scheme.as_deref() == scheme
+        })
+    }
+
+    /// Smallest exported seq bucket >= len for (model, kind, tp).
+    pub fn seq_bucket_for(
+        &self,
+        model: &str,
+        kind: &str,
+        tp: usize,
+        batch: usize,
+        len: usize,
+    ) -> Option<usize> {
+        let mut buckets: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == kind && a.batch == batch && (a.tp == tp || a.tp == 0))
+            .map(|a| a.seq)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets.into_iter().find(|&b| b >= len)
+    }
+
+    /// Batch buckets available (sorted) for a stage family.
+    pub fn batch_bucket_for(&self, model: &str, kind: &str, tp: usize, n: usize) -> Option<usize> {
+        let mut buckets: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == kind && (a.tp == tp || a.tp == 0))
+            .map(|a| a.batch)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets.into_iter().find(|&b| b >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let doc = r#"{
+          "artifacts": [
+            {"name": "nano/embed_b1_s16", "path": "hlo/nano/embed_b1_s16.hlo.txt",
+             "kind": "embed", "model": "nano", "batch": 1, "seq": 16,
+             "inputs": [{"shape": [1, 16], "dtype": "int32"}],
+             "outputs": [{"shape": [1, 16, 128], "dtype": "float32"}]},
+            {"name": "nano/attn_tp2_b1_s16", "path": "x", "kind": "attn",
+             "model": "nano", "tp": 2, "batch": 1, "seq": 16,
+             "inputs": [], "outputs": []},
+            {"name": "nano/attn_tp2_b1_s64", "path": "x", "kind": "attn",
+             "model": "nano", "tp": 2, "batch": 1, "seq": 64,
+             "inputs": [], "outputs": []}
+          ],
+          "seq_buckets": [1, 16, 64], "batch_buckets": [1, 8], "tp_degrees": [1, 2]
+        }"#;
+        Manifest::from_json(Json::parse(doc).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn lookup_by_name_and_stage() {
+        let m = sample();
+        assert!(m.by_name("nano/embed_b1_s16").is_some());
+        let a = m.stage("nano", "attn", 2, 1, 64, None).unwrap();
+        assert_eq!(a.name, "nano/attn_tp2_b1_s64");
+        assert!(m.stage("nano", "attn", 4, 1, 64, None).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = sample();
+        assert_eq!(m.seq_bucket_for("nano", "attn", 2, 1, 10), Some(16));
+        assert_eq!(m.seq_bucket_for("nano", "attn", 2, 1, 17), Some(64));
+        assert_eq!(m.seq_bucket_for("nano", "attn", 2, 1, 65), None);
+        // embed has tp=0 (degree-independent)
+        assert_eq!(m.seq_bucket_for("nano", "embed", 2, 1, 5), Some(16));
+    }
+
+    #[test]
+    fn io_specs_parsed() {
+        let m = sample();
+        let e = m.by_name("nano/embed_b1_s16").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![1, 16]);
+        assert_eq!(e.outputs[0].shape, vec![1, 16, 128]);
+        assert_eq!(e.outputs[0].dtype, "float32");
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) listed in
+//! `artifacts/manifest.json`, compiles them on the CPU PJRT client on
+//! first use, and executes them from the serving hot path.
+//!
+//! Python never runs here — this module plus the artifact files are the
+//! entire inference engine (three-layer contract, DESIGN.md).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub use manifest::{ArtifactInfo, Manifest};
+
+/// Lazily-compiled executable cache over one PJRT client.
+///
+/// Not `Send`: the `xla` crate's client is `Rc`-based, so the engine owns
+/// a single `Runtime` on its dedicated thread (the coordinator talks to
+/// it via channels).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub compile_count: RefCell<usize>,
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    /// `root` is the artifacts directory (contains manifest.json, hlo/).
+    pub fn load(root: &std::path::Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(&root.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            root: root.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Fetch (compiling if needed) the executable for a manifest entry.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?;
+        let path = self.root.join(&info.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(anyhow_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow_xla)?;
+        *self.compile_count.borrow_mut() += 1;
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact; returns the flattened output literals
+    /// (stage programs are lowered with `return_tuple=True`).
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let out = exe.execute::<xla::Literal>(args).map_err(anyhow_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        lit.to_tuple().map_err(anyhow_xla)
+    }
+
+    /// Like [`execute`], but borrowing the argument literals (hot path —
+    /// avoids deep-copying weight literals on every stage call).
+    pub fn execute_refs(
+        &self,
+        name: &str,
+        args: &[&xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let out = exe.execute::<&xla::Literal>(args).map_err(anyhow_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        lit.to_tuple().map_err(anyhow_xla)
+    }
+
+    pub fn warm(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+// ----------------------------------------------------------------------
+// literal helpers
+// ----------------------------------------------------------------------
+
+/// f32 literal with shape.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(anyhow_xla)
+}
+
+/// u8 literal with shape.
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+        .map_err(anyhow_xla)
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(anyhow_xla)
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(anyhow_xla)
+}
+
+pub fn to_vec_u8(l: &xla::Literal) -> anyhow::Result<Vec<u8>> {
+    l.to_vec::<u8>().map_err(anyhow_xla)
+}
+
+/// Copy a literal's f32 payload into an existing buffer (no alloc).
+pub fn copy_f32_into(l: &xla::Literal, dst: &mut [f32]) -> anyhow::Result<()> {
+    l.copy_raw_to::<f32>(dst).map_err(anyhow_xla)
+}

@@ -1,0 +1,203 @@
+//! Minimal HTTP/1.1 front end (std TCP — the offline crate set has no
+//! tokio/hyper, so this substrate is hand-rolled).
+//!
+//! Endpoints:
+//!   POST /generate  {"prompt": "...", "max_tokens": 32, "greedy": true}
+//!   GET  /metrics   -> JSON snapshot of the registry
+//!   GET  /healthz
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::coordinator::{CoordinatorHandle, GenRequest};
+use crate::util::json::{self, Json};
+
+pub struct Server {
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+}
+
+impl Server {
+    pub fn bind(addr: &str, handle: CoordinatorHandle) -> anyhow::Result<Server> {
+        Ok(Server { listener: TcpListener::bind(addr)?, handle })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until the process exits (thread-per-connection).
+    pub fn serve_forever(self) -> anyhow::Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let handle = self.handle.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, handle);
+            });
+        }
+        Ok(())
+    }
+
+    /// Serve exactly `n` connections (tests / bounded demos).
+    pub fn serve_n(self, n: usize) -> anyhow::Result<()> {
+        let mut joins = Vec::new();
+        for stream in self.listener.incoming().take(n) {
+            let stream = stream?;
+            let handle = self.handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let _ = handle_conn(stream, handle);
+            }));
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn parse_request(stream: &mut TcpStream) -> anyhow::Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, path, body })
+}
+
+fn respond(stream: &mut TcpStream, status: u32, body: &str) -> anyhow::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Result<()> {
+    let req = parse_request(&mut stream)?;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
+        ("GET", "/metrics") => {
+            let body = handle.metrics.to_json().to_string();
+            respond(&mut stream, 200, &body)
+        }
+        ("POST", "/generate") => {
+            let parsed = std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|s| Json::parse(s).ok());
+            let Some(doc) = parsed else {
+                return respond(&mut stream, 400, r#"{"error":"bad json"}"#);
+            };
+            let Some(prompt) = doc.get("prompt").and_then(|p| p.as_str()) else {
+                return respond(&mut stream, 400, r#"{"error":"missing prompt"}"#);
+            };
+            let max_tokens = doc.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+            let greedy = doc.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
+            let gen = GenRequest {
+                prompt: prompt.to_string(),
+                max_new_tokens: max_tokens,
+                greedy,
+                stop_token: -1,
+            };
+            match handle.generate(gen) {
+                Ok(resp) => {
+                    let body = json::obj(vec![
+                        ("id", json::num(resp.id as f64)),
+                        ("text", json::s(&resp.text)),
+                        ("prompt_tokens", json::num(resp.prompt_tokens as f64)),
+                        ("new_tokens", json::num(resp.new_tokens as f64)),
+                        ("ttft_s", json::num(resp.ttft_s)),
+                        ("e2e_s", json::num(resp.e2e_s)),
+                        ("virtual_prefill_s", json::num(resp.virtual_prefill_s)),
+                    ])
+                    .to_string();
+                    respond(&mut stream, 200, &body)
+                }
+                Err(e) => respond(&mut stream, 500, &format!(r#"{{"error":"{e}"}}"#)),
+            }
+        }
+        _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+    }
+}
+
+/// Tiny blocking HTTP client for tests and the trace replayer.
+pub fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u32, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    read_response(stream)
+}
+
+pub fn http_get(addr: &str, path: &str) -> anyhow::Result<(u32, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> anyhow::Result<(u32, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u32 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}

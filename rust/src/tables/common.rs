@@ -1,0 +1,70 @@
+//! Shared plumbing for the table generators.
+
+use std::path::PathBuf;
+
+use crate::eval::{perplexity, EvalOptions, PplResult};
+use crate::model::weights::Weights;
+use crate::runtime::Runtime;
+use crate::tp::{EngineOptions, TpEngine};
+
+/// Evaluation token budget: paper-faithful sweeps use the env override
+/// `TPCC_EVAL_TOKENS`; tests set a small value for speed.
+pub fn eval_tokens(default: usize) -> usize {
+    std::env::var("TPCC_EVAL_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn artifacts_root() -> anyhow::Result<PathBuf> {
+    let d = crate::artifacts_dir();
+    anyhow::ensure!(
+        d.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first (looked in {})",
+        d.display()
+    );
+    Ok(d)
+}
+
+/// Build an engine for (model, tp, compressor-spec).
+pub fn engine(model: &str, tp: usize, compress: &str) -> anyhow::Result<TpEngine> {
+    let root = artifacts_root()?;
+    let rt = Runtime::load(&root)?;
+    let weights = Weights::load(&root.join("weights").join(model))?;
+    let opts = EngineOptions::new(model, tp).with_compress(compress);
+    TpEngine::new(rt, &weights, opts)
+}
+
+/// The corpus split used by the paper's protocol: scheme search on a
+/// slice of *train* (paper: 10% of wikitext2 train), final numbers on
+/// the held-out *test* set.
+pub fn corpus(split: &str) -> anyhow::Result<String> {
+    let root = artifacts_root()?;
+    let path = root.join("weights").join(format!("corpus_{split}.txt"));
+    Ok(std::fs::read_to_string(path)?)
+}
+
+/// Perplexity of `model`@tp with `compress` on `text`.
+pub fn ppl(
+    eng: &mut TpEngine,
+    text: &str,
+    max_tokens: usize,
+) -> anyhow::Result<PplResult> {
+    perplexity(
+        eng,
+        text,
+        EvalOptions { max_tokens, ..EvalOptions::default() },
+    )
+}
+
+pub fn hr(width: usize) {
+    println!("{}", "-".repeat(width));
+}
+
+/// The models swept by the perplexity tables (stand-ins for the paper's
+/// Llama-3.1/Gemma-2/Mistral families — DESIGN.md substitution table).
+pub const SWEEP_MODELS: &[&str] = &["nano", "micro", "small"];
+
+/// The TP degree used for perplexity sweeps (the paper's default TP=2
+/// ablation baseline; Table 5 sweeps the degree explicitly).
+pub const SWEEP_TP: usize = 2;

@@ -1,0 +1,11 @@
+//! Generators for every table in the paper's evaluation section.
+//! `cargo bench --bench tableN_*` and the examples wrap these; each
+//! generator returns structured rows and prints the same layout the
+//! paper reports (EXPERIMENTS.md records paper-vs-measured).
+
+pub mod common;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;

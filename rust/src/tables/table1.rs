@@ -1,0 +1,94 @@
+//! Table 1 — optimal compression scheme search: perplexity degradation
+//! (% vs FP16) for {FP3 E1M1, FP4 E2M1, FP5 E2M2} × block {8, 16, 32}
+//! on a slice of the *train* split, per model (paper §5.1).
+
+use super::common;
+use crate::mxfmt::MxScheme;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub dtype: &'static str,
+    pub block: usize,
+    pub eff_bits: f64,
+    /// perplexity increase % per model, ordered like SWEEP_MODELS
+    pub increase_pct: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub models: Vec<String>,
+    pub fp16_ppl: Vec<f64>,
+    pub rows: Vec<Table1Row>,
+    pub eval_tokens: usize,
+}
+
+pub const DTYPES: &[&str] = &["fp3_e1m1", "fp4_e2m1", "fp5_e2m2"];
+pub const BLOCKS: &[usize] = &[8, 16, 32];
+
+pub fn run(max_tokens: usize) -> anyhow::Result<Table1> {
+    let text = common::corpus("train")?;
+    // paper evaluates on 10% of the train set; our budget is the token
+    // cap (already a small slice of the corpus).
+    let mut fp16_ppl = Vec::new();
+    let mut per_model: Vec<Vec<f64>> = vec![Vec::new(); DTYPES.len() * BLOCKS.len()];
+
+    for model in common::SWEEP_MODELS {
+        let mut eng = common::engine(model, common::SWEEP_TP, "none")?;
+        let base = common::ppl(&mut eng, &text, max_tokens)?;
+        fp16_ppl.push(base.ppl());
+        let mut i = 0usize;
+        for dtype in DTYPES {
+            for block in BLOCKS {
+                let spec = format!("{dtype}_b{block}_e8m0");
+                eng.set_compress(&spec)?;
+                let r = common::ppl(&mut eng, &text, max_tokens)?;
+                per_model[i].push(r.increase_pct(&base));
+                i += 1;
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut i = 0usize;
+    for dtype in DTYPES {
+        for block in BLOCKS {
+            let scheme = MxScheme::parse(&format!("{dtype}_b{block}_e8m0")).unwrap();
+            rows.push(Table1Row {
+                dtype,
+                block: *block,
+                eff_bits: scheme.effective_bits(),
+                increase_pct: per_model[i].clone(),
+            });
+            i += 1;
+        }
+    }
+    Ok(Table1 {
+        models: common::SWEEP_MODELS.iter().map(|s| s.to_string()).collect(),
+        fp16_ppl,
+        rows,
+        eval_tokens: max_tokens,
+    })
+}
+
+pub fn print(t: &Table1) {
+    println!("\nTable 1 — PPL degradation vs FP16 (train slice, {} tokens, TP={})",
+        t.eval_tokens, common::SWEEP_TP);
+    print!("{:<10} {:>5} {:>8}", "dtype", "block", "eff.bits");
+    for m in &t.models {
+        print!(" {:>10}", m);
+    }
+    println!();
+    common::hr(26 + 11 * t.models.len());
+    print!("{:<10} {:>5} {:>8}", "fp16", "-", "16");
+    for p in &t.fp16_ppl {
+        print!(" {:>10.3}", p);
+    }
+    println!("  (absolute PPL)");
+    for r in &t.rows {
+        print!("{:<10} {:>5} {:>8.1}", r.dtype, r.block, r.eff_bits);
+        for v in &r.increase_pct {
+            print!(" {:>9.2}%", v);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,94 @@
+//! Table 2 — best-scheme selection + held-out evaluation (paper §5.1):
+//! among candidates with < 3% PPL increase on the train slice, pick the
+//! one with the fewest effective bits; report its degradation on the
+//! *test* split.
+
+use super::common;
+use super::table1;
+use crate::mxfmt::MxScheme;
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: String,
+    pub scheme: String,
+    pub eff_bits: f64,
+    pub fp16_test_ppl: f64,
+    pub increase_pct: f64,
+}
+
+/// The paper's selection rule (§5.1).
+pub const MAX_INCREASE_PCT: f64 = 3.0;
+
+/// Pick per-model winners from Table 1 results. Falls back to the
+/// lowest-degradation candidate when nothing clears the 3% bar.
+pub fn select(t1: &table1::Table1) -> Vec<(String, String, f64)> {
+    let mut out = Vec::new();
+    for (mi, model) in t1.models.iter().enumerate() {
+        let mut best: Option<(&table1::Table1Row, f64)> = None;
+        for row in &t1.rows {
+            let inc = row.increase_pct[mi];
+            if inc < MAX_INCREASE_PCT {
+                let better = match best {
+                    None => true,
+                    Some((b, binc)) => {
+                        row.eff_bits < b.eff_bits
+                            || (row.eff_bits == b.eff_bits && inc < binc)
+                    }
+                };
+                if better {
+                    best = Some((row, inc));
+                }
+            }
+        }
+        let chosen = best.or_else(|| {
+            t1.rows
+                .iter()
+                .map(|r| (r, r.increase_pct[mi]))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        });
+        let (row, _) = chosen.expect("nonempty table");
+        out.push((
+            model.clone(),
+            format!("{}_b{}_e8m0", row.dtype, row.block),
+            row.eff_bits,
+        ));
+    }
+    out
+}
+
+pub fn run(max_tokens: usize) -> anyhow::Result<Vec<Table2Row>> {
+    // scheme search on the train slice (Table 1), final eval on test
+    let t1 = table1::run(max_tokens)?;
+    let winners = select(&t1);
+    let test = common::corpus("test")?;
+    let mut rows = Vec::new();
+    for (model, scheme, eff_bits) in winners {
+        let mut eng = common::engine(&model, common::SWEEP_TP, "none")?;
+        let base = common::ppl(&mut eng, &test, max_tokens)?;
+        eng.set_compress(&scheme)?;
+        let q = common::ppl(&mut eng, &test, max_tokens)?;
+        rows.push(Table2Row {
+            model,
+            scheme: scheme.clone(),
+            eff_bits: MxScheme::parse(&scheme)?.effective_bits().max(eff_bits),
+            fp16_test_ppl: base.ppl(),
+            increase_pct: q.increase_pct(&base),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Table2Row]) {
+    println!("\nTable 2 — best schemes on the held-out test set (<{MAX_INCREASE_PCT}% rule)");
+    println!(
+        "{:<8} {:<22} {:>8} {:>12} {:>10}",
+        "model", "scheme", "eff.bits", "fp16 PPL", "increase"
+    );
+    common::hr(66);
+    for r in rows {
+        println!(
+            "{:<8} {:<22} {:>8.2} {:>12.3} {:>9.2}%",
+            r.model, r.scheme, r.eff_bits, r.fp16_test_ppl, r.increase_pct
+        );
+    }
+}

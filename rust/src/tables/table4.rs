@@ -1,0 +1,112 @@
+//! Table 4 — SoTA comparison vs Bian et al. 2024 (paper §5.3): MX4
+//! E2M1/b32 against channel-wise INT4 and TopK-3x, on perplexity (test
+//! split) and TTFT speedup (Llama-2 70B analytic scenarios).
+
+use super::common;
+use crate::interconnect::HwProfile;
+use crate::model::perf_model::{Scenario, LLAMA2_70B};
+use crate::mxfmt::baselines::{ChannelInt, Fp16, TopK};
+use crate::mxfmt::{Compressor, MxCodec, MxScheme};
+
+pub const METHODS: &[&str] = &["fp4_e2m1_b32_e8m0", "int4_channelwise", "topk3"];
+
+#[derive(Debug, Clone)]
+pub struct Table4 {
+    pub models: Vec<String>,
+    pub fp16_ppl: Vec<f64>,
+    /// rows: per method -> (ppl increase % per model, speedup 8xL4, speedup 4xA100)
+    pub rows: Vec<Table4Row>,
+    pub fp16_ttft: (f64, f64),
+}
+
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub method: String,
+    pub increase_pct: Vec<f64>,
+    pub speedup_l4: f64,
+    pub speedup_a100: f64,
+}
+
+fn method_codec(name: &str, channels: usize) -> Box<dyn Compressor> {
+    match name {
+        "int4_channelwise" => Box::new(ChannelInt::with_channels(4, channels)),
+        "topk3" => Box::new(TopK::new(3.0)),
+        s => Box::new(MxCodec::new(MxScheme::parse(s).unwrap())),
+    }
+}
+
+pub fn run(max_tokens: usize) -> anyhow::Result<Table4> {
+    let test = common::corpus("test")?;
+
+    // ---- perplexity on the test split ----
+    let mut fp16_ppl = Vec::new();
+    let mut incs: Vec<Vec<f64>> = vec![Vec::new(); METHODS.len()];
+    for model in common::SWEEP_MODELS {
+        let mut eng = common::engine(model, common::SWEEP_TP, "none")?;
+        let base = common::ppl(&mut eng, &test, max_tokens)?;
+        fp16_ppl.push(base.ppl());
+        for (mi, method) in METHODS.iter().enumerate() {
+            eng.set_compress(method)?;
+            let r = common::ppl(&mut eng, &test, max_tokens)?;
+            incs[mi].push(r.increase_pct(&base));
+        }
+    }
+
+    // ---- TTFT speedups (paper: Llama-2 70B, 2x128 on 8xL4 / 2x256 on 4xA100) ----
+    let l4 = Scenario {
+        model: LLAMA2_70B,
+        profile: HwProfile::by_name("l4").unwrap(),
+        tp: 8,
+        batch: 2,
+        seq: 128,
+    };
+    let a100 = Scenario {
+        model: LLAMA2_70B,
+        profile: HwProfile::by_name("a100").unwrap(),
+        tp: 4,
+        batch: 2,
+        seq: 256,
+    };
+    let base_l4 = l4.ttft(&Fp16).total();
+    let base_a100 = a100.ttft(&Fp16).total();
+
+    let mut rows = Vec::new();
+    for (mi, method) in METHODS.iter().enumerate() {
+        let channels = LLAMA2_70B.d_model;
+        let codec = method_codec(method, channels);
+        rows.push(Table4Row {
+            method: method.to_string(),
+            increase_pct: incs[mi].clone(),
+            speedup_l4: base_l4 / l4.ttft(codec.as_ref()).total(),
+            speedup_a100: base_a100 / a100.ttft(codec.as_ref()).total(),
+        });
+    }
+    Ok(Table4 {
+        models: common::SWEEP_MODELS.iter().map(|s| s.to_string()).collect(),
+        fp16_ppl,
+        rows,
+        fp16_ttft: (base_l4, base_a100),
+    })
+}
+
+pub fn print(t: &Table4) {
+    println!("\nTable 4 — SoTA comparison (Bian et al. baselines)");
+    print!("{:<22}", "method");
+    for m in &t.models {
+        print!(" {:>9}", m);
+    }
+    println!(" {:>10} {:>10}", "TTFT 8xL4", "4xA100");
+    common::hr(24 + 10 * t.models.len() + 22);
+    print!("{:<22}", "fp16 (abs)");
+    for p in &t.fp16_ppl {
+        print!(" {:>9.3}", p);
+    }
+    println!(" {:>9.3}s {:>9.3}s", t.fp16_ttft.0, t.fp16_ttft.1);
+    for r in &t.rows {
+        print!("{:<22}", r.method);
+        for v in &r.increase_pct {
+            print!(" {:>8.2}%", v);
+        }
+        println!(" {:>9.2}x {:>9.2}x", r.speedup_l4, r.speedup_a100);
+    }
+}

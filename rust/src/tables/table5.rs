@@ -1,0 +1,102 @@
+//! Table 5 (appendix A.1) — ablation over quantization hyper-parameters:
+//! scale bits, value dtype, block size, and TP (parallelism) degree.
+
+use super::common;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub axis: &'static str,
+    pub value: String,
+    /// ppl increase % per model (SWEEP_MODELS order)
+    pub increase_pct: Vec<f64>,
+}
+
+pub const VALUE_DTYPES: &[&str] = &[
+    "fp3_e1m1", "fp4_e1m2", "fp4_e2m1", "fp5_e1m3", "fp5_e2m2", "fp5_e3m1",
+    "int3", "int4", "int5",
+];
+// paper sweeps 4..7(8); we add 3 because our byte-level models have a
+// narrower activation dynamic range than Llama-class models, so the
+// clamping penalty the paper sees at 4 bits appears here at 3.
+pub const SCALE_BITS: &[u32] = &[3, 4, 5, 6, 7, 8];
+pub const BLOCKS: &[usize] = &[8, 16, 32];
+pub const TP_DEGREES: &[usize] = &[1, 2, 4, 8];
+
+pub fn run(max_tokens: usize) -> anyhow::Result<Vec<AblationRow>> {
+    let text = common::corpus("train")?;
+    let mut rows: Vec<AblationRow> = Vec::new();
+
+    // per-model baselines at the sweep TP
+    let mut engines = Vec::new();
+    let mut baselines = Vec::new();
+    for model in common::SWEEP_MODELS {
+        let mut eng = common::engine(model, common::SWEEP_TP, "none")?;
+        let base = common::ppl(&mut eng, &text, max_tokens)?;
+        baselines.push(base);
+        engines.push(eng);
+    }
+
+    let mut sweep = |axis: &'static str, value: String, spec: String| -> anyhow::Result<()> {
+        let mut incs = Vec::new();
+        for (eng, base) in engines.iter_mut().zip(&baselines) {
+            eng.set_compress(&spec)?;
+            let r = common::ppl(eng, &text, max_tokens)?;
+            incs.push(r.increase_pct(base));
+        }
+        rows.push(AblationRow { axis, value, increase_pct: incs });
+        Ok(())
+    };
+
+    // scale bits at FP4 E2M1 b32
+    for sb in SCALE_BITS {
+        sweep("scale_bits", sb.to_string(), format!("fp4_e2m1_b32_e{sb}m0"))?;
+    }
+    // value dtype at b32 / E8M0
+    for dt in VALUE_DTYPES {
+        sweep("value_dtype", dt.to_string(), format!("{dt}_b32_e8m0"))?;
+    }
+    // block size at FP4 E2M1 / E8M0
+    for b in BLOCKS {
+        sweep("block_size", b.to_string(), format!("fp4_e2m1_b{b}_e8m0"))?;
+    }
+
+    // parallelism degree: error enters per-worker; each TP degree is a
+    // different engine (different shard artifacts)
+    for &tp in TP_DEGREES {
+        let mut incs = Vec::new();
+        for model in common::SWEEP_MODELS {
+            let mut eng = common::engine(model, tp, "none")?;
+            let base = common::ppl(&mut eng, &text, max_tokens)?;
+            eng.set_compress("fp4_e2m1_b32_e8m0")?;
+            let r = common::ppl(&mut eng, &text, max_tokens)?;
+            incs.push(r.increase_pct(&base));
+        }
+        rows.push(AblationRow {
+            axis: "parallelism",
+            value: tp.to_string(),
+            increase_pct: incs,
+        });
+    }
+
+    Ok(rows)
+}
+
+pub fn print(rows: &[AblationRow]) {
+    println!("\nTable 5 — ablation over quantization hyper-parameters (PPL increase %)");
+    print!("{:<12} {:<12}", "axis", "value");
+    for m in common::SWEEP_MODELS {
+        print!(" {:>9}", m);
+    }
+    println!();
+    common::hr(26 + 10 * common::SWEEP_MODELS.len());
+    let mut last = "";
+    for r in rows {
+        let axis = if r.axis == last { "" } else { r.axis };
+        last = r.axis;
+        print!("{:<12} {:<12}", axis, r.value);
+        for v in &r.increase_pct {
+            print!(" {:>8.2}%", v);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,49 @@
+//! Byte-level tokenizer (vocab 256) matching the build-time training
+//! (`python/compile/train.py` trains on raw UTF-8 bytes).
+
+/// Byte-level: every u8 is a token id. Infallible, reversible for valid
+/// UTF-8 inputs; decoding is lossy for invalid sequences.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "The parish church of Oakhaven, rebuilt in 1450.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo – ö";
+        let ids = t.encode(s);
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+        assert_eq!(t.decode(&ids), s);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = ByteTokenizer;
+        // 300 clamps to byte 255 (invalid UTF-8 alone -> replacement
+        // char under lossy decoding); -5 clamps to NUL.
+        assert_eq!(t.decode(&[72, 300, -5, 105]), "H\u{fffd}\u{0}i");
+    }
+}

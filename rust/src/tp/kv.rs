@@ -1,0 +1,224 @@
+//! Batched KV cache owned by the coordinator.
+//!
+//! The authoritative cache lives here as contiguous `[B, Hn, T, hd]` f32
+//! buffers per (rank, layer) — exactly the literal layout the decode
+//! attention stage expects, so handing it to PJRT is a single memcpy.
+//! Stage programs only *output* the new-token slices; `write_slices`
+//! mirrors the HLO-side `dynamic_update_slice` on the rust side.
+
+use crate::model::ModelConfig;
+use crate::runtime::lit_f32;
+
+pub struct BatchKv {
+    /// [rank][layer] -> contiguous [B, Hn, T, hd]
+    k: Vec<Vec<Vec<f32>>>,
+    v: Vec<Vec<Vec<f32>>>,
+    pub batch: usize,
+    pub heads: usize, // per-rank heads (Hn)
+    pub cap: usize,   // T
+    pub head_dim: usize,
+}
+
+impl BatchKv {
+    pub fn new(cfg: &ModelConfig, tp: usize, batch: usize) -> BatchKv {
+        let hn = cfg.shard_heads(tp);
+        let size = batch * hn * cfg.max_seq * cfg.head_dim;
+        let mk = || {
+            (0..cfg.n_layers)
+                .map(|_| vec![0.0f32; size])
+                .collect::<Vec<_>>()
+        };
+        BatchKv {
+            k: (0..tp).map(|_| mk()).collect(),
+            v: (0..tp).map(|_| mk()).collect(),
+            batch,
+            heads: hn,
+            cap: cfg.max_seq,
+            head_dim: cfg.head_dim,
+        }
+    }
+
+    /// Bytes held by this cache (both K and V, all ranks/layers).
+    pub fn bytes(&self) -> usize {
+        let per: usize = self.k.iter().flat_map(|l| l.iter()).map(|b| b.len() * 4).sum();
+        per * 2
+    }
+
+    /// Write the new-token K/V slices returned by an attention stage.
+    /// `ks`/`vs` are `[B, Hn, S, hd]` row-major; row `b`'s tokens land at
+    /// positions `pos[b] .. pos[b]+s` of its cache slot.
+    pub fn write_slices(
+        &mut self,
+        rank: usize,
+        layer: usize,
+        s: usize,
+        pos: &[i32],
+        ks: &[f32],
+        vs: &[f32],
+    ) {
+        let (bn, hn, t, hd) = (self.batch, self.heads, self.cap, self.head_dim);
+        debug_assert_eq!(ks.len(), bn * hn * s * hd);
+        for b in 0..bn {
+            let p = pos[b] as usize;
+            let end = (p + s).min(t);
+            let copy_s = end.saturating_sub(p);
+            for h in 0..hn {
+                let src_base = (b * hn + h) * s * hd;
+                let dst_base = ((b * hn + h) * t + p) * hd;
+                let kdst = &mut self.k[rank][layer][dst_base..dst_base + copy_s * hd];
+                kdst.copy_from_slice(&ks[src_base..src_base + copy_s * hd]);
+                let vdst = &mut self.v[rank][layer][dst_base..dst_base + copy_s * hd];
+                vdst.copy_from_slice(&vs[src_base..src_base + copy_s * hd]);
+            }
+        }
+    }
+
+    /// Materialize the (k, v) history literals for a decode call.
+    pub fn cache_literals(
+        &self,
+        rank: usize,
+        layer: usize,
+    ) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let dims = [self.batch, self.heads, self.cap, self.head_dim];
+        Ok((
+            lit_f32(&dims, &self.k[rank][layer])?,
+            lit_f32(&dims, &self.v[rank][layer])?,
+        ))
+    }
+
+    /// Copy one sequence slot's cache rows from another BatchKv (used
+    /// when a freshly-prefilled sequence joins a decode batch).
+    pub fn adopt_slot(&mut self, dst_slot: usize, src: &BatchKv, src_slot: usize, len: usize) {
+        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
+        assert_eq!(src.heads, hn);
+        assert_eq!(src.head_dim, hd);
+        let n = len.min(t) * hd;
+        for rank in 0..self.k.len() {
+            for layer in 0..self.k[rank].len() {
+                for h in 0..hn {
+                    let dst_base = ((dst_slot * hn + h) * t) * hd;
+                    let src_base = ((src_slot * hn + h) * src.cap) * hd;
+                    self.k[rank][layer][dst_base..dst_base + n]
+                        .copy_from_slice(&src.k[rank][layer][src_base..src_base + n]);
+                    self.v[rank][layer][dst_base..dst_base + n]
+                        .copy_from_slice(&src.v[rank][layer][src_base..src_base + n]);
+                }
+            }
+        }
+    }
+
+    /// Zero one slot (sequence retired).
+    pub fn clear_slot(&mut self, slot: usize) {
+        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
+        let base = slot * hn * t * hd;
+        let n = hn * t * hd;
+        for rank in 0..self.k.len() {
+            for layer in 0..self.k[rank].len() {
+                self.k[rank][layer][base..base + n].fill(0.0);
+                self.v[rank][layer][base..base + n].fill(0.0);
+            }
+        }
+    }
+
+    /// Raw access for tests.
+    pub fn k_at(&self, rank: usize, layer: usize) -> &[f32] {
+        &self.k[rank][layer]
+    }
+    pub fn v_at(&self, rank: usize, layer: usize) -> &[f32] {
+        &self.v[rank][layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 2,
+            d_ff: 8,
+            max_seq: 6,
+            params: 0,
+        }
+    }
+
+    #[test]
+    fn write_and_read_back() {
+        let c = cfg();
+        let mut kv = BatchKv::new(&c, 2, 2); // tp=2 -> hn=2
+        // write S=3 tokens for row 0 at pos 0, row 1 at pos 2
+        let s = 3;
+        let n = 2 * 2 * s * 2; // B*Hn*S*hd
+        let ks: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let vs: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        kv.write_slices(0, 1, s, &[0, 2], &ks, &vs);
+        let k = kv.k_at(0, 1);
+        // row 0, head 0, positions 0..3
+        assert_eq!(k[0], 0.0);
+        assert_eq!(k[1], 1.0);
+        assert_eq!(k[2 * 2], 4.0); // pos 2, first elem of third token
+        // row 1 (slot base = 1*hn*t*hd = 2*6*2 = 24), head 0, pos 2
+        let base = 24 + 2 * 2;
+        assert_eq!(k[base], 12.0); // first element of row 1's slice
+        // untouched layer stays zero
+        assert!(kv.k_at(0, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clamps_writes_past_capacity() {
+        let c = cfg();
+        let mut kv = BatchKv::new(&c, 1, 1);
+        let s = 4;
+        let ks = vec![1.0f32; 4 * s * 2];
+        let vs = ks.clone();
+        // pos 4 + s 4 > cap 6: only 2 tokens land
+        kv.write_slices(0, 0, s, &[4], &ks, &vs);
+        let k = kv.k_at(0, 0);
+        // head 0: positions 4,5 written
+        assert_eq!(k[4 * 2], 1.0);
+        assert_eq!(k[5 * 2 + 1], 1.0);
+    }
+
+    #[test]
+    fn adopt_slot_copies_history() {
+        let c = cfg();
+        let mut pre = BatchKv::new(&c, 1, 1);
+        let s = 2;
+        let ks: Vec<f32> = (0..4 * s * 2).map(|i| i as f32 + 1.0).collect();
+        pre.write_slices(0, 0, s, &[0], &ks, &ks);
+        let mut dec = BatchKv::new(&c, 1, 4);
+        dec.adopt_slot(2, &pre, 0, s);
+        let k = dec.k_at(0, 0);
+        let hn_t_hd = 4 * 6 * 2;
+        let slot2 = 2 * hn_t_hd;
+        assert_eq!(k[slot2], 1.0);
+        assert_eq!(k[slot2 + 1], 2.0);
+        // other slots untouched
+        assert!(k[..slot2].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_slot_zeroes() {
+        let c = cfg();
+        let mut kv = BatchKv::new(&c, 1, 2);
+        let ks = vec![5.0f32; 2 * 4 * 1 * 2];
+        kv.write_slices(0, 0, 1, &[0, 0], &ks[..], &ks[..]);
+        kv.clear_slot(0);
+        let hn_t_hd = 4 * 6 * 2;
+        assert!(kv.k_at(0, 0)[..hn_t_hd].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = cfg();
+        let kv = BatchKv::new(&c, 2, 3);
+        // per rank/layer: 3*2*6*2 floats; 2 ranks * 2 layers * 2 (k+v)
+        assert_eq!(kv.bytes(), 3 * 2 * 6 * 2 * 4 * 2 * 2 * 2);
+    }
+}

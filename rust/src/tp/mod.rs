@@ -1,0 +1,483 @@
+//! Tensor-parallel engine: executes the AOT stage programs for all TP
+//! ranks and performs the (optionally compressed) collectives between
+//! them.
+//!
+//! On this one-core testbed the ranks execute sequentially on the engine
+//! thread; *virtual* time models the parallel deployment: per lock-step
+//! stage the clock advances by the **max** of the per-rank wall times
+//! (they would run concurrently), and communication advances it by the
+//! interconnect model + the measured (or analytic) codec overhead.
+//! DESIGN.md "Known deviations" discusses fidelity.
+
+pub mod kv;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::collective::all_gather_reduce_add;
+use crate::interconnect::{HwProfile, LinkModel, VirtualClock};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+
+pub use kv::BatchKv;
+
+/// How the quantize/dequantize overhead enters virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverheadModel {
+    /// charge the measured rust-codec wall time (live CPU mode)
+    Measured,
+    /// charge values / rate (paper-scale accelerator mode)
+    Analytic { values_per_s: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    pub model: String,
+    pub tp: usize,
+    /// compressor spec (`none`, `fp4_e2m1_b32_e8m0`, `int4_channelwise`,
+    /// `topk3`, ...) applied to every row-parallel collective
+    pub compress: String,
+    pub overhead: OverheadModel,
+    /// hardware profile used for link simulation
+    pub profile: &'static HwProfile,
+    /// route quantize/dequant through the fused Pallas HLO executables
+    /// (available for FUSED_SCHEMES at the reduced buckets; otherwise
+    /// the bit-exact rust codec runs — same math, verified by the
+    /// golden-vector tests and `fused_path_matches_rust_codec`)
+    pub fused: bool,
+}
+
+impl EngineOptions {
+    pub fn new(model: &str, tp: usize) -> EngineOptions {
+        EngineOptions {
+            model: model.to_string(),
+            tp,
+            compress: "none".into(),
+            overhead: OverheadModel::Measured,
+            profile: HwProfile::by_name("cpu").unwrap(),
+            fused: false,
+        }
+    }
+
+    pub fn with_compress(mut self, spec: &str) -> Self {
+        self.compress = spec.to_string();
+        self
+    }
+
+    pub fn with_profile(mut self, name: &str) -> Self {
+        self.profile = HwProfile::by_name(name).expect("unknown profile");
+        self
+    }
+
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
+    }
+}
+
+/// Per-forward timing breakdown (live + virtual).
+#[derive(Debug, Clone, Default)]
+pub struct StepTiming {
+    pub wall_s: f64,
+    pub compute_s: f64,
+    pub link_s: f64,
+    pub codec_s: f64,
+    pub wire_bytes: u64,
+    pub raw_bytes: u64,
+}
+
+impl StepTiming {
+    pub fn virtual_total(&self) -> f64 {
+        self.compute_s + self.link_s + self.codec_s
+    }
+
+    pub fn merge(&mut self, o: &StepTiming) {
+        self.wall_s += o.wall_s;
+        self.compute_s += o.compute_s;
+        self.link_s += o.link_s;
+        self.codec_s += o.codec_s;
+        self.wire_bytes += o.wire_bytes;
+        self.raw_bytes += o.raw_bytes;
+    }
+}
+
+pub struct TpEngine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub opts: EngineOptions,
+    comp: Option<Box<dyn Compressor>>,
+    /// per-rank weight literals, keyed like the python param dict
+    wlits: Vec<BTreeMap<String, xla::Literal>>,
+    pub clock: VirtualClock,
+    // reusable scratch
+    reduce_buf: Vec<f32>,
+    wire_buf: Vec<u8>,
+}
+
+impl TpEngine {
+    pub fn new(rt: Runtime, weights: &Weights, opts: EngineOptions) -> anyhow::Result<TpEngine> {
+        let cfg = ModelConfig::from_manifest(&opts.model, &rt.manifest.raw)?;
+        let comp: Option<Box<dyn Compressor>> = if opts.compress == "none" {
+            None
+        } else {
+            Some(compressor_from_spec_ch(&opts.compress, cfg.d_model)?)
+        };
+        let mut wlits = Vec::with_capacity(opts.tp);
+        for rank in 0..opts.tp {
+            let shard = weights.shard(&cfg, opts.tp, rank)?;
+            let mut lits = BTreeMap::new();
+            for (name, t) in &shard.tensors {
+                lits.insert(name.clone(), lit_f32(&t.shape, &t.data)?);
+            }
+            wlits.push(lits);
+        }
+        Ok(TpEngine {
+            rt,
+            cfg,
+            opts,
+            comp,
+            wlits,
+            clock: VirtualClock::default(),
+            reduce_buf: Vec::new(),
+            wire_buf: Vec::new(),
+        })
+    }
+
+    pub fn link(&self) -> &LinkModel {
+        &self.opts.profile.link
+    }
+
+    fn wlit(&self, rank: usize, name: &str) -> &xla::Literal {
+        self.wlits[rank].get(name).expect("weight literal")
+    }
+
+    /// Execute one artifact, advancing `timing.compute_s` by `frac` of
+    /// the measured wall time (frac=1 for lock-step per-rank max, which
+    /// callers implement by passing the max separately).
+    fn exec_timed(
+        &self,
+        name: &str,
+        args: &[&xla::Literal],
+        out_secs: &mut f64,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let out = self.rt.execute_refs(name, args)?;
+        *out_secs = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Names of the fused quantize / dequant-reduce-add executables for
+    /// the current scheme at bucket (bb, sb), if they were exported
+    /// (FUSED_SCHEMES × reduced buckets; see python aot.py).
+    fn fused_names(&self, bb: usize, sb: usize) -> Option<(String, String)> {
+        if !self.opts.fused || self.opts.compress == "none" {
+            return None;
+        }
+        let model = &self.opts.model;
+        let scheme = &self.opts.compress;
+        let tp = self.opts.tp;
+        let q = format!("{model}/quant_{scheme}_b{bb}_s{sb}");
+        let d = format!("{model}/dqra_{scheme}_tp{tp}_b{bb}_s{sb}");
+        (self.rt.manifest.by_name(&q).is_some() && self.rt.manifest.by_name(&d).is_some())
+            .then_some((q, d))
+    }
+
+    /// Fused on-accelerator collective (paper Fig. 1b as lowered HLO):
+    /// each rank's partial is quantized by the Pallas `quantize`
+    /// executable, the (simulated) all-gather moves the packed
+    /// codes+scales, and the receiving side runs the fused Pallas
+    /// `dequant_reduce_add`. Numerically identical to the host codec
+    /// path (`fused_path_matches_rust_codec` integration test).
+    #[allow(clippy::too_many_arguments)]
+    fn communicate_fused(
+        &mut self,
+        x: &[f32],
+        partial_lits: &[&xla::Literal],
+        qname: &str,
+        dname: &str,
+        bb: usize,
+        sb: usize,
+        timing: &mut StepTiming,
+    ) -> anyhow::Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let tp = self.opts.tp;
+        let values = bb * sb * d;
+        let block = crate::mxfmt::MxScheme::parse(&self.opts.compress)?.block;
+        let nb = d / block;
+
+        let mut codes_all = Vec::with_capacity(tp * values);
+        let mut scales_all = Vec::with_capacity(tp * values / block);
+        let mut enc_once = 0.0f64;
+        let mut dt = 0.0f64;
+        for (rank, p) in partial_lits.iter().enumerate() {
+            let out = self.exec_timed(qname, &[p], &mut dt)?;
+            if rank == 0 {
+                enc_once = dt;
+            }
+            codes_all.extend(crate::runtime::to_vec_u8(&out[0])?);
+            scales_all.extend(crate::runtime::to_vec_u8(&out[1])?);
+        }
+        let x_lit = lit_f32(&[bb, sb, d], x)?;
+        let codes = crate::runtime::lit_u8(&[tp, bb, sb, d], &codes_all)?;
+        let scales = crate::runtime::lit_u8(&[tp, bb, sb, nb], &scales_all)?;
+        let out = self.exec_timed(dname, &[&x_lit, &codes, &scales], &mut dt)?;
+        let reduced = to_vec_f32(&out[0])?;
+
+        // accounting: wire size is the bit-packed size the scheme would
+        // put on the link (the HLO path carries byte-per-code tensors in
+        // host memory, but the *interconnect* sees packed bits)
+        let scheme = crate::mxfmt::MxScheme::parse(&self.opts.compress)?;
+        let shard_wire = scheme.wire_bytes(values);
+        let link_s = self.opts.profile.link.all_gather_time(shard_wire, tp);
+        let codec_s = match self.opts.overhead {
+            OverheadModel::Measured => enc_once + dt,
+            OverheadModel::Analytic { values_per_s } => (values * tp) as f64 / values_per_s,
+        };
+        timing.link_s += link_s;
+        timing.codec_s += codec_s;
+        timing.wire_bytes += (shard_wire * (tp - 1)) as u64;
+        timing.raw_bytes += (values * 2 * (tp - 1)) as u64;
+        self.clock
+            .add_comm(link_s + codec_s, shard_wire * (tp - 1), values * 2 * (tp - 1));
+        Ok(reduced)
+    }
+
+    /// The collective after a row-parallel stage: all-gather + reduce +
+    /// residual add, with compression per the engine options.
+    fn communicate(
+        &mut self,
+        x: &[f32],
+        partials: &[Vec<f32>],
+        timing: &mut StepTiming,
+    ) -> Vec<f32> {
+        let n = partials.len();
+        let len = x.len();
+        let mut out = std::mem::take(&mut self.reduce_buf);
+        let mut wire = std::mem::take(&mut self.wire_buf);
+        let rep = all_gather_reduce_add(
+            x,
+            partials,
+            self.comp.as_deref(),
+            &self.opts.profile.link,
+            &mut out,
+            &mut wire,
+        );
+        timing.link_s += rep.link_s;
+        let codec_s = match self.opts.overhead {
+            OverheadModel::Measured => rep.encode_s + rep.decode_s,
+            OverheadModel::Analytic { values_per_s } => {
+                if self.comp.is_some() {
+                    (len * n) as f64 / values_per_s
+                } else {
+                    0.0
+                }
+            }
+        };
+        timing.codec_s += codec_s;
+        timing.wire_bytes += (rep.shard_wire_bytes * n.saturating_sub(1)) as u64;
+        timing.raw_bytes += (rep.shard_raw_bytes * n.saturating_sub(1)) as u64;
+        self.clock.add_comm(
+            rep.link_s + codec_s,
+            rep.shard_wire_bytes * n.saturating_sub(1),
+            rep.shard_raw_bytes * n.saturating_sub(1),
+        );
+        self.wire_buf = wire;
+        let result = out.clone();
+        self.reduce_buf = out;
+        result
+    }
+
+    /// Forward a padded token batch. `mode` selects prefill (S>1, no KV
+    /// history) or decode (S=1, `kv` holds history). `pos[b]` is each
+    /// row's starting position; logits return as [bb, sb, vocab].
+    fn forward(
+        &mut self,
+        tokens: &[i32],
+        bb: usize,
+        sb: usize,
+        pos: &[i32],
+        mut kv: Option<&mut BatchKv>,
+        decode: bool,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        anyhow::ensure!(tokens.len() == bb * sb && pos.len() == bb);
+        let wall0 = Instant::now();
+        let mut timing = StepTiming::default();
+        let model = self.opts.model.clone();
+        let tp = self.opts.tp;
+        let d = self.cfg.d_model;
+
+        // embed (replicated: every worker computes it; charge one)
+        let tok_lit = lit_i32(&[bb, sb], tokens)?;
+        let mut dt = 0.0;
+        let emb_out = self.exec_timed(
+            &format!("{model}/embed_b{bb}_s{sb}"),
+            &[&tok_lit, self.wlit(0, "embed")],
+            &mut dt,
+        )?;
+        timing.compute_s += dt;
+        self.clock.add_compute(dt);
+        let mut x = to_vec_f32(&emb_out[0])?;
+
+        let pos_lit = lit_i32(&[bb], pos)?;
+        // fused on-accelerator compression path, when exported for this
+        // scheme + bucket (otherwise the bit-exact host codec runs)
+        let fused = self.fused_names(bb, sb);
+        for l in 0..self.cfg.n_layers {
+            // ---- attention ----
+            let attn_name = if decode {
+                format!("{model}/attn_tp{tp}_b{bb}_s{sb}")
+            } else {
+                format!("{model}/attn_prefill_tp{tp}_b{bb}_s{sb}")
+            };
+            let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            let mut partials = Vec::with_capacity(tp);
+            let mut max_s = 0.0f64;
+            for rank in 0..tp {
+                let an = format!("l{l}.attn_norm");
+                let wq = format!("l{l}.wq");
+                let wk = format!("l{l}.wk");
+                let wv = format!("l{l}.wv");
+                let wo = format!("l{l}.wo");
+                let out = if decode {
+                    let kvref = kv.as_deref_mut().expect("decode requires kv");
+                    let (kl, vl) = kvref.cache_literals(rank, l)?;
+                    let args: Vec<&xla::Literal> = vec![
+                        &x_lit,
+                        self.wlit(rank, &an),
+                        self.wlit(rank, &wq),
+                        self.wlit(rank, &wk),
+                        self.wlit(rank, &wv),
+                        self.wlit(rank, &wo),
+                        &kl,
+                        &vl,
+                        &pos_lit,
+                    ];
+                    self.exec_timed(&attn_name, &args, &mut dt)?
+                } else {
+                    let args: Vec<&xla::Literal> = vec![
+                        &x_lit,
+                        self.wlit(rank, &an),
+                        self.wlit(rank, &wq),
+                        self.wlit(rank, &wk),
+                        self.wlit(rank, &wv),
+                        self.wlit(rank, &wo),
+                        &pos_lit,
+                    ];
+                    self.exec_timed(&attn_name, &args, &mut dt)?
+                };
+                max_s = max_s.max(dt);
+                if let Some(kvref) = kv.as_deref_mut() {
+                    let ks = to_vec_f32(&out[1])?;
+                    let vs = to_vec_f32(&out[2])?;
+                    kvref.write_slices(rank, l, sb, pos, &ks, &vs);
+                }
+                partials.push(out);
+            }
+            timing.compute_s += max_s;
+            self.clock.add_compute(max_s);
+            x = if let Some((q, dq)) = &fused {
+                let lits: Vec<&xla::Literal> = partials.iter().map(|o| &o[0]).collect();
+                self.communicate_fused(&x, &lits, q, dq, bb, sb, &mut timing)?
+            } else {
+                let vecs: Vec<Vec<f32>> = partials
+                    .iter()
+                    .map(|o| to_vec_f32(&o[0]))
+                    .collect::<Result<_, _>>()?;
+                self.communicate(&x, &vecs, &mut timing)
+            };
+
+            // ---- MLP ----
+            let mlp_name = format!("{model}/mlp_tp{tp}_b{bb}_s{sb}");
+            let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            let mut partials = Vec::with_capacity(tp);
+            let mut max_s = 0.0f64;
+            for rank in 0..tp {
+                let mn = format!("l{l}.mlp_norm");
+                let wg = format!("l{l}.w_gate");
+                let wu = format!("l{l}.w_up");
+                let wd = format!("l{l}.w_down");
+                let args: Vec<&xla::Literal> = vec![
+                    &x_lit,
+                    self.wlit(rank, &mn),
+                    self.wlit(rank, &wg),
+                    self.wlit(rank, &wu),
+                    self.wlit(rank, &wd),
+                ];
+                let out = self.exec_timed(&mlp_name, &args, &mut dt)?;
+                max_s = max_s.max(dt);
+                partials.push(out);
+            }
+            timing.compute_s += max_s;
+            self.clock.add_compute(max_s);
+            x = if let Some((q, dq)) = &fused {
+                let lits: Vec<&xla::Literal> = partials.iter().map(|o| &o[0]).collect();
+                self.communicate_fused(&x, &lits, q, dq, bb, sb, &mut timing)?
+            } else {
+                let vecs: Vec<Vec<f32>> = partials
+                    .iter()
+                    .map(|o| to_vec_f32(&o[0]))
+                    .collect::<Result<_, _>>()?;
+                self.communicate(&x, &vecs, &mut timing)
+            };
+        }
+
+        // final norm + logits (leader only)
+        let x_lit = lit_f32(&[bb, sb, d], &x)?;
+        let out = self.exec_timed(
+            &format!("{model}/final_b{bb}_s{sb}"),
+            &[&x_lit, self.wlit(0, "final_norm"), self.wlit(0, "lm_head")],
+            &mut dt,
+        )?;
+        timing.compute_s += dt;
+        self.clock.add_compute(dt);
+        let logits = to_vec_f32(&out[0])?;
+        timing.wall_s = wall0.elapsed().as_secs_f64();
+        Ok((logits, timing))
+    }
+
+    /// Prefill a padded token batch (logits [bb, sb, vocab]).
+    pub fn prefill(
+        &mut self,
+        tokens: &[i32],
+        bb: usize,
+        sb: usize,
+        pos: &[i32],
+        kv: Option<&mut BatchKv>,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        self.forward(tokens, bb, sb, pos, kv, false)
+    }
+
+    /// One decode step for a batch (logits [bb, 1, vocab]).
+    pub fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &mut BatchKv,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        let bb = kv.batch;
+        self.forward(tokens, bb, 1, pos, Some(kv), true)
+    }
+
+    /// Swap the collective compressor without rebuilding the engine
+    /// (sweeps reuse one engine's compiled executables across schemes).
+    pub fn set_compress(&mut self, spec: &str) -> anyhow::Result<()> {
+        self.opts.compress = spec.to_string();
+        self.comp = if spec == "none" {
+            None
+        } else {
+            Some(compressor_from_spec_ch(spec, self.cfg.d_model)?)
+        };
+        Ok(())
+    }
+
+    /// Compressor effective bits (16 when uncompressed, fp16 wire).
+    pub fn effective_bits(&self, n: usize) -> f64 {
+        self.comp.as_ref().map_or(16.0, |c| c.effective_bits(n))
+    }
+
+    pub fn compressor_name(&self) -> String {
+        self.comp.as_ref().map_or("none".into(), |c| c.name())
+    }
+}

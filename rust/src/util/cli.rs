@@ -1,0 +1,90 @@
+//! Tiny argv parser: `cmd --key value --key=value --flag positional`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // note: `--flag positional` is ambiguous (flag would swallow the
+        // positional as its value), so positionals precede bare flags.
+        let a = parse("serve input.txt --model micro --tp=4 --verbose");
+        assert_eq!(a.positional, vec!["serve", "input.txt"]);
+        assert_eq!(a.get("model"), Some("micro"));
+        assert_eq!(a.get_usize("tp", 1), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("model", "nano"), "nano");
+        assert_eq!(a.get_f64("rate", 2.5), 2.5);
+    }
+
+    #[test]
+    fn flag_before_positional_not_greedy() {
+        let a = parse("--flag --key val");
+        assert!(a.has("flag"));
+        assert_eq!(a.get("key"), Some("val"));
+    }
+}

@@ -1,0 +1,8 @@
+//! From-scratch substrates: the offline vendor set has no serde / clap /
+//! rand / proptest, so the coordinator carries its own minimal JSON,
+//! NumPy-format, CLI and RNG implementations (DESIGN.md substrate list).
+
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod rng;

@@ -1,0 +1,306 @@
+//! NumPy `.npy` (format v1/v2) reader + writer.
+//!
+//! The build-time python side saves model weights and golden vectors with
+//! `np.save`; the coordinator loads them through this parser. Supports
+//! little-endian f32/f64/i32/i64/u8 C-order arrays — exactly what the
+//! exporter produces.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+}
+
+impl Dtype {
+    fn from_descr(d: &str) -> Option<Dtype> {
+        match d {
+            "<f4" => Some(Dtype::F32),
+            "<f8" => Some(Dtype::F64),
+            "<i4" => Some(Dtype::I32),
+            "<i8" => Some(Dtype::I64),
+            "|u1" | "<u1" => Some(Dtype::U8),
+            _ => None,
+        }
+    }
+    pub fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::F64 => "<f8",
+            Dtype::I32 => "<i4",
+            Dtype::I64 => "<i8",
+            Dtype::U8 => "|u1",
+        }
+    }
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F64 | Dtype::I64 => 8,
+        }
+    }
+}
+
+/// A loaded array: raw little-endian buffer + shape + dtype.
+#[derive(Debug, Clone)]
+pub struct Npy {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NpyError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not an npy file")]
+    BadMagic,
+    #[error("unsupported npy: {0}")]
+    Unsupported(String),
+}
+
+impl Npy {
+    pub fn load(path: &Path) -> Result<Npy, NpyError> {
+        Self::parse(&fs::read(path)?)
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Npy, NpyError> {
+        if raw.len() < 10 || &raw[..6] != b"\x93NUMPY" {
+            return Err(NpyError::BadMagic);
+        }
+        let major = raw[6];
+        let (header_len, header_start) = match major {
+            1 => (u16::from_le_bytes([raw[8], raw[9]]) as usize, 10),
+            2 | 3 => (
+                u32::from_le_bytes([raw[8], raw[9], raw[10], raw[11]]) as usize,
+                12,
+            ),
+            v => return Err(NpyError::Unsupported(format!("version {}", v))),
+        };
+        let header = std::str::from_utf8(&raw[header_start..header_start + header_len])
+            .map_err(|_| NpyError::Unsupported("non-utf8 header".into()))?;
+        let descr = dict_str(header, "descr")
+            .ok_or_else(|| NpyError::Unsupported("missing descr".into()))?;
+        let dtype = Dtype::from_descr(&descr)
+            .ok_or_else(|| NpyError::Unsupported(format!("dtype {}", descr)))?;
+        if dict_raw(header, "fortran_order").map(|v| v.trim().to_string())
+            == Some("True".to_string())
+        {
+            return Err(NpyError::Unsupported("fortran order".into()));
+        }
+        let shape_txt = dict_raw(header, "shape")
+            .ok_or_else(|| NpyError::Unsupported("missing shape".into()))?;
+        let shape: Vec<usize> = shape_txt
+            .trim()
+            .trim_start_matches('(')
+            .trim_end_matches(')')
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| t.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| NpyError::Unsupported(format!("shape {}", shape_txt)))?;
+        let n: usize = shape.iter().product::<usize>().max(1) * if shape.is_empty() { 1 } else { 1 };
+        let count: usize = shape.iter().product();
+        let count = if shape.is_empty() { 1 } else { count };
+        let _ = n;
+        let data_start = header_start + header_len;
+        let need = count * dtype.size();
+        if raw.len() < data_start + need {
+            return Err(NpyError::Unsupported("short data".into()));
+        }
+        Ok(Npy {
+            dtype,
+            shape,
+            data: raw[data_start..data_start + need].to_vec(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape.iter().product()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<Vec<f32>> {
+        match self.dtype {
+            Dtype::F32 => Some(
+                self.data
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            Dtype::F64 => Some(
+                self.data
+                    .chunks_exact(8)
+                    .map(|c| {
+                        f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<Vec<i32>> {
+        match self.dtype {
+            Dtype::I32 => Some(
+                self.data
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            Dtype::I64 => Some(
+                self.data
+                    .chunks_exact(8)
+                    .map(|c| {
+                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as i32
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(&self) -> Option<&[u8]> {
+        match self.dtype {
+            Dtype::U8 => Some(&self.data),
+            _ => None,
+        }
+    }
+
+    // -- writer ------------------------------------------------------------
+
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> Npy {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Npy { dtype: Dtype::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_u8(shape: &[usize], vals: &[u8]) -> Npy {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        Npy { dtype: Dtype::U8, shape: shape.to_vec(), data: vals.to_vec() }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), NpyError> {
+        let shape_txt = match self.shape.len() {
+            0 => "()".to_string(),
+            1 => format!("({},)", self.shape[0]),
+            _ => format!(
+                "({})",
+                self.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+            self.dtype.descr(),
+            shape_txt
+        );
+        // pad so that data starts at a multiple of 64
+        let base = 10 + header.len() + 1;
+        let pad = (64 - base % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+        let mut f = fs::File::create(path)?;
+        f.write_all(b"\x93NUMPY\x01\x00")?;
+        f.write_all(&(header.len() as u16).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+}
+
+/// Extract `'key': <value>` from the python-dict-literal header.
+fn dict_raw(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{}':", key);
+    let start = header.find(&pat)? + pat.len();
+    let rest = &header[start..];
+    // value ends at the next top-level comma or closing brace
+    let mut depth = 0usize;
+    let mut end = rest.len();
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => {
+                end = i;
+                break;
+            }
+            _ => {}
+        }
+    }
+    Some(rest[..end].trim().to_string())
+}
+
+fn dict_str(header: &str, key: &str) -> Option<String> {
+    let raw = dict_raw(header, key)?;
+    Some(raw.trim_matches(|c| c == '\'' || c == '"').to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let vals: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let a = Npy::from_f32(&[2, 3, 4], &vals);
+        let tmp = std::env::temp_dir().join("tpcc_npy_rt.npy");
+        a.save(&tmp).unwrap();
+        let b = Npy::load(&tmp).unwrap();
+        assert_eq!(b.shape, vec![2, 3, 4]);
+        assert_eq!(b.as_f32().unwrap(), vals);
+    }
+
+    #[test]
+    fn roundtrip_u8() {
+        let vals: Vec<u8> = (0..10).collect();
+        let a = Npy::from_u8(&[10], &vals);
+        let tmp = std::env::temp_dir().join("tpcc_npy_u8.npy");
+        a.save(&tmp).unwrap();
+        let b = Npy::load(&tmp).unwrap();
+        assert_eq!(b.shape, vec![10]);
+        assert_eq!(b.as_u8().unwrap(), &vals[..]);
+    }
+
+    #[test]
+    fn header_parser() {
+        assert_eq!(
+            dict_str("{'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }", "descr"),
+            Some("<f4".to_string())
+        );
+        assert_eq!(
+            dict_raw("{'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }", "shape"),
+            Some("(3, 4)".to_string())
+        );
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(matches!(Npy::parse(b"not an npy"), Err(NpyError::BadMagic)));
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let a = Npy::from_f32(&[], &[1.5]);
+        let tmp = std::env::temp_dir().join("tpcc_npy_scalar.npy");
+        a.save(&tmp).unwrap();
+        let b = Npy::load(&tmp).unwrap();
+        assert!(b.shape.is_empty());
+        assert_eq!(b.as_f32().unwrap(), vec![1.5]);
+    }
+}

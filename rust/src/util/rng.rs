@@ -1,0 +1,116 @@
+//! Deterministic xorshift64* RNG.
+//!
+//! Used by the workload generator, property tests and samplers — the
+//! offline vendor set has no `rand`, and determinism matters more than
+//! statistical perfection here.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()) as f32
+    }
+
+    /// Activation-like values: normal with lognormal magnitude spread
+    /// (produces the outliers the paper's fine-grained schemes target).
+    pub fn activation(&mut self, spread: f32) -> f32 {
+        self.normal() * (self.normal() * spread / 2.0).exp()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrivals).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-12).ln() / lambda
+    }
+
+    pub fn fill_activations(&mut self, out: &mut [f32], spread: f32) {
+        for v in out.iter_mut() {
+            *v = self.activation(spread);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+            let n = r.below(17);
+            assert!(n < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 20_000;
+        let vals: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = vals.iter().sum::<f32>() / n as f32;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.1, "var {}", var);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let m = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.25).abs() < 0.02, "mean {}", m);
+    }
+}

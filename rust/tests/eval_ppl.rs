@@ -1,0 +1,109 @@
+//! Perplexity-harness integration: the orderings the paper's tables rest
+//! on must hold on the real trained models through the real engine.
+
+use tpcc::eval::{perplexity, EvalOptions};
+use tpcc::model::weights::Weights;
+use tpcc::runtime::Runtime;
+use tpcc::tp::{EngineOptions, TpEngine};
+
+fn have_artifacts() -> bool {
+    tpcc::artifacts_dir().join("manifest.json").exists()
+}
+
+fn engine(model: &str, tp: usize) -> TpEngine {
+    let root = tpcc::artifacts_dir();
+    let rt = Runtime::load(&root).unwrap();
+    let weights = Weights::load(&root.join("weights").join(model)).unwrap();
+    TpEngine::new(rt, &weights, EngineOptions::new(model, tp)).unwrap()
+}
+
+fn corpus(split: &str) -> String {
+    std::fs::read_to_string(
+        tpcc::artifacts_dir().join("weights").join(format!("corpus_{split}.txt")),
+    )
+    .unwrap()
+}
+
+const OPT: EvalOptions = EvalOptions { seq: 128, batch: 8, max_tokens: 1024, stride: 128 };
+
+#[test]
+fn model_learned_something() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine("nano", 2);
+    let text = corpus("test");
+    let r = perplexity(&mut eng, &text, OPT).unwrap();
+    // byte-level uniform is 256; the trained model must be far below
+    assert!(r.ppl() < 8.0, "nano test ppl {} — training failed?", r.ppl());
+    assert!(r.ppl() > 1.01);
+    assert_eq!(r.tokens, 1024);
+}
+
+#[test]
+fn dtype_degradation_ordering_holds() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Table 1's core ordering on the real model: FP5 <= FP4 <= FP3 damage
+    let mut eng = engine("nano", 2);
+    let text = corpus("train");
+    let base = perplexity(&mut eng, &text, OPT).unwrap();
+    let mut incs = Vec::new();
+    for spec in ["fp5_e2m2_b32_e8m0", "fp4_e2m1_b32_e8m0", "fp3_e1m1_b32_e8m0"] {
+        eng.set_compress(spec).unwrap();
+        let r = perplexity(&mut eng, &text, OPT).unwrap();
+        incs.push(r.increase_pct(&base));
+    }
+    assert!(
+        incs[0] <= incs[1] && incs[1] <= incs[2],
+        "dtype ordering violated: {incs:?}"
+    );
+    assert!(incs[2] > incs[0], "fp3 should hurt more than fp5: {incs:?}");
+}
+
+#[test]
+fn block_size_degradation_ordering_holds() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine("nano", 2);
+    let text = corpus("train");
+    let base = perplexity(&mut eng, &text, OPT).unwrap();
+    let mut incs = Vec::new();
+    for block in [8, 16, 32] {
+        eng.set_compress(&format!("fp4_e2m1_b{block}_e8m0")).unwrap();
+        let r = perplexity(&mut eng, &text, OPT).unwrap();
+        incs.push(r.increase_pct(&base));
+    }
+    // smaller blocks = finer scales = less damage (allow small noise)
+    assert!(
+        incs[0] <= incs[2] + 0.5,
+        "block-size ordering violated: {incs:?}"
+    );
+}
+
+#[test]
+fn topk_is_catastrophic_like_table4() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine("nano", 2);
+    let text = corpus("test");
+    let base = perplexity(&mut eng, &text, OPT).unwrap();
+    eng.set_compress("topk3").unwrap();
+    let topk = perplexity(&mut eng, &text, OPT).unwrap();
+    eng.set_compress("fp4_e2m1_b32_e8m0").unwrap();
+    let mx = perplexity(&mut eng, &text, OPT).unwrap();
+    // Table 4: TopK degrades PPL by an order of magnitude more than MX4
+    assert!(
+        topk.increase_pct(&base) > 5.0 * mx.increase_pct(&base).max(0.1),
+        "topk {} vs mx {}",
+        topk.increase_pct(&base),
+        mx.increase_pct(&base)
+    );
+}

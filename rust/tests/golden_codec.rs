@@ -1,0 +1,66 @@
+//! Bit-exactness cross-check: the rust MX codec vs the jnp reference,
+//! over the golden vectors exported by `python -m compile.aot`
+//! (artifacts/golden/codec). This is the contract that lets the
+//! perplexity sweeps run through the rust codec while the Pallas
+//! kernels carry the same math into the HLO artifacts.
+
+use std::path::PathBuf;
+
+use tpcc::mxfmt::{MxCodec, MxScheme};
+use tpcc::util::json::Json;
+use tpcc::util::npy::Npy;
+
+fn golden_dir() -> Option<PathBuf> {
+    let d = tpcc::artifacts_dir().join("golden/codec");
+    d.join("index.json").exists().then_some(d)
+}
+
+#[test]
+fn rust_codec_bitexact_vs_jnp_all_schemes() {
+    let Some(dir) = golden_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let idx = Json::parse(&std::fs::read_to_string(dir.join("index.json")).unwrap()).unwrap();
+    let schemes: Vec<String> = idx
+        .get("schemes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_str().unwrap().to_string())
+        .collect();
+    assert!(schemes.len() >= 100, "expected the full scheme grid, got {}", schemes.len());
+
+    let x = Npy::load(&dir.join("x.npy")).unwrap();
+    let xs = x.as_f32().unwrap();
+
+    let mut checked = 0usize;
+    for name in &schemes {
+        let scheme = MxScheme::parse(name).unwrap();
+        let codec = MxCodec::new(scheme);
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        codec.quantize_unpacked(&xs, &mut codes, &mut scales);
+
+        let g_codes = Npy::load(&dir.join(format!("{name}.codes.npy"))).unwrap();
+        let g_scales = Npy::load(&dir.join(format!("{name}.scales.npy"))).unwrap();
+        let g_deq = Npy::load(&dir.join(format!("{name}.deq.npy"))).unwrap();
+
+        assert_eq!(codes, g_codes.as_u8().unwrap(), "codes mismatch for {name}");
+        assert_eq!(scales, g_scales.as_u8().unwrap(), "scales mismatch for {name}");
+
+        let mut deq = Vec::new();
+        codec.dequantize_unpacked(&codes, &scales, &mut deq);
+        let want = g_deq.as_f32().unwrap();
+        assert_eq!(deq.len(), want.len());
+        for (i, (a, b)) in deq.iter().zip(&want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{name}: dequant mismatch at {i}: {a} vs {b}"
+            );
+        }
+        checked += 1;
+    }
+    println!("verified {checked} schemes bit-exact");
+}

@@ -1,0 +1,173 @@
+//! Property-based tests (hand-rolled generator — no proptest in the
+//! offline vendor set) over the codec + collective invariants the
+//! coordinator relies on.
+
+use tpcc::collective::all_gather_reduce_add;
+use tpcc::interconnect::LinkModel;
+use tpcc::mxfmt::{Compressor, ElemFormat, MxCodec, MxScheme, ELEM_FORMATS};
+use tpcc::util::rng::Rng;
+
+fn schemes(rng: &mut Rng) -> MxScheme {
+    let elem: &ElemFormat = &ELEM_FORMATS[rng.below(ELEM_FORMATS.len())];
+    let block = [8usize, 16, 32][rng.below(3)];
+    let sbits = [4u32, 5, 6, 7, 8][rng.below(5)];
+    MxScheme::new(elem.name, block, sbits).unwrap()
+}
+
+fn data(rng: &mut Rng, n: usize, spread: f32) -> Vec<f32> {
+    let mut x = vec![0.0f32; n];
+    rng.fill_activations(&mut x, spread);
+    // salt edge cases
+    if n >= 4 {
+        x[0] = 0.0;
+        x[1] = -0.0;
+        let i = 2 + rng.below(n - 2);
+        x[i] = if rng.f32() < 0.5 { 3.0e38 } else { 1.0e-38 };
+    }
+    x
+}
+
+/// Quantization must be *idempotent*: re-quantizing its own output
+/// changes nothing (the output lies on the representable grid).
+#[test]
+fn prop_quantize_idempotent() {
+    let mut rng = Rng::new(101);
+    for case in 0..60 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = s.block * (1 + rng.below(16));
+        let spread = rng.range_f32(0.5, 6.0);
+        let mut x = data(&mut rng, n, spread);
+        c.fake_quantize(&mut x);
+        let once = x.clone();
+        c.fake_quantize(&mut x);
+        assert_eq!(once, x, "case {case} scheme {}", s.name());
+    }
+}
+
+/// decode(encode(x)) == fake_quantize(x) for every scheme: the wire
+/// path and the in-place error-injection path are the same function.
+#[test]
+fn prop_wire_equals_fake_quantize() {
+    let mut rng = Rng::new(202);
+    for case in 0..60 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = s.block * (1 + rng.below(16));
+        let spread = rng.range_f32(0.5, 6.0);
+        let x = data(&mut rng, n, spread);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        // wire layout: bit-packed codes + one scale byte per block
+        let expect = (n * s.elem.bits() as usize).div_ceil(8) + n / s.block;
+        assert_eq!(wire.len(), expect, "case {case}");
+        let decoded = c.decode(&wire, n);
+        let mut fq = x.clone();
+        c.fake_quantize(&mut fq);
+        assert_eq!(decoded, fq, "case {case} scheme {}", s.name());
+    }
+}
+
+/// Dequantized outputs never exceed the block's representable maximum
+/// and are always finite.
+#[test]
+fn prop_outputs_bounded_finite() {
+    let mut rng = Rng::new(303);
+    for _ in 0..60 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = s.block * (1 + rng.below(8));
+        let mut x = data(&mut rng, n, 8.0);
+        c.fake_quantize(&mut x);
+        for v in &x {
+            assert!(v.is_finite());
+        }
+    }
+}
+
+/// Sign symmetry: quantize(-x) == -quantize(x).
+#[test]
+fn prop_sign_symmetry() {
+    let mut rng = Rng::new(404);
+    for _ in 0..40 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = s.block * (1 + rng.below(8));
+        let x = data(&mut rng, n, 3.0);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let mut a = x.clone();
+        let mut b = neg.clone();
+        c.fake_quantize(&mut a);
+        c.fake_quantize(&mut b);
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(*p, -*q);
+        }
+    }
+}
+
+/// More effective bits never hurt (on average): for the same block
+/// size, fp5 MSE <= fp4 MSE <= fp3 MSE on random activation data.
+#[test]
+fn prop_bits_monotone_mse() {
+    let mut rng = Rng::new(505);
+    for _ in 0..10 {
+        let n = 32 * 64;
+        let x = data(&mut rng, n, 3.0);
+        let mut prev = 0.0f64;
+        for elem in ["fp5_e2m2", "fp4_e2m1", "fp3_e1m1"] {
+            let c = MxCodec::new(MxScheme::new(elem, 32, 8).unwrap());
+            let mut y = x.clone();
+            c.fake_quantize(&mut y);
+            let mse: f64 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+            // error grows as precision shrinks: fp5 <= fp4 <= fp3
+            assert!(mse * 1.001 >= prev, "{elem}: {mse} < {prev}");
+            prev = mse;
+        }
+    }
+}
+
+/// Collective linearity: reduce(x, parts) - x == sum of decode(parts)
+/// regardless of worker count, and the uncompressed path is exact.
+#[test]
+fn prop_collective_linear_uncompressed() {
+    let mut rng = Rng::new(606);
+    let link = LinkModel { alpha_s: 0.0, beta_bytes_per_s: 1e9 };
+    for _ in 0..20 {
+        let n = 32 * (1 + rng.below(8));
+        let tp = [1usize, 2, 4, 8][rng.below(4)];
+        let x = data(&mut rng, n, 1.0);
+        let parts: Vec<Vec<f32>> = (0..tp).map(|_| data(&mut rng, n, 1.0)).collect();
+        let mut out = Vec::new();
+        let mut wire = Vec::new();
+        all_gather_reduce_add(&x, &parts, None, &link, &mut out, &mut wire);
+        for i in 0..n {
+            let want: f32 = x[i] + parts.iter().map(|p| p[i]).sum::<f32>();
+            assert!((out[i] - want).abs() <= 1e-4 * want.abs().max(1.0));
+        }
+    }
+}
+
+/// Wire size accounting: the packed wire is exactly the analytic size
+/// and strictly smaller than fp16 for every MX scheme.
+#[test]
+fn prop_wire_size_exact() {
+    let mut rng = Rng::new(707);
+    for _ in 0..40 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = s.block * (1 + rng.below(32));
+        let x = data(&mut rng, n, 2.0);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let nblocks = n / s.block;
+        let expect = (n * s.elem.bits() as usize).div_ceil(8) + nblocks;
+        assert_eq!(wire.len(), expect, "{}", s.name());
+        assert!(c.wire_bytes(n) <= n * 2, "never larger than fp16: {}", s.name());
+        // analytic effective bits match the scheme definition
+        assert!((c.effective_bits(n) - s.effective_bits()).abs() < 1e-12);
+    }
+}

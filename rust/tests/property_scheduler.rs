@@ -1,0 +1,154 @@
+//! Property tests over the coordinator's scheduling + session state
+//! machines and the analytic perf model (no artifacts needed).
+
+use tpcc::coordinator::scheduler::{admit_count, pick_prefill_bucket, should_flush};
+use tpcc::coordinator::session::{Session, SessionState};
+use tpcc::interconnect::HwProfile;
+use tpcc::model::perf_model::{Scenario, LLAMA2_13B, LLAMA2_70B, LLAMA2_7B};
+use tpcc::mxfmt::baselines::Fp16;
+use tpcc::mxfmt::{MxCodec, MxScheme};
+use tpcc::util::rng::Rng;
+
+const BB: &[usize] = &[1, 8];
+const SB: &[usize] = &[1, 16, 64, 128, 256];
+
+/// Bucket selection must always cover every prompt, never pick the
+/// decode bucket, and be minimal among covering buckets.
+#[test]
+fn prop_bucket_selection_sound_and_minimal() {
+    let mut rng = Rng::new(11);
+    for _ in 0..500 {
+        let n = 1 + rng.below(8);
+        let lens: Vec<usize> = (0..n).map(|_| 1 + rng.below(256)).collect();
+        let Some((b, s)) = pick_prefill_bucket(&lens, BB, SB) else {
+            panic!("prompts <= 256 must always fit: {lens:?}");
+        };
+        let maxlen = *lens.iter().max().unwrap();
+        assert!(s >= maxlen && s > 1, "{lens:?} -> ({b},{s})");
+        assert!(b >= lens.len());
+        // minimality
+        for &s2 in SB {
+            if s2 > 1 && s2 >= maxlen {
+                assert!(s <= s2);
+            }
+        }
+        for &b2 in BB {
+            if b2 >= lens.len() {
+                assert!(b <= b2);
+            }
+        }
+    }
+}
+
+/// Admission never exceeds free slots, queue depth, or the batch cap,
+/// and is work-conserving (admits something whenever it can).
+#[test]
+fn prop_admission_bounds() {
+    let mut rng = Rng::new(22);
+    for _ in 0..1000 {
+        let queued = rng.below(32);
+        let free = rng.below(16);
+        let cap = 1 + rng.below(8);
+        let n = admit_count(queued, free, cap);
+        assert!(n <= queued && n <= free && n <= cap);
+        if queued > 0 && free > 0 {
+            assert!(n > 0, "work-conserving: q={queued} f={free} c={cap}");
+        }
+    }
+}
+
+/// Flush policy: full batches always flush; empty queues never do;
+/// waiting long enough always flushes a non-empty queue.
+#[test]
+fn prop_flush_policy() {
+    let mut rng = Rng::new(33);
+    for _ in 0..1000 {
+        let wait = rng.f64() * 0.2;
+        let count = rng.below(9);
+        let maxb = 1 + rng.below(8);
+        let maxw = 0.05;
+        let f = should_flush(wait, count, maxb, maxw);
+        if count == 0 {
+            assert!(!f);
+        }
+        if count >= maxb {
+            assert!(f);
+        }
+        if count > 0 && wait >= maxw {
+            assert!(f);
+        }
+    }
+}
+
+/// Session state machine: tokens only accumulate, positions advance by
+/// one per decode, ttft <= e2e, completion is terminal and exact.
+#[test]
+fn prop_session_lifecycle() {
+    let mut rng = Rng::new(44);
+    for _ in 0..300 {
+        let plen = 1 + rng.below(64);
+        let maxnew = 1 + rng.below(32);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+        let mut s = Session::new(1, prompt, maxnew);
+        assert_eq!(s.state, SessionState::Queued);
+        s.record_first_token(rng.below(256) as i32);
+        let mut steps = 1usize;
+        while !s.is_done() {
+            let before = s.pos;
+            s.record_token(rng.below(256) as i32);
+            steps += 1;
+            assert_eq!(s.pos, before + 1);
+            assert!(steps <= maxnew, "session over-generates");
+        }
+        assert_eq!(s.generated.len(), maxnew);
+        assert_eq!(s.pos, plen + maxnew - 1);
+        assert!(s.ttft().unwrap() <= s.e2e().unwrap());
+    }
+}
+
+/// Perf model monotonicities the Table 3 story depends on.
+#[test]
+fn prop_perf_model_monotone() {
+    let l4 = HwProfile::by_name("l4").unwrap();
+    let mx = MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap());
+    for model in [LLAMA2_7B, LLAMA2_13B, LLAMA2_70B] {
+        // longer inputs take longer, both paths
+        let mut prev_u = 0.0;
+        let mut prev_c = 0.0;
+        for seq in [64usize, 128, 256, 512] {
+            let sc = Scenario { model, profile: l4, tp: 8, batch: 2, seq };
+            let u = sc.ttft(&Fp16).total();
+            let c = sc.ttft(&mx).total();
+            assert!(u > prev_u && c > prev_c, "{} seq {seq}", model.name);
+            prev_u = u;
+            prev_c = c;
+        }
+        // more TP shrinks compute but grows collective count cost per
+        // worker: compute term must be monotone decreasing
+        let mut prev_compute = f64::INFINITY;
+        for tp in [2usize, 4, 8] {
+            let sc = Scenario { model, profile: l4, tp, batch: 2, seq: 128 };
+            let b = sc.ttft(&Fp16);
+            assert!(b.compute_s < prev_compute);
+            prev_compute = b.compute_s;
+        }
+    }
+}
+
+/// Compressed wire bytes are always ~3.76x smaller than fp16 for the
+/// paper scheme, at any scenario size.
+#[test]
+fn prop_compression_ratio_constant() {
+    let l4 = HwProfile::by_name("l4").unwrap();
+    let mx = MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap());
+    let mut rng = Rng::new(55);
+    for _ in 0..50 {
+        let batch = 1 + rng.below(16);
+        let seq = 32 * (1 + rng.below(16));
+        let sc = Scenario { model: LLAMA2_13B, profile: l4, tp: 4, batch, seq };
+        let u = sc.ttft(&Fp16);
+        let c = sc.ttft(&mx);
+        let ratio = u.wire_bytes as f64 / c.wire_bytes as f64;
+        assert!((ratio - 16.0 / 4.25).abs() < 0.01, "ratio {ratio}");
+    }
+}
