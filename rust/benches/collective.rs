@@ -1,23 +1,28 @@
-//! Collective benchmark: all-gather + (de)compress + reduce at the
-//! message sizes the TP layers actually produce, across TP degrees.
-//! The link component is simulated (α+β model); the codec component is
-//! real measured work.
+//! Collective-engine benchmark: every algorithm × message size × TP
+//! degree × profile, at the shapes the TP layers actually produce.
+//! The link component is simulated (per-algorithm α/β schedule over the
+//! profile's topology); the codec component is real measured work
+//! (median over reps via the Bench harness). After each cell group the
+//! planner's pick is printed — `auto` is never slower (virtual time)
+//! than the hard-coded flat ring.
 
 use tpcc::bench::Bench;
-use tpcc::collective::all_gather_reduce_add;
+use tpcc::collective::plan::{self, AlgoChoice};
+use tpcc::collective::{execute, AlgoKind, CollectivePlan, Topology};
 use tpcc::interconnect::HwProfile;
 use tpcc::mxfmt::{compressor_from_spec, Compressor};
 use tpcc::util::rng::Rng;
 
 fn main() {
-    let link = &HwProfile::by_name("l4").unwrap().link;
     let mut rng = Rng::new(3);
-
-    Bench::header();
     let b = Bench::default();
+    Bench::header();
+
     // message sizes: micro prefill 8x128xd192; paper-scale 2x128xd8192
     for (label, len) in [("8x128xd192", 8 * 128 * 192), ("2x128xd8192", 2 * 128 * 8192)] {
-        for tp in [2usize, 4, 8] {
+        for (prof_name, tp) in [("l4", 4usize), ("l4", 8), ("2x4l4", 8), ("2x4a100", 8)] {
+            let profile = HwProfile::by_name(prof_name).unwrap();
+            let topo = Topology::from_profile(profile, tp);
             let x = vec![0.0f32; len];
             let mut parts = vec![vec![0.0f32; len]; tp];
             for p in &mut parts {
@@ -29,25 +34,69 @@ fn main() {
                 } else {
                     Some(compressor_from_spec(spec).unwrap())
                 };
-                let mut out = Vec::new();
-                let mut wire = Vec::new();
-                let mut link_s = 0.0;
-                let r = b.run(&format!("allgather/{label}/tp{tp}/{spec}"), || {
-                    let rep = all_gather_reduce_add(
-                        &x,
-                        &parts,
-                        comp.as_deref(),
-                        link,
-                        &mut out,
-                        &mut wire,
+                let mut ring_virtual = f64::NAN;
+                for kind in AlgoKind::ALL {
+                    if !kind.supports(tp, &topo) {
+                        continue;
+                    }
+                    let p = CollectivePlan {
+                        algo: kind,
+                        chunks: 1,
+                        est_total_s: 0.0,
+                        est_link_s: 0.0,
+                        est_codec_s: 0.0,
+                    };
+                    let (mut out, mut wire) = (Vec::new(), Vec::new());
+                    let mut last = None;
+                    b.run(
+                        &format!("{}/{label}/tp{tp}/{prof_name}/{spec}", kind.name()),
+                        || {
+                            let rep = execute(
+                                &p, &x, &parts, comp.as_deref(), &topo, true, &mut out, &mut wire,
+                            );
+                            std::hint::black_box(&out);
+                            last = Some(rep);
+                        },
                     );
-                    link_s = rep.link_s;
-                    std::hint::black_box(&out);
-                });
+                    let rep = last.unwrap();
+                    let virt = rep.total_s();
+                    if kind == AlgoKind::FlatRing {
+                        ring_virtual = virt;
+                    }
+                    println!(
+                        "    -> codec(work) {:.3}ms + link(model) {:.3}ms = virtual {:.3}ms",
+                        (rep.encode_s + rep.decode_s) * 1e3,
+                        rep.link_s * 1e3,
+                        virt * 1e3
+                    );
+                }
+                let auto = plan::choose(
+                    len,
+                    tp,
+                    comp.as_deref(),
+                    &topo,
+                    profile.quant_values_per_s,
+                    AlgoChoice::Auto,
+                );
+                let ring_est = plan::ring_baseline(
+                    len,
+                    tp,
+                    comp.as_deref(),
+                    &topo,
+                    profile.quant_values_per_s,
+                );
                 println!(
-                    "    -> codec(work) {:.3}ms + link(model) {:.3}ms",
-                    r.median_s * 1e3,
-                    link_s * 1e3
+                    "    planner: {} x{} — est {:.3}ms vs ring est {:.3}ms ({:.2}x); measured ring {:.3}ms",
+                    auto.algo.name(),
+                    auto.chunks,
+                    auto.est_total_s * 1e3,
+                    ring_est * 1e3,
+                    ring_est / auto.est_total_s,
+                    ring_virtual * 1e3
+                );
+                assert!(
+                    auto.est_total_s <= ring_est + 1e-12,
+                    "planner regressed vs flat ring"
                 );
             }
         }

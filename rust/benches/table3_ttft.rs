@@ -7,6 +7,7 @@ use tpcc::tables::table3;
 fn main() {
     let rows = table3::run_analytic();
     table3::print(&rows, "analytic, paper-scale");
+    table3::print_algo_ablation(&table3::run_algo_ablation());
 
     let reps = std::env::var("TPCC_TTFT_REPS")
         .ok()

@@ -1,0 +1,728 @@
+//! Collective algorithms behind one [`CollectiveAlgo`] trait.
+//!
+//! The seed hard-coded a single flat ring all-gather; this module adds
+//! the algorithm menu the planner chooses from:
+//!
+//! * [`FlatRing`] — the seed's ring all-gather + local reduce,
+//!   bit-identical numerics and timing on flat topologies.
+//! * [`RecursiveDoubling`] — butterfly all-gather: log2(N) steps of
+//!   doubling payloads. Same numerics as the ring (every shard is
+//!   quantized once at its source), fewer α terms.
+//! * [`TwoShot`] — reduce-scatter + all-gather with compression applied
+//!   per phase (à la Flash Communication, arXiv 2412.04964): moves
+//!   ~2/N of the ring's bytes at the price of a second quantization of
+//!   the reduced slices.
+//! * [`Hierarchical`] — two-level gather for multi-node topologies:
+//!   intra-node gather+reduce, inter-node exchange of node sums, intra
+//!   re-broadcast; only (nodes-1) messages ever cross the slow link.
+//!
+//! Execution is real (payloads move, codec work is measured on this
+//! thread); *link* time is modeled per algorithm from the topology's
+//! α/β levels, exactly like the seed's single-level model.
+
+use std::ops::Range;
+use std::time::Instant;
+
+use super::topology::Topology;
+use super::CommReport;
+use crate::mxfmt::Compressor;
+
+/// Which collective algorithm to run (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    FlatRing,
+    RecursiveDoubling,
+    TwoShot,
+    Hierarchical,
+}
+
+impl AlgoKind {
+    pub const ALL: [AlgoKind; 4] = [
+        AlgoKind::FlatRing,
+        AlgoKind::RecursiveDoubling,
+        AlgoKind::TwoShot,
+        AlgoKind::Hierarchical,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoKind::FlatRing => "ring",
+            AlgoKind::RecursiveDoubling => "recursive_doubling",
+            AlgoKind::TwoShot => "two_shot",
+            AlgoKind::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Interned `/metrics` gauge key for this algorithm's collective
+    /// counter (kept next to [`AlgoKind::name`] so a new algorithm
+    /// can't miss its telemetry key).
+    pub fn metric_key(self) -> &'static str {
+        match self {
+            AlgoKind::FlatRing => "collective_calls_ring",
+            AlgoKind::RecursiveDoubling => "collective_calls_recursive_doubling",
+            AlgoKind::TwoShot => "collective_calls_two_shot",
+            AlgoKind::Hierarchical => "collective_calls_hierarchical",
+        }
+    }
+
+    /// Parse a CLI/engine spec (`auto` is handled by the planner, not
+    /// here). Accepts the full names plus short aliases.
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        match s {
+            "ring" | "flat_ring" => Some(AlgoKind::FlatRing),
+            "recursive_doubling" | "rd" | "doubling" => Some(AlgoKind::RecursiveDoubling),
+            "two_shot" | "twoshot" | "flash" => Some(AlgoKind::TwoShot),
+            "hierarchical" | "hier" => Some(AlgoKind::Hierarchical),
+            _ => None,
+        }
+    }
+
+    /// Can this algorithm run a `world`-rank collective on `topo`?
+    pub fn supports(self, world: usize, topo: &Topology) -> bool {
+        match self {
+            AlgoKind::FlatRing | AlgoKind::TwoShot => true,
+            AlgoKind::RecursiveDoubling => world.is_power_of_two(),
+            AlgoKind::Hierarchical => !topo.is_flat() && world == topo.world(),
+        }
+    }
+
+    pub fn implementation(self) -> &'static dyn CollectiveAlgo {
+        match self {
+            AlgoKind::FlatRing => &FlatRing,
+            AlgoKind::RecursiveDoubling => &RecursiveDoubling,
+            AlgoKind::TwoShot => &TwoShot,
+            AlgoKind::Hierarchical => &Hierarchical,
+        }
+    }
+}
+
+/// Execution context shared by every algorithm.
+pub struct ExecCtx<'a> {
+    pub comp: Option<&'a dyn Compressor>,
+    pub topo: &'a Topology,
+    /// `true`: time every encode/decode with `Instant` (Measured
+    /// overhead mode). `false`: timings are discarded by the caller
+    /// (Analytic mode), so the cheaper `requant_add` path runs and the
+    /// redundant bit-packing of shards is skipped entirely.
+    pub measure: bool,
+}
+
+/// One collective algorithm: a virtual-time link model plus a real
+/// execution that applies compression at the algorithm's phase
+/// boundaries.
+pub trait CollectiveAlgo: Sync {
+    fn kind(&self) -> AlgoKind;
+
+    /// Modeled link seconds for a collective of `values` f32 values per
+    /// rank across `world` ranks on `topo`.
+    fn link_time(
+        &self,
+        values: usize,
+        world: usize,
+        comp: Option<&dyn Compressor>,
+        topo: &Topology,
+    ) -> f64;
+
+    /// Values quantized + dequantized per rank (the analytic
+    /// compression-overhead term; 0-cost compressors are the caller's
+    /// concern). The flat ring matches the seed's `values * world`
+    /// accounting exactly.
+    fn codec_values(&self, values: usize, world: usize, topo: &Topology) -> usize;
+
+    /// Execute `out = x + Σ partials` with this algorithm's phase
+    /// structure and fill a [`CommReport`]. `partials` are borrowed
+    /// slices so chunked execution can hand out sub-ranges without
+    /// copying payload data.
+    fn run(
+        &self,
+        x: &[f32],
+        partials: &[&[f32]],
+        ctx: &ExecCtx,
+        out: &mut Vec<f32>,
+        wire: &mut Vec<u8>,
+    ) -> CommReport;
+}
+
+/// fp16 baseline wire size for an uncompressed `len`-value message.
+pub(crate) fn wire_bytes_of(comp: Option<&dyn Compressor>, len: usize) -> usize {
+    comp.map_or(len * 2, |c| c.wire_bytes(len))
+}
+
+/// Partition `[0, len)` into `parts` contiguous ranges whose lengths are
+/// multiples of `align` (the compressor's block granularity), so every
+/// slice stays independently encodable. Requires `len % align == 0`
+/// (true for every TP partial: len = batch·seq·d_model, d_model a block
+/// multiple) — otherwise degrades to unit granularity. Trailing ranges
+/// may be empty when `parts · align > len`.
+pub(crate) fn aligned_slices(len: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = if align > 1 && len % align == 0 { align } else { 1 };
+    let units = len / align;
+    let base = units / parts;
+    let rem = units % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0usize;
+    for j in 0..parts {
+        let u = (base + usize::from(j < rem)) * align;
+        out.push(at..at + u);
+        at += u;
+    }
+    out
+}
+
+fn base_report(kind: AlgoKind, len: usize, world: usize, comp: Option<&dyn Compressor>) -> CommReport {
+    CommReport {
+        algo: kind.name(),
+        shard_wire_bytes: wire_bytes_of(comp, len),
+        shard_raw_bytes: len * 2,
+        wire_bytes: wire_bytes_of(comp, len) * world.saturating_sub(1),
+        raw_bytes: len * 2 * world.saturating_sub(1),
+        ..CommReport::default()
+    }
+}
+
+/// Shared gather-style execution (ring and recursive doubling produce
+/// identical payloads — every shard is quantized once at its source and
+/// forwarded verbatim, so only the link schedule differs).
+fn gather_reduce_exec(
+    x: &[f32],
+    partials: &[&[f32]],
+    ctx: &ExecCtx,
+    out: &mut Vec<f32>,
+    wire: &mut Vec<u8>,
+    report: &mut CommReport,
+) {
+    let len = x.len();
+    out.clear();
+    out.extend_from_slice(x);
+    match ctx.comp {
+        None => {
+            for p in partials {
+                debug_assert_eq!(p.len(), len);
+                for (o, v) in out.iter_mut().zip(p.iter()) {
+                    *o += v;
+                }
+            }
+        }
+        Some(c) => {
+            if ctx.measure {
+                // encode every shard (measure one — they run concurrently
+                // on real hardware); decode-and-accumulate all of them.
+                let mut enc_once = 0.0;
+                for (r, p) in partials.iter().enumerate() {
+                    let t0 = Instant::now();
+                    c.encode(p, wire);
+                    let dt = t0.elapsed().as_secs_f64();
+                    if r == 0 {
+                        enc_once = dt;
+                    }
+                    let t1 = Instant::now();
+                    c.decode_add(wire, len, out);
+                    report.decode_s += t1.elapsed().as_secs_f64();
+                }
+                report.encode_s = enc_once;
+            } else {
+                // Analytic mode: the caller charges values/rate and
+                // discards measured time, so skip the per-shard wire
+                // packing and run the fused requantize+accumulate.
+                for p in partials {
+                    c.requant_add(p, out, wire);
+                }
+            }
+        }
+    }
+}
+
+/// The seed's flat ring all-gather + local reduce: (N-1) steps, each
+/// rank forwarding one shard per step. On a multi-node topology the
+/// lock-step ring is bounded by the slowest link it crosses.
+pub struct FlatRing;
+
+impl CollectiveAlgo for FlatRing {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::FlatRing
+    }
+
+    fn link_time(
+        &self,
+        values: usize,
+        world: usize,
+        comp: Option<&dyn Compressor>,
+        topo: &Topology,
+    ) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let w = wire_bytes_of(comp, values);
+        (world - 1) as f64 * topo.bottleneck().transfer_time(w)
+    }
+
+    fn codec_values(&self, values: usize, world: usize, _topo: &Topology) -> usize {
+        // quantize own shard + dequantize the other N-1 (seed accounting)
+        values * world
+    }
+
+    fn run(
+        &self,
+        x: &[f32],
+        partials: &[&[f32]],
+        ctx: &ExecCtx,
+        out: &mut Vec<f32>,
+        wire: &mut Vec<u8>,
+    ) -> CommReport {
+        let mut report = base_report(AlgoKind::FlatRing, x.len(), partials.len(), ctx.comp);
+        gather_reduce_exec(x, partials, ctx, out, wire, &mut report);
+        report.link_s = self.link_time(x.len(), partials.len(), ctx.comp, ctx.topo);
+        report
+    }
+}
+
+/// Recursive-doubling all-gather: log2(N) steps; at step i every rank
+/// exchanges its accumulated 2^i shards with a partner at distance 2^i.
+/// Bandwidth-identical to the ring ((N-1)·w bytes) but only log2(N) α
+/// terms — the latency-bound small-message winner. Requires a
+/// power-of-two world.
+pub struct RecursiveDoubling;
+
+impl CollectiveAlgo for RecursiveDoubling {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::RecursiveDoubling
+    }
+
+    fn link_time(
+        &self,
+        values: usize,
+        world: usize,
+        comp: Option<&dyn Compressor>,
+        topo: &Topology,
+    ) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        debug_assert!(world.is_power_of_two());
+        let w = wire_bytes_of(comp, values);
+        let mut t = 0.0;
+        let mut dist = 1usize;
+        while dist < world {
+            // partners at distance < gpus_per_node sit in the same node
+            let link = if dist < topo.gpus_per_node { &topo.intra } else { &topo.inter };
+            t += link.transfer_time(w * dist);
+            dist *= 2;
+        }
+        t
+    }
+
+    fn codec_values(&self, values: usize, world: usize, _topo: &Topology) -> usize {
+        // payloads are forwarded verbatim, so codec work matches the ring
+        values * world
+    }
+
+    fn run(
+        &self,
+        x: &[f32],
+        partials: &[&[f32]],
+        ctx: &ExecCtx,
+        out: &mut Vec<f32>,
+        wire: &mut Vec<u8>,
+    ) -> CommReport {
+        let mut report = base_report(AlgoKind::RecursiveDoubling, x.len(), partials.len(), ctx.comp);
+        gather_reduce_exec(x, partials, ctx, out, wire, &mut report);
+        report.link_s = self.link_time(x.len(), partials.len(), ctx.comp, ctx.topo);
+        report
+    }
+}
+
+/// Two-shot all-reduce (Flash Communication): ring reduce-scatter of
+/// 1/N-slices, then ring all-gather of the reduced slices, compression
+/// applied to each phase's payloads. Moves ~2(N-1)/N of the shard per
+/// rank instead of the gather's (N-1)·shard — the bandwidth-bound
+/// large-message winner — at the cost of doubled α terms and a second
+/// quantization of the reduced slices.
+pub struct TwoShot;
+
+impl TwoShot {
+    fn slice_align(comp: Option<&dyn Compressor>) -> usize {
+        comp.map_or(1, |c| c.alignment())
+    }
+}
+
+impl CollectiveAlgo for TwoShot {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::TwoShot
+    }
+
+    fn link_time(
+        &self,
+        values: usize,
+        world: usize,
+        comp: Option<&dyn Compressor>,
+        topo: &Topology,
+    ) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let slices = aligned_slices(values, world, Self::slice_align(comp));
+        let w_max = slices
+            .iter()
+            .map(|s| wire_bytes_of(comp, s.len()))
+            .max()
+            .unwrap_or(0);
+        // two ring phases of (N-1) lock-step slice transfers each
+        2.0 * (world - 1) as f64 * topo.bottleneck().transfer_time(w_max)
+    }
+
+    fn codec_values(&self, values: usize, world: usize, _topo: &Topology) -> usize {
+        if world <= 1 {
+            return values;
+        }
+        // per rank: phase 1 encodes (N-1)/N of its shard and decodes
+        // (N-1)/N into its owned slice; phase 2 encodes its 1/N reduced
+        // slice and decodes the (N-1)/N it receives.
+        (values * (3 * world - 2)).div_ceil(world)
+    }
+
+    fn run(
+        &self,
+        x: &[f32],
+        partials: &[&[f32]],
+        ctx: &ExecCtx,
+        out: &mut Vec<f32>,
+        wire: &mut Vec<u8>,
+    ) -> CommReport {
+        let n = partials.len();
+        let len = x.len();
+        let mut report = base_report(AlgoKind::TwoShot, len, n, ctx.comp);
+        report.link_s = self.link_time(len, n, ctx.comp, ctx.topo);
+        out.clear();
+        out.extend_from_slice(x);
+
+        let Some(c) = ctx.comp else {
+            // uncompressed: both phases are exact. Mirror the compressed
+            // path's slice-wise owner-first summation order so the
+            // NoCompress codec (a bit-exact f32 round-trip) produces the
+            // same bits as this branch.
+            let mut tmp: Vec<f32> = Vec::new();
+            for (j, sl) in aligned_slices(len, n, 1).iter().enumerate() {
+                if sl.is_empty() {
+                    continue;
+                }
+                tmp.clear();
+                tmp.extend_from_slice(&partials[j][sl.clone()]);
+                for (r, p) in partials.iter().enumerate() {
+                    if r == j {
+                        continue;
+                    }
+                    debug_assert_eq!(p.len(), len);
+                    for (t, v) in tmp.iter_mut().zip(&p[sl.clone()]) {
+                        *t += v;
+                    }
+                }
+                for (o, t) in out[sl.clone()].iter_mut().zip(&tmp) {
+                    *o += t;
+                }
+            }
+            report.wire_bytes = (2 * n.saturating_sub(1) * len * 2).div_ceil(n.max(1));
+            return report;
+        };
+
+        let slices = aligned_slices(len, n, c.alignment());
+        let mut wire_sum = 0usize;
+        let mut tmp: Vec<f32> = Vec::new();
+        // measured buckets, scaled to one rank's critical path below
+        let (mut enc_p1, mut dec_p1, mut enc_p2, mut dec_p2) = (0.0f64, 0.0, 0.0, 0.0);
+        for (j, sl) in slices.iter().enumerate() {
+            if sl.is_empty() {
+                continue;
+            }
+            wire_sum += c.wire_bytes(sl.len());
+            // phase 1 — reduce-scatter: owner j's own contribution never
+            // hits the wire (exact); every other rank's is quantized.
+            tmp.clear();
+            tmp.extend_from_slice(&partials[j][sl.clone()]);
+            for (r, p) in partials.iter().enumerate() {
+                if r == j {
+                    continue;
+                }
+                if ctx.measure {
+                    let t0 = Instant::now();
+                    c.encode(&p[sl.clone()], wire);
+                    enc_p1 += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    c.decode_add(wire, sl.len(), &mut tmp);
+                    dec_p1 += t1.elapsed().as_secs_f64();
+                } else {
+                    c.requant_add(&p[sl.clone()], &mut tmp, wire);
+                }
+            }
+            // phase 2 — all-gather of the reduced slice, re-quantized
+            // (the canonical output is the broadcast version every
+            // non-owner receives).
+            if ctx.measure {
+                let t0 = Instant::now();
+                c.encode(&tmp, wire);
+                enc_p2 += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                c.decode_add(wire, sl.len(), &mut out[sl.clone()]);
+                dec_p2 += t1.elapsed().as_secs_f64();
+            } else {
+                c.requant_add(&tmp, &mut out[sl.clone()], wire);
+            }
+        }
+        // scale the measured all-rank work to one rank's share: phase 1
+        // measured N·(N-1) ops of which a rank performs (N-1); phase 2
+        // measured N encodes (rank does 1) and N decodes (rank does N-1).
+        let nf = n as f64;
+        report.encode_s = (enc_p1 + enc_p2) / nf;
+        report.decode_s = dec_p1 / nf + dec_p2 * (nf - 1.0) / nf;
+        // per-rank received bytes: (N-1) phase-1 chunks of its owned
+        // slice + the (N-1)/N of the reduced vector it doesn't own.
+        report.wire_bytes = (2 * n.saturating_sub(1) * wire_sum).div_ceil(n.max(1));
+        report
+    }
+}
+
+/// Hierarchical two-level gather: ring gather+reduce inside each node
+/// over the fast intra link, exchange of per-node sums between node
+/// leaders over the slow inter link, then an intra re-broadcast. Only
+/// (nodes-1) shard-sized messages ever cross the inter link, vs the
+/// flat ring's (N-1).
+pub struct Hierarchical;
+
+impl CollectiveAlgo for Hierarchical {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Hierarchical
+    }
+
+    fn link_time(
+        &self,
+        values: usize,
+        world: usize,
+        comp: Option<&dyn Compressor>,
+        topo: &Topology,
+    ) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let w = wire_bytes_of(comp, values);
+        let g = topo.gpus_per_node;
+        let m = topo.nodes;
+        // intra gather of g shards, inter exchange of m node sums,
+        // intra re-broadcast of the (m-1) remote sums
+        (g.saturating_sub(1)) as f64 * topo.intra.transfer_time(w)
+            + (m.saturating_sub(1)) as f64 * topo.inter.transfer_time(w)
+            + (m.saturating_sub(1)) as f64 * topo.intra.transfer_time(w)
+    }
+
+    fn codec_values(&self, values: usize, world: usize, topo: &Topology) -> usize {
+        // encode own partial + (leader) the node sum; decode the g
+        // intra shards and the (m-1) remote node sums
+        let g = topo.gpus_per_node.min(world.max(1));
+        let m = topo.nodes.max(1);
+        values * (2 + g + m.saturating_sub(1))
+    }
+
+    fn run(
+        &self,
+        x: &[f32],
+        partials: &[&[f32]],
+        ctx: &ExecCtx,
+        out: &mut Vec<f32>,
+        wire: &mut Vec<u8>,
+    ) -> CommReport {
+        let n = partials.len();
+        let len = x.len();
+        let topo = ctx.topo;
+        let mut report = base_report(AlgoKind::Hierarchical, len, n, ctx.comp);
+        report.link_s = self.link_time(len, n, ctx.comp, topo);
+        out.clear();
+        out.extend_from_slice(x);
+
+        let Some(c) = ctx.comp else {
+            // uncompressed: mirror the compressed path's node-sum order
+            // (zeros + members, then out += node sum) so NoCompress is
+            // bitwise identical to this branch
+            let m = topo.nodes.max(1);
+            let g = topo.gpus_per_node.max(1);
+            let mut tmp: Vec<f32> = Vec::new();
+            for node in 0..m {
+                // ranks are node-major, so node k's members are the
+                // contiguous range k·g .. (k+1)·g
+                let members = node * g..((node + 1) * g).min(n);
+                if members.is_empty() {
+                    continue;
+                }
+                tmp.clear();
+                tmp.resize(len, 0.0);
+                for r in members {
+                    debug_assert_eq!(partials[r].len(), len);
+                    for (t, v) in tmp.iter_mut().zip(partials[r].iter()) {
+                        *t += v;
+                    }
+                }
+                for (o, t) in out.iter_mut().zip(&tmp) {
+                    *o += t;
+                }
+            }
+            report.wire_bytes = (g + m).saturating_sub(2) * len * 2;
+            return report;
+        };
+
+        let m = topo.nodes.max(1);
+        let g = topo.gpus_per_node.max(1);
+        let mut tmp: Vec<f32> = Vec::new();
+        let (mut enc_a, mut dec_a, mut enc_b, mut dec_b) = (0.0f64, 0.0, 0.0, 0.0);
+        for node in 0..m {
+            // phase A — intra-node gather + reduce (every member's
+            // partial quantized once, matching the flat path's "all
+            // shards compressed" semantics); ranks are node-major, so
+            // node k's members are the contiguous range k·g .. (k+1)·g
+            let members = node * g..((node + 1) * g).min(n);
+            if members.is_empty() {
+                continue;
+            }
+            tmp.clear();
+            tmp.resize(len, 0.0);
+            for r in members {
+                debug_assert_eq!(partials[r].len(), len);
+                if ctx.measure {
+                    let t0 = Instant::now();
+                    c.encode(partials[r], wire);
+                    enc_a += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    c.decode_add(wire, len, &mut tmp);
+                    dec_a += t1.elapsed().as_secs_f64();
+                } else {
+                    c.requant_add(partials[r], &mut tmp, wire);
+                }
+            }
+            // phase B/C — the node sum is quantized by the leader,
+            // crosses the inter link, and is re-broadcast intra-node
+            if ctx.measure {
+                let t0 = Instant::now();
+                c.encode(&tmp, wire);
+                enc_b += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                c.decode_add(wire, len, out);
+                dec_b += t1.elapsed().as_secs_f64();
+            } else {
+                c.requant_add(&tmp, out, wire);
+            }
+        }
+        // per-rank critical path: phase A measured N encodes (rank does
+        // 1) and N decodes (rank does g = N/m); phase B measured m
+        // encodes (a leader does 1) and m decodes (rank decodes the m-1
+        // remote sums).
+        let nf = n.max(1) as f64;
+        let mf = m as f64;
+        report.encode_s = enc_a / nf + enc_b / mf;
+        report.decode_s = dec_a / mf + dec_b * (mf - 1.0).max(0.0) / mf;
+        let w = c.wire_bytes(len);
+        report.wire_bytes = (g + m).saturating_sub(2) * w;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LinkModel;
+
+    fn flat(n: usize) -> Topology {
+        Topology::flat(n, LinkModel { alpha_s: 1e-5, beta_bytes_per_s: 1e9 })
+    }
+
+    fn two_level(m: usize, g: usize) -> Topology {
+        Topology::two_level(
+            m,
+            g,
+            LinkModel { alpha_s: 1e-6, beta_bytes_per_s: 64e9 },
+            LinkModel { alpha_s: 3e-5, beta_bytes_per_s: 1.5e9 },
+        )
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in AlgoKind::ALL {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AlgoKind::parse("rd"), Some(AlgoKind::RecursiveDoubling));
+        assert_eq!(AlgoKind::parse("flash"), Some(AlgoKind::TwoShot));
+        assert_eq!(AlgoKind::parse("nccl"), None);
+    }
+
+    #[test]
+    fn supports_matrix() {
+        let f8 = flat(8);
+        let t24 = two_level(2, 4);
+        assert!(AlgoKind::FlatRing.supports(8, &f8));
+        assert!(AlgoKind::RecursiveDoubling.supports(8, &f8));
+        assert!(!AlgoKind::RecursiveDoubling.supports(6, &f8));
+        assert!(AlgoKind::TwoShot.supports(3, &f8));
+        assert!(!AlgoKind::Hierarchical.supports(8, &f8));
+        assert!(AlgoKind::Hierarchical.supports(8, &t24));
+        assert!(!AlgoKind::Hierarchical.supports(6, &t24));
+    }
+
+    #[test]
+    fn aligned_slices_cover_and_align() {
+        for (len, parts, align) in
+            [(1024, 4, 32), (96, 3, 32), (192, 8, 32), (7, 3, 1), (64, 8, 16)]
+        {
+            let sl = aligned_slices(len, parts, align);
+            assert_eq!(sl.len(), parts);
+            let mut at = 0;
+            for s in &sl {
+                assert_eq!(s.start, at);
+                if len % align == 0 {
+                    assert_eq!(s.len() % align, 0, "{len}/{parts}/{align}: {s:?}");
+                }
+                at = s.end;
+            }
+            assert_eq!(at, len);
+        }
+    }
+
+    #[test]
+    fn ring_matches_seed_link_model_on_flat_topo() {
+        let topo = flat(4);
+        let t = FlatRing.link_time(1 << 16, 4, None, &topo);
+        let seed = topo.intra.all_gather_time((1 << 16) * 2, 4);
+        assert!((t - seed).abs() < 1e-15);
+    }
+
+    #[test]
+    fn recursive_doubling_fewer_alpha_terms() {
+        // tiny message: ring pays (N-1) α, doubling pays log2(N) α
+        let topo = flat(8);
+        let ring = FlatRing.link_time(16, 8, None, &topo);
+        let rd = RecursiveDoubling.link_time(16, 8, None, &topo);
+        assert!(rd < ring, "rd {rd} vs ring {ring}");
+        // large message: same (N-1)·w/β bandwidth term, so near-equal
+        let ring = FlatRing.link_time(1 << 22, 8, None, &topo);
+        let rd = RecursiveDoubling.link_time(1 << 22, 8, None, &topo);
+        assert!((rd - ring).abs() / ring < 0.01);
+    }
+
+    #[test]
+    fn two_shot_moves_fewer_bytes_at_scale() {
+        let topo = flat(8);
+        let big = 1 << 22;
+        let ring = FlatRing.link_time(big, 8, None, &topo);
+        let ts = TwoShot.link_time(big, 8, None, &topo);
+        // 2(N-1)/N vs (N-1): ~4x fewer bytes for N=8
+        assert!(ts < ring * 0.35, "two-shot {ts} vs ring {ring}");
+        // tiny message: doubled α terms lose
+        let ring = FlatRing.link_time(8, 8, None, &topo);
+        let ts = TwoShot.link_time(8, 8, None, &topo);
+        assert!(ts > ring);
+    }
+
+    #[test]
+    fn hierarchical_dodges_the_inter_link() {
+        let topo = two_level(2, 4);
+        let v = 1 << 20;
+        let ring = FlatRing.link_time(v, 8, None, &topo);
+        let hier = Hierarchical.link_time(v, 8, None, &topo);
+        // ring pays 7 inter transfers, hierarchical pays 1
+        assert!(hier < ring * 0.4, "hier {hier} vs ring {ring}");
+    }
+}

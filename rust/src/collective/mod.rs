@@ -1,39 +1,109 @@
-//! TP collective: all-gather of row-parallel partials + local reduce,
-//! with pluggable compression (paper Fig. 1b).
+//! TP collective engine: all-gather/all-reduce of row-parallel partials
+//! with pluggable compression (paper Fig. 1b), a menu of algorithms, a
+//! two-level topology model, pipelined chunking, and an auto-planner.
 //!
 //! Payloads move by memcpy (the workers share an address space);
 //! *time* comes from two sources:
 //!   - real, measured encode/decode work (the compression overhead the
 //!     paper warns about — it runs on this thread and is timed), and
-//!   - modeled link time from the interconnect simulator (α + bytes/β
-//!     ring all-gather), since there is no real NVLink/PCIe here.
+//!   - modeled link time from the interconnect simulator (per-algorithm
+//!     α/β schedules over the topology's links), since there is no real
+//!     NVLink/PCIe/IB here.
+//!
+//! Submodules:
+//!   - [`algo`]     — `CollectiveAlgo` trait + flat ring, recursive
+//!                    doubling, two-shot (Flash-Communication style),
+//!                    hierarchical two-level gather.
+//!   - [`topology`] — node-grouped world layout + per-level links.
+//!   - [`pipeline`] — chunked encode/link/decode overlap schedule.
+//!   - [`plan`]     — auto-planner scoring {algorithm × chunking}.
 
-use std::time::Instant;
+pub mod algo;
+pub mod pipeline;
+pub mod plan;
+pub mod topology;
+
+pub use algo::{AlgoKind, CollectiveAlgo, ExecCtx};
+pub use plan::{AlgoChoice, CollectivePlan};
+pub use topology::Topology;
 
 use crate::interconnect::LinkModel;
 use crate::mxfmt::Compressor;
 
 /// Outcome of one collective, for virtual-time accounting + telemetry.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct CommReport {
-    /// bytes each worker put on the wire (its shard)
+    /// algorithm that ran (see [`AlgoKind::name`])
+    pub algo: &'static str,
+    /// pipeline chunks used (1 = monolithic)
+    pub chunks: usize,
+    /// bytes each worker put on the wire for its full shard
     pub shard_wire_bytes: usize,
     /// uncompressed (fp16 baseline) shard size
     pub shard_raw_bytes: usize,
-    /// modeled ring all-gather time (link simulator)
+    /// accounted per-worker received wire bytes for the whole collective
+    pub wire_bytes: usize,
+    /// fp16-baseline equivalent of `wire_bytes` (what an uncompressed
+    /// ring all-gather would have moved per worker)
+    pub raw_bytes: usize,
+    /// modeled link time for the algorithm's schedule (link simulator)
     pub link_s: f64,
-    /// measured encode time (one worker's shard; workers run in
-    /// parallel on real hardware, so per-step cost is ONE encode)
+    /// measured encode time on one rank's critical path (workers run in
+    /// parallel on real hardware, so per-step cost is ONE rank's share)
     pub encode_s: f64,
-    /// measured decode+reduce time for the N-1 received shards
+    /// measured decode+reduce time on one rank's critical path
     pub decode_s: f64,
+    /// overlapped virtual total when pipelined (`chunks > 1`), else 0
+    pub pipelined_s: f64,
+}
+
+impl Default for CommReport {
+    fn default() -> CommReport {
+        CommReport {
+            algo: AlgoKind::FlatRing.name(),
+            chunks: 1,
+            shard_wire_bytes: 0,
+            shard_raw_bytes: 0,
+            wire_bytes: 0,
+            raw_bytes: 0,
+            link_s: 0.0,
+            encode_s: 0.0,
+            decode_s: 0.0,
+            pipelined_s: 0.0,
+        }
+    }
 }
 
 impl CommReport {
-    /// Virtual elapsed time for the whole collective step.
+    /// Virtual elapsed time for the whole collective step (the
+    /// overlapped schedule when pipelined).
     pub fn total_s(&self) -> f64 {
-        self.link_s + self.encode_s + self.decode_s
+        if self.chunks > 1 && self.pipelined_s > 0.0 {
+            self.pipelined_s
+        } else {
+            self.link_s + self.encode_s + self.decode_s
+        }
     }
+}
+
+/// Execute one collective under `plan`: `out = x + Σ partials`, with
+/// compression applied at the chosen algorithm's phase boundaries and
+/// pipelined over `plan.chunks` when chunked. `measure == false` skips
+/// per-shard wall-clock timing and the redundant wire packing (Analytic
+/// overhead mode — the caller charges values/rate instead).
+pub fn execute(
+    plan: &CollectivePlan,
+    x: &[f32],
+    partials: &[Vec<f32>],
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+    measure: bool,
+    out: &mut Vec<f32>,
+    wire: &mut Vec<u8>,
+) -> CommReport {
+    let ctx = ExecCtx { comp, topo, measure };
+    let refs: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
+    pipeline::run_chunked(plan.algo.implementation(), x, &refs, &ctx, plan.chunks, out, wire)
 }
 
 /// All-gather + reduce over `partials` (one slice per worker, equal
@@ -44,6 +114,9 @@ impl CommReport {
 /// With `comp = Some(..)`, every worker's shard is encoded and the
 /// receivers decode; quantization error is therefore applied to ALL
 /// shards (as in the paper, every worker compresses before the gather).
+///
+/// This is the seed's flat-ring entry point, preserved bit-identically;
+/// the engine's planned path goes through [`execute`].
 pub fn all_gather_reduce_add(
     x: &[f32],
     partials: &[Vec<f32>],
@@ -52,49 +125,10 @@ pub fn all_gather_reduce_add(
     out: &mut Vec<f32>,
     wire: &mut Vec<u8>,
 ) -> CommReport {
-    let n = partials.len();
-    let len = x.len();
-    out.clear();
-    out.extend_from_slice(x);
-
-    let mut report = CommReport {
-        shard_raw_bytes: len * 2, // fp16 on-the-wire baseline
-        ..Default::default()
-    };
-
-    match comp {
-        None => {
-            // uncompressed: fp16 wire accounting, f32 local math
-            report.shard_wire_bytes = len * 2;
-            for p in partials {
-                debug_assert_eq!(p.len(), len);
-                for (o, v) in out.iter_mut().zip(p) {
-                    *o += v;
-                }
-            }
-        }
-        Some(c) => {
-            report.shard_wire_bytes = c.wire_bytes(len);
-            // encode every shard (measure one — they run concurrently on
-            // real hardware); decode-and-accumulate all of them.
-            let mut enc_once = 0.0;
-            for (r, p) in partials.iter().enumerate() {
-                let t0 = Instant::now();
-                c.encode(p, wire);
-                let dt = t0.elapsed().as_secs_f64();
-                if r == 0 {
-                    enc_once = dt;
-                }
-                let t1 = Instant::now();
-                c.decode_add(wire, len, out);
-                report.decode_s += t1.elapsed().as_secs_f64();
-            }
-            report.encode_s = enc_once;
-        }
-    }
-
-    report.link_s = link.all_gather_time(report.shard_wire_bytes, n);
-    report
+    let topo = Topology::flat(partials.len(), *link);
+    let ctx = ExecCtx { comp, topo: &topo, measure: true };
+    let refs: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
+    algo::FlatRing.run(x, &refs, &ctx, out, wire)
 }
 
 #[cfg(test)]
@@ -118,6 +152,9 @@ mod tests {
         assert_eq!(rep.shard_wire_bytes, 64 * 2);
         assert!(rep.link_s > 0.0);
         assert_eq!(rep.encode_s, 0.0);
+        assert_eq!(rep.algo, "ring");
+        assert_eq!(rep.wire_bytes, 64 * 2);
+        assert_eq!(rep.raw_bytes, 64 * 2);
     }
 
     #[test]
@@ -173,5 +210,58 @@ mod tests {
         all_gather_reduce_add(&x, &parts, None, &link(), &mut out1, &mut wire);
         all_gather_reduce_add(&x, &parts, Some(&NoCompress), &link(), &mut out2, &mut wire);
         assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn planned_execute_matches_direct_ring() {
+        // a plan pinned to the unchunked ring reproduces the seed path
+        let n = 256;
+        let mut rng = Rng::new(4);
+        let x = vec![0.0f32; n];
+        let mut parts = vec![vec![0.0f32; n]; 4];
+        for p in &mut parts {
+            rng.fill_activations(p, 2.0);
+        }
+        let c = MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap());
+        let topo = Topology::flat(4, link());
+        let plan = CollectivePlan {
+            algo: AlgoKind::FlatRing,
+            chunks: 1,
+            est_total_s: 0.0,
+            est_link_s: 0.0,
+            est_codec_s: 0.0,
+        };
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        let mut wire = Vec::new();
+        let r1 = all_gather_reduce_add(&x, &parts, Some(&c), &link(), &mut o1, &mut wire);
+        let r2 = execute(&plan, &x, &parts, Some(&c), &topo, true, &mut o2, &mut wire);
+        assert_eq!(o1, o2);
+        assert_eq!(r1.link_s, r2.link_s);
+        assert_eq!(r1.wire_bytes, r2.wire_bytes);
+    }
+
+    #[test]
+    fn analytic_mode_skips_packing_but_not_numerics() {
+        let n = 512;
+        let mut rng = Rng::new(8);
+        let x = vec![0.1f32; n];
+        let mut parts = vec![vec![0.0f32; n]; 3];
+        for p in &mut parts {
+            rng.fill_activations(p, 2.0);
+        }
+        let c = MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap());
+        let topo = Topology::flat(3, link());
+        let ctx_m = ExecCtx { comp: Some(&c), topo: &topo, measure: true };
+        let ctx_a = ExecCtx { comp: Some(&c), topo: &topo, measure: false };
+        let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
+        let (mut om, mut oa) = (Vec::new(), Vec::new());
+        let mut wire = Vec::new();
+        let rm = algo::FlatRing.run(&x, &refs, &ctx_m, &mut om, &mut wire);
+        let ra = algo::FlatRing.run(&x, &refs, &ctx_a, &mut oa, &mut wire);
+        assert_eq!(om, oa, "requant path must be bit-equal to the wire path");
+        assert!(rm.encode_s > 0.0 && rm.decode_s > 0.0);
+        assert_eq!(ra.encode_s, 0.0);
+        assert_eq!(ra.decode_s, 0.0);
+        assert_eq!(rm.link_s, ra.link_s);
     }
 }

@@ -1,0 +1,286 @@
+//! Auto-planner: pick the cheapest (algorithm × chunking) for a
+//! collective of a given size on a given topology + compressor.
+//!
+//! Scoring is the same virtual-time model execution reports: per-
+//! algorithm α/β link time from [`super::algo`] plus the analytic codec
+//! term `codec_values / quant_values_per_s · cost_factor` (the
+//! profile's measured/calibrated codec throughput). Because the flat
+//! ring (unchunked) is always among the candidates and `choose` returns
+//! the argmin, the planned virtual time is never worse than the seed's
+//! hard-coded ring — the Table-3 ablation asserts exactly that.
+//!
+//! The TP engine memoises plans per (message length, profile) in its
+//! own map (`TpEngine::plan_cache`), so `choose` runs once per message
+//! shape and the hot path pays an allocation-free lookup.
+
+use super::algo::{AlgoKind, CollectiveAlgo};
+use super::pipeline;
+use super::topology::Topology;
+use crate::mxfmt::Compressor;
+
+/// Candidate chunk counts for pipelined execution. 1 must stay first:
+/// it is the seed-compatible unchunked schedule and the never-worse
+/// anchor.
+pub const CHUNK_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
+/// How the engine's `algo` knob constrains the planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoChoice {
+    /// score every supported candidate, return the argmin
+    Auto,
+    /// force one algorithm, monolithic schedule (the seed-compatible
+    /// baseline; chunk exploration is `Auto`'s job)
+    Fixed(AlgoKind),
+}
+
+impl AlgoChoice {
+    /// Parse the engine/CLI spec: `auto` | any [`AlgoKind`] name.
+    pub fn parse(s: &str) -> anyhow::Result<AlgoChoice> {
+        if s.is_empty() || s == "auto" {
+            return Ok(AlgoChoice::Auto);
+        }
+        AlgoKind::parse(s)
+            .map(AlgoChoice::Fixed)
+            .ok_or_else(|| anyhow::anyhow!("unknown collective algo {s:?} (want auto|ring|recursive_doubling|two_shot|hierarchical)"))
+    }
+}
+
+/// The planner's answer for one collective shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectivePlan {
+    pub algo: AlgoKind,
+    /// pipeline chunks (1 = monolithic)
+    pub chunks: usize,
+    /// estimated overlapped virtual total (link + codec with pipelining)
+    pub est_total_s: f64,
+    /// estimated link component (unchunked, for table breakdowns)
+    pub est_link_s: f64,
+    /// estimated codec component (unchunked)
+    pub est_codec_s: f64,
+}
+
+/// Score one (algo, chunks) candidate at an explicit codec rate;
+/// returns `(overlapped total, link, codec)`. Shared by the planner's
+/// argmin and the engine's Analytic-overhead accounting so the two
+/// can never drift apart.
+pub fn score(
+    kind: AlgoKind,
+    values: usize,
+    world: usize,
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+    quant_values_per_s: f64,
+    chunks: usize,
+) -> (f64, f64, f64) {
+    let a = kind.implementation();
+    let link_s = a.link_time(values, world, comp, topo);
+    let codec_s = match comp {
+        None => 0.0,
+        Some(c) => {
+            a.codec_values(values, world, topo) as f64 / quant_values_per_s
+                * c.compute_cost_factor()
+        }
+    };
+    // split the codec term the way execution does: one encode share,
+    // world-1 decode shares (the exact split only matters for overlap)
+    let enc = codec_s / world.max(1) as f64;
+    let dec = codec_s - enc;
+    let total = if chunks <= 1 {
+        link_s + codec_s
+    } else {
+        pipeline::estimate(a, values, world, comp, topo, enc, dec, chunks)
+    };
+    (total, link_s, codec_s)
+}
+
+/// Choose the cheapest (algorithm × chunking) for a `values`-per-rank
+/// collective across `world` ranks on `topo`, compressing with `comp`,
+/// with codec throughput `quant_values_per_s` (values/s).
+pub fn choose(
+    values: usize,
+    world: usize,
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+    quant_values_per_s: f64,
+    choice: AlgoChoice,
+) -> CollectivePlan {
+    let candidates: Vec<AlgoKind> = match choice {
+        // a forced algorithm that cannot run this configuration (e.g.
+        // recursive doubling on a non-power-of-two world, hierarchical
+        // on a flat topology) falls back to the flat ring instead of
+        // modelling a schedule it could not execute
+        AlgoChoice::Fixed(k) if k.supports(world, topo) => vec![k],
+        AlgoChoice::Fixed(_) => vec![AlgoKind::FlatRing],
+        AlgoChoice::Auto => AlgoKind::ALL
+            .into_iter()
+            .filter(|k| k.supports(world, topo))
+            .collect(),
+    };
+    let mut best: Option<CollectivePlan> = None;
+    for kind in candidates {
+        // chunking only overlaps gather-style execution (two-shot and
+        // hierarchical already pipeline internally via their phases) and
+        // is only explored in Auto mode — Fixed pins the seed schedule
+        let chunk_set: &[usize] = match kind {
+            AlgoKind::FlatRing | AlgoKind::RecursiveDoubling
+                if comp.is_some() && choice == AlgoChoice::Auto =>
+            {
+                &CHUNK_CANDIDATES
+            }
+            _ => &CHUNK_CANDIDATES[..1],
+        };
+        for &chunks in chunk_set {
+            let (total, link_s, codec_s) =
+                score(kind, values, world, comp, topo, quant_values_per_s, chunks);
+            if best.map_or(true, |b| total < b.est_total_s) {
+                best = Some(CollectivePlan {
+                    algo: kind,
+                    chunks,
+                    est_total_s: total,
+                    est_link_s: link_s,
+                    est_codec_s: codec_s,
+                });
+            }
+        }
+    }
+    // `candidates` is never empty (FlatRing supports everything)
+    best.expect("no collective algorithm candidate")
+}
+
+/// Virtual-time score of the seed's hard-coded collective — the flat
+/// ring, unchunked — used as the ablation/never-worse baseline.
+pub fn ring_baseline(
+    values: usize,
+    world: usize,
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+    quant_values_per_s: f64,
+) -> f64 {
+    score(AlgoKind::FlatRing, values, world, comp, topo, quant_values_per_s, 1).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::HwProfile;
+    use crate::mxfmt::{MxCodec, MxScheme};
+
+    fn mx() -> MxCodec {
+        MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap())
+    }
+
+    fn plan_on(profile: &str, tp: usize, values: usize, comp: Option<&dyn Compressor>) -> CollectivePlan {
+        let p = HwProfile::by_name(profile).unwrap();
+        let topo = Topology::from_profile(p, tp);
+        choose(values, tp, comp, &topo, p.quant_values_per_s, AlgoChoice::Auto)
+    }
+
+    #[test]
+    fn large_messages_on_multinode_pick_two_shot_or_hierarchical() {
+        let c = mx();
+        for profile in ["2x4l4", "2x4a100"] {
+            let plan = plan_on(profile, 8, 2 * 128 * 8192, Some(&c));
+            assert!(
+                matches!(plan.algo, AlgoKind::TwoShot | AlgoKind::Hierarchical),
+                "{profile}: picked {:?}",
+                plan.algo
+            );
+        }
+        // uncompressed large messages too: bandwidth dominates
+        let plan = plan_on("l4", 8, 2 * 128 * 8192, None);
+        assert_eq!(plan.algo, AlgoKind::TwoShot);
+    }
+
+    #[test]
+    fn small_latency_bound_messages_avoid_two_shot() {
+        // one decode token's partial: α-dominated — the doubled α terms
+        // of two-shot lose to a single gather pass
+        let c = mx();
+        for profile in ["l4", "2x4l4", "2x4a100"] {
+            let plan = plan_on(profile, 8, 64, Some(&c));
+            assert!(
+                matches!(plan.algo, AlgoKind::FlatRing | AlgoKind::RecursiveDoubling),
+                "{profile}: picked {:?}",
+                plan.algo
+            );
+            assert_eq!(plan.chunks, 1, "{profile}: tiny messages must not chunk");
+        }
+    }
+
+    #[test]
+    fn auto_never_worse_than_seed_ring() {
+        let c = mx();
+        for profile in ["l4", "a100", "2x4l4", "2x4a100", "cpu"] {
+            let p = HwProfile::by_name(profile).unwrap();
+            for tp in [2usize, 4, 8] {
+                for values in [64usize, 8 * 128 * 192, 2 * 128 * 8192] {
+                    let topo = Topology::from_profile(p, tp);
+                    let auto = choose(values, tp, Some(&c), &topo, p.quant_values_per_s, AlgoChoice::Auto);
+                    let ring = score(
+                        AlgoKind::FlatRing, values, tp, Some(&c), &topo, p.quant_values_per_s, 1,
+                    );
+                    assert!(
+                        auto.est_total_s <= ring.0 + 1e-15,
+                        "{profile}/tp{tp}/{values}: auto {} > ring {}",
+                        auto.est_total_s,
+                        ring.0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_choice_is_respected() {
+        let c = mx();
+        let p = HwProfile::by_name("l4").unwrap();
+        let topo = Topology::from_profile(p, 8);
+        let plan = choose(
+            2 * 128 * 8192, 8, Some(&c), &topo, p.quant_values_per_s,
+            AlgoChoice::Fixed(AlgoKind::FlatRing),
+        );
+        assert_eq!(plan.algo, AlgoKind::FlatRing);
+        // Fixed pins the monolithic seed schedule
+        assert_eq!(plan.chunks, 1);
+    }
+
+    #[test]
+    fn fixed_unsupported_falls_back_to_ring() {
+        let c = mx();
+        let p = HwProfile::by_name("l4").unwrap();
+        // recursive doubling forced on a non-power-of-two world
+        let topo = Topology::from_profile(p, 6);
+        let plan = choose(
+            1024, 6, Some(&c), &topo, p.quant_values_per_s,
+            AlgoChoice::Fixed(AlgoKind::RecursiveDoubling),
+        );
+        assert_eq!(plan.algo, AlgoKind::FlatRing);
+        // hierarchical forced on a flat single-node topology
+        let topo = Topology::from_profile(p, 8);
+        let plan = choose(
+            1024, 8, Some(&c), &topo, p.quant_values_per_s,
+            AlgoChoice::Fixed(AlgoKind::Hierarchical),
+        );
+        assert_eq!(plan.algo, AlgoKind::FlatRing);
+    }
+
+    #[test]
+    fn choose_is_deterministic() {
+        let c = mx();
+        let p = HwProfile::by_name("2x4l4").unwrap();
+        let topo = Topology::from_profile(p, 8);
+        let a = choose(8 * 128 * 192, 8, Some(&c), &topo, p.quant_values_per_s, AlgoChoice::Auto);
+        let b = choose(8 * 128 * 192, 8, Some(&c), &topo, p.quant_values_per_s, AlgoChoice::Auto);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parse_choice() {
+        assert_eq!(AlgoChoice::parse("auto").unwrap(), AlgoChoice::Auto);
+        assert_eq!(
+            AlgoChoice::parse("two_shot").unwrap(),
+            AlgoChoice::Fixed(AlgoKind::TwoShot)
+        );
+        assert!(AlgoChoice::parse("bogus").is_err());
+    }
+}

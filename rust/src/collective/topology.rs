@@ -1,0 +1,160 @@
+//! Deployment topology for the collective engine.
+//!
+//! The seed's interconnect model was a single flat ring over one
+//! `LinkModel`; real TP deployments are hierarchical — GPUs grouped
+//! into nodes with a fast intra-node fabric (PCIe, NVLink) and a much
+//! slower inter-node one (Ethernet, InfiniBand). Algorithm choice flips
+//! with that asymmetry (arXiv 2507.14392), so [`Topology`] makes the
+//! levels explicit: `nodes` groups of `gpus_per_node` ranks, an `intra`
+//! link within a group and an `inter` link between groups. A flat
+//! single-node world is the degenerate `nodes == 1` case, keeping every
+//! seed profile bit-compatible.
+
+use crate::interconnect::{HwProfile, LinkModel};
+
+/// Node-grouped world layout plus per-level link models.
+#[derive(Debug, Clone, Copy)]
+pub struct Topology {
+    /// number of node groups (1 = single node, flat world)
+    pub nodes: usize,
+    /// ranks per node group
+    pub gpus_per_node: usize,
+    /// link between two ranks in the same node
+    pub intra: LinkModel,
+    /// link between two ranks in different nodes (== `intra` when flat)
+    pub inter: LinkModel,
+}
+
+impl Topology {
+    /// Single-node world of `world` ranks over one link (seed behavior).
+    pub fn flat(world: usize, link: LinkModel) -> Topology {
+        Topology { nodes: 1, gpus_per_node: world.max(1), intra: link, inter: link }
+    }
+
+    /// Two-level world: `nodes` groups of `gpus_per_node`.
+    pub fn two_level(
+        nodes: usize,
+        gpus_per_node: usize,
+        intra: LinkModel,
+        inter: LinkModel,
+    ) -> Topology {
+        Topology { nodes: nodes.max(1), gpus_per_node: gpus_per_node.max(1), intra, inter }
+    }
+
+    /// Build the topology a `world`-rank TP group sees on `profile`.
+    /// Multi-node profiles split the ranks evenly across their nodes;
+    /// when the world does not divide (or fits in one node) the layout
+    /// degenerates to a flat single-node group over the intra link.
+    pub fn from_profile(profile: &HwProfile, world: usize) -> Topology {
+        let world = world.max(1);
+        if profile.nodes > 1 && world > profile.nodes && world % profile.nodes == 0 {
+            Topology::two_level(
+                profile.nodes,
+                world / profile.nodes,
+                profile.link,
+                profile.inter_link,
+            )
+        } else {
+            Topology::flat(world, profile.link)
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.nodes == 1
+    }
+
+    /// Node group index of a rank (ranks are laid out node-major).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// The link that bounds a step of a flat collective spanning the
+    /// whole world: the inter-node link as soon as a ring/butterfly has
+    /// to cross node boundaries, else the intra link.
+    pub fn bottleneck(&self) -> &LinkModel {
+        if self.is_flat() {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+
+    /// Stable cache key for planner memoisation (hashes the layout and
+    /// the exact α/β bit patterns).
+    pub fn cache_key(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325; // FNV-1a
+        for w in [
+            self.nodes as u64,
+            self.gpus_per_node as u64,
+            self.intra.alpha_s.to_bits(),
+            self.intra.beta_bytes_per_s.to_bits(),
+            self.inter.alpha_s.to_bits(),
+            self.inter.beta_bytes_per_s.to_bits(),
+        ] {
+            h ^= w;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(beta: f64) -> LinkModel {
+        LinkModel { alpha_s: 1e-6, beta_bytes_per_s: beta }
+    }
+
+    #[test]
+    fn flat_world_is_single_node() {
+        let t = Topology::flat(8, link(1e9));
+        assert!(t.is_flat());
+        assert_eq!(t.world(), 8);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.bottleneck().beta_bytes_per_s, 1e9);
+    }
+
+    #[test]
+    fn two_level_groups_ranks_node_major() {
+        let t = Topology::two_level(2, 4, link(64e9), link(1e9));
+        assert_eq!(t.world(), 8);
+        assert!(!t.is_flat());
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.node_of(7), 1);
+        // a world-spanning ring is bounded by the slow inter link
+        assert_eq!(t.bottleneck().beta_bytes_per_s, 1e9);
+    }
+
+    #[test]
+    fn from_profile_degenerates_cleanly() {
+        let l4 = HwProfile::by_name("l4").unwrap();
+        let t = Topology::from_profile(l4, 8);
+        assert!(t.is_flat());
+
+        let multi = HwProfile::by_name("2x4l4").unwrap();
+        let t = Topology::from_profile(multi, 8);
+        assert_eq!((t.nodes, t.gpus_per_node), (2, 4));
+        // world that doesn't divide the node count -> flat fallback
+        let t = Topology::from_profile(multi, 3);
+        assert!(t.is_flat());
+        // world that fits in one node -> flat
+        let t = Topology::from_profile(multi, 2);
+        assert!(t.is_flat());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_layouts() {
+        let a = Topology::flat(8, link(1e9));
+        let b = Topology::two_level(2, 4, link(1e9), link(1e8));
+        let c = Topology::two_level(2, 4, link(1e9), link(1e8));
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_eq!(b.cache_key(), c.cache_key());
+    }
+}

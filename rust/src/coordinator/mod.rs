@@ -16,6 +16,7 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::collective::AlgoKind;
 use crate::metrics::Registry;
 use crate::tokenizer::ByteTokenizer;
 use crate::tp::{BatchKv, StepTiming, TpEngine};
@@ -304,6 +305,15 @@ impl Coordinator {
     fn record_comm(&self, t: &StepTiming) {
         self.metrics.comm_bytes_sent.add(t.wire_bytes);
         self.metrics.comm_bytes_saved.add(t.raw_bytes.saturating_sub(t.wire_bytes));
+        // per-algorithm collective counter (engine-side total mirrored
+        // into the registry so `/metrics` exposes the planner's choices);
+        // only the algorithm this step ran can have moved
+        let Some(kind) = AlgoKind::parse(t.algo) else {
+            return; // no collective ran this step
+        };
+        if let Some(calls) = self.eng.algo_calls.get(t.algo) {
+            self.metrics.set(kind.metric_key(), *calls as f64);
+        }
     }
 
     fn finish(&self, slot: ActiveSlot) {

@@ -36,13 +36,15 @@ impl LinkModel {
     }
 
     /// All-reduce modeled as reduce-scatter + all-gather (2(N-1) steps of
-    /// bytes/N each). Used by the analytic perf model's baseline where
-    /// uncompressed TP uses NCCL all-reduce.
+    /// ⌈bytes/N⌉ each — ceiling division, so shard sizes that don't
+    /// divide N don't silently drop the remainder bytes). Used by the
+    /// analytic perf model's baseline where uncompressed TP uses NCCL
+    /// all-reduce.
     pub fn all_reduce_time(&self, bytes: usize, n: usize) -> f64 {
         if n <= 1 {
             return 0.0;
         }
-        2.0 * (n - 1) as f64 * self.transfer_time(bytes / n)
+        2.0 * (n - 1) as f64 * self.transfer_time(bytes.div_ceil(n))
     }
 }
 
@@ -111,6 +113,18 @@ mod tests {
         let fast = LinkModel { alpha_s: 1e-5, beta_bytes_per_s: 600e9 };
         let b = 128 << 20;
         assert!(slow.transfer_time(b) > 8.0 * fast.transfer_time(b) * 0.9);
+    }
+
+    #[test]
+    fn all_reduce_rounds_shard_up() {
+        // 10 bytes over 3 workers: shards are ceil(10/3) = 4 bytes, not
+        // the truncated 3 — time must match the explicit 4-byte transfer.
+        let l = LinkModel { alpha_s: 0.0, beta_bytes_per_s: 1.0 };
+        let t = l.all_reduce_time(10, 3);
+        assert!((t - 2.0 * 2.0 * 4.0).abs() < 1e-12, "{t}");
+        // and a non-divisible message is never cheaper than a slightly
+        // smaller divisible one
+        assert!(l.all_reduce_time(10, 3) >= l.all_reduce_time(9, 3));
     }
 
     #[test]

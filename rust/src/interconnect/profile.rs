@@ -1,5 +1,6 @@
 //! Hardware profiles for the paper's evaluation testbeds (§5.2) plus the
-//! compute-side roofline numbers used by the analytic perf model.
+//! compute-side roofline numbers used by the analytic perf model, and
+//! multi-node variants for the collective engine's two-level topologies.
 
 use super::LinkModel;
 
@@ -13,7 +14,14 @@ pub struct HwProfile {
     pub mfu: f64,
     /// HBM bandwidth (bytes/s) — bounds the memory-bound decode phase
     pub hbm_bytes_per_s: f64,
+    /// intra-node link (the only link for single-node profiles)
     pub link: LinkModel,
+    /// node groups in the deployment (1 = single node; >1 enables the
+    /// collective engine's two-level topology)
+    pub nodes: usize,
+    /// node-to-node link; equal to `link` for single-node profiles so
+    /// flat-topology code paths stay bit-compatible with the seed
+    pub inter_link: LinkModel,
     /// throughput of the quantize/dequant kernels (values/s) — the
     /// compression overhead term. Calibrated so the A100 slowdown in
     /// Table 3 reproduces (quant ~ memory-bound elementwise op).
@@ -26,10 +34,17 @@ impl HwProfile {
     }
 }
 
+const L4_LINK: LinkModel = LinkModel { alpha_s: 20e-6, beta_bytes_per_s: 4.3e9 };
+const A100_LINK: LinkModel = LinkModel { alpha_s: 10e-6, beta_bytes_per_s: 74e9 };
+
 /// L4: PCIe Gen4 x16 ~64 GB/s per the paper; FP16 tensor 121 TFLOPs
 /// (realistic dense ~0.35 MFU on prefill), HBM 300 GB/s.
 /// A100 (SXM, 80GB): NVLink 600 GB/s bidirectional any-to-any; FP16
 /// tensor 312 TFLOPs, HBM 2.0 TB/s.
+/// `2x4l4` / `2x4a100`: two-node variants of the same parts — PCIe
+/// intra + 100GbE inter for L4 boxes, NVLink intra + HDR InfiniBand
+/// inter for A100 boxes — the asymmetric regimes where hierarchical /
+/// two-shot algorithms beat a world-spanning flat ring.
 pub const PROFILES: &[HwProfile] = &[
     HwProfile {
         name: "l4",
@@ -41,7 +56,9 @@ pub const PROFILES: &[HwProfile] = &[
         // and contending for the same host links is far lower. β is
         // calibrated on the paper's *uncompressed* Table 3 rows
         // (70B/8xL4 2x64 -> 0.58 s): β_eff ≈ 4.3 GB/s.
-        link: LinkModel { alpha_s: 20e-6, beta_bytes_per_s: 4.3e9 },
+        link: L4_LINK,
+        nodes: 1,
+        inter_link: L4_LINK,
         quant_values_per_s: 15e9,
     },
     HwProfile {
@@ -52,9 +69,37 @@ pub const PROFILES: &[HwProfile] = &[
         // NVLink3 600 GB/s bidirectional; effective collective bandwidth
         // for ~4 MB eager-mode messages calibrated on the paper's
         // uncompressed 4xA100 rows (2x128 -> 0.09 s): β_eff ≈ 74 GB/s.
-        link: LinkModel { alpha_s: 10e-6, beta_bytes_per_s: 74e9 },
+        link: A100_LINK,
+        nodes: 1,
+        inter_link: A100_LINK,
         // same (torch, unfused) microxcaling quant kernels as L4 —
         // this is what makes compression a net loss on NVLink (Table 3).
+        quant_values_per_s: 15e9,
+    },
+    HwProfile {
+        name: "2x4l4",
+        peak_flops: 121e12,
+        mfu: 0.35,
+        hbm_bytes_per_s: 300e9,
+        link: L4_LINK,
+        nodes: 2,
+        // 100GbE between the boxes: 12.5 GB/s raw, effective collective
+        // bandwidth with TCP framing and host staging ≈ 1.5 GB/s, and a
+        // far higher per-message latency than PCIe P2P.
+        inter_link: LinkModel { alpha_s: 30e-6, beta_bytes_per_s: 1.5e9 },
+        quant_values_per_s: 15e9,
+    },
+    HwProfile {
+        name: "2x4a100",
+        peak_flops: 312e12,
+        mfu: 0.45,
+        hbm_bytes_per_s: 2.0e12,
+        link: A100_LINK,
+        nodes: 2,
+        // HDR InfiniBand (200 Gbps): 25 GB/s raw, effective ≈ 12 GB/s —
+        // fast, but still 6x below NVLink, so world-spanning flat rings
+        // stall on the node boundary.
+        inter_link: LinkModel { alpha_s: 15e-6, beta_bytes_per_s: 12e9 },
         quant_values_per_s: 15e9,
     },
     // our live CPU testbed: a profile that matches the single-core CPU
@@ -65,6 +110,8 @@ pub const PROFILES: &[HwProfile] = &[
         mfu: 1.0,
         hbm_bytes_per_s: 8e9,
         link: LinkModel { alpha_s: 5e-6, beta_bytes_per_s: 2e9 },
+        nodes: 1,
+        inter_link: LinkModel { alpha_s: 5e-6, beta_bytes_per_s: 2e9 },
         quant_values_per_s: 500e6,
     },
 ];
@@ -77,6 +124,8 @@ mod tests {
     fn lookup() {
         assert!(HwProfile::by_name("l4").is_some());
         assert!(HwProfile::by_name("A100").is_some());
+        assert!(HwProfile::by_name("2x4l4").is_some());
+        assert!(HwProfile::by_name("2x4A100").is_some());
         assert!(HwProfile::by_name("h100").is_none());
     }
 
@@ -86,5 +135,24 @@ mod tests {
         let a100 = HwProfile::by_name("a100").unwrap();
         assert!(a100.link.beta_bytes_per_s / l4.link.beta_bytes_per_s > 8.0);
         assert!(a100.peak_flops > l4.peak_flops);
+    }
+
+    #[test]
+    fn single_node_profiles_have_symmetric_links() {
+        for p in PROFILES.iter().filter(|p| p.nodes == 1) {
+            assert_eq!(p.link.beta_bytes_per_s, p.inter_link.beta_bytes_per_s, "{}", p.name);
+            assert_eq!(p.link.alpha_s, p.inter_link.alpha_s, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn multi_node_inter_is_slower_than_intra() {
+        for p in PROFILES.iter().filter(|p| p.nodes > 1) {
+            assert!(
+                p.inter_link.beta_bytes_per_s < p.link.beta_bytes_per_s,
+                "{}: inter should be the slow level",
+                p.name
+            );
+        }
     }
 }

@@ -9,13 +9,22 @@
 //!
 //! Layer map (DESIGN.md):
 //! * [`runtime`]    — PJRT CPU client, manifest-driven artifact loading.
-//! * [`tp`]         — TP worker group executing per-shard stage programs.
-//! * [`collective`] — all-gather + reduce with pluggable compression.
+//! * [`tp`]         — TP worker group executing per-shard stage programs;
+//!                    threads the collective plan + per-algo telemetry.
+//! * [`collective`] — topology-aware collective engine: algorithm menu
+//!                    (flat ring, recursive doubling, two-shot,
+//!                    hierarchical) behind one trait, two-level
+//!                    [`collective::Topology`], pipelined chunking with
+//!                    encode/link overlap, and an auto-planner scoring
+//!                    {algorithm × chunking} per message shape.
 //! * [`mxfmt`]      — MX codec (bit-exact vs the Pallas kernels) + the
 //!                    Bian et al. baselines (channel-wise INT, TopK).
-//! * [`interconnect`] — α/β link simulator with hardware profiles.
+//! * [`interconnect`] — α/β link simulator with single- and multi-node
+//!                    hardware profiles (PCIe/NVLink intra, Ethernet/IB
+//!                    inter).
 //! * [`coordinator`]  — continuous batcher, KV-cache pool, sessions.
-//! * [`server`]     — minimal HTTP/1.1 front end.
+//! * [`server`]     — minimal HTTP/1.1 front end (per-algorithm
+//!                    collective counters on `/metrics`).
 //! * [`eval`]       — perplexity harness (Tables 1/2/5).
 //! * [`model`]      — model configs, weight loading, analytic perf model.
 //! * [`tables`]     — generators for every paper table (benches wrap these).

@@ -28,12 +28,14 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let tp = args.get_usize("tp", 2);
     let compress = args.get_or("compress", "none").to_string();
     let profile = args.get_or("profile", "cpu").to_string();
+    let algo = args.get_or("algo", "auto").to_string();
     let root = common::artifacts_root()?;
     let rt = Runtime::load(&root)?;
     let weights = Weights::load(&root.join("weights").join(&model))?;
     let opts = EngineOptions::new(&model, tp)
         .with_compress(&compress)
-        .with_profile(&profile);
+        .with_profile(&profile)
+        .with_algo(&algo);
     TpEngine::new(rt, &weights, opts)
 }
 
@@ -47,6 +49,7 @@ fn run() -> anyhow::Result<()> {
             let tp = args.get_usize("tp", 2);
             let compress = args.get_or("compress", "none").to_string();
             let profile = args.get_or("profile", "cpu").to_string();
+            let algo = args.get_or("algo", "auto").to_string();
             let copts = CoordinatorOptions {
                 decode_batch: args.get_usize("decode-batch", 8),
                 sampling: if args.has("greedy") {
@@ -66,7 +69,8 @@ fn run() -> anyhow::Result<()> {
                         &weights,
                         EngineOptions::new(&model, tp)
                             .with_compress(&compress)
-                            .with_profile(&profile),
+                            .with_profile(&profile)
+                            .with_algo(&algo),
                     )
                 },
                 copts,
@@ -137,6 +141,8 @@ fn run() -> anyhow::Result<()> {
         "table3" => {
             let rows = table3::run_analytic();
             table3::print(&rows, "analytic, paper-scale");
+            let ablation = table3::run_algo_ablation();
+            table3::print_algo_ablation(&ablation);
             let live = table3::run_live("l4", 2, 8, 128, args.get_usize("reps", 5), true)?;
             table3::print(&[live], "live micro model on CPU PJRT");
             Ok(())
@@ -176,7 +182,9 @@ fn run() -> anyhow::Result<()> {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
                  commands: serve | gen | eval | table1..table5 | info\n\
-                 common flags: --model nano|micro|small --tp N --compress SPEC --profile l4|a100|cpu",
+                 common flags: --model nano|micro|small --tp N --compress SPEC\n\
+                               --profile l4|a100|2x4l4|2x4a100|cpu\n\
+                               --algo auto|ring|recursive_doubling|two_shot|hierarchical",
                 tpcc::version()
             );
             Ok(())

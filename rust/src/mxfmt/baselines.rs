@@ -99,6 +99,12 @@ impl Compressor for ChannelInt {
     fn compute_cost_factor(&self) -> f64 {
         0.35
     }
+
+    /// Slicing on channel-row multiples keeps the per-channel scales
+    /// meaningful on every phase payload.
+    fn alignment(&self) -> usize {
+        self.channels.max(1)
+    }
 }
 
 /// TopK sparsification: keep the `1/ratio_den` largest-magnitude values

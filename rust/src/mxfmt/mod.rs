@@ -49,6 +49,25 @@ pub trait Compressor: Send + Sync {
         ((self.effective_bits(n_values) * n_values as f64) / 8.0).ceil() as usize
     }
 
+    /// Smallest message granularity this codec can encode independently
+    /// (the MX block size, the channel count for channel-wise schemes).
+    /// The collective engine slices messages on multiples of this so
+    /// every phase payload stays encodable.
+    fn alignment(&self) -> usize {
+        1
+    }
+
+    /// Quantize `x` and accumulate the dequantized values into `acc`
+    /// (`acc[i] += Q(x[i])`). Numerically identical to `encode` +
+    /// `decode_add`, but implementations may skip the wire round-trip:
+    /// the collective engine uses this in `Analytic` overhead mode,
+    /// where measured codec wall time is discarded and the bit-packing
+    /// of shards would be pure waste.
+    fn requant_add(&self, x: &[f32], acc: &mut [f32], scratch: &mut Vec<u8>) {
+        self.encode(x, scratch);
+        self.decode_add(scratch, x.len(), acc);
+    }
+
     /// Convenience: decode into a fresh zeroed buffer.
     fn decode(&self, wire: &[u8], n_values: usize) -> Vec<f32> {
         let mut out = vec![0.0; n_values];

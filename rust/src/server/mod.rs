@@ -71,7 +71,8 @@ fn parse_request(stream: &mut TcpStream) -> anyhow::Result<HttpRequest> {
     reader.read_line(&mut line)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("/").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    anyhow::ensure!(!method.is_empty() && !path.is_empty(), "malformed request line");
 
     let mut content_length = 0usize;
     loop {
@@ -111,7 +112,12 @@ fn respond(stream: &mut TcpStream, status: u32, body: &str) -> anyhow::Result<()
 }
 
 fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Result<()> {
-    let req = parse_request(&mut stream)?;
+    // a malformed request (empty request line, truncated body) is the
+    // client's fault: answer 400 instead of dropping the connection
+    let req = match parse_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return respond(&mut stream, 400, r#"{"error":"malformed request"}"#),
+    };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
         ("GET", "/metrics") => {

@@ -14,7 +14,7 @@ pub mod kv;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::collective::all_gather_reduce_add;
+use crate::collective::{self, AlgoChoice, CollectivePlan, Topology};
 use crate::interconnect::{HwProfile, LinkModel, VirtualClock};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
@@ -39,6 +39,9 @@ pub struct EngineOptions {
     /// compressor spec (`none`, `fp4_e2m1_b32_e8m0`, `int4_channelwise`,
     /// `topk3`, ...) applied to every row-parallel collective
     pub compress: String,
+    /// collective algorithm knob: `auto` (planner decides per message
+    /// shape) or a fixed [`crate::collective::AlgoKind`] name
+    pub algo: String,
     pub overhead: OverheadModel,
     /// hardware profile used for link simulation
     pub profile: &'static HwProfile,
@@ -55,6 +58,7 @@ impl EngineOptions {
             model: model.to_string(),
             tp,
             compress: "none".into(),
+            algo: "auto".into(),
             overhead: OverheadModel::Measured,
             profile: HwProfile::by_name("cpu").unwrap(),
             fused: false,
@@ -63,6 +67,11 @@ impl EngineOptions {
 
     pub fn with_compress(mut self, spec: &str) -> Self {
         self.compress = spec.to_string();
+        self
+    }
+
+    pub fn with_algo(mut self, algo: &str) -> Self {
+        self.algo = algo.to_string();
         self
     }
 
@@ -78,6 +87,10 @@ impl EngineOptions {
 }
 
 /// Per-forward timing breakdown (live + virtual).
+///
+/// `link_s` is the *exposed* link time: the algorithm's modeled wire
+/// schedule minus whatever codec work a pipelined plan hides behind it,
+/// so `virtual_total` is the overlapped schedule, not the serial sum.
 #[derive(Debug, Clone, Default)]
 pub struct StepTiming {
     pub wall_s: f64,
@@ -86,6 +99,9 @@ pub struct StepTiming {
     pub codec_s: f64,
     pub wire_bytes: u64,
     pub raw_bytes: u64,
+    /// collective algorithm used by this step's communicates ("" until
+    /// a collective ran)
+    pub algo: &'static str,
 }
 
 impl StepTiming {
@@ -100,6 +116,9 @@ impl StepTiming {
         self.codec_s += o.codec_s;
         self.wire_bytes += o.wire_bytes;
         self.raw_bytes += o.raw_bytes;
+        if !o.algo.is_empty() {
+            self.algo = o.algo;
+        }
     }
 }
 
@@ -108,6 +127,14 @@ pub struct TpEngine {
     pub cfg: ModelConfig,
     pub opts: EngineOptions,
     comp: Option<Box<dyn Compressor>>,
+    /// parsed `opts.algo` (planner constraint)
+    algo_choice: AlgoChoice,
+    /// per-engine plan memo keyed on (message len, profile identity) —
+    /// keeps the hot path free of the planner's global cache lock and
+    /// key allocations; cleared when the compressor or algo knob changes
+    plan_cache: BTreeMap<(usize, usize), CollectivePlan>,
+    /// collective invocations per algorithm name (feeds `/metrics`)
+    pub algo_calls: BTreeMap<&'static str, u64>,
     /// per-rank weight literals, keyed like the python param dict
     wlits: Vec<BTreeMap<String, xla::Literal>>,
     pub clock: VirtualClock,
@@ -124,6 +151,7 @@ impl TpEngine {
         } else {
             Some(compressor_from_spec_ch(&opts.compress, cfg.d_model)?)
         };
+        let algo_choice = AlgoChoice::parse(&opts.algo)?;
         let mut wlits = Vec::with_capacity(opts.tp);
         for rank in 0..opts.tp {
             let shard = weights.shard(&cfg, opts.tp, rank)?;
@@ -138,6 +166,9 @@ impl TpEngine {
             cfg,
             opts,
             comp,
+            algo_choice,
+            plan_cache: BTreeMap::new(),
+            algo_calls: BTreeMap::new(),
             wlits,
             clock: VirtualClock::default(),
             reduce_buf: Vec::new(),
@@ -147,6 +178,19 @@ impl TpEngine {
 
     pub fn link(&self) -> &LinkModel {
         &self.opts.profile.link
+    }
+
+    /// Topology the current profile presents to this TP world.
+    pub fn topology(&self) -> Topology {
+        Topology::from_profile(self.opts.profile, self.opts.tp)
+    }
+
+    /// Swap the collective algorithm knob without rebuilding the engine.
+    pub fn set_algo(&mut self, algo: &str) -> anyhow::Result<()> {
+        self.algo_choice = AlgoChoice::parse(algo)?;
+        self.opts.algo = algo.to_string();
+        self.plan_cache.clear();
+        Ok(())
     }
 
     fn wlit(&self, rank: usize, name: &str) -> &xla::Literal {
@@ -239,13 +283,19 @@ impl TpEngine {
         timing.codec_s += codec_s;
         timing.wire_bytes += (shard_wire * (tp - 1)) as u64;
         timing.raw_bytes += (values * 2 * (tp - 1)) as u64;
+        // the fused HLO executables bake in the all-gather layout, so
+        // this path always accounts as the flat ring
+        *self.algo_calls.entry("ring").or_insert(0) += 1;
+        timing.algo = "ring";
         self.clock
             .add_comm(link_s + codec_s, shard_wire * (tp - 1), values * 2 * (tp - 1));
         Ok(reduced)
     }
 
-    /// The collective after a row-parallel stage: all-gather + reduce +
-    /// residual add, with compression per the engine options.
+    /// The collective after a row-parallel stage: the planner picks an
+    /// (algorithm × chunking) for this message shape on the profile's
+    /// topology, execution applies compression at the algorithm's phase
+    /// boundaries, and virtual time advances by the overlapped schedule.
     fn communicate(
         &mut self,
         x: &[f32],
@@ -254,35 +304,63 @@ impl TpEngine {
     ) -> Vec<f32> {
         let n = partials.len();
         let len = x.len();
+        let topo = self.topology();
+        // planning always scores codec work at the profile's calibrated
+        // throughput — in Measured mode the realised codec time is this
+        // CPU's, but the *choice* models the simulated hardware. The
+        // per-engine memo keys on (len, profile identity); compressor and
+        // algo-knob changes clear it (`set_compress`/`set_algo`).
+        let memo_key = (len, self.opts.profile as *const HwProfile as usize);
+        let plan = match self.plan_cache.get(&memo_key).copied() {
+            Some(p) => p,
+            None => {
+                let p = collective::plan::choose(
+                    len,
+                    n,
+                    self.comp.as_deref(),
+                    &topo,
+                    self.opts.profile.quant_values_per_s,
+                    self.algo_choice,
+                );
+                self.plan_cache.insert(memo_key, p);
+                p
+            }
+        };
+        let comp = self.comp.as_deref();
+        let measure = self.opts.overhead == OverheadModel::Measured;
         let mut out = std::mem::take(&mut self.reduce_buf);
         let mut wire = std::mem::take(&mut self.wire_buf);
-        let rep = all_gather_reduce_add(
-            x,
-            partials,
-            self.comp.as_deref(),
-            &self.opts.profile.link,
-            &mut out,
-            &mut wire,
-        );
-        timing.link_s += rep.link_s;
-        let codec_s = match self.opts.overhead {
-            OverheadModel::Measured => rep.encode_s + rep.decode_s,
+        let rep = collective::execute(&plan, x, partials, comp, &topo, measure, &mut out, &mut wire);
+        *self.algo_calls.entry(rep.algo).or_insert(0) += 1;
+        timing.algo = rep.algo;
+
+        let (codec_s, total_s) = match self.opts.overhead {
+            OverheadModel::Measured => (rep.encode_s + rep.decode_s, rep.total_s()),
             OverheadModel::Analytic { values_per_s } => {
                 if self.comp.is_some() {
-                    (len * n) as f64 / values_per_s
+                    // the planner's own scoring at the engine's rate —
+                    // realized analytic time equals the scored objective
+                    // (codec values discounted by the codec's cost factor,
+                    // overlap per the executed chunk count)
+                    let (total, _link, codec_s) = collective::plan::score(
+                        plan.algo, len, n, comp, &topo, values_per_s, rep.chunks,
+                    );
+                    (codec_s, total)
                 } else {
-                    0.0
+                    (0.0, rep.link_s)
                 }
             }
         };
-        timing.codec_s += codec_s;
-        timing.wire_bytes += (rep.shard_wire_bytes * n.saturating_sub(1)) as u64;
-        timing.raw_bytes += (rep.shard_raw_bytes * n.saturating_sub(1)) as u64;
-        self.clock.add_comm(
-            rep.link_s + codec_s,
-            rep.shard_wire_bytes * n.saturating_sub(1),
-            rep.shard_raw_bytes * n.saturating_sub(1),
-        );
+        // decompose the overlapped total into exposed link + exposed
+        // codec so link_s + codec_s == total_s exactly: virtual_total
+        // then equals the pipeline schedule and agrees with the clock
+        // even when overlap hides part of the codec work
+        let link_exposed = (total_s - codec_s).max(0.0);
+        timing.codec_s += total_s - link_exposed;
+        timing.link_s += link_exposed;
+        timing.wire_bytes += rep.wire_bytes as u64;
+        timing.raw_bytes += rep.raw_bytes as u64;
+        self.clock.add_comm(total_s, rep.wire_bytes, rep.raw_bytes);
         self.wire_buf = wire;
         let result = out.clone();
         self.reduce_buf = out;
@@ -469,6 +547,7 @@ impl TpEngine {
         } else {
             Some(compressor_from_spec_ch(spec, self.cfg.d_model)?)
         };
+        self.plan_cache.clear();
         Ok(())
     }
 

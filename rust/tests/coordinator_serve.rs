@@ -154,6 +154,52 @@ fn http_server_generate_and_metrics() {
     assert_eq!(code, 200);
     let m = tpcc::util::json::Json::parse(&body).unwrap();
     assert_eq!(m.get("requests_completed").unwrap().as_i64(), Some(1));
+    // the collective engine publishes per-algorithm counters
+    let algo_calls: f64 = ["ring", "recursive_doubling", "two_shot", "hierarchical"]
+        .iter()
+        .filter_map(|a| m.get(&format!("collective_calls_{a}")))
+        .filter_map(|v| v.as_f64())
+        .sum();
+    assert!(algo_calls > 0.0, "no per-algorithm collective counters in /metrics: {body}");
+
+    srv.join().unwrap();
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn http_server_rejects_malformed_requests_with_400_and_404() {
+    use std::io::{Read as _, Write as _};
+
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (handle, join) = spawn_nano("none");
+    let server = Server::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.serve_n(4).unwrap());
+
+    // invalid JSON body -> 400, connection answered rather than dropped
+    let (code, body) = http_post(&addr, "/generate", "{not json").unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("error"));
+
+    // JSON without a prompt -> 400
+    let (code, body) = http_post(&addr, "/generate", r#"{"max_tokens": 4}"#).unwrap();
+    assert_eq!(code, 400, "{body}");
+
+    // unknown path -> 404
+    let (code, body) = http_get(&addr, "/nope").unwrap();
+    assert_eq!(code, 404, "{body}");
+
+    // garbage that is not HTTP at all -> 400, not a dropped connection
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "got {raw:?}");
 
     srv.join().unwrap();
     handle.shutdown();

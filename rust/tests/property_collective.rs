@@ -1,0 +1,199 @@
+//! Property tests for the collective engine: every algorithm must
+//! compute `x + Σ partials` — exactly (up to f32 reassociation) under
+//! `NoCompress`, and within the MX scheme's error bound under
+//! compression — across world sizes {1, 2, 3, 4, 8} and
+//! non-power-of-two message lengths.
+
+use tpcc::collective::algo::{AlgoKind, CollectiveAlgo, ExecCtx};
+use tpcc::collective::Topology;
+use tpcc::interconnect::LinkModel;
+use tpcc::mxfmt::{compressor_from_spec, Compressor, NoCompress};
+use tpcc::util::rng::Rng;
+
+const WORLDS: [usize; 5] = [1, 2, 3, 4, 8];
+/// non-power-of-two lengths, multiples of every MX block size in play
+const LENS: [usize; 3] = [96, 480, 1440];
+
+fn topos_for(world: usize) -> Vec<Topology> {
+    let intra = LinkModel { alpha_s: 1e-6, beta_bytes_per_s: 64e9 };
+    let inter = LinkModel { alpha_s: 3e-5, beta_bytes_per_s: 1.5e9 };
+    let mut t = vec![Topology::flat(world, intra)];
+    if world >= 4 && world % 2 == 0 {
+        t.push(Topology::two_level(2, world / 2, intra, inter));
+    }
+    t
+}
+
+fn make_case(world: usize, len: usize, seed: u64) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; len];
+    rng.fill_activations(&mut x, 1.0);
+    let mut parts = vec![vec![0.0f32; len]; world];
+    for p in &mut parts {
+        rng.fill_activations(p, 2.0);
+    }
+    // exact sum in f64
+    let mut exact = vec![0.0f64; len];
+    for i in 0..len {
+        exact[i] = x[i] as f64;
+        for p in &parts {
+            exact[i] += p[i] as f64;
+        }
+    }
+    (x, parts, exact)
+}
+
+fn rel_l2(out: &[f32], exact: &[f64]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (o, e) in out.iter().zip(exact) {
+        num += (*o as f64 - e).powi(2);
+        den += e.powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+fn run_algo(
+    kind: AlgoKind,
+    x: &[f32],
+    parts: &[Vec<f32>],
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+) -> Vec<f32> {
+    let ctx = ExecCtx { comp, topo, measure: true };
+    let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
+    let mut out = Vec::new();
+    let mut wire = Vec::new();
+    let rep = kind.implementation().run(x, &refs, &ctx, &mut out, &mut wire);
+    assert_eq!(rep.algo, kind.name());
+    assert_eq!(out.len(), x.len(), "{:?}: wrong output length", kind);
+    out
+}
+
+#[test]
+fn every_algorithm_is_exact_under_nocompress() {
+    for world in WORLDS {
+        for len in LENS {
+            let (x, parts, exact) = make_case(world, len, (world * 1000 + len) as u64);
+            for topo in topos_for(world) {
+                for kind in AlgoKind::ALL {
+                    if !kind.supports(world, &topo) {
+                        continue;
+                    }
+                    let out = run_algo(kind, &x, &parts, Some(&NoCompress), &topo);
+                    // NoCompress moves exact f32 payloads; only summation
+                    // order differs between algorithms
+                    let rel = rel_l2(&out, &exact);
+                    assert!(
+                        rel < 1e-6,
+                        "{kind:?} world={world} len={len} nodes={}: rel {rel}",
+                        topo.nodes
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn none_and_nocompress_agree_per_algorithm() {
+    for world in WORLDS {
+        let len = LENS[1];
+        let (x, parts, _) = make_case(world, len, world as u64);
+        for topo in topos_for(world) {
+            for kind in AlgoKind::ALL {
+                if !kind.supports(world, &topo) {
+                    continue;
+                }
+                let a = run_algo(kind, &x, &parts, None, &topo);
+                let b = run_algo(kind, &x, &parts, Some(&NoCompress), &topo);
+                // identical summation order -> bitwise equal
+                assert_eq!(a, b, "{kind:?} world={world} nodes={}", topo.nodes);
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_algorithms_are_bit_identical() {
+    // ring and recursive doubling move the same quantized payloads;
+    // only the link schedule differs, so outputs must match bitwise
+    let c = compressor_from_spec("fp4_e2m1_b32_e8m0").unwrap();
+    for world in [1usize, 2, 4, 8] {
+        for len in LENS {
+            let (x, parts, _) = make_case(world, len, (world * 31 + len) as u64);
+            let topo = Topology::flat(
+                world,
+                LinkModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9 },
+            );
+            let a = run_algo(AlgoKind::FlatRing, &x, &parts, Some(c.as_ref()), &topo);
+            let b = run_algo(AlgoKind::RecursiveDoubling, &x, &parts, Some(c.as_ref()), &topo);
+            assert_eq!(a, b, "world={world} len={len}");
+        }
+    }
+}
+
+#[test]
+fn every_algorithm_is_within_mx_error_bound() {
+    // single-quantization algorithms (gather family) see one rounding
+    // per value; two-shot and hierarchical re-quantize reduced values,
+    // doubling the worst-case error.
+    for (scheme, single_bound) in [("fp4_e2m1_b32_e8m0", 0.20), ("fp5_e2m2_b16_e8m0", 0.12)] {
+        let c = compressor_from_spec(scheme).unwrap();
+        for world in WORLDS {
+            for len in LENS {
+                let (x, parts, exact) =
+                    make_case(world, len, (world * 7 + len * 3) as u64);
+                for topo in topos_for(world) {
+                    for kind in AlgoKind::ALL {
+                        if !kind.supports(world, &topo) {
+                            continue;
+                        }
+                        let out = run_algo(kind, &x, &parts, Some(c.as_ref()), &topo);
+                        let bound = match kind {
+                            AlgoKind::FlatRing | AlgoKind::RecursiveDoubling => single_bound,
+                            AlgoKind::TwoShot | AlgoKind::Hierarchical => single_bound * 2.0,
+                        };
+                        let rel = rel_l2(&out, &exact);
+                        assert!(
+                            rel < bound,
+                            "{scheme} {kind:?} world={world} len={len} nodes={}: rel {rel} > {bound}",
+                            topo.nodes
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn analytic_and_measured_paths_agree_for_every_algorithm() {
+    // the Analytic-mode requant path skips the wire round-trip but must
+    // be bit-equal to the measured path for every algorithm's phases
+    let c = compressor_from_spec("fp4_e2m1_b32_e8m0").unwrap();
+    for world in [2usize, 3, 4, 8] {
+        let len = LENS[2];
+        let (x, parts, _) = make_case(world, len, world as u64 + 99);
+        for topo in topos_for(world) {
+            for kind in AlgoKind::ALL {
+                if !kind.supports(world, &topo) {
+                    continue;
+                }
+                let ctx_m = ExecCtx { comp: Some(c.as_ref()), topo: &topo, measure: true };
+                let ctx_a = ExecCtx { comp: Some(c.as_ref()), topo: &topo, measure: false };
+                let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
+                let (mut om, mut oa) = (Vec::new(), Vec::new());
+                let mut wire = Vec::new();
+                let rm = kind.implementation().run(&x, &refs, &ctx_m, &mut om, &mut wire);
+                let ra = kind.implementation().run(&x, &refs, &ctx_a, &mut oa, &mut wire);
+                assert_eq!(om, oa, "{kind:?} world={world} nodes={}", topo.nodes);
+                // link model is timing-mode independent
+                assert_eq!(rm.link_s, ra.link_s);
+                // measured codec work only exists in measured mode
+                assert_eq!(ra.encode_s, 0.0);
+                assert_eq!(ra.decode_s, 0.0);
+            }
+        }
+    }
+}
