@@ -1,0 +1,16 @@
+//! Regenerates Table 6: the selective-compression ablation (uniform vs
+//! paper vs auto per-site policies) over the analytic deployments.
+//! Needs no artifacts — the cost model is the collective planner plus
+//! a synthetic per-site calibration.
+
+use tpcc::tables::table6;
+
+fn main() {
+    match table6::run_analytic() {
+        Ok(rows) => table6::print(&rows),
+        Err(e) => {
+            eprintln!("table6 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -35,6 +35,14 @@ pub enum AlgoChoice {
 
 impl AlgoChoice {
     /// Parse the engine/CLI spec: `auto` | any [`AlgoKind`] name.
+    ///
+    /// ```
+    /// use tpcc::collective::plan::AlgoChoice;
+    /// assert_eq!(AlgoChoice::parse("auto").unwrap(), AlgoChoice::Auto);
+    /// assert_eq!(AlgoChoice::parse("").unwrap(), AlgoChoice::Auto);
+    /// assert!(matches!(AlgoChoice::parse("two_shot").unwrap(), AlgoChoice::Fixed(_)));
+    /// assert!(AlgoChoice::parse("bogus").is_err());
+    /// ```
     pub fn parse(s: &str) -> anyhow::Result<AlgoChoice> {
         if s.is_empty() || s == "auto" {
             return Ok(AlgoChoice::Auto);
@@ -96,6 +104,20 @@ pub fn score(
 /// Choose the cheapest (algorithm × chunking) for a `values`-per-rank
 /// collective across `world` ranks on `topo`, compressing with `comp`,
 /// with codec throughput `quant_values_per_s` (values/s).
+///
+/// The unchunked flat ring is always among the candidates, so the plan
+/// is never slower (virtual time) than the seed's hard-coded ring:
+///
+/// ```
+/// use tpcc::collective::plan::{choose, ring_baseline, AlgoChoice};
+/// use tpcc::collective::Topology;
+/// use tpcc::interconnect::HwProfile;
+/// let p = HwProfile::by_name("l4").unwrap();
+/// let topo = Topology::from_profile(p, 4);
+/// let plan = choose(8192, 4, None, &topo, p.quant_values_per_s, AlgoChoice::Auto);
+/// let ring = ring_baseline(8192, 4, None, &topo, p.quant_values_per_s);
+/// assert!(plan.est_total_s > 0.0 && plan.est_total_s <= ring);
+/// ```
 pub fn choose(
     values: usize,
     world: usize,

@@ -75,6 +75,9 @@ type Submission = (GenRequest, Sender<GenResponse>);
 pub struct CoordinatorHandle {
     tx: Sender<Submission>,
     pub metrics: Arc<Registry>,
+    /// JSON snapshot of the engine's bound compression policy (the
+    /// per-site scheme table), served at `GET /policy`
+    pub policy_json: Arc<String>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -124,6 +127,7 @@ impl Coordinator {
         let handle = CoordinatorHandle {
             tx,
             metrics: metrics.clone(),
+            policy_json: Arc::new(eng.policy_json().to_string()),
             shutdown: shutdown.clone(),
         };
         let seed = opts.seed;
@@ -305,6 +309,11 @@ impl Coordinator {
     fn record_comm(&self, t: &StepTiming) {
         self.metrics.comm_bytes_sent.add(t.wire_bytes);
         self.metrics.comm_bytes_saved.add(t.raw_bytes.saturating_sub(t.wire_bytes));
+        // per-site-group policy counters (engine-side rollups mirrored
+        // into the registry so `/metrics` exposes where the bytes go)
+        for (key, v) in self.eng.policy_metrics() {
+            self.metrics.set(&key, v);
+        }
         // per-algorithm collective counter (engine-side total mirrored
         // into the registry so `/metrics` exposes the planner's choices);
         // only the algorithm this step ran can have moved

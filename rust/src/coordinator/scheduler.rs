@@ -27,8 +27,10 @@ pub fn admit_count(queued: usize, free_slots: usize, max_prefill_batch: usize) -
 /// Cost-model-guided check: is it worth running a partial prefill batch
 /// now, or waiting for more arrivals? We run immediately when any
 /// request has waited longer than `max_wait_s`, or the batch is full.
+/// An empty batch never flushes — even when `max_batch == 0` (no free
+/// slots), flushing zero requests is meaningless.
 pub fn should_flush(oldest_wait_s: f64, count: usize, max_batch: usize, max_wait_s: f64) -> bool {
-    count >= max_batch || (count > 0 && oldest_wait_s >= max_wait_s)
+    count > 0 && (count >= max_batch || oldest_wait_s >= max_wait_s)
 }
 
 #[cfg(test)]
@@ -66,5 +68,30 @@ mod tests {
         assert!(!should_flush(0.01, 3, 8, 0.05));
         assert!(should_flush(0.06, 3, 8, 0.05));
         assert!(!should_flush(10.0, 0, 8, 0.05));
+    }
+
+    #[test]
+    fn flush_never_fires_on_empty_batch() {
+        // count == 0 must never flush, regardless of the other knobs —
+        // including the max_batch == 0 corner (no free decode slots),
+        // where `count >= max_batch` would otherwise be vacuously true
+        assert!(!should_flush(0.0, 0, 0, 0.05));
+        assert!(!should_flush(f64::INFINITY, 0, 0, 0.0));
+        assert!(!should_flush(10.0, 0, 1, 0.0));
+        // and a single waiting request in a zero-slot round still
+        // counts as a full batch
+        assert!(should_flush(0.0, 1, 0, 10.0));
+    }
+
+    #[test]
+    fn bucket_none_when_only_decode_bucket_exists() {
+        // seq bucket 1 is the decode shape; with nothing else exported
+        // there is no legal prefill bucket
+        assert_eq!(pick_prefill_bucket(&[1], BB, &[1]), None);
+        assert_eq!(pick_prefill_bucket(&[1, 2], BB, &[1]), None);
+        // empty prompt set has no bucket either
+        assert_eq!(pick_prefill_bucket(&[], BB, SB), None);
+        // no batch bucket wide enough
+        assert_eq!(pick_prefill_bucket(&[5; 9], BB, SB), None);
     }
 }

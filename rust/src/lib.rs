@@ -17,6 +17,11 @@
 //!                    [`collective::Topology`], pipelined chunking with
 //!                    encode/link overlap, and an auto-planner scoring
 //!                    {algorithm × chunking} per message shape.
+//! * [`policy`]     — per-site compression policy engine: maps each
+//!                    collective site (layer × {attn-out, mlp-out} ×
+//!                    {prefill, decode}) to a compressor spec; built-in
+//!                    `uniform` / `paper` / `auto` policies plus a
+//!                    compact CLI spec grammar and JSON for the server.
 //! * [`mxfmt`]      — MX codec (bit-exact vs the Pallas kernels) + the
 //!                    Bian et al. baselines (channel-wise INT, TopK).
 //! * [`interconnect`] — α/β link simulator with single- and multi-node
@@ -37,6 +42,7 @@ pub mod interconnect;
 pub mod metrics;
 pub mod model;
 pub mod mxfmt;
+pub mod policy;
 pub mod runtime;
 pub mod server;
 pub mod tables;

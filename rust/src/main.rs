@@ -6,13 +6,18 @@
 //!   gen     --model micro --tp 2 --prompt "..." [--max-tokens 48]
 //!   eval    --model small --tp 2 --compress <spec> [--split test] [--tokens 4096]
 //!   table1|table2|table3|table4|table5   (regenerate a paper table)
+//!   table6  (selective-compression ablation: uniform vs paper vs auto)
 //!   info    (artifact + model inventory)
+//!
+//! `--policy` selects per-site compression (see `rust/src/policy/`):
+//! `uniform:<scheme>`, `paper`, `auto[:budget_pct]`, or a rule string
+//! such as `"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0]=none;decode=none"`.
 
 use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest, Sampling};
 use tpcc::model::weights::Weights;
 use tpcc::runtime::Runtime;
 use tpcc::server::Server;
-use tpcc::tables::{common, table1, table2, table3, table4, table5};
+use tpcc::tables::{common, table1, table2, table3, table4, table5, table6};
 use tpcc::tp::{EngineOptions, TpEngine};
 use tpcc::util::cli::Args;
 
@@ -27,6 +32,7 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let model = args.get_or("model", "micro").to_string();
     let tp = args.get_usize("tp", 2);
     let compress = args.get_or("compress", "none").to_string();
+    let policy = args.get_or("policy", "").to_string();
     let profile = args.get_or("profile", "cpu").to_string();
     let algo = args.get_or("algo", "auto").to_string();
     let root = common::artifacts_root()?;
@@ -34,6 +40,7 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let weights = Weights::load(&root.join("weights").join(&model))?;
     let opts = EngineOptions::new(&model, tp)
         .with_compress(&compress)
+        .with_policy(&policy)
         .with_profile(&profile)
         .with_algo(&algo);
     TpEngine::new(rt, &weights, opts)
@@ -48,6 +55,7 @@ fn run() -> anyhow::Result<()> {
             let model = args.get_or("model", "micro").to_string();
             let tp = args.get_usize("tp", 2);
             let compress = args.get_or("compress", "none").to_string();
+            let policy = args.get_or("policy", "").to_string();
             let profile = args.get_or("profile", "cpu").to_string();
             let algo = args.get_or("algo", "auto").to_string();
             let copts = CoordinatorOptions {
@@ -69,6 +77,7 @@ fn run() -> anyhow::Result<()> {
                         &weights,
                         EngineOptions::new(&model, tp)
                             .with_compress(&compress)
+                            .with_policy(&policy)
                             .with_profile(&profile)
                             .with_algo(&algo),
                     )
@@ -157,6 +166,17 @@ fn run() -> anyhow::Result<()> {
             table5::print(&rows);
             Ok(())
         }
+        "table6" => {
+            let rows = table6::run_analytic()?;
+            table6::print(&rows);
+            // live section (micro model, real PPL deltas) when artifacts
+            // are available; the analytic section needs none
+            if common::artifacts_root().is_ok() {
+                let live = table6::run_live(common::eval_tokens(2048))?;
+                table6::print_live(&live);
+            }
+            Ok(())
+        }
         "info" => {
             let root = common::artifacts_root()?;
             let rt = Runtime::load(&root)?;
@@ -181,10 +201,12 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | table1..table5 | info\n\
+                 commands: serve | gen | eval | table1..table6 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
+                               --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
-                               --algo auto|ring|recursive_doubling|two_shot|hierarchical",
+                               --algo auto|ring|recursive_doubling|two_shot|hierarchical\n\
+                 policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"",
                 tpcc::version()
             );
             Ok(())

@@ -28,6 +28,22 @@ pub use types::{ElemFormat, MxScheme, ScaleFormat, ELEM_FORMATS};
 /// `encode` returns the wire representation; `decode_add` accumulates the
 /// decoded tensor into `acc` (fused decompress+reduce, like the Pallas
 /// `mx_dequant_reduce` kernel).
+///
+/// Implementations are resolved from spec strings — globally via
+/// `--compress`, or per collective site via `--policy`
+/// ([`crate::policy`]):
+///
+/// ```
+/// use tpcc::mxfmt::{compressor_from_spec, Compressor};
+/// let c = compressor_from_spec("fp4_e2m1_b32_e8m0").unwrap();
+/// assert_eq!(c.effective_bits(64), 4.25); // paper §4.2: 4 + 8/32 bits
+/// let x = vec![1.0f32; 64];
+/// let mut wire = Vec::new();
+/// c.encode(&x, &mut wire);
+/// assert_eq!(wire.len(), c.wire_bytes(64));
+/// // 1.0 is exactly representable in FP4 E2M1 with a 2^0 block scale
+/// assert_eq!(c.decode(&wire, 64), x);
+/// ```
 pub trait Compressor: Send + Sync {
     fn name(&self) -> String;
     /// Bits per source value on the wire (the paper's "effective bits").
@@ -108,6 +124,17 @@ impl Compressor for NoCompress {
 /// `channels` is the per-row channel count of the tensors this
 /// compressor will see (the model's hidden dim for TP partials) —
 /// required by the channel-wise baselines, ignored by the rest.
+///
+/// ```
+/// use tpcc::mxfmt::compressor_from_spec_ch;
+/// // the uncompressed pass-through round-trips exactly
+/// let c = compressor_from_spec_ch("none", 4096).unwrap();
+/// let x = vec![1.5f32, -2.25, 0.0, 8.0];
+/// let mut wire = Vec::new();
+/// c.encode(&x, &mut wire);
+/// assert_eq!(c.decode(&wire, 4), x);
+/// assert!(compressor_from_spec_ch("bogus_spec", 4096).is_err());
+/// ```
 pub fn compressor_from_spec_ch(
     spec: &str,
     channels: usize,

@@ -1,0 +1,488 @@
+//! Built-in policy searches: `paper` (the §5.1 selection rule applied
+//! per-site) and `auto` (greedy sensitivity search under an error
+//! budget).
+//!
+//! Both consume the same inputs: a [`Calibration`] (per-site error per
+//! candidate scheme) and a [`SearchScenario`] (per-site virtual time
+//! per candidate scheme, scored by the collective auto-planner
+//! [`crate::collective::plan::score`] via [`crate::collective::plan::choose`]
+//! — the identical model the engine charges at execution, so search
+//! savings are realized savings).
+//!
+//! The `auto` search carries a hard never-worse guarantee: given a
+//! baseline table (e.g. `uniform:fp4_e2m1_b32_e8m0`) whose modeled
+//! error fits the budget, the returned table is never slower than the
+//! baseline in total virtual time *or* in TTFT-phase virtual time, and
+//! never exceeds the budget — if the greedy allocation ends up worse it
+//! falls back to the baseline outright.
+
+use crate::collective::plan::{self, AlgoChoice};
+use crate::collective::Topology;
+use crate::interconnect::HwProfile;
+use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+
+use super::{Calibration, Phase, PolicyTable, Site};
+
+/// Candidate schemes the built-in searches consider: the uncompressed
+/// path plus the paper's Table-1 MX grid (§5.1 searches MX only).
+///
+/// Channel-wise INT is deliberately absent: its error is defined by
+/// scales shared across *all rows* of a `d_model`-channel tensor, which
+/// the length-capped calibration samples cannot represent for large
+/// models (a short sample degrades it to near-per-value scaling and
+/// would score it as spuriously error-free). Policies can still bind
+/// `int4_channelwise` explicitly via rule specs — the engine then uses
+/// the true channel count; only the built-in searches skip it.
+pub const CANDIDATES: &[&str] = &[
+    "none",
+    "fp3_e1m1_b8_e8m0",
+    "fp3_e1m1_b16_e8m0",
+    "fp3_e1m1_b32_e8m0",
+    "fp4_e2m1_b8_e8m0",
+    "fp4_e2m1_b16_e8m0",
+    "fp4_e2m1_b32_e8m0",
+    "fp5_e2m2_b8_e8m0",
+    "fp5_e2m2_b16_e8m0",
+    "fp5_e2m2_b32_e8m0",
+];
+
+/// Per-site error threshold (%) of the `paper` policy — the §5.1 "<3%
+/// PPL increase" bar, applied to the per-site calibration error.
+pub const PAPER_ERR_BUDGET_PCT: f64 = 3.0;
+
+/// Default mean-error budget (%) of the `auto` policy.
+pub const DEFAULT_AUTO_BUDGET_PCT: f64 = 3.0;
+
+/// The deployment the search prices collectives against: message sizes
+/// per phase plus the topology/codec-rate inputs the planner scores
+/// with.
+#[derive(Debug, Clone)]
+pub struct SearchScenario {
+    /// TP world size
+    pub world: usize,
+    pub topo: Topology,
+    /// profile codec throughput (values/s), see
+    /// [`HwProfile::quant_values_per_s`]
+    pub quant_values_per_s: f64,
+    /// per-rank partial values of one prefill collective
+    pub prefill_values: usize,
+    /// per-rank partial values of one decode collective
+    pub decode_values: usize,
+}
+
+impl SearchScenario {
+    /// Scenario for `prefill_tokens` (batch × seq) prefills and
+    /// `decode_batch`-wide decode steps of a `d_model` model on
+    /// `profile` at TP `world`.
+    pub fn new(
+        profile: &'static HwProfile,
+        world: usize,
+        prefill_tokens: usize,
+        decode_batch: usize,
+        d_model: usize,
+    ) -> SearchScenario {
+        SearchScenario {
+            world,
+            topo: Topology::from_profile(profile, world),
+            quant_values_per_s: profile.quant_values_per_s,
+            prefill_values: prefill_tokens.max(1) * d_model,
+            decode_values: decode_batch.max(1) * d_model,
+        }
+    }
+
+    /// Message size (per-rank values) of one collective in `phase`.
+    pub fn values(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Prefill => self.prefill_values,
+            Phase::Decode => self.decode_values,
+        }
+    }
+}
+
+/// Precomputed per-candidate costs: calibration error per site, and
+/// planner-scored virtual time + wire bytes per phase (time and wire
+/// depend only on the phase's message size, not the layer).
+pub struct SiteCosts {
+    /// candidate spec strings, `costs.err[site][cand]` order
+    pub candidates: Vec<String>,
+    /// sites in [`Site::index`] order
+    pub sites: Vec<Site>,
+    /// relative RMS calibration error per `[site][candidate]`
+    pub err: Vec<Vec<f64>>,
+    /// planner-estimated virtual seconds per collective, per
+    /// `[phase.ord-like: 0 = prefill, 1 = decode][candidate]`
+    time: [Vec<f64>; 2],
+    /// accounted wire bytes per collective (received per worker), same
+    /// indexing as `time`
+    wire: [Vec<u64>; 2],
+    /// effective wire bits per value per candidate (16.0 for `none`)
+    pub eff_bits: Vec<f64>,
+}
+
+/// The aggregate score of a fully resolved table under a
+/// [`SiteCosts`] model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TableScore {
+    /// Σ over all sites of the planner-estimated collective time (one
+    /// prefill pass + one decode step)
+    pub time_total_s: f64,
+    /// Σ over prefill sites only — the TTFT communication component
+    pub ttft_comm_s: f64,
+    /// mean per-site relative RMS calibration error (fraction)
+    pub mean_err: f64,
+    /// accounted wire bytes of one full prefill pass
+    pub prefill_wire_bytes: u64,
+}
+
+impl TableScore {
+    /// Mean error as a percentage (the budget unit).
+    pub fn mean_err_pct(&self) -> f64 {
+        self.mean_err * 100.0
+    }
+}
+
+fn phase_slot(phase: Phase) -> usize {
+    match phase {
+        Phase::Prefill => 0,
+        Phase::Decode => 1,
+    }
+}
+
+impl SiteCosts {
+    /// Score every candidate at every site: errors from `calib`,
+    /// times/wire from the collective planner on `scen`.
+    pub fn build(
+        calib: &Calibration,
+        scen: &SearchScenario,
+        candidates: &[&str],
+    ) -> anyhow::Result<SiteCosts> {
+        anyhow::ensure!(!candidates.is_empty(), "no candidate schemes");
+        let comps: Vec<Option<Box<dyn Compressor>>> = candidates
+            .iter()
+            .map(|spec| {
+                if *spec == "none" {
+                    Ok(None)
+                } else {
+                    compressor_from_spec_ch(spec, calib.d_model).map(Some)
+                }
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut time = [Vec::new(), Vec::new()];
+        let mut wire = [Vec::new(), Vec::new()];
+        for phase in Phase::ALL {
+            let values = scen.values(phase);
+            let slot = phase_slot(phase);
+            for comp in &comps {
+                let p = plan::choose(
+                    values,
+                    scen.world,
+                    comp.as_deref(),
+                    &scen.topo,
+                    scen.quant_values_per_s,
+                    AlgoChoice::Auto,
+                );
+                time[slot].push(p.est_total_s);
+                let shard = match comp {
+                    Some(c) => c.wire_bytes(values),
+                    None => values * 2, // fp16 baseline, as the engine accounts it
+                };
+                wire[slot].push((shard * scen.world.saturating_sub(1)) as u64);
+            }
+        }
+
+        let sites = Site::all(calib.n_layers);
+        let mut err = Vec::with_capacity(sites.len());
+        for &site in &sites {
+            let mut row = Vec::with_capacity(comps.len());
+            for comp in &comps {
+                row.push(calib.site_error(site, comp.as_deref()));
+            }
+            err.push(row);
+        }
+        let len = Calibration::sample_len(calib.d_model);
+        let eff_bits = comps
+            .iter()
+            .map(|c| c.as_ref().map_or(16.0, |c| c.effective_bits(len)))
+            .collect();
+        Ok(SiteCosts {
+            candidates: candidates.iter().map(|s| s.to_string()).collect(),
+            sites,
+            err,
+            time,
+            wire,
+            eff_bits,
+        })
+    }
+
+    /// Planner-estimated virtual seconds of one collective at `site`
+    /// under candidate `cand`.
+    pub fn time(&self, site: Site, cand: usize) -> f64 {
+        self.time[phase_slot(site.phase)][cand]
+    }
+
+    /// Accounted wire bytes of one collective at `site` under `cand`.
+    pub fn wire(&self, site: Site, cand: usize) -> u64 {
+        self.wire[phase_slot(site.phase)][cand]
+    }
+
+    /// Index of `spec` in the candidate list.
+    pub fn cand_index(&self, spec: &str) -> Option<usize> {
+        self.candidates.iter().position(|c| c == spec)
+    }
+
+    /// Score a resolved table. Errors if the table uses a scheme
+    /// outside this cost model's candidate list.
+    pub fn eval_table(&self, table: &PolicyTable) -> anyhow::Result<TableScore> {
+        let mut score =
+            TableScore { time_total_s: 0.0, ttft_comm_s: 0.0, mean_err: 0.0, prefill_wire_bytes: 0 };
+        for &site in &self.sites {
+            let spec = table.spec(site);
+            let cand = self
+                .cand_index(spec)
+                .ok_or_else(|| anyhow::anyhow!("scheme {spec:?} not in the candidate list"))?;
+            let t = self.time(site, cand);
+            score.time_total_s += t;
+            score.mean_err += self.err[site.index()][cand];
+            if site.phase == Phase::Prefill {
+                score.ttft_comm_s += t;
+                score.prefill_wire_bytes += self.wire(site, cand);
+            }
+        }
+        score.mean_err /= self.sites.len().max(1) as f64;
+        Ok(score)
+    }
+
+    fn assignment_table(&self, name: &str, n_layers: usize, assign: &[usize]) -> PolicyTable {
+        let mut specs = vec![String::new(); Site::count(n_layers)];
+        for (i, &site) in self.sites.iter().enumerate() {
+            specs[site.index()] = self.candidates[assign[i]].clone();
+        }
+        PolicyTable::from_specs(name, n_layers, specs).expect("assignment covers all sites")
+    }
+}
+
+/// The paper's §5.1 selection rule applied per-site: among the MX
+/// candidates whose calibration error clears `threshold_pct`, pick the
+/// fewest effective bits (ties: lower error). The uncompressed path is
+/// always a candidate (error 0, 16 bits), so sites where every scheme
+/// degrades too much stay uncompressed — the "selected activations"
+/// behaviour.
+pub fn paper_policy(calib: &Calibration, threshold_pct: f64) -> anyhow::Result<PolicyTable> {
+    // errors only — price-of-time does not enter the paper rule, so a
+    // dummy single-node scenario is fine for cost construction
+    let profile = HwProfile::by_name("cpu").expect("cpu profile");
+    let scen = SearchScenario::new(profile, calib.world.max(2), 128, 8, calib.d_model.max(32));
+    let costs = SiteCosts::build(calib, &scen, CANDIDATES)?;
+
+    let mut assign = Vec::with_capacity(costs.sites.len());
+    for (si, _site) in costs.sites.iter().enumerate() {
+        let mut best: Option<usize> = None;
+        for (ci, _spec) in costs.candidates.iter().enumerate() {
+            let err_pct = costs.err[si][ci] * 100.0;
+            if err_pct < threshold_pct {
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        costs.eff_bits[ci] < costs.eff_bits[b]
+                            || (costs.eff_bits[ci] == costs.eff_bits[b]
+                                && costs.err[si][ci] < costs.err[si][b])
+                    }
+                };
+                if better {
+                    best = Some(ci);
+                }
+            }
+        }
+        // nothing clears the bar: fall back to the lowest-error
+        // candidate ("none" is first and has error 0, so it wins ties)
+        let chosen = best.unwrap_or_else(|| {
+            let mut b = 0usize;
+            for ci in 1..costs.candidates.len() {
+                if costs.err[si][ci] < costs.err[si][b] {
+                    b = ci;
+                }
+            }
+            b
+        });
+        assign.push(chosen);
+    }
+    Ok(costs.assignment_table("paper", calib.n_layers, &assign))
+}
+
+/// Result of [`auto_search`].
+pub struct AutoOutcome {
+    /// the chosen per-site assignment
+    pub table: PolicyTable,
+    /// [`SiteCosts::eval_table`] of that assignment
+    pub score: TableScore,
+    /// true when the greedy allocation lost to the baseline and the
+    /// baseline table was returned instead (the never-worse guarantee)
+    pub fell_back: bool,
+}
+
+/// Greedy sensitivity search: starting from the all-uncompressed
+/// assignment, repeatedly apply the (site, scheme) upgrade with the
+/// best virtual-time saving per unit of added calibration error, while
+/// the mean per-site error stays within `budget_pct`.
+///
+/// When `baseline` is given (and is scoreable under `costs` with error
+/// within budget), the result is guaranteed never slower than it — in
+/// total virtual time and in TTFT-phase time — by falling back to the
+/// baseline if the greedy allocation is worse on either axis.
+pub fn auto_search(
+    costs: &SiteCosts,
+    n_layers: usize,
+    budget_pct: f64,
+    baseline: Option<&PolicyTable>,
+    name: &str,
+) -> anyhow::Result<AutoOutcome> {
+    let none = costs
+        .cand_index("none")
+        .ok_or_else(|| anyhow::anyhow!("auto search needs 'none' among the candidates"))?;
+    let n_sites = costs.sites.len();
+    anyhow::ensure!(n_sites > 0, "no sites to search");
+    let budget = budget_pct / 100.0;
+
+    let mut assign = vec![none; n_sites];
+    let mut err_sum: f64 = 0.0;
+    loop {
+        // best (Δtime / Δerror) move within budget; deterministic:
+        // strict improvement required, first-best wins
+        let mut best: Option<(usize, usize, f64)> = None; // (site, cand, ratio)
+        for si in 0..n_sites {
+            let cur = assign[si];
+            let t_cur = costs.time(costs.sites[si], cur);
+            let e_cur = costs.err[si][cur];
+            for ci in 0..costs.candidates.len() {
+                if ci == cur {
+                    continue;
+                }
+                let dt = t_cur - costs.time(costs.sites[si], ci);
+                if dt <= 0.0 {
+                    continue;
+                }
+                let de = costs.err[si][ci] - e_cur;
+                if (err_sum + de) / n_sites as f64 > budget {
+                    continue;
+                }
+                let ratio = dt / de.max(1e-18);
+                if best.map_or(true, |(_, _, r)| ratio > r) {
+                    best = Some((si, ci, ratio));
+                }
+            }
+        }
+        let Some((si, ci, _)) = best else { break };
+        err_sum += costs.err[si][ci] - costs.err[si][assign[si]];
+        assign[si] = ci;
+    }
+
+    let table = costs.assignment_table(name, n_layers, &assign);
+    let score = costs.eval_table(&table)?;
+
+    if let Some(base) = baseline {
+        if let Ok(base_score) = costs.eval_table(base) {
+            let base_fits = base_score.mean_err_pct() <= budget_pct + 1e-12;
+            let worse = score.time_total_s > base_score.time_total_s + 1e-15
+                || score.ttft_comm_s > base_score.ttft_comm_s + 1e-15;
+            if base_fits && worse {
+                let mut table = base.clone();
+                table.name = format!("{name}(={})", base.name);
+                return Ok(AutoOutcome { table, score: base_score, fell_back: true });
+            }
+        }
+    }
+    Ok(AutoOutcome { table, score, fell_back: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n_layers: usize) -> (Calibration, SiteCosts) {
+        let calib = Calibration::synthetic(n_layers, 192, 2, 11);
+        let profile = HwProfile::by_name("l4").unwrap();
+        let scen = SearchScenario::new(profile, 2, 8 * 128, 8, 192);
+        let costs = SiteCosts::build(&calib, &scen, CANDIDATES).unwrap();
+        (calib, costs)
+    }
+
+    #[test]
+    fn costs_shapes_and_monotone_wire() {
+        let (_, costs) = setup(2);
+        assert_eq!(costs.sites.len(), Site::count(2));
+        assert_eq!(costs.err.len(), costs.sites.len());
+        let none = costs.cand_index("none").unwrap();
+        for &site in &costs.sites {
+            // compressed candidates put fewer bytes on the wire than fp16
+            for ci in 0..costs.candidates.len() {
+                if ci != none {
+                    assert!(costs.wire(site, ci) < costs.wire(site, none));
+                }
+            }
+            assert!(costs.time(site, none) > 0.0);
+        }
+    }
+
+    #[test]
+    fn eval_uniform_none_is_exact() {
+        let (_, costs) = setup(2);
+        let t = PolicyTable::uniform(2, "none");
+        let s = costs.eval_table(&t).unwrap();
+        assert_eq!(s.mean_err, 0.0);
+        assert!(s.time_total_s > 0.0 && s.ttft_comm_s > 0.0);
+        assert!(s.ttft_comm_s < s.time_total_s);
+        // unknown scheme is an error
+        let t = PolicyTable::uniform(2, "topk3");
+        assert!(costs.eval_table(&t).is_err());
+    }
+
+    #[test]
+    fn paper_threshold_extremes() {
+        let calib = Calibration::synthetic(3, 192, 2, 5);
+        // nothing clears a 0% bar except the exact path
+        let t = paper_policy(&calib, 0.0).unwrap();
+        for site in Site::all(3) {
+            assert_eq!(t.spec(site), "none", "{}", site.label());
+        }
+        // an infinite bar admits everything: fewest effective bits wins
+        let t = paper_policy(&calib, f64::INFINITY).unwrap();
+        for site in Site::all(3) {
+            assert_eq!(t.spec(site), "fp3_e1m1_b32_e8m0", "{}", site.label());
+        }
+    }
+
+    #[test]
+    fn auto_respects_budget_and_baseline() {
+        let (_, costs) = setup(2);
+        let uniform = PolicyTable::uniform(2, "fp4_e2m1_b32_e8m0");
+        let u = costs.eval_table(&uniform).unwrap();
+        let out =
+            auto_search(&costs, 2, u.mean_err_pct(), Some(&uniform), "auto").unwrap();
+        assert!(out.score.mean_err_pct() <= u.mean_err_pct() + 1e-9);
+        assert!(out.score.time_total_s <= u.time_total_s + 1e-12);
+        assert!(out.score.ttft_comm_s <= u.ttft_comm_s + 1e-12);
+        // consistency: the reported score is the table's score
+        let re = costs.eval_table(&out.table).unwrap();
+        assert!((re.time_total_s - out.score.time_total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_zero_budget_stays_within_it() {
+        let (_, costs) = setup(1);
+        let out = auto_search(&costs, 1, 0.0, None, "auto").unwrap();
+        assert!(out.score.mean_err_pct() <= 1e-12);
+        // and never slower than all-none (its own starting point)
+        let none = costs.eval_table(&PolicyTable::uniform(1, "none")).unwrap();
+        assert!(out.score.time_total_s <= none.time_total_s + 1e-12);
+    }
+
+    #[test]
+    fn auto_missing_none_errors() {
+        let calib = Calibration::synthetic(1, 192, 2, 1);
+        let profile = HwProfile::by_name("l4").unwrap();
+        let scen = SearchScenario::new(profile, 2, 128, 8, 192);
+        let costs = SiteCosts::build(&calib, &scen, &["fp4_e2m1_b32_e8m0"]).unwrap();
+        assert!(auto_search(&costs, 1, 3.0, None, "auto").is_err());
+    }
+}

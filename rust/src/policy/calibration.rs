@@ -1,0 +1,222 @@
+//! Per-site calibration data and the per-scheme reconstruction error
+//! measured on it.
+//!
+//! The `paper` and `auto` policies need an error signal per site: how
+//! much does quantizing *this* site's partials with *this* scheme
+//! perturb the reduced activation? Two sources feed it:
+//!
+//! * **Synthetic** ([`Calibration::synthetic`]) — deterministic
+//!   activation-shaped samples (normal with lognormal magnitude spread,
+//!   the distribution the MX schemes target) whose spread varies by
+//!   site: MLP outputs are heavier-tailed than attention outputs, and
+//!   the spread grows with depth, mirroring the residual-stream growth
+//!   real transformers exhibit. No artifacts needed.
+//! * **Captured** ([`Calibration::from_samples`]) — real pre-quantization
+//!   partials recorded by `TpEngine::capture_calibration` during a
+//!   calibration forward pass (prefill + one decode step).
+//!
+//! The error metric is what the collective actually does: every rank's
+//! sample is fake-quantized (`requant_add`) into an accumulator and the
+//! result compared against the exact sum — relative RMS error.
+
+use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+use crate::util::rng::Rng;
+
+use super::{Phase, Site, SiteKind};
+
+/// Target per-site sample length (values). Samples are rounded to a
+/// multiple of `d_model` when it fits (keeps channel-wise schemes
+/// meaningful) and are always a multiple of 32 (the largest MX block).
+/// Sized so a full 80-layer site grid scores in seconds even in debug
+/// builds (the Table 6 tests run it).
+const TARGET_SAMPLE_VALUES: usize = 512;
+
+/// Per-site, per-rank activation samples used to score schemes.
+pub struct Calibration {
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// TP world size (ranks per site sample)
+    pub world: usize,
+    /// `[site index][rank][value]` pre-quantization partials
+    samples: Vec<Vec<Vec<f32>>>,
+}
+
+impl Calibration {
+    /// Sample length used for a hidden size of `d_model` (multiple of
+    /// `d_model` when `d_model <= TARGET`, else a block-aligned cut).
+    pub fn sample_len(d_model: usize) -> usize {
+        let len = if d_model == 0 || d_model > TARGET_SAMPLE_VALUES {
+            TARGET_SAMPLE_VALUES
+        } else {
+            d_model * (TARGET_SAMPLE_VALUES / d_model).max(1)
+        };
+        // clamp to a multiple of the largest MX block
+        (len / 32).max(1) * 32
+    }
+
+    /// Deterministic activation-shaped calibration set (no artifacts
+    /// required). `seed` pins the sample; equal seeds give bit-equal
+    /// calibrations.
+    pub fn synthetic(n_layers: usize, d_model: usize, world: usize, seed: u64) -> Calibration {
+        let len = Self::sample_len(d_model);
+        let world = world.max(1);
+        let mut samples = Vec::with_capacity(Site::count(n_layers));
+        for site in Site::all(n_layers) {
+            // heavier tails on MLP outputs, growing with depth: the
+            // sites the paper leaves uncompressed are the ones whose
+            // outliers make low-bit blocks expensive
+            let base = match site.kind {
+                SiteKind::AttnOut => 1.4f32,
+                SiteKind::MlpOut => 2.2f32,
+            };
+            let depth = 1.0 + 0.8 * site.layer as f32 / n_layers.max(1) as f32;
+            let spread = base * depth;
+            let mut per_rank = Vec::with_capacity(world);
+            for rank in 0..world {
+                let mut rng = Rng::new(
+                    seed ^ (site.index() as u64).wrapping_mul(0x9E37_79B9)
+                        ^ (rank as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+                );
+                let mut v = vec![0.0f32; len];
+                rng.fill_activations(&mut v, spread);
+                per_rank.push(v);
+            }
+            samples.push(per_rank);
+        }
+        Calibration { n_layers, d_model, world, samples }
+    }
+
+    /// Build from captured per-site samples (`[site][rank][value]`,
+    /// indexed by [`Site::index`]). Decode sites the capture pass never
+    /// reached fall back to their prefill twin's sample.
+    pub fn from_samples(
+        n_layers: usize,
+        d_model: usize,
+        mut samples: Vec<Vec<Vec<f32>>>,
+    ) -> anyhow::Result<Calibration> {
+        anyhow::ensure!(
+            samples.len() == Site::count(n_layers),
+            "capture has {} site slots, want {}",
+            samples.len(),
+            Site::count(n_layers)
+        );
+        for site in Site::all(n_layers) {
+            if samples[site.index()].is_empty() && site.phase == Phase::Decode {
+                let twin = Site { phase: Phase::Prefill, ..site };
+                samples[site.index()] = samples[twin.index()].clone();
+            }
+            anyhow::ensure!(
+                !samples[site.index()].is_empty(),
+                "calibration pass never reached site {}",
+                site.label()
+            );
+        }
+        let world = samples[0].len();
+        Ok(Calibration { n_layers, d_model, world, samples })
+    }
+
+    /// The per-rank samples captured for `site`.
+    pub fn sample(&self, site: Site) -> &[Vec<f32>] {
+        &self.samples[site.index()]
+    }
+
+    /// Relative RMS error of the compressed reduce at `site`:
+    /// `||Q-reduce - exact-reduce|| / ||exact-reduce||`. `None` (the
+    /// uncompressed path) is exact by definition.
+    pub fn site_error(&self, site: Site, comp: Option<&dyn Compressor>) -> f64 {
+        let Some(c) = comp else { return 0.0 };
+        let ranks = &self.samples[site.index()];
+        let len = ranks[0].len();
+        let mut exact = vec![0.0f32; len];
+        for r in ranks {
+            for (e, v) in exact.iter_mut().zip(r) {
+                *e += v;
+            }
+        }
+        let mut acc = vec![0.0f32; len];
+        let mut scratch = Vec::new();
+        for r in ranks {
+            c.requant_add(r, &mut acc, &mut scratch);
+        }
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..len {
+            num += ((acc[i] - exact[i]) as f64).powi(2);
+            den += (exact[i] as f64).powi(2);
+        }
+        if den <= 0.0 {
+            return 0.0;
+        }
+        (num / den).sqrt()
+    }
+
+    /// [`Calibration::site_error`] for a spec string (builds the
+    /// compressor with this calibration's channel count).
+    pub fn scheme_error(&self, site: Site, spec: &str) -> anyhow::Result<f64> {
+        if spec == "none" {
+            return Ok(0.0);
+        }
+        let c = compressor_from_spec_ch(spec, self.d_model)?;
+        Ok(self.site_error(site, Some(c.as_ref())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxfmt::{MxCodec, MxScheme, NoCompress};
+
+    #[test]
+    fn sample_len_is_aligned() {
+        for d in [0usize, 64, 192, 256, 1024, 4096, 8192] {
+            let len = Calibration::sample_len(d);
+            assert_eq!(len % 32, 0, "d={d}");
+            assert!(len >= 32 && len <= 2 * TARGET_SAMPLE_VALUES, "d={d} len={len}");
+            if d > 0 && d <= TARGET_SAMPLE_VALUES {
+                assert_eq!(len % d, 0, "d={d} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Calibration::synthetic(2, 192, 2, 7);
+        let b = Calibration::synthetic(2, 192, 2, 7);
+        for site in Site::all(2) {
+            assert_eq!(a.sample(site), b.sample(site));
+        }
+    }
+
+    #[test]
+    fn errors_sane() {
+        let calib = Calibration::synthetic(2, 192, 2, 3);
+        let mx = MxCodec::new(MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap());
+        for site in Site::all(2) {
+            assert_eq!(calib.site_error(site, None), 0.0);
+            let e = calib.site_error(site, Some(&mx));
+            assert!(e.is_finite() && e >= 0.0, "{}: {e}", site.label());
+            // NoCompress is lossless: error must be exactly zero
+            assert_eq!(calib.site_error(site, Some(&NoCompress)), 0.0);
+            assert_eq!(calib.scheme_error(site, "none").unwrap(), 0.0);
+        }
+        assert!(calib.scheme_error(Site::all(2)[0], "bogus").is_err());
+    }
+
+    #[test]
+    fn decode_fallback_in_from_samples() {
+        let n_layers = 1;
+        let mut samples = vec![Vec::new(); Site::count(n_layers)];
+        for site in Site::all(n_layers) {
+            if site.phase == Phase::Prefill {
+                samples[site.index()] = vec![vec![1.0f32; 64]; 2];
+            }
+        }
+        let c = Calibration::from_samples(n_layers, 64, samples).unwrap();
+        for site in Site::all(n_layers) {
+            assert_eq!(c.sample(site).len(), 2);
+        }
+        // all-empty slot errors out
+        let empty = vec![Vec::new(); Site::count(1)];
+        assert!(Calibration::from_samples(1, 64, empty).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-site compression policy engine ("selected activations").
+//!
+//! The paper's headline TTFT wins come from compressing *selected*
+//! activations, not every tensor: §5.1 searches a scheme per model, and
+//! the follow-up literature (Dong et al., Lamprecht et al.) shows the
+//! quality–latency frontier lives in per-layer / per-site selectivity.
+//! This module generalises the engine's single global [`crate::mxfmt::Compressor`]
+//! to a mapping from each collective **site** — layer index ×
+//! {attention-out, mlp-out} × phase {prefill, decode} — to a compressor
+//! spec:
+//!
+//! * [`Site`] / [`SiteKind`] / [`Phase`] — the coordinates of one
+//!   row-parallel collective in the forward pass.
+//! * [`CompressionPolicy`] — rule-based policy with a compact CLI spec
+//!   string (`mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none`) and a
+//!   JSON serialisation for the server; resolves to a [`PolicyTable`].
+//! * [`PolicyTable`] — the fully resolved per-site assignment the
+//!   engine binds (one spec string per site).
+//! * [`Calibration`] — per-site activation samples (synthetic, or
+//!   captured from a calibration forward pass) and the per-scheme
+//!   reconstruction error measured on them.
+//! * [`SiteCosts`] / [`auto_search`] / [`paper_policy`] — the built-in
+//!   `paper` (§5.1 selection rule applied per-site) and `auto` (greedy
+//!   sensitivity search under an error budget) policies.
+//!
+//! Seed equivalence: `uniform:<spec>` resolves every site to `<spec>`,
+//! which the engine binds to exactly the same compressor object and
+//! collective plan the seed's global path used — bit-identical output,
+//! pinned by `tests/property_policy.rs`.
+
+pub mod auto;
+pub mod calibration;
+pub mod spec;
+
+pub use auto::{
+    auto_search, paper_policy, AutoOutcome, SearchScenario, SiteCosts, TableScore, CANDIDATES,
+    DEFAULT_AUTO_BUDGET_PCT, PAPER_ERR_BUDGET_PCT,
+};
+pub use calibration::Calibration;
+pub use spec::{CompressionPolicy, PolicyTable, Selector};
+
+/// Which row-parallel collective inside a transformer layer a site
+/// refers to (each layer performs one after attention and one after
+/// the MLP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SiteKind {
+    /// the collective after the attention block's row-parallel `wo`
+    AttnOut,
+    /// the collective after the MLP's row-parallel `w_down`
+    MlpOut,
+}
+
+impl SiteKind {
+    /// Both kinds, in site-index order.
+    pub const ALL: [SiteKind; 2] = [SiteKind::AttnOut, SiteKind::MlpOut];
+
+    /// Spec-string atom (`attn` / `mlp`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SiteKind::AttnOut => "attn",
+            SiteKind::MlpOut => "mlp",
+        }
+    }
+
+    fn ord(&self) -> usize {
+        match self {
+            SiteKind::AttnOut => 0,
+            SiteKind::MlpOut => 1,
+        }
+    }
+}
+
+/// Which serving phase the collective runs in. Decode messages are two
+/// to three orders of magnitude smaller than prefill messages, so the
+/// profitable scheme differs per phase (often: compress prefill, leave
+/// α-bound decode traffic uncompressed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    /// Both phases, in site-index order.
+    pub const ALL: [Phase; 2] = [Phase::Prefill, Phase::Decode];
+
+    /// Spec-string atom (`prefill` / `decode`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    fn ord(&self) -> usize {
+        match self {
+            Phase::Prefill => 0,
+            Phase::Decode => 1,
+        }
+    }
+}
+
+/// One collective site: the (layer, kind, phase) coordinate every
+/// policy maps to a compressor spec.
+///
+/// ```
+/// use tpcc::policy::{Phase, Site, SiteKind};
+/// let s = Site { layer: 3, kind: SiteKind::MlpOut, phase: Phase::Decode };
+/// assert_eq!(s.label(), "l3.mlp.decode");
+/// assert_eq!(Site::all(2).len(), Site::count(2));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Site {
+    pub layer: usize,
+    pub kind: SiteKind,
+    pub phase: Phase,
+}
+
+impl Site {
+    /// Dense index into per-site tables: sites of one layer are
+    /// adjacent, ordered (attn, mlp) × (prefill, decode).
+    pub fn index(&self) -> usize {
+        (self.layer * 2 + self.kind.ord()) * 2 + self.phase.ord()
+    }
+
+    /// Number of sites an `n_layers` model has (4 per layer).
+    pub fn count(n_layers: usize) -> usize {
+        n_layers * 4
+    }
+
+    /// Every site of an `n_layers` model, in [`Site::index`] order.
+    pub fn all(n_layers: usize) -> Vec<Site> {
+        let mut out = Vec::with_capacity(Self::count(n_layers));
+        for layer in 0..n_layers {
+            for kind in SiteKind::ALL {
+                for phase in Phase::ALL {
+                    out.push(Site { layer, kind, phase });
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable label (`l<layer>.<kind>.<phase>`), used by the
+    /// JSON serialisation and telemetry.
+    pub fn label(&self) -> String {
+        format!("l{}.{}.{}", self.layer, self.kind.name(), self.phase.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_index_is_dense_and_ordered() {
+        for n_layers in [1usize, 2, 5, 32] {
+            let all = Site::all(n_layers);
+            assert_eq!(all.len(), Site::count(n_layers));
+            for (i, s) in all.iter().enumerate() {
+                assert_eq!(s.index(), i, "{}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let all = Site::all(3);
+        let mut labels: Vec<String> = all.iter().map(Site::label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), Site::count(3));
+    }
+}

@@ -1,0 +1,482 @@
+//! Policy spec parsing, serialisation and the resolved per-site table.
+//!
+//! Grammar of the compact CLI spec (clauses separated by `;`, later
+//! clauses override earlier ones — last match wins):
+//!
+//! ```text
+//! policy   := clause (';' clause)*
+//! clause   := selector '=' scheme
+//! selector := 'default' | 'all' | '*' | atom ('.' atom)*
+//! atom     := 'attn' | 'mlp' | 'prefill' | 'decode' | 'layers[' ranges ']'
+//! ranges   := range (',' range)*      range := INT | INT '-' INT
+//! scheme   := any compressor spec ('none', 'fp4_e2m1_b32_e8m0',
+//!             'int4_channelwise', 'topk3', ...)
+//! ```
+//!
+//! `default=` sets the base scheme for unmatched sites (position
+//! independent); `all=`/`*=` is an ordinary match-everything *rule*, so
+//! placed last it overrides every earlier clause like any other rule.
+//!
+//! `uniform:<scheme>` and a bare compressor spec are shorthands for a
+//! policy with no rules (every site gets `<scheme>` — the seed path).
+
+use crate::util::json::{self, Json};
+
+use super::{Phase, Site, SiteKind};
+
+/// Validate a compressor spec string without binding it to a tensor
+/// shape (`none` is the engine's uncompressed path; everything else
+/// must parse as a [`crate::mxfmt::Compressor`] spec).
+pub fn validate_spec(spec: &str) -> anyhow::Result<()> {
+    if spec == "none" {
+        return Ok(());
+    }
+    // the channel count only affects scale granularity, not validity
+    crate::mxfmt::compressor_from_spec_ch(spec, 64).map(|_| ())
+}
+
+/// A predicate over [`Site`]s: unset dimensions match everything.
+///
+/// ```
+/// use tpcc::policy::{Phase, Selector, Site, SiteKind};
+/// let sel = Selector::parse("layers[0-1,7].mlp").unwrap();
+/// let hit = Site { layer: 7, kind: SiteKind::MlpOut, phase: Phase::Decode };
+/// let miss = Site { layer: 7, kind: SiteKind::AttnOut, phase: Phase::Decode };
+/// assert!(sel.matches(hit) && !sel.matches(miss));
+/// ```
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Selector {
+    /// match only this collective kind (attn / mlp)
+    pub kind: Option<SiteKind>,
+    /// match only this serving phase (prefill / decode)
+    pub phase: Option<Phase>,
+    /// match only these layers (inclusive ranges)
+    pub layers: Option<Vec<(usize, usize)>>,
+}
+
+impl Selector {
+    /// Parse a `.`-joined atom list (see the module grammar).
+    pub fn parse(s: &str) -> anyhow::Result<Selector> {
+        let mut sel = Selector::default();
+        for atom in s.split('.') {
+            match atom {
+                "attn" => set_once(&mut sel.kind, SiteKind::AttnOut, atom)?,
+                "mlp" => set_once(&mut sel.kind, SiteKind::MlpOut, atom)?,
+                "prefill" => set_once(&mut sel.phase, Phase::Prefill, atom)?,
+                "decode" => set_once(&mut sel.phase, Phase::Decode, atom)?,
+                a if a.starts_with("layers[") && a.ends_with(']') => {
+                    let body = &a["layers[".len()..a.len() - 1];
+                    let mut ranges = Vec::new();
+                    for part in body.split(',') {
+                        let part = part.trim();
+                        anyhow::ensure!(!part.is_empty(), "empty layer range in {s:?}");
+                        let (lo, hi) = match part.split_once('-') {
+                            Some((a, b)) => (a.trim().parse()?, b.trim().parse()?),
+                            None => {
+                                let v: usize = part.parse()?;
+                                (v, v)
+                            }
+                        };
+                        anyhow::ensure!(lo <= hi, "inverted layer range {part:?} in {s:?}");
+                        ranges.push((lo, hi));
+                    }
+                    anyhow::ensure!(
+                        sel.layers.replace(ranges).is_none(),
+                        "duplicate layers[..] atom in {s:?}"
+                    );
+                }
+                _ => anyhow::bail!(
+                    "unknown selector atom {atom:?} (want attn|mlp|prefill|decode|layers[..])"
+                ),
+            }
+        }
+        Ok(sel)
+    }
+
+    /// Does this selector match `site`?
+    pub fn matches(&self, site: Site) -> bool {
+        if self.kind.is_some_and(|k| k != site.kind) {
+            return false;
+        }
+        if self.phase.is_some_and(|p| p != site.phase) {
+            return false;
+        }
+        if let Some(ranges) = &self.layers {
+            return ranges.iter().any(|&(lo, hi)| lo <= site.layer && site.layer <= hi);
+        }
+        true
+    }
+
+    /// Canonical spec-string form (inverse of [`Selector::parse`]).
+    pub fn to_spec_string(&self) -> String {
+        let mut atoms = Vec::new();
+        if let Some(ranges) = &self.layers {
+            let body: Vec<String> = ranges
+                .iter()
+                .map(|&(lo, hi)| if lo == hi { lo.to_string() } else { format!("{lo}-{hi}") })
+                .collect();
+            atoms.push(format!("layers[{}]", body.join(",")));
+        }
+        if let Some(k) = self.kind {
+            atoms.push(k.name().to_string());
+        }
+        if let Some(p) = self.phase {
+            atoms.push(p.name().to_string());
+        }
+        if atoms.is_empty() {
+            "all".to_string()
+        } else {
+            atoms.join(".")
+        }
+    }
+}
+
+fn set_once<T>(slot: &mut Option<T>, value: T, atom: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(slot.replace(value).is_none(), "conflicting selector atom {atom:?}");
+    Ok(())
+}
+
+/// A rule-based per-site compression policy: an ordered list of
+/// `(selector, scheme)` rules over a default scheme. Resolution is
+/// last-match-wins; sites no rule matches get the default.
+///
+/// ```
+/// use tpcc::policy::{CompressionPolicy, Phase, Site, SiteKind};
+/// let p = CompressionPolicy::parse("mlp=fp4_e2m1_b32_e8m0;layers[0]=none").unwrap();
+/// let t = p.table(2);
+/// let mlp1 = Site { layer: 1, kind: SiteKind::MlpOut, phase: Phase::Prefill };
+/// let mlp0 = Site { layer: 0, kind: SiteKind::MlpOut, phase: Phase::Prefill };
+/// let attn1 = Site { layer: 1, kind: SiteKind::AttnOut, phase: Phase::Prefill };
+/// assert_eq!(t.spec(mlp1), "fp4_e2m1_b32_e8m0");
+/// assert_eq!(t.spec(mlp0), "none"); // layers[0] rule came later: it wins
+/// assert_eq!(t.spec(attn1), "none"); // default
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompressionPolicy {
+    /// scheme for sites no rule matches
+    pub default_spec: String,
+    /// ordered rules; the last matching rule wins
+    pub rules: Vec<(Selector, String)>,
+}
+
+impl CompressionPolicy {
+    /// The seed-equivalent policy: every site gets `spec`.
+    pub fn uniform(spec: &str) -> CompressionPolicy {
+        CompressionPolicy { default_spec: spec.to_string(), rules: Vec::new() }
+    }
+
+    /// Parse a policy spec with `"none"` as the base default.
+    /// See [`CompressionPolicy::parse_with_default`].
+    pub fn parse(s: &str) -> anyhow::Result<CompressionPolicy> {
+        Self::parse_with_default(s, "none")
+    }
+
+    /// Parse a policy spec string. `base_default` seeds the default
+    /// scheme (the engine passes its `--compress` spec, so a partial
+    /// policy like `attn=none` leaves the remaining sites on the
+    /// engine-wide scheme); an explicit `default=` clause overrides it,
+    /// while `all=`/`*=` adds a match-everything *rule* (position
+    /// dependent, like any other clause).
+    ///
+    /// Accepted forms: `uniform:<scheme>`, a bare compressor spec, or
+    /// the `;`-separated clause grammar (module docs).
+    pub fn parse_with_default(s: &str, base_default: &str) -> anyhow::Result<CompressionPolicy> {
+        let s = s.trim();
+        if let Some(spec) = s.strip_prefix("uniform:") {
+            validate_spec(spec)?;
+            return Ok(Self::uniform(spec));
+        }
+        if !s.contains('=') {
+            anyhow::ensure!(!s.is_empty(), "empty policy spec");
+            validate_spec(s)
+                .map_err(|e| anyhow::anyhow!("policy spec {s:?} is not a compressor spec: {e}"))?;
+            return Ok(Self::uniform(s));
+        }
+        let mut default_spec = base_default.to_string();
+        let mut rules = Vec::new();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (sel, scheme) = clause
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("policy clause {clause:?} missing '='"))?;
+            let (sel, scheme) = (sel.trim(), scheme.trim());
+            validate_spec(scheme)?;
+            match sel {
+                "default" => default_spec = scheme.to_string(),
+                // a match-everything rule: position in the clause list
+                // matters (last match wins), unlike `default=`
+                "all" | "*" => rules.push((Selector::default(), scheme.to_string())),
+                _ => rules.push((Selector::parse(sel)?, scheme.to_string())),
+            }
+        }
+        Ok(CompressionPolicy { default_spec, rules })
+    }
+
+    /// Resolve one site (last matching rule wins, else the default).
+    pub fn resolve(&self, site: Site) -> &str {
+        self.rules
+            .iter()
+            .rev()
+            .find(|(sel, _)| sel.matches(site))
+            .map(|(_, spec)| spec.as_str())
+            .unwrap_or(&self.default_spec)
+    }
+
+    /// Fully resolve the policy for an `n_layers` model.
+    pub fn table(&self, n_layers: usize) -> PolicyTable {
+        let specs = Site::all(n_layers).into_iter().map(|s| self.resolve(s).to_string()).collect();
+        PolicyTable { name: self.to_spec_string(), n_layers, specs }
+    }
+
+    /// Canonical compact spec string (parses back to an equivalent
+    /// policy).
+    pub fn to_spec_string(&self) -> String {
+        if self.rules.is_empty() {
+            return format!("uniform:{}", self.default_spec);
+        }
+        let mut out = vec![format!("default={}", self.default_spec)];
+        for (sel, spec) in &self.rules {
+            out.push(format!("{}={}", sel.to_spec_string(), spec));
+        }
+        out.join(";")
+    }
+}
+
+/// A fully resolved per-site scheme assignment — what the engine binds.
+/// Built from a [`CompressionPolicy`], or directly by the `paper` /
+/// `auto` searches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyTable {
+    /// provenance label (`uniform:<spec>`, `paper`, `auto`, or the
+    /// canonical rule string)
+    pub name: String,
+    /// layer count of the model this table resolves
+    pub n_layers: usize,
+    /// per-site spec, indexed by [`Site::index`]
+    specs: Vec<String>,
+}
+
+impl PolicyTable {
+    /// Every site on one scheme (the seed-equivalent table).
+    pub fn uniform(n_layers: usize, spec: &str) -> PolicyTable {
+        PolicyTable {
+            name: format!("uniform:{spec}"),
+            n_layers,
+            specs: vec![spec.to_string(); Site::count(n_layers)],
+        }
+    }
+
+    /// Build from an explicit per-site assignment (callers: the
+    /// `paper`/`auto` searches). `specs` must have one entry per
+    /// [`Site::index`] of an `n_layers` model.
+    pub fn from_specs(name: &str, n_layers: usize, specs: Vec<String>) -> anyhow::Result<PolicyTable> {
+        anyhow::ensure!(
+            specs.len() == Site::count(n_layers),
+            "policy table wants {} specs, got {}",
+            Site::count(n_layers),
+            specs.len()
+        );
+        Ok(PolicyTable { name: name.to_string(), n_layers, specs })
+    }
+
+    /// The scheme bound at `site`.
+    pub fn spec(&self, site: Site) -> &str {
+        &self.specs[site.index()]
+    }
+
+    /// Reassign one site.
+    pub fn set(&mut self, site: Site, spec: &str) {
+        self.specs[site.index()] = spec.to_string();
+    }
+
+    /// Sorted, deduplicated list of schemes the table uses.
+    pub fn distinct(&self) -> Vec<String> {
+        let mut d = self.specs.clone();
+        d.sort();
+        d.dedup();
+        d
+    }
+
+    /// `Some(spec)` when every site is on the same scheme.
+    pub fn is_uniform(&self) -> Option<&str> {
+        let first = self.specs.first()?;
+        self.specs.iter().all(|s| s == first).then_some(first.as_str())
+    }
+
+    /// Scheme histogram: `(spec, site count)` sorted by count, then
+    /// name (deterministic) — the table summaries in `tpcc table6`.
+    pub fn histogram(&self) -> Vec<(String, usize)> {
+        let mut h: Vec<(String, usize)> = Vec::new();
+        for spec in self.distinct() {
+            let n = self.specs.iter().filter(|s| **s == spec).count();
+            h.push((spec, n));
+        }
+        h.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        h
+    }
+
+    /// One-line description for telemetry and table rows.
+    pub fn summary(&self) -> String {
+        match self.is_uniform() {
+            Some(spec) => format!("uniform:{spec}"),
+            None => {
+                let parts: Vec<String> = self
+                    .histogram()
+                    .into_iter()
+                    .map(|(spec, n)| format!("{spec}:{n}"))
+                    .collect();
+                format!("{}{{{}}}", self.name, parts.join(","))
+            }
+        }
+    }
+
+    /// JSON serialisation served by the coordinator's `GET /policy`.
+    pub fn to_json(&self) -> Json {
+        let mut sites = std::collections::BTreeMap::new();
+        for site in Site::all(self.n_layers) {
+            sites.insert(site.label(), json::s(self.spec(site)));
+        }
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("n_layers", json::num(self.n_layers as f64)),
+            ("distinct", json::arr(self.distinct().iter().map(|s| json::s(s)).collect())),
+            ("sites", Json::Obj(sites)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(layer: usize, kind: SiteKind, phase: Phase) -> Site {
+        Site { layer, kind, phase }
+    }
+
+    #[test]
+    fn parse_issue_example() {
+        // the spec shape from the issue, with real scheme names
+        let p = CompressionPolicy::parse(
+            "mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0,3]=none;decode=none",
+        )
+        .unwrap();
+        let t = p.table(4);
+        assert_eq!(t.spec(site(1, SiteKind::MlpOut, Phase::Prefill)), "fp4_e2m1_b32_e8m0");
+        assert_eq!(t.spec(site(1, SiteKind::AttnOut, Phase::Prefill)), "none");
+        // first/last layer exempt, decode exempt
+        assert_eq!(t.spec(site(0, SiteKind::MlpOut, Phase::Prefill)), "none");
+        assert_eq!(t.spec(site(3, SiteKind::MlpOut, Phase::Prefill)), "none");
+        assert_eq!(t.spec(site(1, SiteKind::MlpOut, Phase::Decode)), "none");
+    }
+
+    #[test]
+    fn last_match_wins_and_default_applies() {
+        let p = CompressionPolicy::parse(
+            "default=fp5_e2m2_b32_e8m0;mlp=fp4_e2m1_b32_e8m0;mlp.decode=none",
+        )
+        .unwrap();
+        let t = p.table(2);
+        assert_eq!(t.spec(site(0, SiteKind::MlpOut, Phase::Prefill)), "fp4_e2m1_b32_e8m0");
+        assert_eq!(t.spec(site(0, SiteKind::MlpOut, Phase::Decode)), "none");
+        assert_eq!(t.spec(site(0, SiteKind::AttnOut, Phase::Decode)), "fp5_e2m2_b32_e8m0");
+    }
+
+    #[test]
+    fn all_clause_is_a_last_match_wins_rule() {
+        // `all=` placed last overrides every earlier rule ...
+        let p = CompressionPolicy::parse("mlp=fp4_e2m1_b32_e8m0;all=none").unwrap();
+        let t = p.table(2);
+        assert_eq!(t.is_uniform(), Some("none"));
+        // ... and placed first it is overridden by later rules
+        let p = CompressionPolicy::parse("*=none;mlp=fp4_e2m1_b32_e8m0").unwrap();
+        let t = p.table(2);
+        assert_eq!(t.spec(site(0, SiteKind::MlpOut, Phase::Prefill)), "fp4_e2m1_b32_e8m0");
+        assert_eq!(t.spec(site(0, SiteKind::AttnOut, Phase::Prefill)), "none");
+        // a manually built empty selector serialises to `all=` and
+        // round-trips as the same match-everything rule
+        let manual = CompressionPolicy {
+            default_spec: "none".into(),
+            rules: vec![
+                (Selector { kind: Some(SiteKind::MlpOut), ..Default::default() }, "fp16".into()),
+                (Selector::default(), "none".into()),
+            ],
+        };
+        let re = CompressionPolicy::parse(&manual.to_spec_string()).unwrap();
+        assert_eq!(manual.table(3), re.table(3));
+        assert_eq!(re.table(3).is_uniform(), Some("none"));
+    }
+
+    #[test]
+    fn uniform_forms() {
+        for s in ["uniform:fp4_e2m1_b32_e8m0", "fp4_e2m1_b32_e8m0"] {
+            let p = CompressionPolicy::parse(s).unwrap();
+            let t = p.table(3);
+            assert_eq!(t.is_uniform(), Some("fp4_e2m1_b32_e8m0"));
+        }
+        assert_eq!(
+            CompressionPolicy::parse("uniform:none").unwrap().table(2).is_uniform(),
+            Some("none")
+        );
+    }
+
+    #[test]
+    fn parse_with_engine_default() {
+        let p = CompressionPolicy::parse_with_default("attn=none", "fp4_e2m1_b32_e8m0").unwrap();
+        let t = p.table(2);
+        assert_eq!(t.spec(site(0, SiteKind::AttnOut, Phase::Prefill)), "none");
+        assert_eq!(t.spec(site(0, SiteKind::MlpOut, Phase::Prefill)), "fp4_e2m1_b32_e8m0");
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        for s in [
+            "uniform:none",
+            "uniform:fp4_e2m1_b32_e8m0",
+            "mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1,3]=none;decode=none",
+            "default=fp5_e2m2_b16_e8m0;layers[2].mlp.prefill=int4_channelwise",
+        ] {
+            let p = CompressionPolicy::parse(s).unwrap();
+            let p2 = CompressionPolicy::parse(&p.to_spec_string()).unwrap();
+            assert_eq!(p.to_spec_string(), p2.to_spec_string());
+            for n_layers in [1usize, 4, 9] {
+                assert_eq!(p.table(n_layers), p2.table(n_layers));
+            }
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(CompressionPolicy::parse("").is_err());
+        assert!(CompressionPolicy::parse("bogus_scheme").is_err());
+        assert!(CompressionPolicy::parse("mlp=bogus_scheme").is_err());
+        assert!(CompressionPolicy::parse("sideways=none").is_err());
+        assert!(Selector::parse("layers[3-1]").is_err());
+        assert!(Selector::parse("attn.mlp").is_err());
+        assert!(Selector::parse("layers[]").is_err());
+    }
+
+    #[test]
+    fn histogram_and_summary() {
+        let p = CompressionPolicy::parse("mlp=fp4_e2m1_b32_e8m0").unwrap();
+        let t = p.table(2);
+        let h = t.histogram();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].1 + h[1].1, Site::count(2));
+        assert!(t.summary().contains("fp4_e2m1_b32_e8m0"));
+        assert!(t.is_uniform().is_none());
+    }
+
+    #[test]
+    fn json_shape() {
+        let t = PolicyTable::uniform(2, "none");
+        let j = t.to_json();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("uniform:none"));
+        assert_eq!(j.get("n_layers").and_then(|v| v.as_i64()), Some(2));
+        let sites = j.get("sites").unwrap().as_obj().unwrap();
+        assert_eq!(sites.len(), Site::count(2));
+        assert_eq!(sites.get("l0.attn.prefill").and_then(|v| v.as_str()), Some("none"));
+    }
+}

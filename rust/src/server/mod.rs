@@ -4,6 +4,7 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": "...", "max_tokens": 32, "greedy": true}
 //!   GET  /metrics   -> JSON snapshot of the registry
+//!   GET  /policy    -> JSON of the engine's per-site compression policy
 //!   GET  /healthz
 
 use std::io::{BufRead, BufReader, Read, Write};
@@ -124,6 +125,7 @@ fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Resu
             let body = handle.metrics.to_json().to_string();
             respond(&mut stream, 200, &body)
         }
+        ("GET", "/policy") => respond(&mut stream, 200, &handle.policy_json),
         ("POST", "/generate") => {
             let parsed = std::str::from_utf8(&req.body)
                 .ok()

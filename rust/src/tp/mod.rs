@@ -8,6 +8,13 @@
 //! (they would run concurrently), and communication advances it by the
 //! interconnect model + the measured (or analytic) codec overhead.
 //! DESIGN.md "Known deviations" discusses fidelity.
+//!
+//! Compression is resolved **per site** ([`crate::policy`]): each
+//! collective's (layer, kind, phase) coordinate maps through the bound
+//! [`PolicyTable`] to a compressor, with per-site plan-cache keys and
+//! per-site byte/call telemetry. `--compress <spec>` binds the
+//! seed-equivalent `uniform:<spec>` table, so the single-compressor
+//! path stays bit-identical (pinned by `tests/property_policy.rs`).
 
 pub mod kv;
 
@@ -19,7 +26,11 @@ use crate::interconnect::{HwProfile, LinkModel, VirtualClock};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
 use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+use crate::policy::{
+    self, Calibration, CompressionPolicy, Phase, PolicyTable, SearchScenario, Site, SiteKind,
+};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::util::json::Json;
 
 pub use kv::BatchKv;
 
@@ -37,8 +48,16 @@ pub struct EngineOptions {
     pub model: String,
     pub tp: usize,
     /// compressor spec (`none`, `fp4_e2m1_b32_e8m0`, `int4_channelwise`,
-    /// `topk3`, ...) applied to every row-parallel collective
+    /// `topk3`, ...). Without a `policy`, it applies uniformly to every
+    /// row-parallel collective (the seed behaviour); with a partial
+    /// rule policy it is the default scheme for unmatched sites.
     pub compress: String,
+    /// per-site policy spec: empty (= `uniform` of `compress`),
+    /// `uniform:<spec>`, `paper`, `auto[:budget_pct]`,
+    /// `auto-live[:budget_pct]`, or a rule string
+    /// (`mlp=fp4_e2m1_b32_e8m0;attn=none;decode=none`, see
+    /// [`crate::policy::spec`])
+    pub policy: String,
     /// collective algorithm knob: `auto` (planner decides per message
     /// shape) or a fixed [`crate::collective::AlgoKind`] name
     pub algo: String,
@@ -58,6 +77,7 @@ impl EngineOptions {
             model: model.to_string(),
             tp,
             compress: "none".into(),
+            policy: String::new(),
             algo: "auto".into(),
             overhead: OverheadModel::Measured,
             profile: HwProfile::by_name("cpu").unwrap(),
@@ -67,6 +87,12 @@ impl EngineOptions {
 
     pub fn with_compress(mut self, spec: &str) -> Self {
         self.compress = spec.to_string();
+        self
+    }
+
+    /// Set the per-site policy spec (see [`EngineOptions::policy`]).
+    pub fn with_policy(mut self, policy: &str) -> Self {
+        self.policy = policy.to_string();
         self
     }
 
@@ -122,17 +148,43 @@ impl StepTiming {
     }
 }
 
+/// Per-site collective telemetry (one slot per [`Site::index`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SiteStat {
+    pub calls: u64,
+    pub wire_bytes: u64,
+    pub raw_bytes: u64,
+}
+
 pub struct TpEngine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
     pub opts: EngineOptions,
-    comp: Option<Box<dyn Compressor>>,
+    /// the bound per-site policy (what `opts.policy` resolved to)
+    policy: PolicyTable,
+    /// distinct specs the policy uses; compressors parallel to it
+    policy_specs: Vec<String>,
+    policy_comps: Vec<Option<Box<dyn Compressor>>>,
+    /// site index -> index into `policy_specs`/`policy_comps`
+    site_spec: Vec<u16>,
+    /// per-site byte/call counters (feeds `/metrics` rollups)
+    site_stats: Vec<SiteStat>,
+    /// incremental (kind × phase) rollups, indexed [kind.ord][phase.ord]
+    /// — kept in step with `site_stats` so `policy_metrics` never scans
+    /// the site grid on the serving path
+    group_stats: [[SiteStat; 2]; 2],
+    /// collective calls per bound scheme (parallel to `policy_specs`)
+    scheme_calls: Vec<u64>,
+    /// when set, `communicate` records each site's first pre-quantization
+    /// partials here (the calibration forward pass)
+    calib_capture: Option<Vec<Vec<Vec<f32>>>>,
     /// parsed `opts.algo` (planner constraint)
     algo_choice: AlgoChoice,
-    /// per-engine plan memo keyed on (message len, profile identity) —
-    /// keeps the hot path free of the planner's global cache lock and
-    /// key allocations; cleared when the compressor or algo knob changes
-    plan_cache: BTreeMap<(usize, usize), CollectivePlan>,
+    /// per-engine plan memo keyed on (message len, profile identity,
+    /// site scheme) — keeps the hot path free of the planner's global
+    /// cache lock and key allocations; cleared when the policy or algo
+    /// knob changes
+    plan_cache: BTreeMap<(usize, usize, usize), CollectivePlan>,
     /// collective invocations per algorithm name (feeds `/metrics`)
     pub algo_calls: BTreeMap<&'static str, u64>,
     /// per-rank weight literals, keyed like the python param dict
@@ -146,11 +198,6 @@ pub struct TpEngine {
 impl TpEngine {
     pub fn new(rt: Runtime, weights: &Weights, opts: EngineOptions) -> anyhow::Result<TpEngine> {
         let cfg = ModelConfig::from_manifest(&opts.model, &rt.manifest.raw)?;
-        let comp: Option<Box<dyn Compressor>> = if opts.compress == "none" {
-            None
-        } else {
-            Some(compressor_from_spec_ch(&opts.compress, cfg.d_model)?)
-        };
         let algo_choice = AlgoChoice::parse(&opts.algo)?;
         let mut wlits = Vec::with_capacity(opts.tp);
         for rank in 0..opts.tp {
@@ -161,11 +208,19 @@ impl TpEngine {
             }
             wlits.push(lits);
         }
-        Ok(TpEngine {
+        let n_sites = Site::count(cfg.n_layers);
+        let mut eng = TpEngine {
             rt,
             cfg,
             opts,
-            comp,
+            policy: PolicyTable::uniform(0, "none"),
+            policy_specs: vec!["none".into()],
+            policy_comps: vec![None],
+            site_spec: vec![0; n_sites],
+            site_stats: vec![SiteStat::default(); n_sites],
+            group_stats: [[SiteStat::default(); 2]; 2],
+            scheme_calls: vec![0],
+            calib_capture: None,
             algo_choice,
             plan_cache: BTreeMap::new(),
             algo_calls: BTreeMap::new(),
@@ -173,7 +228,10 @@ impl TpEngine {
             clock: VirtualClock::default(),
             reduce_buf: Vec::new(),
             wire_buf: Vec::new(),
-        })
+        };
+        let policy = eng.opts.policy.clone();
+        eng.set_policy(&policy)?;
+        Ok(eng)
     }
 
     pub fn link(&self) -> &LinkModel {
@@ -191,6 +249,208 @@ impl TpEngine {
         self.opts.algo = algo.to_string();
         self.plan_cache.clear();
         Ok(())
+    }
+
+    /// Resolve and bind a policy spec: `""`/`uniform` (uniform of
+    /// `opts.compress`), `uniform:<spec>`, `paper`, `auto[:budget_pct]`
+    /// (synthetic calibration), `auto-live[:budget_pct]` (calibration
+    /// forward pass — needs artifacts), or a rule string.
+    pub fn set_policy(&mut self, spec: &str) -> anyhow::Result<()> {
+        let n_layers = self.cfg.n_layers;
+        let table = match spec {
+            "" | "uniform" => PolicyTable::uniform(n_layers, &self.opts.compress),
+            "paper" => {
+                let calib = self.synthetic_calibration();
+                policy::paper_policy(&calib, policy::PAPER_ERR_BUDGET_PCT)?
+            }
+            s if s == "auto" || s.starts_with("auto:") => {
+                let budget = parse_budget(s, "auto")?;
+                let calib = self.synthetic_calibration();
+                self.auto_table(&calib, budget)?
+            }
+            s if s == "auto-live" || s.starts_with("auto-live:") => {
+                let budget = parse_budget(s, "auto-live")?;
+                // capture must see unquantized residuals end-to-end; if
+                // the capture/search fails, restore the previous binding
+                // so an erroring call leaves the engine unchanged
+                let prev = self.policy.clone();
+                self.bind_policy(PolicyTable::uniform(n_layers, "none"))?;
+                let searched = self
+                    .capture_calibration()
+                    .and_then(|calib| self.auto_table(&calib, budget));
+                match searched {
+                    Ok(table) => table,
+                    Err(e) => {
+                        self.bind_policy(prev)?;
+                        return Err(e);
+                    }
+                }
+            }
+            s => CompressionPolicy::parse_with_default(s, &self.opts.compress)?.table(n_layers),
+        };
+        self.opts.policy = spec.to_string();
+        self.bind_policy(table)
+    }
+
+    /// Swap the collective compressor without rebuilding the engine
+    /// (sweeps reuse one engine's compiled executables across schemes).
+    /// Binds the seed-equivalent `uniform:<spec>` policy.
+    pub fn set_compress(&mut self, spec: &str) -> anyhow::Result<()> {
+        self.opts.compress = spec.to_string();
+        self.opts.policy = String::new();
+        self.bind_policy(PolicyTable::uniform(self.cfg.n_layers, spec))
+    }
+
+    /// The bound per-site policy.
+    pub fn policy(&self) -> &PolicyTable {
+        &self.policy
+    }
+
+    /// JSON description of the bound policy (served at `GET /policy`).
+    pub fn policy_json(&self) -> Json {
+        self.policy.to_json()
+    }
+
+    /// Per-site collective telemetry, indexed by [`Site::index`].
+    pub fn site_stats(&self) -> &[SiteStat] {
+        &self.site_stats
+    }
+
+    /// Metric rollups for `/metrics`: calls + wire bytes per
+    /// (kind × phase) site group, plus calls per bound scheme. Reads
+    /// the incrementally maintained counters — O(schemes), no site-grid
+    /// scan — since the coordinator mirrors this every engine step.
+    pub fn policy_metrics(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (ki, kind) in SiteKind::ALL.iter().enumerate() {
+            for (pi, phase) in Phase::ALL.iter().enumerate() {
+                let g = &self.group_stats[ki][pi];
+                let tag = format!("{}_{}", kind.name(), phase.name());
+                out.push((format!("policy_calls_{tag}"), g.calls as f64));
+                out.push((format!("policy_wire_bytes_{tag}"), g.wire_bytes as f64));
+            }
+        }
+        for (spec, calls) in self.policy_specs.iter().zip(&self.scheme_calls) {
+            out.push((format!("policy_calls_scheme_{spec}"), *calls as f64));
+        }
+        out
+    }
+
+    /// Account one collective at `site` into the per-site, per-group
+    /// and per-scheme counters.
+    fn record_site(&mut self, site: Site, scheme_idx: usize, wire_bytes: u64, raw_bytes: u64) {
+        let st = &mut self.site_stats[site.index()];
+        st.calls += 1;
+        st.wire_bytes += wire_bytes;
+        st.raw_bytes += raw_bytes;
+        // site.index() = (layer*2 + kind)*2 + phase
+        let si = site.index();
+        let g = &mut self.group_stats[(si / 2) % 2][si % 2];
+        g.calls += 1;
+        g.wire_bytes += wire_bytes;
+        g.raw_bytes += raw_bytes;
+        self.scheme_calls[scheme_idx] += 1;
+    }
+
+    /// Bind a fully resolved table: build one compressor per distinct
+    /// scheme, map sites onto them, reset per-site stats and plans.
+    fn bind_policy(&mut self, table: PolicyTable) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            table.n_layers == self.cfg.n_layers,
+            "policy table is for {} layers, model has {}",
+            table.n_layers,
+            self.cfg.n_layers
+        );
+        let distinct = table.distinct();
+        let mut comps = Vec::with_capacity(distinct.len());
+        for spec in &distinct {
+            comps.push(if spec == "none" {
+                None
+            } else {
+                Some(compressor_from_spec_ch(spec, self.cfg.d_model)?)
+            });
+        }
+        let mut site_spec = vec![0u16; Site::count(table.n_layers)];
+        for site in Site::all(table.n_layers) {
+            let idx = distinct.iter().position(|s| s == table.spec(site)).unwrap();
+            site_spec[site.index()] = idx as u16;
+        }
+        self.policy = table;
+        self.scheme_calls = vec![0; distinct.len()];
+        self.policy_specs = distinct;
+        self.policy_comps = comps;
+        self.site_spec = site_spec;
+        self.site_stats = vec![SiteStat::default(); Site::count(self.cfg.n_layers)];
+        self.group_stats = [[SiteStat::default(); 2]; 2];
+        self.plan_cache.clear();
+        Ok(())
+    }
+
+    /// Synthetic per-site calibration for this engine's shape.
+    fn synthetic_calibration(&self) -> Calibration {
+        Calibration::synthetic(self.cfg.n_layers, self.cfg.d_model, self.opts.tp, 0xCA11B)
+    }
+
+    /// The deployment the built-in `auto` search prices against:
+    /// a full prefill bucket (8×128 tokens) and an 8-wide decode step
+    /// on this engine's profile/topology.
+    fn search_scenario(&self) -> SearchScenario {
+        SearchScenario::new(self.opts.profile, self.opts.tp, 8 * 128, 8, self.cfg.d_model)
+    }
+
+    fn auto_table(&self, calib: &Calibration, budget_pct: f64) -> anyhow::Result<PolicyTable> {
+        let scen = self.search_scenario();
+        let costs = policy::SiteCosts::build(calib, &scen, policy::CANDIDATES)?;
+        let baseline = PolicyTable::uniform(self.cfg.n_layers, &self.opts.compress);
+        let out =
+            policy::auto_search(&costs, self.cfg.n_layers, budget_pct, Some(&baseline), "auto")?;
+        Ok(out.table)
+    }
+
+    /// Run a calibration forward pass (one prefill bucket + one decode
+    /// step) capturing each site's pre-quantization partials. Capture
+    /// reflects the engine's *current* compression state; run it on an
+    /// uncompressed binding for clean statistics (the `auto-live` path
+    /// does).
+    pub fn capture_calibration(&mut self) -> anyhow::Result<Calibration> {
+        let n_sites = Site::count(self.cfg.n_layers);
+        let bb = self.rt.manifest.batch_buckets.iter().copied().min().unwrap_or(1).max(1);
+        let sb = self
+            .rt
+            .manifest
+            .seq_buckets
+            .iter()
+            .copied()
+            .filter(|&s| s > 1)
+            .min()
+            .unwrap_or(16);
+        let tokens: Vec<i32> = (0..bb * sb).map(|i| (i * 31 + 7) as i32 % 256).collect();
+        let pos = vec![0i32; bb];
+        // the calibration pass is not serving traffic: keep its
+        // collectives out of the per-algorithm counters, the virtual
+        // clock and the per-site stats mirrored to `/metrics`
+        let saved_algo_calls = self.algo_calls.clone();
+        let saved_clock = self.clock.clone();
+        let saved_site_stats = self.site_stats.clone();
+        let saved_group_stats = self.group_stats;
+        let saved_scheme_calls = self.scheme_calls.clone();
+        self.calib_capture = Some(vec![Vec::new(); n_sites]);
+        let run = (|| -> anyhow::Result<()> {
+            let mut kv = BatchKv::new(&self.cfg.clone(), self.opts.tp, bb);
+            self.prefill(&tokens, bb, sb, &pos, Some(&mut kv))?;
+            let dec_tokens = vec![1i32; bb];
+            let dec_pos = vec![sb as i32; bb];
+            self.decode(&dec_tokens, &dec_pos, &mut kv)?;
+            Ok(())
+        })();
+        let data = self.calib_capture.take().unwrap();
+        self.algo_calls = saved_algo_calls;
+        self.clock = saved_clock;
+        self.site_stats = saved_site_stats;
+        self.group_stats = saved_group_stats;
+        self.scheme_calls = saved_scheme_calls;
+        run?;
+        Calibration::from_samples(self.cfg.n_layers, self.cfg.d_model, data)
     }
 
     fn wlit(&self, rank: usize, name: &str) -> &xla::Literal {
@@ -213,17 +473,23 @@ impl TpEngine {
     }
 
     /// Names of the fused quantize / dequant-reduce-add executables for
-    /// the current scheme at bucket (bb, sb), if they were exported
-    /// (FUSED_SCHEMES × reduced buckets; see python aot.py).
-    fn fused_names(&self, bb: usize, sb: usize) -> Option<(String, String)> {
-        if !self.opts.fused || self.opts.compress == "none" {
+    /// `site`'s scheme at bucket (bb, sb), if they were exported
+    /// (FUSED_SCHEMES × reduced buckets; see python aot.py). `forward`
+    /// memoises the result per distinct scheme for the duration of one
+    /// pass, so the name formatting + manifest lookups run once per
+    /// scheme per forward, not per layer.
+    fn fused_names_site(&self, site: Site, bb: usize, sb: usize) -> Option<(String, String)> {
+        if !self.opts.fused {
+            return None;
+        }
+        let spec = &self.policy_specs[self.site_spec[site.index()] as usize];
+        if spec == "none" {
             return None;
         }
         let model = &self.opts.model;
-        let scheme = &self.opts.compress;
         let tp = self.opts.tp;
-        let q = format!("{model}/quant_{scheme}_b{bb}_s{sb}");
-        let d = format!("{model}/dqra_{scheme}_tp{tp}_b{bb}_s{sb}");
+        let q = format!("{model}/quant_{spec}_b{bb}_s{sb}");
+        let d = format!("{model}/dqra_{spec}_tp{tp}_b{bb}_s{sb}");
         (self.rt.manifest.by_name(&q).is_some() && self.rt.manifest.by_name(&d).is_some())
             .then_some((q, d))
     }
@@ -243,12 +509,15 @@ impl TpEngine {
         dname: &str,
         bb: usize,
         sb: usize,
+        site: Site,
         timing: &mut StepTiming,
     ) -> anyhow::Result<Vec<f32>> {
         let d = self.cfg.d_model;
         let tp = self.opts.tp;
         let values = bb * sb * d;
-        let block = crate::mxfmt::MxScheme::parse(&self.opts.compress)?.block;
+        let spec = self.policy_specs[self.site_spec[site.index()] as usize].clone();
+        let scheme = crate::mxfmt::MxScheme::parse(&spec)?;
+        let block = scheme.block;
         let nb = d / block;
 
         let mut codes_all = Vec::with_capacity(tp * values);
@@ -272,7 +541,6 @@ impl TpEngine {
         // accounting: wire size is the bit-packed size the scheme would
         // put on the link (the HLO path carries byte-per-code tensors in
         // host memory, but the *interconnect* sees packed bits)
-        let scheme = crate::mxfmt::MxScheme::parse(&self.opts.compress)?;
         let shard_wire = scheme.wire_bytes(values);
         let link_s = self.opts.profile.link.all_gather_time(shard_wire, tp);
         let codec_s = match self.opts.overhead {
@@ -287,37 +555,57 @@ impl TpEngine {
         // this path always accounts as the flat ring
         *self.algo_calls.entry("ring").or_insert(0) += 1;
         timing.algo = "ring";
+        self.record_site(
+            site,
+            self.site_spec[site.index()] as usize,
+            (shard_wire * (tp - 1)) as u64,
+            (values * 2 * (tp - 1)) as u64,
+        );
         self.clock
             .add_comm(link_s + codec_s, shard_wire * (tp - 1), values * 2 * (tp - 1));
         Ok(reduced)
     }
 
-    /// The collective after a row-parallel stage: the planner picks an
-    /// (algorithm × chunking) for this message shape on the profile's
-    /// topology, execution applies compression at the algorithm's phase
+    /// The collective after a row-parallel stage: `site` resolves the
+    /// policy's compressor, the planner picks an (algorithm × chunking)
+    /// for this (message shape, scheme) on the profile's topology,
+    /// execution applies compression at the algorithm's phase
     /// boundaries, and virtual time advances by the overlapped schedule.
     fn communicate(
         &mut self,
         x: &[f32],
         partials: &[Vec<f32>],
+        site: Site,
         timing: &mut StepTiming,
     ) -> Vec<f32> {
         let n = partials.len();
         let len = x.len();
         let topo = self.topology();
+        let si = site.index();
+        let ci = self.site_spec[si] as usize;
+        // calibration capture: record each site's first pre-quantization
+        // partials (block-aligned prefix)
+        if let Some(cap) = self.calib_capture.as_mut() {
+            if cap[si].is_empty() {
+                let take = Calibration::sample_len(self.cfg.d_model).min(len);
+                for p in partials {
+                    cap[si].push(p[..take].to_vec());
+                }
+            }
+        }
         // planning always scores codec work at the profile's calibrated
         // throughput — in Measured mode the realised codec time is this
         // CPU's, but the *choice* models the simulated hardware. The
-        // per-engine memo keys on (len, profile identity); compressor and
-        // algo-knob changes clear it (`set_compress`/`set_algo`).
-        let memo_key = (len, self.opts.profile as *const HwProfile as usize);
+        // per-engine memo keys on (len, profile identity, site scheme);
+        // policy and algo-knob changes clear it (`set_policy`/`set_algo`).
+        let memo_key = (len, self.opts.profile as *const HwProfile as usize, ci);
         let plan = match self.plan_cache.get(&memo_key).copied() {
             Some(p) => p,
             None => {
                 let p = collective::plan::choose(
                     len,
                     n,
-                    self.comp.as_deref(),
+                    self.policy_comps[ci].as_deref(),
                     &topo,
                     self.opts.profile.quant_values_per_s,
                     self.algo_choice,
@@ -326,7 +614,7 @@ impl TpEngine {
                 p
             }
         };
-        let comp = self.comp.as_deref();
+        let comp = self.policy_comps[ci].as_deref();
         let measure = self.opts.overhead == OverheadModel::Measured;
         let mut out = std::mem::take(&mut self.reduce_buf);
         let mut wire = std::mem::take(&mut self.wire_buf);
@@ -337,7 +625,7 @@ impl TpEngine {
         let (codec_s, total_s) = match self.opts.overhead {
             OverheadModel::Measured => (rep.encode_s + rep.decode_s, rep.total_s()),
             OverheadModel::Analytic { values_per_s } => {
-                if self.comp.is_some() {
+                if comp.is_some() {
                     // the planner's own scoring at the engine's rate —
                     // realized analytic time equals the scored objective
                     // (codec values discounted by the codec's cost factor,
@@ -360,6 +648,7 @@ impl TpEngine {
         timing.link_s += link_exposed;
         timing.wire_bytes += rep.wire_bytes as u64;
         timing.raw_bytes += rep.raw_bytes as u64;
+        self.record_site(site, ci, rep.wire_bytes as u64, rep.raw_bytes as u64);
         self.clock.add_comm(total_s, rep.wire_bytes, rep.raw_bytes);
         self.wire_buf = wire;
         let result = out.clone();
@@ -385,6 +674,7 @@ impl TpEngine {
         let model = self.opts.model.clone();
         let tp = self.opts.tp;
         let d = self.cfg.d_model;
+        let phase = if decode { Phase::Decode } else { Phase::Prefill };
 
         // embed (replicated: every worker computes it; charge one)
         let tok_lit = lit_i32(&[bb, sb], tokens)?;
@@ -399,9 +689,10 @@ impl TpEngine {
         let mut x = to_vec_f32(&emb_out[0])?;
 
         let pos_lit = lit_i32(&[bb], pos)?;
-        // fused on-accelerator compression path, when exported for this
-        // scheme + bucket (otherwise the bit-exact host codec runs)
-        let fused = self.fused_names(bb, sb);
+        // fused executable names per distinct scheme, resolved lazily
+        // once per forward (the site loop below would otherwise pay the
+        // format + manifest lookup at every collective)
+        let mut fused_memo: BTreeMap<usize, Option<(String, String)>> = BTreeMap::new();
         for l in 0..self.cfg.n_layers {
             // ---- attention ----
             let attn_name = if decode {
@@ -455,15 +746,22 @@ impl TpEngine {
             }
             timing.compute_s += max_s;
             self.clock.add_compute(max_s);
-            x = if let Some((q, dq)) = &fused {
+            let site = Site { layer: l, kind: SiteKind::AttnOut, phase };
+            // fused on-accelerator compression, when exported for this
+            // site's scheme + bucket (otherwise the bit-exact host codec)
+            let fused = fused_memo
+                .entry(self.site_spec[site.index()] as usize)
+                .or_insert_with(|| self.fused_names_site(site, bb, sb))
+                .clone();
+            x = if let Some((q, dq)) = fused {
                 let lits: Vec<&xla::Literal> = partials.iter().map(|o| &o[0]).collect();
-                self.communicate_fused(&x, &lits, q, dq, bb, sb, &mut timing)?
+                self.communicate_fused(&x, &lits, &q, &dq, bb, sb, site, &mut timing)?
             } else {
                 let vecs: Vec<Vec<f32>> = partials
                     .iter()
                     .map(|o| to_vec_f32(&o[0]))
                     .collect::<Result<_, _>>()?;
-                self.communicate(&x, &vecs, &mut timing)
+                self.communicate(&x, &vecs, site, &mut timing)
             };
 
             // ---- MLP ----
@@ -489,15 +787,20 @@ impl TpEngine {
             }
             timing.compute_s += max_s;
             self.clock.add_compute(max_s);
-            x = if let Some((q, dq)) = &fused {
+            let site = Site { layer: l, kind: SiteKind::MlpOut, phase };
+            let fused = fused_memo
+                .entry(self.site_spec[site.index()] as usize)
+                .or_insert_with(|| self.fused_names_site(site, bb, sb))
+                .clone();
+            x = if let Some((q, dq)) = fused {
                 let lits: Vec<&xla::Literal> = partials.iter().map(|o| &o[0]).collect();
-                self.communicate_fused(&x, &lits, q, dq, bb, sb, &mut timing)?
+                self.communicate_fused(&x, &lits, &q, &dq, bb, sb, site, &mut timing)?
             } else {
                 let vecs: Vec<Vec<f32>> = partials
                     .iter()
                     .map(|o| to_vec_f32(&o[0]))
                     .collect::<Result<_, _>>()?;
-                self.communicate(&x, &vecs, &mut timing)
+                self.communicate(&x, &vecs, site, &mut timing)
             };
         }
 
@@ -538,25 +841,47 @@ impl TpEngine {
         self.forward(tokens, bb, 1, pos, Some(kv), true)
     }
 
-    /// Swap the collective compressor without rebuilding the engine
-    /// (sweeps reuse one engine's compiled executables across schemes).
-    pub fn set_compress(&mut self, spec: &str) -> anyhow::Result<()> {
-        self.opts.compress = spec.to_string();
-        self.comp = if spec == "none" {
-            None
-        } else {
-            Some(compressor_from_spec_ch(spec, self.cfg.d_model)?)
-        };
-        self.plan_cache.clear();
-        Ok(())
-    }
-
-    /// Compressor effective bits (16 when uncompressed, fp16 wire).
+    /// Mean effective wire bits per value across all sites (16 when
+    /// uncompressed, fp16 wire). Uniform policies report their scheme's
+    /// effective bits exactly, like the seed's global compressor did.
     pub fn effective_bits(&self, n: usize) -> f64 {
-        self.comp.as_ref().map_or(16.0, |c| c.effective_bits(n))
+        let sites = self.site_spec.len().max(1);
+        let total: f64 = self
+            .site_spec
+            .iter()
+            .map(|&ci| {
+                self.policy_comps[ci as usize].as_ref().map_or(16.0, |c| c.effective_bits(n))
+            })
+            .sum();
+        total / sites as f64
     }
 
+    /// Display name of the bound compression: the compressor's name for
+    /// uniform policies (seed behaviour), the policy summary otherwise.
     pub fn compressor_name(&self) -> String {
-        self.comp.as_ref().map_or("none".into(), |c| c.name())
+        match self.policy.is_uniform() {
+            Some("none") => "none".into(),
+            Some(_) => self
+                .policy_comps
+                .iter()
+                .flatten()
+                .next()
+                .map_or_else(|| "none".to_string(), |c| c.name()),
+            None => self.policy.summary(),
+        }
+    }
+}
+
+/// Parse the optional `:<budget_pct>` suffix of `auto`/`auto-live`.
+fn parse_budget(spec: &str, prefix: &str) -> anyhow::Result<f64> {
+    match spec.strip_prefix(prefix).and_then(|r| r.strip_prefix(':')) {
+        None => Ok(policy::DEFAULT_AUTO_BUDGET_PCT),
+        Some(v) => {
+            let b: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad budget in policy spec {spec:?}"))?;
+            anyhow::ensure!(b >= 0.0, "budget must be >= 0, got {b}");
+            Ok(b)
+        }
     }
 }

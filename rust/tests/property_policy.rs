@@ -1,0 +1,308 @@
+//! Property tests for the per-site compression policy engine:
+//! the `uniform` policy must be **bit-identical** to the seed's global
+//! single-compressor path across world sizes, policy specs must
+//! round-trip through their serialisations, and the built-in searches
+//! must honour their structural guarantees. No artifacts needed except
+//! for the final engine-level test (skipped when absent, like the
+//! other engine integration tests).
+
+use tpcc::collective::plan::{self, AlgoChoice};
+use tpcc::collective::{execute, Topology};
+use tpcc::interconnect::{HwProfile, LinkModel};
+use tpcc::mxfmt::{compressor_from_spec_ch, Compressor};
+use tpcc::policy::{
+    auto_search, paper_policy, Calibration, CompressionPolicy, Phase, PolicyTable, SearchScenario,
+    Site, SiteCosts, SiteKind, CANDIDATES,
+};
+use tpcc::util::rng::Rng;
+
+const D_MODEL: usize = 192; // micro's hidden dim: multiple of 32, channel-wise friendly
+
+fn link() -> LinkModel {
+    LinkModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9 }
+}
+
+/// The seed path (one global compressor) vs the policy path (the
+/// compressor resolved per-site from a `uniform:<spec>` table) must
+/// produce bit-identical reduced outputs — for every world size, every
+/// site, and both a block-wise and a channel-wise scheme.
+#[test]
+fn prop_uniform_policy_bit_identical_to_seed_path() {
+    let n_layers = 3;
+    let profile = HwProfile::by_name("l4").unwrap();
+    let mut rng = Rng::new(21);
+    for spec in ["fp4_e2m1_b32_e8m0", "fp5_e2m2_b16_e8m0", "int4_channelwise"] {
+        let policy = CompressionPolicy::parse(&format!("uniform:{spec}")).unwrap();
+        let table = policy.table(n_layers);
+        // the table resolves every site to the engine-wide spec ...
+        for site in Site::all(n_layers) {
+            assert_eq!(table.spec(site), spec, "{}", site.label());
+        }
+        for world in [1usize, 2, 3, 4, 8] {
+            let topo = Topology::from_profile(profile, world);
+            for len in [D_MODEL, 5 * D_MODEL, 16 * D_MODEL] {
+                let mut x = vec![0.0f32; len];
+                rng.fill_activations(&mut x, 1.0);
+                let mut parts = vec![vec![0.0f32; len]; world];
+                for p in &mut parts {
+                    rng.fill_activations(p, 2.0);
+                }
+
+                // seed path: one engine-wide compressor
+                let seed_comp = compressor_from_spec_ch(spec, D_MODEL).unwrap();
+                let seed_plan = plan::choose(
+                    len,
+                    world,
+                    Some(seed_comp.as_ref()),
+                    &topo,
+                    profile.quant_values_per_s,
+                    AlgoChoice::Auto,
+                );
+                let (mut seed_out, mut wire) = (Vec::new(), Vec::new());
+                let seed_rep = execute(
+                    &seed_plan,
+                    &x,
+                    &parts,
+                    Some(seed_comp.as_ref()),
+                    &topo,
+                    true,
+                    &mut seed_out,
+                    &mut wire,
+                );
+
+                // ... and the per-site-resolved compressor reproduces the
+                // seed path bit-for-bit (identical plan, output, bytes)
+                let site = Site::all(n_layers)[0];
+                let comp = compressor_from_spec_ch(table.spec(site), D_MODEL).unwrap();
+                let p = plan::choose(
+                    len,
+                    world,
+                    Some(comp.as_ref()),
+                    &topo,
+                    profile.quant_values_per_s,
+                    AlgoChoice::Auto,
+                );
+                assert_eq!(p, seed_plan, "{spec}/w{world}/{len}: plans differ");
+                let (mut out, mut wire) = (Vec::new(), Vec::new());
+                let rep =
+                    execute(&p, &x, &parts, Some(comp.as_ref()), &topo, true, &mut out, &mut wire);
+                assert_eq!(
+                    out, seed_out,
+                    "{spec}/w{world}/{len}: outputs not bit-identical"
+                );
+                assert_eq!(rep.wire_bytes, seed_rep.wire_bytes);
+                assert_eq!(rep.raw_bytes, seed_rep.raw_bytes);
+            }
+        }
+    }
+}
+
+/// `uniform:none` resolves every site to the uncompressed path.
+#[test]
+fn prop_uniform_none_resolves_to_uncompressed_everywhere() {
+    let table = CompressionPolicy::parse("uniform:none").unwrap().table(5);
+    assert_eq!(table.is_uniform(), Some("none"));
+    for site in Site::all(5) {
+        assert_eq!(table.spec(site), "none");
+    }
+}
+
+/// Spec-string round trip: parse → serialize → parse resolves every
+/// site identically, for rule policies of increasing complexity.
+#[test]
+fn prop_policy_spec_roundtrip() {
+    let specs = [
+        "uniform:none",
+        "uniform:fp4_e2m1_b32_e8m0",
+        "mlp=fp4_e2m1_b32_e8m0",
+        "mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0,3]=none;decode=none",
+        "default=fp5_e2m2_b32_e8m0;layers[1-2].mlp=int4_channelwise;layers[0].attn.decode=none",
+    ];
+    for s in specs {
+        let p = CompressionPolicy::parse(s).unwrap();
+        let p2 = CompressionPolicy::parse(&p.to_spec_string()).unwrap();
+        for n_layers in [1usize, 4, 8] {
+            let (a, b) = (p.table(n_layers), p2.table(n_layers));
+            for site in Site::all(n_layers) {
+                assert_eq!(a.spec(site), b.spec(site), "{s} @ {}", site.label());
+            }
+        }
+    }
+}
+
+/// JSON serialisation covers every site with its resolved scheme.
+#[test]
+fn prop_policy_json_covers_all_sites() {
+    let p = CompressionPolicy::parse("mlp=fp4_e2m1_b32_e8m0;decode=none").unwrap();
+    let table = p.table(3);
+    let j = table.to_json();
+    let sites = j.get("sites").unwrap().as_obj().unwrap();
+    assert_eq!(sites.len(), Site::count(3));
+    for site in Site::all(3) {
+        assert_eq!(
+            sites.get(&site.label()).and_then(|v| v.as_str()),
+            Some(table.spec(site)),
+            "{}",
+            site.label()
+        );
+    }
+}
+
+/// The auto search's structural guarantee, across TP degrees: never
+/// slower than the uniform baseline (total and TTFT-phase virtual
+/// time) at equal-or-better modeled error.
+#[test]
+fn prop_auto_never_worse_than_uniform_across_worlds() {
+    let n_layers = 2;
+    let profile = HwProfile::by_name("2x4l4").unwrap();
+    for world in [2usize, 4, 8] {
+        let calib = Calibration::synthetic(n_layers, D_MODEL, world, 17);
+        let scen = SearchScenario::new(profile, world, 8 * 128, 8, D_MODEL);
+        let costs = SiteCosts::build(&calib, &scen, CANDIDATES).unwrap();
+        let uniform = PolicyTable::uniform(n_layers, "fp4_e2m1_b32_e8m0");
+        let u = costs.eval_table(&uniform).unwrap();
+        let auto = auto_search(&costs, n_layers, u.mean_err_pct(), Some(&uniform), "auto").unwrap();
+        assert!(auto.score.time_total_s <= u.time_total_s + 1e-12, "world {world}");
+        assert!(auto.score.ttft_comm_s <= u.ttft_comm_s + 1e-12, "world {world}");
+        assert!(auto.score.mean_err_pct() <= u.mean_err_pct() + 1e-9, "world {world}");
+    }
+}
+
+/// The paper policy only ever assigns candidate schemes, and its
+/// threshold extremes pin the two degenerate tables.
+#[test]
+fn prop_paper_policy_assigns_candidates_only() {
+    let calib = Calibration::synthetic(4, D_MODEL, 2, 9);
+    let t = paper_policy(&calib, 3.0).unwrap();
+    for site in Site::all(4) {
+        let spec = t.spec(site);
+        assert!(
+            CANDIDATES.contains(&spec),
+            "{}: {spec} not a candidate",
+            site.label()
+        );
+        // §5.1 searches the MX grid only — channel-wise INT never appears
+        assert_ne!(spec, "int4_channelwise");
+    }
+    let t0 = paper_policy(&calib, 0.0).unwrap();
+    for site in Site::all(4) {
+        assert_eq!(t0.spec(site), "none");
+    }
+}
+
+/// Calibration error agrees between the trait object path and the
+/// spec-string path, and responds to the compressor's fidelity:
+/// a strictly finer scheme family member never reports NaN/negative.
+#[test]
+fn prop_calibration_error_consistency() {
+    let calib = Calibration::synthetic(2, D_MODEL, 3, 23);
+    for site in Site::all(2) {
+        for spec in ["fp4_e2m1_b32_e8m0", "fp5_e2m2_b8_e8m0", "int4_channelwise"] {
+            let via_spec = calib.scheme_error(site, spec).unwrap();
+            let comp: Box<dyn Compressor> = compressor_from_spec_ch(spec, D_MODEL).unwrap();
+            let via_comp = calib.site_error(site, Some(comp.as_ref()));
+            assert_eq!(via_spec, via_comp, "{spec} @ {}", site.label());
+            assert!(via_spec.is_finite() && via_spec >= 0.0);
+        }
+    }
+}
+
+/// Engine-level pin (needs artifacts, like the other engine tests):
+/// an engine built with `--compress <spec>` and one built with
+/// `--policy uniform:<spec>` must produce identical logits.
+#[test]
+fn engine_uniform_policy_matches_global_compressor() {
+    let root = tpcc::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use tpcc::model::weights::Weights;
+    use tpcc::runtime::Runtime;
+    use tpcc::tp::{EngineOptions, TpEngine};
+
+    let spec = "fp4_e2m1_b32_e8m0";
+    let prompt: Vec<i32> = (0..128).map(|i| (i * 17 + 3) % 256).collect();
+    let mut outs = Vec::new();
+    for policy in ["", "uniform:fp4_e2m1_b32_e8m0"] {
+        let rt = Runtime::load(&root).unwrap();
+        let weights = Weights::load(&root.join("weights/nano")).unwrap();
+        let opts = EngineOptions::new("nano", 2).with_compress(spec).with_policy(policy);
+        let mut eng = TpEngine::new(rt, &weights, opts).unwrap();
+        assert_eq!(eng.policy().is_uniform(), Some(spec));
+        let (logits, t) = eng.prefill(&prompt, 1, 128, &[0], None).unwrap();
+        // per-site stats cover exactly the prefill sites that ran
+        let calls: u64 = eng.site_stats().iter().map(|s| s.calls).sum();
+        assert_eq!(calls, 2 * eng.cfg.n_layers as u64);
+        assert!(t.wire_bytes > 0);
+        outs.push((logits, t.wire_bytes));
+    }
+    assert_eq!(outs[0].1, outs[1].1, "wire accounting differs");
+    assert_eq!(outs[0].0, outs[1].0, "uniform policy logits differ from seed path");
+}
+
+/// A mixed policy on a live engine (needs artifacts): `attn=none`
+/// leaves attention collectives uncompressed — their wire bytes must
+/// account at the fp16 baseline while MLP sites compress.
+#[test]
+fn engine_mixed_policy_site_accounting() {
+    let root = tpcc::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use tpcc::model::weights::Weights;
+    use tpcc::runtime::Runtime;
+    use tpcc::tp::{EngineOptions, TpEngine};
+
+    let rt = Runtime::load(&root).unwrap();
+    let weights = Weights::load(&root.join("weights/nano")).unwrap();
+    let opts = EngineOptions::new("nano", 2)
+        .with_compress("fp4_e2m1_b32_e8m0")
+        .with_policy("attn=none");
+    let mut eng = TpEngine::new(rt, &weights, opts).unwrap();
+    assert!(eng.policy().is_uniform().is_none());
+    let prompt: Vec<i32> = (0..128).map(|i| (i * 7 + 1) % 256).collect();
+    let _ = eng.prefill(&prompt, 1, 128, &[0], None).unwrap();
+    for site in Site::all(eng.cfg.n_layers) {
+        if site.phase != Phase::Prefill {
+            continue;
+        }
+        let st = &eng.site_stats()[site.index()];
+        assert_eq!(st.calls, 1, "{}", site.label());
+        match site.kind {
+            SiteKind::AttnOut => {
+                assert_eq!(st.wire_bytes, st.raw_bytes, "{}", site.label())
+            }
+            SiteKind::MlpOut => {
+                assert!(st.wire_bytes < st.raw_bytes / 3, "{}", site.label())
+            }
+        }
+    }
+    // the policy metric rollups agree with the per-site stats
+    let metrics = eng.policy_metrics();
+    let attn_wire = metrics
+        .iter()
+        .find(|(k, _)| k == "policy_wire_bytes_attn_prefill")
+        .map(|(_, v)| *v)
+        .unwrap();
+    let expect: u64 = Site::all(eng.cfg.n_layers)
+        .into_iter()
+        .filter(|s| s.kind == SiteKind::AttnOut && s.phase == Phase::Prefill)
+        .map(|s| eng.site_stats()[s.index()].wire_bytes)
+        .sum();
+    assert_eq!(attn_wire as u64, expect);
+}
+
+/// The collective link used by the pure-collective tests above stays
+/// exercised (keeps this file self-contained if profiles change).
+#[test]
+fn sanity_flat_link_collective_unchanged() {
+    let x = vec![1.0f32; 64];
+    let parts = vec![vec![0.5f32; 64], vec![0.25f32; 64]];
+    let (mut out, mut wire) = (Vec::new(), Vec::new());
+    let rep =
+        tpcc::collective::all_gather_reduce_add(&x, &parts, None, &link(), &mut out, &mut wire);
+    assert!(out.iter().all(|&v| (v - 1.75).abs() < 1e-7));
+    assert_eq!(rep.algo, "ring");
+}
