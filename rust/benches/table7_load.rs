@@ -1,0 +1,16 @@
+//! Regenerates Table 7: serving under load — max sustainable QPS at a
+//! TTFT SLO per {policy × hardware profile}, via the virtual-time load
+//! driver over the modeled engine. Needs no artifacts.
+
+use tpcc::tables::table7;
+
+fn main() {
+    let cfg = table7::Table7Config::default();
+    match table7::run(&cfg) {
+        Ok(rows) => table7::print(&rows, &cfg),
+        Err(e) => {
+            eprintln!("table7 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -154,7 +154,7 @@ pub fn choose(
         for &chunks in chunk_set {
             let (total, link_s, codec_s) =
                 score(kind, values, world, comp, topo, quant_values_per_s, chunks);
-            if best.map_or(true, |b| total < b.est_total_s) {
+            if best.is_none_or(|b| total < b.est_total_s) {
                 best = Some(CollectivePlan {
                     algo: kind,
                     chunks,

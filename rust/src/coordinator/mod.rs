@@ -14,7 +14,6 @@ pub mod session;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::collective::AlgoKind;
 use crate::metrics::Registry;
@@ -43,6 +42,8 @@ pub struct GenResponse {
     pub ttft_s: f64,
     pub e2e_s: f64,
     pub tpot_s: f64,
+    /// time queued before prefill admission (NaN if never admitted)
+    pub queue_wait_s: f64,
     /// virtual (interconnect-modeled) time spent in this request's
     /// prefill — the Table-3 "TTFT" under the simulated hardware profile
     pub virtual_prefill_s: f64,
@@ -250,7 +251,7 @@ impl Coordinator {
 
     fn prefill_admit(
         &mut self,
-        admitted: Vec<(Session, Sender<GenResponse>)>,
+        mut admitted: Vec<(Session, Sender<GenResponse>)>,
         free: &[usize],
         slots: &mut [Option<ActiveSlot>],
         decode_kv: &mut BatchKv,
@@ -262,16 +263,23 @@ impl Coordinator {
         let (bb, sb) = scheduler::pick_prefill_bucket(&lens, &batch_buckets, &seq_buckets)
             .ok_or_else(|| anyhow::anyhow!("prompt exceeds largest bucket"))?;
 
+        // queue wait ends here: admission into the prefill batch, before
+        // the batch executes
+        for (s, _) in admitted.iter_mut() {
+            s.record_prefill_start();
+            if let Some(w) = s.queue_wait() {
+                self.metrics.queue_wait.record(w);
+            }
+        }
+
         let mut tokens = vec![0i32; bb * sb];
         for (row, (s, _)) in admitted.iter().enumerate() {
             tokens[row * sb..row * sb + s.prompt_tokens.len()]
                 .copy_from_slice(&s.prompt_tokens);
         }
         let mut kv = BatchKv::new(&cfg, self.eng.opts.tp, bb);
-        let t0 = Instant::now();
         let (logits, timing) =
             self.eng.prefill(&tokens, bb, sb, &vec![0; bb], Some(&mut kv))?;
-        let _ = t0;
         self.record_comm(&timing);
         self.metrics.batches_executed.inc();
 
@@ -279,9 +287,6 @@ impl Coordinator {
         for (row, (mut session, reply)) in admitted.into_iter().enumerate() {
             let len = session.prompt_tokens.len();
             self.metrics.prefill_tokens.add(len as u64);
-            self.metrics
-                .queue_wait
-                .record(session.arrived.elapsed().as_secs_f64() - timing.wall_s);
             let row_logits = &logits[(row * sb + len - 1) * v..(row * sb + len) * v];
             let tok = self.sampler.sample(row_logits, self.sampling_for());
             session.record_first_token(tok);
@@ -335,6 +340,7 @@ impl Coordinator {
             ttft_s: s.ttft().unwrap_or(f64::NAN),
             e2e_s: s.e2e().unwrap_or(f64::NAN),
             tpot_s: s.tpot().unwrap_or(f64::NAN),
+            queue_wait_s: s.queue_wait().unwrap_or(f64::NAN),
             virtual_prefill_s: slot.virtual_prefill_s,
         };
         self.metrics.requests_completed.inc();

@@ -20,6 +20,9 @@ pub struct Session {
     /// absolute position of the next token to be written (== tokens seen)
     pub pos: usize,
     pub arrived: Instant,
+    /// when the batcher admitted this session into a prefill batch
+    /// (queue wait = admission − arrival)
+    pub prefill_started_at: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
     /// slot in the decode batch group (when Decoding)
@@ -38,11 +41,18 @@ impl Session {
             state: SessionState::Queued,
             pos: 0,
             arrived: Instant::now(),
+            prefill_started_at: None,
             first_token_at: None,
             finished_at: None,
             slot: None,
             stop_token: -1,
         }
+    }
+
+    /// Mark admission into a prefill batch (the end of the queue wait).
+    pub fn record_prefill_start(&mut self) {
+        self.prefill_started_at = Some(Instant::now());
+        self.state = SessionState::Prefilling;
     }
 
     pub fn record_first_token(&mut self, tok: i32) {
@@ -75,6 +85,11 @@ impl Session {
         self.first_token_at.map(|t| (t - self.arrived).as_secs_f64())
     }
 
+    /// Time spent queued before prefill admission.
+    pub fn queue_wait(&self) -> Option<f64> {
+        self.prefill_started_at.map(|t| (t - self.arrived).as_secs_f64())
+    }
+
     pub fn e2e(&self) -> Option<f64> {
         self.finished_at.map(|t| (t - self.arrived).as_secs_f64())
     }
@@ -98,10 +113,15 @@ mod tests {
     fn lifecycle() {
         let mut s = Session::new(1, vec![1, 2, 3], 2);
         assert_eq!(s.state, SessionState::Queued);
+        assert!(s.queue_wait().is_none());
+        s.record_prefill_start();
+        assert_eq!(s.state, SessionState::Prefilling);
         s.record_first_token(42);
         assert_eq!(s.state, SessionState::Decoding);
         assert_eq!(s.pos, 3);
         assert!(s.ttft().is_some());
+        // queue wait ends at admission, so it can't exceed TTFT
+        assert!(s.queue_wait().unwrap() <= s.ttft().unwrap());
         s.record_token(43);
         assert!(s.is_done());
         assert_eq!(s.generated, vec![42, 43]);

@@ -32,6 +32,11 @@
 //!                    collective counters on `/metrics`).
 //! * [`eval`]       — perplexity harness (Tables 1/2/5).
 //! * [`model`]      — model configs, weight loading, analytic perf model.
+//! * [`workload`]   — serving-under-load engine: trace generation
+//!                    (Poisson/bursty/closed-loop × length
+//!                    distributions), wall-clock and virtual-time load
+//!                    drivers, streaming latency histograms, and the
+//!                    SLO-capacity search behind Table 7.
 //! * [`tables`]     — generators for every paper table (benches wrap these).
 
 pub mod bench;
@@ -49,6 +54,7 @@ pub mod tables;
 pub mod tokenizer;
 pub mod tp;
 pub mod util;
+pub mod workload;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

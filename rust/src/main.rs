@@ -7,6 +7,8 @@
 //!   eval    --model small --tp 2 --compress <spec> [--split test] [--tokens 4096]
 //!   table1|table2|table3|table4|table5   (regenerate a paper table)
 //!   table6  (selective-compression ablation: uniform vs paper vs auto)
+//!   table7  (serving under load: capacity at a TTFT SLO per policy)
+//!   load    --model micro --tp 2 --arrival poisson:4 --requests 32 [--policy ...]
 //!   info    (artifact + model inventory)
 //!
 //! `--policy` selects per-site compression (see `rust/src/policy/`):
@@ -17,9 +19,10 @@ use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest, Sampling};
 use tpcc::model::weights::Weights;
 use tpcc::runtime::Runtime;
 use tpcc::server::Server;
-use tpcc::tables::{common, table1, table2, table3, table4, table5, table6};
+use tpcc::tables::{common, table1, table2, table3, table4, table5, table6, table7};
 use tpcc::tp::{EngineOptions, TpEngine};
 use tpcc::util::cli::Args;
+use tpcc::workload::{self, Arrival, DriveOptions, LenDist, LoadShape, SloSpec, Trace, TraceSpec};
 
 fn main() {
     if let Err(e) = run() {
@@ -84,9 +87,55 @@ fn run() -> anyhow::Result<()> {
                 },
                 copts,
             )?;
+            // goodput on /metrics is measured against this TTFT SLO
+            handle.metrics.set_ttft_slo(args.get_f64("slo-ttft", 0.25));
             let server = Server::bind(&addr, handle)?;
             println!("tpcc serving on http://{addr}  (POST /generate, GET /metrics)");
             server.serve_forever()
+        }
+        "load" => {
+            // trace: replayed from --trace FILE, or generated from
+            // --arrival/--prompt-len/--output-len/--requests/--seed
+            let trace = match args.get("trace") {
+                Some(path) => Trace::parse_jsonl(&std::fs::read_to_string(path)?)?,
+                None => {
+                    let spec = TraceSpec {
+                        arrival: Arrival::parse(args.get_or("arrival", "poisson:4"))?,
+                        prompt_len: LenDist::parse(args.get_or("prompt-len", "sharegpt"))?,
+                        output_len: LenDist::parse(args.get_or("output-len", "lognormal:16:0.7:64"))?,
+                        requests: args.get_usize("requests", 32),
+                        seed: args.get_usize("seed", 42) as u64,
+                    };
+                    spec.generate()
+                }
+            };
+            if let Some(path) = args.get("save-trace") {
+                std::fs::write(path, trace.to_jsonl())?;
+                println!("trace saved to {path} ({} events)", trace.events.len());
+            }
+            let slo_ttft_s = args.get_f64("slo-ttft", 0.25);
+            let args2 = args.clone();
+            let (handle, join) = spawn(
+                move || build_engine(&args2),
+                CoordinatorOptions {
+                    decode_batch: args.get_usize("decode-batch", 8),
+                    ..Default::default()
+                },
+            )?;
+            handle.metrics.set_ttft_slo(slo_ttft_s);
+            println!(
+                "tpcc load: {} requests, {} events span {:.1}s",
+                trace.events.len(),
+                if trace.closed_loop.is_some() { "closed-loop" } else { "open-loop" },
+                trace.span_s()
+            );
+            let report = workload::drive(&handle, &trace, &DriveOptions { slo_ttft_s });
+            report.publish(&handle.metrics);
+            report.print("load");
+            handle.shutdown();
+            drop(handle);
+            join.join().unwrap()?;
+            Ok(())
         }
         "gen" => {
             let prompt = args.get_or("prompt", "The parish church of ").to_string();
@@ -177,6 +226,23 @@ fn run() -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "table7" => {
+            let base = table7::Table7Config::default();
+            let cfg = table7::Table7Config {
+                slo: SloSpec {
+                    ttft_s: args.get_f64("slo-ttft", base.slo.ttft_s),
+                    min_goodput: args.get_f64("goodput", base.slo.min_goodput),
+                },
+                shape: LoadShape {
+                    requests: args.get_usize("requests", base.shape.requests),
+                    ..base.shape
+                },
+                iters: args.get_usize("iters", base.iters),
+            };
+            let rows = table7::run(&cfg)?;
+            table7::print(&rows, &cfg);
+            Ok(())
+        }
         "info" => {
             let root = common::artifacts_root()?;
             let rt = Runtime::load(&root)?;
@@ -201,12 +267,16 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | table1..table6 | info\n\
+                 commands: serve | gen | eval | load | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
                                --algo auto|ring|recursive_doubling|two_shot|hierarchical\n\
-                 policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"",
+                 policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"\n\
+                 load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\
+                               --prompt-len sharegpt|N|uniform:LO:HI|lognormal:MED:SIG[:CAP]\n\
+                               --output-len ... --requests N --seed S --slo-ttft S\n\
+                               --trace FILE | --save-trace FILE",
                 tpcc::version()
             );
             Ok(())

@@ -94,6 +94,15 @@ impl HistogramSnapshot {
             / (self.sorted.len() - 1) as f64)
             .sqrt()
     }
+    /// Fraction of samples `<= threshold` (NaN when empty) — goodput
+    /// when `threshold` is a latency SLO.
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let below = self.sorted.partition_point(|&v| v <= threshold);
+        below as f64 / self.sorted.len() as f64
+    }
 }
 
 /// The serving stack's metric registry (one per coordinator).
@@ -111,6 +120,9 @@ pub struct Registry {
     pub tpot: Histogram,
     pub e2e_latency: Histogram,
     pub queue_wait: Histogram,
+    /// TTFT SLO (f64 bits; 0 = unset) the `ttft_goodput` metric is
+    /// measured against
+    slo_ttft_bits: AtomicU64,
     custom: Mutex<BTreeMap<String, f64>>,
 }
 
@@ -119,11 +131,22 @@ impl Registry {
         self.custom.lock().unwrap().insert(key.to_string(), v);
     }
 
-    /// JSON snapshot served at `/metrics`.
+    /// Set the TTFT SLO that `/metrics` reports goodput against.
+    pub fn set_ttft_slo(&self, slo_s: f64) {
+        self.slo_ttft_bits.store(slo_s.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn ttft_slo(&self) -> f64 {
+        f64::from_bits(self.slo_ttft_bits.load(Ordering::Relaxed))
+    }
+
+    /// JSON snapshot served at `/metrics`. Percentiles of empty
+    /// histograms serialize as `null` (never `NaN` — invalid JSON).
     pub fn to_json(&self) -> Json {
         let ttft = self.ttft.snapshot();
         let tpot = self.tpot.snapshot();
         let e2e = self.e2e_latency.snapshot();
+        let qw = self.queue_wait.snapshot();
         let mut pairs = vec![
             ("requests_received", json::num(self.requests_received.get() as f64)),
             ("requests_completed", json::num(self.requests_completed.get() as f64)),
@@ -132,15 +155,26 @@ impl Registry {
             ("batches_executed", json::num(self.batches_executed.get() as f64)),
             ("comm_bytes_sent", json::num(self.comm_bytes_sent.get() as f64)),
             ("comm_bytes_saved", json::num(self.comm_bytes_saved.get() as f64)),
-            ("ttft_p50_s", json::num(ttft.percentile(50.0))),
-            ("ttft_p95_s", json::num(ttft.percentile(95.0))),
-            ("tpot_p50_s", json::num(tpot.percentile(50.0))),
-            ("e2e_p50_s", json::num(e2e.percentile(50.0))),
-            ("e2e_p95_s", json::num(e2e.percentile(95.0))),
+            ("ttft_p50_s", json::num_or_null(ttft.percentile(50.0))),
+            ("ttft_p95_s", json::num_or_null(ttft.percentile(95.0))),
+            ("ttft_p99_s", json::num_or_null(ttft.percentile(99.0))),
+            ("tpot_p50_s", json::num_or_null(tpot.percentile(50.0))),
+            ("e2e_p50_s", json::num_or_null(e2e.percentile(50.0))),
+            ("e2e_p95_s", json::num_or_null(e2e.percentile(95.0))),
+            ("e2e_p99_s", json::num_or_null(e2e.percentile(99.0))),
+            ("queue_wait_p50_s", json::num_or_null(qw.percentile(50.0))),
+            ("queue_wait_p95_s", json::num_or_null(qw.percentile(95.0))),
+            ("queue_wait_p99_s", json::num_or_null(qw.percentile(99.0))),
         ];
+        let slo = self.ttft_slo();
+        if slo > 0.0 {
+            pairs.push(("ttft_slo_s", json::num(slo)));
+            // fraction of completed requests meeting the TTFT SLO
+            pairs.push(("ttft_goodput", json::num_or_null(ttft.fraction_below(slo))));
+        }
         let custom = self.custom.lock().unwrap();
         for (k, v) in custom.iter() {
-            pairs.push((k.as_str(), json::num(*v)));
+            pairs.push((k.as_str(), json::num_or_null(*v)));
         }
         let mut obj = BTreeMap::new();
         for (k, v) in pairs {
@@ -192,6 +226,45 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("requests_received").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("ttft_p50_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("ttft_p99_s").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("custom_metric").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn empty_registry_serializes_valid_json() {
+        // empty histograms must serialize percentiles as null, not NaN
+        let r = Registry::default();
+        let body = r.to_json().to_string();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("ttft_p50_s"), Some(&Json::Null));
+        assert_eq!(j.get("queue_wait_p99_s"), Some(&Json::Null));
+        // no SLO set: goodput absent
+        assert!(j.get("ttft_goodput").is_none());
+    }
+
+    #[test]
+    fn goodput_against_slo() {
+        let r = Registry::default();
+        r.set_ttft_slo(0.25);
+        for v in [0.1, 0.2, 0.3, 0.4] {
+            r.ttft.record(v);
+        }
+        let j = r.to_json();
+        assert_eq!(j.get("ttft_slo_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("ttft_goodput").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("queue_wait_p50_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn fraction_below_bounds() {
+        let h = Histogram::default();
+        assert!(h.snapshot().fraction_below(1.0).is_nan());
+        for i in 1..=10 {
+            h.record(i as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.fraction_below(0.5), 0.0);
+        assert_eq!(s.fraction_below(5.0), 0.5);
+        assert_eq!(s.fraction_below(100.0), 1.0);
     }
 }

@@ -367,7 +367,7 @@ pub fn auto_search(
                     continue;
                 }
                 let ratio = dt / de.max(1e-18);
-                if best.map_or(true, |(_, _, r)| ratio > r) {
+                if best.is_none_or(|(_, _, r)| ratio > r) {
                     best = Some((si, ci, ratio));
                 }
             }

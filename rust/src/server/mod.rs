@@ -146,19 +146,31 @@ fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Resu
             };
             match handle.generate(gen) {
                 Ok(resp) => {
+                    // latency fields can be NaN (e.g. a request that
+                    // never decoded a second token has no TPOT) —
+                    // serialize those as null, NaN is not valid JSON
                     let body = json::obj(vec![
                         ("id", json::num(resp.id as f64)),
                         ("text", json::s(&resp.text)),
                         ("prompt_tokens", json::num(resp.prompt_tokens as f64)),
                         ("new_tokens", json::num(resp.new_tokens as f64)),
-                        ("ttft_s", json::num(resp.ttft_s)),
-                        ("e2e_s", json::num(resp.e2e_s)),
+                        ("ttft_s", json::num_or_null(resp.ttft_s)),
+                        ("e2e_s", json::num_or_null(resp.e2e_s)),
+                        ("tpot_s", json::num_or_null(resp.tpot_s)),
+                        ("queue_wait_s", json::num_or_null(resp.queue_wait_s)),
                         ("virtual_prefill_s", json::num(resp.virtual_prefill_s)),
                     ])
                     .to_string();
                     respond(&mut stream, 200, &body)
                 }
-                Err(e) => respond(&mut stream, 500, &format!(r#"{{"error":"{e}"}}"#)),
+                // error text goes through the JSON writer: a raw
+                // format! would break the body on quotes/newlines in
+                // the message
+                Err(e) => {
+                    let body =
+                        json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_string();
+                    respond(&mut stream, 500, &body)
+                }
             }
         }
         _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),

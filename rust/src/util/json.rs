@@ -167,6 +167,16 @@ pub fn arr(items: Vec<Json>) -> Json {
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// `Num` for finite values, `Null` otherwise — JSON has no NaN/Inf, so
+/// latency fields from empty histograms (or requests that never
+/// produced a token) must serialize as `null`, not `NaN`.
+pub fn num_or_null(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
+}
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
@@ -272,7 +282,7 @@ impl<'a> Parser<'a> {
                 _ => {
                     // copy raw UTF-8 bytes through
                     let start = self.i - 1;
-                    while self.peek().map_or(false, |c| c != b'"' && c != b'\\') {
+                    while self.peek().is_some_and(|c| c != b'"' && c != b'\\') {
                         self.i += 1;
                     }
                     out.push_str(
@@ -384,6 +394,17 @@ mod tests {
             cur = cur.idx(0).unwrap();
         }
         assert_eq!(cur.as_i64(), Some(1));
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(num_or_null(1.5).to_string(), "1.5");
+        assert_eq!(num_or_null(f64::NAN).to_string(), "null");
+        assert_eq!(num_or_null(f64::INFINITY).to_string(), "null");
+        assert_eq!(num_or_null(f64::NEG_INFINITY).to_string(), "null");
+        // and the result round-trips as valid JSON
+        let j = obj(vec![("x", num_or_null(f64::NAN))]).to_string();
+        assert!(Json::parse(&j).is_ok(), "{j}");
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! SLO-capacity search: the maximum sustainable arrival rate at a TTFT
+//! SLO for a {policy × collective plan × hardware profile} deployment.
+//!
+//! [`ModeledEngine`] prices the virtual driver's engine intervals for
+//! a paper-scale deployment: prefill compute from the Table 3 roofline
+//! ([`PaperModel::prefill_flops`]), decode compute from the HBM
+//! weight-read bound, and per-site communication from the *same*
+//! collective auto-planner score the live engine charges
+//! ([`crate::collective::plan::choose`]) — resolved through a bound
+//! [`PolicyTable`], so `uniform:none`, `paper` and `auto` price
+//! exactly the collectives they would run.
+//!
+//! [`max_sustainable_rate`] wraps the generic search: exponential
+//! growth to bracket the knee, then bisection on "goodput ≥ target".
+//! Traces are regenerated per probed rate from one seed, so every
+//! policy is judged on the identical arrival sequence at each rate.
+
+use std::collections::BTreeMap;
+
+use crate::collective::plan::{self, AlgoChoice};
+use crate::collective::Topology;
+use crate::interconnect::HwProfile;
+use crate::model::perf_model::PaperModel;
+use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+use crate::policy::{Phase, PolicyTable, Site};
+
+use super::driver::{simulate, LoadReport, ServiceModel, SimOptions};
+use super::trace::{Arrival, LenDist, TraceSpec};
+
+/// Per-phase site groups: how many collectives of one scheme a forward
+/// pass runs (cost depends only on (scheme, message size), not layer).
+type SchemeGroups = Vec<(usize, Option<Box<dyn Compressor>>)>;
+
+/// Virtual-time service model of a paper-scale TP deployment under a
+/// per-site compression policy.
+pub struct ModeledEngine {
+    pub model: PaperModel,
+    pub profile: &'static HwProfile,
+    pub tp: usize,
+    topo: Topology,
+    prefill_groups: SchemeGroups,
+    decode_groups: SchemeGroups,
+    prefill_memo: BTreeMap<(usize, usize), f64>,
+    decode_memo: BTreeMap<usize, f64>,
+}
+
+fn scheme_groups(
+    table: &PolicyTable,
+    phase: Phase,
+    d_model: usize,
+) -> anyhow::Result<SchemeGroups> {
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for site in Site::all(table.n_layers) {
+        if site.phase == phase {
+            *counts.entry(table.spec(site).to_string()).or_insert(0) += 1;
+        }
+    }
+    let mut groups = Vec::with_capacity(counts.len());
+    for (spec, count) in counts {
+        let comp = if spec == "none" {
+            None
+        } else {
+            Some(compressor_from_spec_ch(&spec, d_model)?)
+        };
+        groups.push((count, comp));
+    }
+    Ok(groups)
+}
+
+/// Planner-scored virtual seconds of one forward pass's collectives at
+/// `values` per-rank message size, summed over the phase's site groups.
+fn comm_s(
+    groups: &SchemeGroups,
+    values: usize,
+    tp: usize,
+    topo: &Topology,
+    quant_values_per_s: f64,
+) -> f64 {
+    groups
+        .iter()
+        .map(|(count, comp)| {
+            let p = plan::choose(
+                values,
+                tp,
+                comp.as_deref(),
+                topo,
+                quant_values_per_s,
+                AlgoChoice::Auto,
+            );
+            *count as f64 * p.est_total_s
+        })
+        .sum()
+}
+
+impl ModeledEngine {
+    pub fn new(
+        model: PaperModel,
+        profile: &'static HwProfile,
+        tp: usize,
+        table: &PolicyTable,
+    ) -> anyhow::Result<ModeledEngine> {
+        anyhow::ensure!(
+            table.n_layers == model.n_layers,
+            "policy table is for {} layers, model {} has {}",
+            table.n_layers,
+            model.name,
+            model.n_layers
+        );
+        anyhow::ensure!(tp >= 1, "tp must be >= 1");
+        Ok(ModeledEngine {
+            model,
+            profile,
+            tp,
+            topo: Topology::from_profile(profile, tp),
+            prefill_groups: scheme_groups(table, Phase::Prefill, model.d_model)?,
+            decode_groups: scheme_groups(table, Phase::Decode, model.d_model)?,
+            prefill_memo: BTreeMap::new(),
+            decode_memo: BTreeMap::new(),
+        })
+    }
+}
+
+impl ServiceModel for ModeledEngine {
+    fn prefill_s(&mut self, batch: usize, seq: usize) -> f64 {
+        if let Some(&t) = self.prefill_memo.get(&(batch, seq)) {
+            return t;
+        }
+        let compute = self.model.prefill_flops(batch, seq)
+            / (self.tp as f64 * self.profile.peak_flops * self.profile.mfu);
+        let values = batch * seq * self.model.d_model;
+        let comm = comm_s(
+            &self.prefill_groups,
+            values,
+            self.tp,
+            &self.topo,
+            self.profile.quant_values_per_s,
+        );
+        let t = compute + comm;
+        self.prefill_memo.insert((batch, seq), t);
+        t
+    }
+
+    fn decode_s(&mut self, batch: usize) -> f64 {
+        if let Some(&t) = self.decode_memo.get(&batch) {
+            return t;
+        }
+        // decode is memory-bound: every step streams the weight shard
+        // (fp16) from HBM once per rank
+        let compute = self.model.matmul_params() * 2.0
+            / (self.tp as f64 * self.profile.hbm_bytes_per_s);
+        let values = batch * self.model.d_model;
+        let comm = comm_s(
+            &self.decode_groups,
+            values,
+            self.tp,
+            &self.topo,
+            self.profile.quant_values_per_s,
+        );
+        let t = compute + comm;
+        self.decode_memo.insert(batch, t);
+        t
+    }
+}
+
+/// The SLO a deployment must sustain.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// TTFT bound (seconds)
+    pub ttft_s: f64,
+    /// minimum fraction of submitted requests meeting it
+    pub min_goodput: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { ttft_s: 0.25, min_goodput: 0.95 }
+    }
+}
+
+/// The workload shape a capacity search probes with (arrival rate is
+/// the searched variable; everything else is pinned).
+#[derive(Debug, Clone, Copy)]
+pub struct LoadShape {
+    pub prompt_len: LenDist,
+    pub output_len: LenDist,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadShape {
+    fn default() -> Self {
+        LoadShape {
+            prompt_len: LenDist::LogNormal { median: 48.0, sigma: 1.0, cap: 224 },
+            output_len: LenDist::LogNormal { median: 16.0, sigma: 0.7, cap: 64 },
+            requests: 240,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Outcome of one capacity search.
+#[derive(Debug, Clone)]
+pub struct CapacityResult {
+    /// max sustainable arrival rate (requests/s); 0 when even the
+    /// lightest probe misses the SLO
+    pub qps: f64,
+    /// goodput evaluations spent
+    pub evals: usize,
+    /// the load report at the found rate (re-simulated), None when
+    /// qps == 0
+    pub report: Option<LoadReport>,
+}
+
+/// Upper bracket cap for the growth phase (requests/s). A deployment
+/// sustaining this is reported as `RATE_CAP` — effectively unbounded
+/// for the modeled engine intervals.
+pub const RATE_CAP: f64 = 4096.0;
+
+/// Find the largest rate with `eval(rate) >= min_goodput` by doubling
+/// from `lo` to bracket the knee, then `iters` bisection steps.
+/// `eval` must be deterministic; it is called O(log RATE_CAP + iters)
+/// times.
+pub fn max_sustainable_rate(
+    lo: f64,
+    min_goodput: f64,
+    iters: usize,
+    mut eval: impl FnMut(f64) -> f64,
+) -> f64 {
+    let mut lo = lo.max(1e-3);
+    if eval(lo) < min_goodput {
+        return 0.0;
+    }
+    let mut hi = lo * 2.0;
+    loop {
+        if hi >= RATE_CAP {
+            // never claim the cap without measuring it
+            if eval(RATE_CAP) >= min_goodput {
+                return RATE_CAP;
+            }
+            hi = RATE_CAP;
+            break;
+        }
+        if eval(hi) >= min_goodput {
+            lo = hi;
+            hi *= 2.0;
+        } else {
+            break;
+        }
+    }
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid) >= min_goodput {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Capacity of `svc` under `shape` against `slo`: bisect the Poisson
+/// arrival rate, regenerating the trace (same seed) per probe.
+pub fn capacity(
+    svc: &mut dyn ServiceModel,
+    shape: &LoadShape,
+    slo: &SloSpec,
+    sim: &SimOptions,
+    iters: usize,
+) -> CapacityResult {
+    let mut opts = sim.clone();
+    opts.slo_ttft_s = slo.ttft_s;
+    let run = |svc: &mut dyn ServiceModel, rate: f64| -> LoadReport {
+        let trace = TraceSpec {
+            arrival: Arrival::Poisson { rate },
+            prompt_len: shape.prompt_len,
+            output_len: shape.output_len,
+            requests: shape.requests,
+            seed: shape.seed,
+        }
+        .generate();
+        simulate(&trace, svc, &opts)
+    };
+    let mut evals = 0usize;
+    let qps = max_sustainable_rate(0.25, slo.min_goodput, iters, |rate| {
+        evals += 1;
+        run(&mut *svc, rate).goodput()
+    });
+    let report = (qps > 0.0).then(|| run(&mut *svc, qps));
+    CapacityResult { qps, evals, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::perf_model::LLAMA2_7B;
+    use crate::workload::driver::FixedService;
+
+    #[test]
+    fn bisection_finds_known_knee() {
+        // goodput 1.0 below rate 10, 0 above: capacity must land near 10
+        let q = max_sustainable_rate(0.25, 0.95, 20, |r| if r <= 10.0 { 1.0 } else { 0.0 });
+        assert!((q - 10.0).abs() < 0.05, "{q}");
+        // never sustainable
+        assert_eq!(max_sustainable_rate(0.25, 0.95, 8, |_| 0.0), 0.0);
+        // always sustainable saturates at the cap
+        assert_eq!(max_sustainable_rate(0.25, 0.95, 8, |_| 1.0), RATE_CAP);
+    }
+
+    #[test]
+    fn capacity_monotone_in_service_time() {
+        let shape = LoadShape { requests: 150, ..LoadShape::default() };
+        let slo = SloSpec::default();
+        let sim = SimOptions::default();
+        let mut fast = FixedService { prefill_s: 0.01, decode_s: 0.004 };
+        let mut slow = FixedService { prefill_s: 0.04, decode_s: 0.016 };
+        let cf = capacity(&mut fast, &shape, &slo, &sim, 8);
+        let cs = capacity(&mut slow, &shape, &slo, &sim, 8);
+        assert!(cf.qps > 0.0 && cs.qps > 0.0);
+        assert!(cf.qps >= cs.qps, "fast {} < slow {}", cf.qps, cs.qps);
+        let rep = cf.report.unwrap();
+        assert!(rep.goodput() >= slo.min_goodput);
+        assert!(rep.ttft.percentile(50.0).is_finite());
+    }
+
+    #[test]
+    fn modeled_engine_prices_compression_in() {
+        let profile = HwProfile::by_name("l4").unwrap();
+        let none = PolicyTable::uniform(LLAMA2_7B.n_layers, "none");
+        let fp4 = PolicyTable::uniform(LLAMA2_7B.n_layers, "fp4_e2m1_b32_e8m0");
+        let mut e_none = ModeledEngine::new(LLAMA2_7B, profile, 2, &none).unwrap();
+        let mut e_fp4 = ModeledEngine::new(LLAMA2_7B, profile, 2, &fp4).unwrap();
+        // compressed prefill collectives are cheaper on the slow link
+        let pn = e_none.prefill_s(8, 128);
+        let pc = e_fp4.prefill_s(8, 128);
+        assert!(pc < pn, "compressed {pc} >= uncompressed {pn}");
+        // both phases price compute > 0 and memoise
+        let d1 = e_none.decode_s(8);
+        let d2 = e_none.decode_s(8);
+        assert!(d1 > 0.0 && d1 == d2);
+        // layer-count mismatch is an error
+        assert!(ModeledEngine::new(LLAMA2_7B, profile, 2, &PolicyTable::uniform(4, "none"))
+            .is_err());
+    }
+}

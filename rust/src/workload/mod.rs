@@ -1,0 +1,37 @@
+//! Workload engine: trace-driven load generation, latency percentiles
+//! and SLO-capacity search — "serving under load" (Table 7).
+//!
+//! Tables 1–6 measure one request at a time; production serving is
+//! judged by QPS-at-SLO under real traffic shapes (arXiv 2507.14392
+//! shows communication cost is workload-shape-dependent). This
+//! subsystem turns the repo's per-request TTFT wins into measured
+//! capacity wins:
+//!
+//! * [`trace`] — arrival processes (Poisson, bursty/Gamma,
+//!   closed-loop) × prompt/output length distributions (fixed,
+//!   uniform, heavy-tailed lognormal), seeded through
+//!   [`crate::util::rng::Rng`]; JSONL replay format for recorded
+//!   traces.
+//! * [`driver`] — a wall-clock open-loop driver for the live
+//!   [`crate::coordinator::CoordinatorHandle`], and a virtual-time
+//!   discrete-event driver that replays the same trace against a
+//!   [`driver::ServiceModel`] using the *live coordinator's own*
+//!   scheduler policy functions, so simulated hardware profiles see
+//!   correct queueing.
+//! * [`stats`] — log-bucketed streaming histogram (HDR-style,
+//!   mergeable, bounded relative error) behind the TTFT/TPOT/e2e/
+//!   queue-wait percentiles and the goodput metric.
+//! * [`capacity`] — [`capacity::ModeledEngine`] (paper-scale service
+//!   model resolved through a compression [`crate::policy::PolicyTable`])
+//!   plus bisection search for max sustainable arrival rate at a TTFT
+//!   SLO — the engine behind `tpcc table7`.
+
+pub mod capacity;
+pub mod driver;
+pub mod stats;
+pub mod trace;
+
+pub use capacity::{capacity, max_sustainable_rate, CapacityResult, LoadShape, ModeledEngine, SloSpec};
+pub use driver::{drive, simulate, DriveOptions, FixedService, LoadReport, ServiceModel, SimOptions};
+pub use stats::LogHistogram;
+pub use trace::{Arrival, ClosedLoop, LenDist, Trace, TraceEvent, TraceSpec};

@@ -1,0 +1,277 @@
+//! Log-bucketed streaming latency histogram (HDR-style).
+//!
+//! The exact-sample [`crate::metrics::Histogram`] keeps every
+//! observation — fine for one benchmark run, wrong for a load test
+//! that records hundreds of thousands of latencies across merged
+//! worker shards. [`LogHistogram`] holds a fixed array of
+//! geometrically spaced buckets instead: O(1) record, O(buckets)
+//! quantile, bounded memory, and **mergeable** (two histograms with
+//! the same layout add bucket-wise, so merge == concat exactly —
+//! pinned by `tests/property_workload.rs`).
+//!
+//! Accuracy: bucket boundaries grow by [`GROWTH`] per bucket, so any
+//! reported quantile is within one bucket of the exact order
+//! statistic — a bounded *relative* error of at most `GROWTH` (~4.4%),
+//! independent of the latency's magnitude. Reported values are the
+//! geometric midpoint of the owning bucket, clamped to the observed
+//! [min, max].
+
+/// Ratio between adjacent bucket upper bounds: 2^(1/16) ≈ 1.0443.
+/// Every quantile is exact to within this factor.
+pub const GROWTH: f64 = 1.044273782427414; // 2f64.powf(1.0 / 16.0)
+
+/// Lower bound of the first bucket (1 µs). Latencies below it land in
+/// a dedicated underflow bucket and report as the recorded minimum.
+pub const MIN_VALUE: f64 = 1e-6;
+
+/// Bucket count: covers [1 µs, ~2.8 h) at 16 buckets per octave
+/// (MIN_VALUE · 2^(544/16) ≈ 1.7e4 s).
+pub const BUCKETS: usize = 544;
+
+/// Streaming histogram over positive seconds-scale values.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    /// values below [`MIN_VALUE`] (incl. zero and negatives)
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: vec![0; BUCKETS],
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index of `v` (callers guarantee `v >= MIN_VALUE`).
+fn bucket_of(v: f64) -> usize {
+    let i = ((v / MIN_VALUE).ln() / GROWTH.ln()).floor();
+    (i.max(0.0) as usize).min(BUCKETS - 1)
+}
+
+/// Lower bound of bucket `i`.
+fn bucket_lo(i: usize) -> f64 {
+    MIN_VALUE * GROWTH.powi(i as i32)
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one observation. Non-finite values are ignored (they
+    /// carry no latency information); values below [`MIN_VALUE`] count
+    /// in the underflow bucket.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v < MIN_VALUE {
+            self.underflow += 1;
+        } else {
+            self.counts[bucket_of(v)] += 1;
+        }
+    }
+
+    /// Add every observation of `other` into `self`. Layouts are
+    /// static, so this is exact: merge(a, b) reports the same
+    /// quantiles as recording a's and b's samples into one histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.total as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Value at percentile `p` in [0, 100]: the geometric midpoint of
+    /// the bucket holding the rank-`⌈p/100·n⌉` observation, clamped to
+    /// the observed [min, max]. NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        // the extreme order statistics are tracked exactly
+        if rank == 1 {
+            return self.min;
+        }
+        if rank == self.total {
+            return self.max;
+        }
+        let mut cum = self.underflow;
+        if rank <= cum {
+            return self.min;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                let lo = bucket_lo(i);
+                let mid = lo * GROWTH.sqrt();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of observations `<= threshold` — the goodput metric
+    /// when `threshold` is a latency SLO. Exact at bucket granularity
+    /// (a bucket straddling the threshold counts fully when its lower
+    /// bound clears it). NaN when empty.
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let mut below = self.underflow;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if bucket_lo(i) <= threshold {
+                below += c;
+            } else {
+                break;
+            }
+        }
+        below as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_nan() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.min().is_nan());
+        assert!(h.fraction_below(1.0).is_nan());
+    }
+
+    #[test]
+    fn quantiles_within_growth_bound() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1 ms .. 1 s
+        }
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0] {
+            let exact = (p / 100.0 * 1000.0).ceil() * 1e-3;
+            let got = h.percentile(p);
+            assert!(
+                got / exact <= GROWTH + 1e-9 && exact / got <= GROWTH + 1e-9,
+                "p{p}: got {got}, exact {exact}"
+            );
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extremes_clamp_to_observed() {
+        let mut h = LogHistogram::new();
+        h.record(0.25);
+        h.record(0.50);
+        assert_eq!(h.percentile(0.0), 0.25);
+        assert_eq!(h.percentile(100.0), 0.50);
+        assert_eq!(h.min(), 0.25);
+        assert_eq!(h.max(), 0.50);
+    }
+
+    #[test]
+    fn underflow_and_nonfinite() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e-9);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3); // non-finite ignored
+        assert_eq!(h.percentile(50.0), -1.0); // underflow reports min
+        assert!((h.fraction_below(1e-3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let mut all = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut x = 0.37f64;
+        for i in 0..500 {
+            x = (x * 1.37 + 0.11) % 3.0; // deterministic scatter
+            let v = 1e-4 + x;
+            all.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for p in [5.0, 25.0, 50.0, 75.0, 95.0, 99.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p{p}");
+        }
+        assert_eq!(a.fraction_below(1.0), all.fraction_below(1.0));
+        assert!((a.sum() - all.sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_fraction() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-2); // 10 ms .. 1 s
+        }
+        let f = h.fraction_below(0.25);
+        assert!((0.20..=0.30).contains(&f), "{f}");
+        assert!((h.fraction_below(10.0) - 1.0).abs() < 1e-12);
+    }
+}

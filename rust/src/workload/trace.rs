@@ -1,0 +1,438 @@
+//! Arrival-process + length-distribution trace generation, and a JSONL
+//! replay format.
+//!
+//! A trace is the workload's ground truth: *when* requests arrive and
+//! *how big* they are. Generation composes an [`Arrival`] process
+//! (Poisson, bursty/Gamma, closed-loop) with prompt/output
+//! [`LenDist`]s (fixed, uniform, heavy-tailed "ShareGPT-like"
+//! lognormal), all drawn from the deterministic [`crate::util::rng::Rng`]
+//! — the same `(TraceSpec, seed)` always produces the bit-identical
+//! trace (pinned by `tests/property_workload.rs`), so capacity
+//! bisection compares policies on *exactly* the same request sequence.
+//!
+//! Replay: one JSON object per line,
+//! `{"at_s":0.125,"prompt_tokens":48,"max_new_tokens":16}`, written by
+//! [`Trace::to_jsonl`] and read by [`Trace::parse_jsonl`] (the format
+//! `tpcc load --trace/--save-trace` speaks). Closed-loop is a
+//! generator mode, not a replay format: its arrival times depend on
+//! completions, so its JSONL round-trips as an open-loop trace.
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// One scheduled request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// arrival offset from trace start (seconds; 0 for closed-loop)
+    pub at_s: f64,
+    /// prompt length in tokens (byte-level: bytes)
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Closed-loop parameters: `concurrency` outstanding requests, each
+/// completion triggering the next submission after `think_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClosedLoop {
+    pub concurrency: usize,
+    pub think_s: f64,
+}
+
+/// A generated or replayed request trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Some(_) when the driver should run closed-loop instead of
+    /// honouring `at_s`
+    pub closed_loop: Option<ClosedLoop>,
+}
+
+/// Inter-arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// exponential inter-arrivals at `rate` requests/s
+    Poisson { rate: f64 },
+    /// Gamma inter-arrivals with mean `1/rate` and coefficient of
+    /// variation `cv` (> 1 = burstier than Poisson; shape k = 1/cv²)
+    Bursty { rate: f64, cv: f64 },
+    /// closed loop: `concurrency` in flight, `think_s` between a
+    /// completion and the next submission
+    Closed { concurrency: usize, think_s: f64 },
+}
+
+impl Arrival {
+    /// Parse the CLI spec: `poisson:RATE`, `bursty:RATE[:CV]`,
+    /// `closed:CONCURRENCY[:THINK_S]`.
+    ///
+    /// ```
+    /// use tpcc::workload::trace::Arrival;
+    /// assert_eq!(Arrival::parse("poisson:4").unwrap(), Arrival::Poisson { rate: 4.0 });
+    /// assert_eq!(Arrival::parse("bursty:8").unwrap(), Arrival::Bursty { rate: 8.0, cv: 3.0 });
+    /// assert_eq!(
+    ///     Arrival::parse("closed:16:0.5").unwrap(),
+    ///     Arrival::Closed { concurrency: 16, think_s: 0.5 }
+    /// );
+    /// assert!(Arrival::parse("poisson:0").is_err());
+    /// ```
+    pub fn parse(s: &str) -> anyhow::Result<Arrival> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let p1 = parts.next();
+        let p2 = parts.next();
+        anyhow::ensure!(parts.next().is_none(), "too many fields in arrival spec {s:?}");
+        let f = |v: Option<&str>, what: &str| -> anyhow::Result<f64> {
+            v.ok_or_else(|| anyhow::anyhow!("arrival spec {s:?} missing {what}"))?
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad {what} in arrival spec {s:?}"))
+        };
+        match kind {
+            "poisson" => {
+                let rate = f(p1, "rate")?;
+                anyhow::ensure!(rate > 0.0, "poisson rate must be > 0");
+                Ok(Arrival::Poisson { rate })
+            }
+            "bursty" => {
+                let rate = f(p1, "rate")?;
+                let cv = match p2 {
+                    Some(_) => f(p2, "cv")?,
+                    None => 3.0,
+                };
+                anyhow::ensure!(rate > 0.0 && cv > 0.0, "bursty rate and cv must be > 0");
+                Ok(Arrival::Bursty { rate, cv })
+            }
+            "closed" => {
+                let concurrency = f(p1, "concurrency")? as usize;
+                let think_s = match p2 {
+                    Some(_) => f(p2, "think_s")?,
+                    None => 0.0,
+                };
+                anyhow::ensure!(concurrency > 0, "closed-loop concurrency must be > 0");
+                anyhow::ensure!(think_s >= 0.0, "think_s must be >= 0");
+                Ok(Arrival::Closed { concurrency, think_s })
+            }
+            _ => anyhow::bail!("unknown arrival process {s:?} (want poisson:R | bursty:R[:CV] | closed:N[:THINK])"),
+        }
+    }
+
+    /// Compact display label (report headers).
+    pub fn label(&self) -> String {
+        match self {
+            Arrival::Poisson { rate } => format!("poisson:{rate}"),
+            Arrival::Bursty { rate, cv } => format!("bursty:{rate}:cv{cv}"),
+            Arrival::Closed { concurrency, think_s } => {
+                format!("closed:{concurrency}:think{think_s}")
+            }
+        }
+    }
+}
+
+/// Token-length distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LenDist {
+    Fixed(usize),
+    /// uniform over [lo, hi] inclusive
+    Uniform { lo: usize, hi: usize },
+    /// heavy-tailed "ShareGPT-like": `median · exp(sigma · N(0,1))`,
+    /// rounded and clamped to [1, cap]
+    LogNormal { median: f64, sigma: f64, cap: usize },
+}
+
+impl LenDist {
+    /// Parse the CLI spec: a bare number (fixed), `fixed:N`,
+    /// `uniform:LO:HI`, `lognormal:MEDIAN:SIGMA[:CAP]`, or the
+    /// `sharegpt` alias (lognormal median 48, σ 1.0, cap 224).
+    ///
+    /// ```
+    /// use tpcc::workload::trace::LenDist;
+    /// assert_eq!(LenDist::parse("64").unwrap(), LenDist::Fixed(64));
+    /// assert_eq!(LenDist::parse("uniform:8:32").unwrap(), LenDist::Uniform { lo: 8, hi: 32 });
+    /// assert!(matches!(LenDist::parse("sharegpt").unwrap(), LenDist::LogNormal { .. }));
+    /// assert!(LenDist::parse("uniform:9:3").is_err());
+    /// ```
+    pub fn parse(s: &str) -> anyhow::Result<LenDist> {
+        if let Ok(n) = s.parse::<usize>() {
+            anyhow::ensure!(n > 0, "fixed length must be > 0");
+            return Ok(LenDist::Fixed(n));
+        }
+        if s == "sharegpt" {
+            return Ok(LenDist::LogNormal { median: 48.0, sigma: 1.0, cap: 224 });
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        let usize_at = |i: usize| -> anyhow::Result<usize> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("length spec {s:?} missing field {i}"))?
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad field {i} in length spec {s:?}"))
+        };
+        let f64_at = |i: usize| -> anyhow::Result<f64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("length spec {s:?} missing field {i}"))?
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad field {i} in length spec {s:?}"))
+        };
+        match parts[0] {
+            "fixed" => {
+                let n = usize_at(1)?;
+                anyhow::ensure!(n > 0, "fixed length must be > 0");
+                Ok(LenDist::Fixed(n))
+            }
+            "uniform" => {
+                let (lo, hi) = (usize_at(1)?, usize_at(2)?);
+                anyhow::ensure!(lo > 0 && lo <= hi, "uniform wants 0 < lo <= hi");
+                Ok(LenDist::Uniform { lo, hi })
+            }
+            "lognormal" => {
+                let median = f64_at(1)?;
+                let sigma = f64_at(2)?;
+                let cap = if parts.len() > 3 { usize_at(3)? } else { 4 * median.ceil() as usize };
+                anyhow::ensure!(median > 0.0 && sigma >= 0.0 && cap > 0, "bad lognormal params");
+                Ok(LenDist::LogNormal { median, sigma, cap })
+            }
+            _ => anyhow::bail!(
+                "unknown length distribution {s:?} (want N | fixed:N | uniform:LO:HI | lognormal:MED:SIGMA[:CAP] | sharegpt)"
+            ),
+        }
+    }
+
+    /// Draw one length (always >= 1).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n.max(1),
+            LenDist::Uniform { lo, hi } => lo + rng.below(hi - lo + 1),
+            LenDist::LogNormal { median, sigma, cap } => {
+                let v = median * (sigma * rng.normal() as f64).exp();
+                (v.round() as usize).clamp(1, cap.max(1))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            LenDist::Fixed(n) => format!("fixed:{n}"),
+            LenDist::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            LenDist::LogNormal { median, sigma, cap } => {
+                format!("lognormal:{median}:{sigma}:{cap}")
+            }
+        }
+    }
+}
+
+/// Everything needed to (re)generate a trace deterministically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    pub arrival: Arrival,
+    pub prompt_len: LenDist,
+    pub output_len: LenDist,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Generate the trace. Same spec + seed → bit-identical events.
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.seed);
+        let mut events = Vec::with_capacity(self.requests);
+        let mut t = 0.0f64;
+        for _ in 0..self.requests {
+            let at_s = match self.arrival {
+                Arrival::Poisson { rate } => {
+                    t += rng.exponential(rate);
+                    t
+                }
+                Arrival::Bursty { rate, cv } => {
+                    // Gamma(k, θ) with k = 1/cv², θ = 1/(rate·k):
+                    // mean 1/rate, squared-CV cv²
+                    let k = 1.0 / (cv * cv);
+                    t += gamma(&mut rng, k) / (rate * k);
+                    t
+                }
+                Arrival::Closed { .. } => 0.0,
+            };
+            events.push(TraceEvent {
+                at_s,
+                prompt_tokens: self.prompt_len.sample(&mut rng),
+                max_new_tokens: self.output_len.sample(&mut rng),
+            });
+        }
+        let closed_loop = match self.arrival {
+            Arrival::Closed { concurrency, think_s } => {
+                Some(ClosedLoop { concurrency, think_s })
+            }
+            _ => None,
+        };
+        Trace { events, closed_loop }
+    }
+}
+
+/// Gamma(shape, 1) via Marsaglia–Tsang, boosted for shape < 1.
+fn gamma(rng: &mut Rng, shape: f64) -> f64 {
+    if shape < 1.0 {
+        // Gamma(k) = Gamma(k+1) · U^(1/k)
+        return gamma(rng, shape + 1.0) * rng.f64().max(1e-12).powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal() as f64;
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.f64().max(1e-300);
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v3;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+impl Trace {
+    /// Serialize as JSONL (one event object per line).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(
+                &json::obj(vec![
+                    ("at_s", json::num(ev.at_s)),
+                    ("prompt_tokens", json::num(ev.prompt_tokens as f64)),
+                    ("max_new_tokens", json::num(ev.max_new_tokens as f64)),
+                ])
+                .to_string(),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the JSONL replay format (blank lines ignored). Events are
+    /// sorted by arrival time; the result is an open-loop trace.
+    pub fn parse_jsonl(s: &str) -> anyhow::Result<Trace> {
+        let mut events = Vec::new();
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let doc = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+            let at_s = doc
+                .get("at_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("trace line {}: missing at_s", lineno + 1))?;
+            anyhow::ensure!(
+                at_s.is_finite() && at_s >= 0.0,
+                "trace line {}: at_s must be finite and >= 0",
+                lineno + 1
+            );
+            // lengths are required: silently defaulting a missing or
+            // mistyped field would turn a foreign trace into a
+            // degenerate 1-token workload with no error
+            let len_field = |key: &str| -> anyhow::Result<usize> {
+                let n = doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                    anyhow::anyhow!("trace line {}: missing numeric {key}", lineno + 1)
+                })?;
+                anyhow::ensure!(n >= 1, "trace line {}: {key} must be >= 1", lineno + 1);
+                Ok(n)
+            };
+            events.push(TraceEvent {
+                at_s,
+                prompt_tokens: len_field("prompt_tokens")?,
+                max_new_tokens: len_field("max_new_tokens")?,
+            });
+        }
+        anyhow::ensure!(!events.is_empty(), "trace file holds no events");
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        Ok(Trace { events, closed_loop: None })
+    }
+
+    /// Largest arrival offset (0 for closed-loop traces).
+    pub fn span_s(&self) -> f64 {
+        self.events.last().map(|e| e.at_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(arrival: Arrival) -> TraceSpec {
+        TraceSpec {
+            arrival,
+            prompt_len: LenDist::Uniform { lo: 8, hi: 64 },
+            output_len: LenDist::Fixed(16),
+            requests: 400,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn poisson_mean_interarrival() {
+        let t = spec(Arrival::Poisson { rate: 5.0 }).generate();
+        assert_eq!(t.events.len(), 400);
+        let mean_gap = t.span_s() / 400.0;
+        assert!((mean_gap - 0.2).abs() < 0.04, "mean gap {mean_gap}");
+        // arrivals are nondecreasing
+        for w in t.events.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        let cv_of = |t: &Trace| {
+            let gaps: Vec<f64> = t
+                .events
+                .windows(2)
+                .map(|w| w[1].at_s - w[0].at_s)
+                .collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / m
+        };
+        let p = spec(Arrival::Poisson { rate: 5.0 }).generate();
+        let b = spec(Arrival::Bursty { rate: 5.0, cv: 4.0 }).generate();
+        assert!(cv_of(&b) > 1.3 * cv_of(&p), "bursty cv {} vs poisson {}", cv_of(&b), cv_of(&p));
+        // bursty keeps roughly the requested mean rate
+        let mean_gap = b.span_s() / 400.0;
+        assert!((mean_gap - 0.2).abs() < 0.1, "bursty mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn closed_loop_marks_trace() {
+        let t = spec(Arrival::Closed { concurrency: 8, think_s: 0.1 }).generate();
+        assert_eq!(t.closed_loop, Some(ClosedLoop { concurrency: 8, think_s: 0.1 }));
+        assert!(t.events.iter().all(|e| e.at_s == 0.0));
+    }
+
+    #[test]
+    fn lognormal_clamps_and_spreads() {
+        let d = LenDist::LogNormal { median: 32.0, sigma: 1.0, cap: 128 };
+        let mut rng = Rng::new(3);
+        let samples: Vec<usize> = (0..2000).map(|_| d.sample(&mut rng)).collect();
+        assert!(samples.iter().all(|&s| (1..=128).contains(&s)));
+        assert!(samples.iter().any(|&s| s == 128), "cap never hit");
+        assert!(samples.iter().any(|&s| s < 16), "no small samples");
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        assert!((20.0..=44.0).contains(&median), "median {median}");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(Arrival::parse("bursty:2:0").is_err());
+        assert!(Arrival::parse("closed:0").is_err());
+        assert!(Arrival::parse("uniform:1").is_err());
+        assert!(LenDist::parse("fixed:0").is_err());
+        assert!(LenDist::parse("lognormal:32").is_err());
+        assert_eq!(
+            LenDist::parse("lognormal:32:0.5").unwrap(),
+            LenDist::LogNormal { median: 32.0, sigma: 0.5, cap: 128 }
+        );
+    }
+}

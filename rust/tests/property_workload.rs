@@ -1,0 +1,191 @@
+//! Property tests for the workload engine: streaming-histogram error
+//! bounds and mergeability, and trace-generation determinism (the
+//! acceptance pin: same seed + spec → bit-identical trace).
+
+use tpcc::util::rng::Rng;
+use tpcc::workload::stats::{LogHistogram, GROWTH};
+use tpcc::workload::{Arrival, LenDist, Trace, TraceSpec};
+
+fn spec(seed: u64) -> TraceSpec {
+    TraceSpec {
+        arrival: Arrival::Bursty { rate: 12.0, cv: 3.0 },
+        prompt_len: LenDist::LogNormal { median: 48.0, sigma: 1.0, cap: 224 },
+        output_len: LenDist::LogNormal { median: 16.0, sigma: 0.7, cap: 64 },
+        requests: 300,
+        seed,
+    }
+}
+
+// ---------------------------------------------------------------------
+// histogram: quantile within the bucket error bound
+// ---------------------------------------------------------------------
+
+/// For any recorded sample set and any percentile, the histogram's
+/// answer is within one log bucket (relative factor GROWTH) of the
+/// exact order statistic.
+#[test]
+fn histogram_quantiles_within_relative_bound() {
+    // several distribution shapes, several seeds
+    for (dist, seed) in [("uniform", 1u64), ("exp", 2), ("lognormal", 3), ("bimodal", 4)] {
+        let mut rng = Rng::new(seed);
+        let mut h = LogHistogram::new();
+        let mut exact: Vec<f64> = Vec::new();
+        for i in 0..5000 {
+            let v = match dist {
+                "uniform" => 1e-4 + rng.f64() * 2.0,
+                "exp" => rng.exponential(10.0).max(1e-5),
+                "lognormal" => 5e-3 * (rng.normal() as f64).exp(),
+                _ => {
+                    if i % 2 == 0 {
+                        1e-3 + rng.f64() * 1e-3
+                    } else {
+                        1.0 + rng.f64()
+                    }
+                }
+            };
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * exact.len() as f64).ceil().max(1.0) as usize;
+            let want = exact[rank.min(exact.len()) - 1];
+            let got = h.percentile(p);
+            assert!(
+                got / want <= GROWTH + 1e-9 && want / got <= GROWTH + 1e-9,
+                "{dist}/p{p}: histogram {got} vs exact {want}"
+            );
+        }
+        assert_eq!(h.count() as usize, exact.len());
+        let exact_mean = exact.iter().sum::<f64>() / exact.len() as f64;
+        assert!((h.mean() - exact_mean).abs() < 1e-9, "mean drifted");
+        assert_eq!(h.min(), exact[0]);
+        assert_eq!(h.max(), *exact.last().unwrap());
+    }
+}
+
+/// fraction_below is consistent with the exact sample fraction to
+/// within one bucket of mass around the threshold.
+#[test]
+fn histogram_fraction_below_tracks_exact() {
+    let mut rng = Rng::new(9);
+    let mut h = LogHistogram::new();
+    let mut vals = Vec::new();
+    for _ in 0..4000 {
+        let v = rng.exponential(4.0).max(1e-5);
+        h.record(v);
+        vals.push(v);
+    }
+    for thr in [0.05, 0.25, 0.5, 1.0] {
+        let exact = vals.iter().filter(|&&v| v <= thr).count() as f64 / vals.len() as f64;
+        // widen the threshold by one bucket either way for the bound
+        let lo = vals.iter().filter(|&&v| v <= thr / GROWTH).count() as f64 / vals.len() as f64;
+        let hi = vals.iter().filter(|&&v| v <= thr * GROWTH).count() as f64 / vals.len() as f64;
+        let got = h.fraction_below(thr);
+        assert!(
+            (lo - 1e-12..=hi + 1e-12).contains(&got),
+            "thr {thr}: got {got}, exact {exact} (bounds {lo}..{hi})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// histogram: merge == concat
+// ---------------------------------------------------------------------
+
+#[test]
+fn histogram_merge_equals_concat() {
+    let mut rng = Rng::new(17);
+    // split one stream across 5 shards, merge them back
+    let mut shards: Vec<LogHistogram> = (0..5).map(|_| LogHistogram::new()).collect();
+    let mut whole = LogHistogram::new();
+    for i in 0..8000 {
+        let v = match i % 3 {
+            0 => rng.exponential(50.0),
+            1 => 0.1 + rng.f64(),
+            _ => 1e-7 * (1.0 + rng.f64()), // exercises underflow
+        };
+        whole.record(v);
+        shards[i % 5].record(v);
+    }
+    let mut merged = LogHistogram::new();
+    for s in &shards {
+        merged.merge(s);
+    }
+    assert_eq!(merged.count(), whole.count());
+    assert_eq!(merged.min(), whole.min());
+    assert_eq!(merged.max(), whole.max());
+    for p in [0.1, 1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+        assert_eq!(merged.percentile(p), whole.percentile(p), "p{p}");
+    }
+    for thr in [1e-6, 1e-2, 0.5, 2.0] {
+        assert_eq!(merged.fraction_below(thr), whole.fraction_below(thr), "thr {thr}");
+    }
+    assert!((merged.sum() - whole.sum()).abs() < 1e-6 * whole.sum().abs().max(1.0));
+}
+
+// ---------------------------------------------------------------------
+// trace: determinism + replay round-trip
+// ---------------------------------------------------------------------
+
+/// Acceptance pin: the same seed + trace spec produces the
+/// bit-identical trace, and a different seed does not.
+#[test]
+fn trace_generation_is_bit_identical_per_seed() {
+    let a = spec(42).generate();
+    let b = spec(42).generate();
+    assert_eq!(a, b, "same spec+seed must be bit-identical");
+    // f64 equality, not approximate: compare the raw bits too
+    for (x, y) in a.events.iter().zip(&b.events) {
+        assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+    }
+    let c = spec(43).generate();
+    assert_ne!(a, c, "different seeds must differ");
+    // all arrival processes are deterministic, not just bursty
+    for arrival in [
+        Arrival::Poisson { rate: 8.0 },
+        Arrival::Closed { concurrency: 4, think_s: 0.01 },
+    ] {
+        let s = TraceSpec { arrival, ..spec(7) };
+        assert_eq!(s.generate(), s.generate());
+    }
+}
+
+#[test]
+fn trace_jsonl_roundtrip() {
+    let t = spec(5).generate();
+    let text = t.to_jsonl();
+    assert_eq!(text.lines().count(), t.events.len());
+    let back = Trace::parse_jsonl(&text).unwrap();
+    assert_eq!(back.events, t.events, "JSONL round-trip must preserve the trace");
+    assert!(back.closed_loop.is_none());
+    // malformed inputs are rejected
+    assert!(Trace::parse_jsonl("").is_err());
+    assert!(Trace::parse_jsonl("{\"at_s\": \"soon\"}").is_err());
+    assert!(Trace::parse_jsonl("{\"prompt_tokens\": 4}").is_err()); // no at_s
+    // lengths are required and must be numeric and >= 1 — no silent
+    // defaulting of a foreign trace to a 1-token workload
+    assert!(Trace::parse_jsonl("{\"at_s\":0.5,\"prompt_tokens\":4}").is_err());
+    assert!(
+        Trace::parse_jsonl("{\"at_s\":0.5,\"prompt_tokens\":\"4\",\"max_new_tokens\":2}").is_err()
+    );
+    assert!(
+        Trace::parse_jsonl("{\"at_s\":0.5,\"prompt_tokens\":0,\"max_new_tokens\":2}").is_err()
+    );
+    // unsorted input comes back sorted
+    let shuffled = "{\"at_s\":2.0,\"prompt_tokens\":3,\"max_new_tokens\":4}\n\
+                    {\"at_s\":1.0,\"prompt_tokens\":5,\"max_new_tokens\":6}\n";
+    let s = Trace::parse_jsonl(shuffled).unwrap();
+    assert!(s.events[0].at_s < s.events[1].at_s);
+}
+
+#[test]
+fn trace_lengths_respect_caps() {
+    let t = spec(11).generate();
+    assert_eq!(t.events.len(), 300);
+    for ev in &t.events {
+        assert!((1..=224).contains(&ev.prompt_tokens));
+        assert!((1..=64).contains(&ev.max_new_tokens));
+        assert!(ev.at_s.is_finite() && ev.at_s >= 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Serving-under-load integration: the workload engine driving the
+//! real coordinator (live nano engine, artifacts-gated) and the
+//! virtual-time driver over the modeled paper-scale engine (ungated).
+
+use tpcc::coordinator::{spawn, CoordinatorOptions};
+use tpcc::interconnect::HwProfile;
+use tpcc::model::perf_model::LLAMA2_13B;
+use tpcc::model::weights::Weights;
+use tpcc::policy::PolicyTable;
+use tpcc::runtime::Runtime;
+use tpcc::tp::{EngineOptions, TpEngine};
+use tpcc::workload::{
+    drive, simulate, Arrival, DriveOptions, LenDist, ModeledEngine, SimOptions, TraceSpec,
+};
+
+fn have_artifacts() -> bool {
+    tpcc::artifacts_dir().join("manifest.json").exists()
+}
+
+/// Ungated: a bursty trace through the virtual-time driver against the
+/// modeled 13B/4xL4 engine — every request completes, percentiles are
+/// finite, queueing is visible.
+#[test]
+fn simulated_bursty_load_end_to_end() {
+    let profile = HwProfile::by_name("l4").unwrap();
+    let table = PolicyTable::uniform(LLAMA2_13B.n_layers, "fp4_e2m1_b32_e8m0");
+    let mut eng = ModeledEngine::new(LLAMA2_13B, profile, 4, &table).unwrap();
+    let trace = TraceSpec {
+        arrival: Arrival::Bursty { rate: 6.0, cv: 3.0 },
+        prompt_len: LenDist::LogNormal { median: 48.0, sigma: 1.0, cap: 224 },
+        output_len: LenDist::LogNormal { median: 16.0, sigma: 0.7, cap: 64 },
+        requests: 150,
+        seed: 23,
+    }
+    .generate();
+    let r = simulate(&trace, &mut eng, &SimOptions::default());
+    assert_eq!(r.completed, 150, "all requests must complete ({} failed)", r.failed);
+    assert_eq!(r.failed, 0);
+    for (name, h) in
+        [("ttft", &r.ttft), ("e2e", &r.e2e), ("queue_wait", &r.queue_wait)]
+    {
+        assert!(h.count() > 0, "{name} never recorded");
+        for p in [50.0, 95.0, 99.0] {
+            let v = h.percentile(p);
+            assert!(v.is_finite() && v >= 0.0, "{name} p{p} = {v}");
+        }
+    }
+    // invariants: e2e dominates ttft dominates queue wait (medians)
+    assert!(r.e2e.percentile(50.0) >= r.ttft.percentile(50.0));
+    assert!(r.ttft.percentile(50.0) > r.queue_wait.percentile(50.0));
+    assert!((0.0..=1.0).contains(&r.goodput()));
+    assert!(r.makespan_s >= trace.span_s());
+    assert!(r.tokens_out > 150, "decode produced tokens");
+}
+
+/// Ungated: the same simulated load publishes valid, finite workload
+/// metrics into a registry (what `tpcc load` serves on /metrics).
+#[test]
+fn simulated_report_publishes_metrics() {
+    let profile = HwProfile::by_name("l4").unwrap();
+    let table = PolicyTable::uniform(LLAMA2_13B.n_layers, "none");
+    let mut eng = ModeledEngine::new(LLAMA2_13B, profile, 4, &table).unwrap();
+    let trace = TraceSpec {
+        arrival: Arrival::Poisson { rate: 4.0 },
+        prompt_len: LenDist::Fixed(64),
+        output_len: LenDist::Fixed(8),
+        requests: 60,
+        seed: 5,
+    }
+    .generate();
+    let r = simulate(&trace, &mut eng, &SimOptions::default());
+    let reg = tpcc::metrics::Registry::default();
+    r.publish(&reg);
+    let body = reg.to_json().to_string();
+    let j = tpcc::util::json::Json::parse(&body).expect("metrics must stay valid JSON");
+    assert_eq!(j.get("workload_completed").unwrap().as_i64(), Some(60));
+    assert!(j.get("workload_ttft_p50_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("workload_ttft_p99_s").is_some());
+    let goodput = j.get("workload_goodput").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&goodput));
+}
+
+/// Artifacts-gated: a bursty trace end-to-end through the real
+/// coordinator + nano engine. All requests complete, percentiles are
+/// finite, and the coordinator's queue-wait histogram fills.
+#[test]
+fn live_bursty_trace_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (handle, join) = spawn(
+        move || {
+            let root = tpcc::artifacts_dir();
+            let rt = Runtime::load(&root)?;
+            let weights = Weights::load(&root.join("weights/nano"))?;
+            TpEngine::new(rt, &weights, EngineOptions::new("nano", 2).with_compress("fp4_e2m1_b32_e8m0"))
+        },
+        CoordinatorOptions::default(),
+    )
+    .unwrap();
+    // fast bursty arrivals so the test stays quick but still queues
+    let trace = TraceSpec {
+        arrival: Arrival::Bursty { rate: 40.0, cv: 3.0 },
+        prompt_len: LenDist::Uniform { lo: 8, hi: 48 },
+        output_len: LenDist::Fixed(6),
+        requests: 10,
+        seed: 77,
+    }
+    .generate();
+    let report = drive(&handle, &trace, &DriveOptions { slo_ttft_s: 30.0 });
+    assert_eq!(report.completed, 10, "{} failed", report.failed);
+    assert_eq!(report.failed, 0);
+    assert!(report.ttft.percentile(50.0).is_finite());
+    assert!(report.e2e.percentile(95.0).is_finite());
+    assert!(report.tpot.percentile(50.0).is_finite());
+    assert!(report.queue_wait.count() > 0, "queue wait never recorded");
+    // a 30s TTFT SLO on a 10-request nano run is always met
+    assert!((report.goodput() - 1.0).abs() < 1e-9, "goodput {}", report.goodput());
+    // the coordinator recorded queue waits into its own registry too
+    assert_eq!(handle.metrics.queue_wait.count(), 10);
+    let m = handle.metrics.to_json();
+    assert!(m.get("queue_wait_p50_s").unwrap().as_f64().is_some());
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap().unwrap();
+}
+
+/// Artifacts-gated: closed-loop driving keeps the pipeline full and
+/// completes everything.
+#[test]
+fn live_closed_loop_completes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (handle, join) = spawn(
+        move || {
+            let root = tpcc::artifacts_dir();
+            let rt = Runtime::load(&root)?;
+            let weights = Weights::load(&root.join("weights/nano"))?;
+            TpEngine::new(rt, &weights, EngineOptions::new("nano", 2))
+        },
+        CoordinatorOptions::default(),
+    )
+    .unwrap();
+    let trace = TraceSpec {
+        arrival: Arrival::Closed { concurrency: 4, think_s: 0.0 },
+        prompt_len: LenDist::Fixed(16),
+        output_len: LenDist::Fixed(4),
+        requests: 8,
+        seed: 3,
+    }
+    .generate();
+    let report = drive(&handle, &trace, &DriveOptions::default());
+    assert_eq!(report.completed, 8);
+    assert!(report.tokens_out >= 8 * 4);
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap().unwrap();
+}
