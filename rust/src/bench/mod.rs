@@ -2,6 +2,11 @@
 //! criterion). `cargo bench` targets use `harness = false` and call
 //! [`Bench::run`], which warms up, measures wall time per iteration with
 //! outlier-robust statistics, and prints aligned rows.
+//!
+//! [`rankpar`] is the `tpcc bench` subcommand: the tracked
+//! sequential-vs-parallel rank-runtime snapshot (`BENCH_rankpar.json`).
+
+pub mod rankpar;
 
 use std::time::Instant;
 

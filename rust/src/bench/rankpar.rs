@@ -1,0 +1,191 @@
+//! `tpcc bench` — rank-runtime perf snapshot: sequential vs parallel
+//! wall-clock TTFT per Table-3 live config, with a `--json` emitter so
+//! the repo tracks a bench trajectory (`BENCH_rankpar.json`).
+//!
+//! The measured quantity is the live engine's **prefill wall clock**
+//! (the `StepTiming::wall_s` of one bucket-shaped prefill on the micro
+//! model), the same pass Table 3's live section medians — the
+//! rank-thread runtime should push it toward `1/tp` of the sequential
+//! reference on a host with ≥ tp cores. Virtual-time TTFT is identical
+//! between the modes by construction (pinned by `tests/rank_parallel.rs`);
+//! this bench tracks the *real* speedup.
+
+use crate::model::weights::Weights;
+use crate::runtime::Runtime;
+use crate::tp::{BatchKv, EngineOptions, RankThreads, TpEngine};
+use crate::util::json::{self, Json};
+
+/// The scheme every config compresses with (the paper's headline pick).
+pub const SCHEME: &str = "fp4_e2m1_b32_e8m0";
+/// Model the live bench runs (micro: the Table-3 live stand-in).
+pub const MODEL: &str = "micro";
+
+/// Candidate (tp, batch, seq) prefill shapes — filtered against the
+/// manifest's exported buckets at run time.
+pub const CONFIGS: &[(usize, usize, usize)] = &[(2, 8, 128), (4, 8, 128), (8, 8, 128)];
+
+#[derive(Debug, Clone)]
+pub struct RankparRow {
+    pub tp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    /// worker threads the parallel leg used
+    pub workers: usize,
+    /// median sequential (`--rank-threads off`) prefill wall seconds
+    pub seq_wall_s: f64,
+    /// median parallel prefill wall seconds
+    pub par_wall_s: f64,
+    pub speedup: f64,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        // an even rep count must not bias the tracked snapshot upward
+        (xs[n / 2 - 1] + xs[n / 2]) / 2.0
+    }
+}
+
+fn build_engine(
+    root: &std::path::Path,
+    tp: usize,
+    rt_knob: RankThreads,
+) -> anyhow::Result<TpEngine> {
+    let rt = Runtime::load(root)?;
+    let weights = Weights::load(&root.join("weights").join(MODEL))?;
+    let opts = EngineOptions::new(MODEL, tp)
+        .with_compress(SCHEME)
+        .with_profile("l4")
+        .with_rank_threads(rt_knob);
+    TpEngine::new(rt, &weights, opts)
+}
+
+fn measure(eng: &mut TpEngine, batch: usize, seq: usize, reps: usize) -> anyhow::Result<f64> {
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i * 31 + 7) as i32 % 256).collect();
+    let pos = vec![0i32; batch];
+    let mut kv = BatchKv::new(&eng.cfg.clone(), eng.opts.tp, batch);
+    // one warmup pass compiles the executables off the clock
+    let _ = eng.prefill(&tokens, batch, seq, &pos, Some(&mut kv))?;
+    let mut walls = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let (_, t) = eng.prefill(&tokens, batch, seq, &pos, Some(&mut kv))?;
+        walls.push(t.wall_s);
+    }
+    Ok(median(walls))
+}
+
+/// Run the sequential-vs-parallel sweep. `rank_threads` picks the
+/// parallel leg's worker policy (`auto` by default); configs whose
+/// stage programs are not in the manifest are skipped.
+pub fn run(reps: usize, rank_threads: RankThreads) -> anyhow::Result<Vec<RankparRow>> {
+    let root = crate::tables::common::artifacts_root()?;
+    let probe = Runtime::load(&root)?;
+    let mut rows = Vec::new();
+    for &(tp, batch, seq) in CONFIGS {
+        let name = format!("{MODEL}/attn_prefill_tp{tp}_b{batch}_s{seq}");
+        if probe.manifest.by_name(&name).is_none() {
+            continue;
+        }
+        let mut seq_eng = build_engine(&root, tp, RankThreads::Off)?;
+        let seq_wall_s = measure(&mut seq_eng, batch, seq, reps)?;
+        drop(seq_eng);
+        let mut par_eng = build_engine(&root, tp, rank_threads)?;
+        let workers = par_eng.rank_workers();
+        let par_wall_s = measure(&mut par_eng, batch, seq, reps)?;
+        rows.push(RankparRow {
+            tp,
+            batch,
+            seq,
+            workers,
+            seq_wall_s,
+            par_wall_s,
+            speedup: seq_wall_s / par_wall_s,
+        });
+    }
+    anyhow::ensure!(!rows.is_empty(), "no bench config matches the exported buckets");
+    Ok(rows)
+}
+
+pub fn print(rows: &[RankparRow]) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("\nrankpar bench — {MODEL} + {SCHEME}, seq vs --rank-threads ({cores} cores)");
+    println!(
+        "{:<8} {:>8} {:>9} {:>14} {:>14} {:>9}",
+        "tp", "input", "workers", "seq wall", "par wall", "speedup"
+    );
+    println!("{}", "-".repeat(68));
+    for r in rows {
+        println!(
+            "{:<8} {:>8} {:>9} {:>13.1}ms {:>13.1}ms {:>8.2}x",
+            r.tp,
+            format!("{}x{}", r.batch, r.seq),
+            r.workers,
+            r.seq_wall_s * 1e3,
+            r.par_wall_s * 1e3,
+            r.speedup
+        );
+    }
+}
+
+/// The tracked `BENCH_rankpar.json` snapshot.
+pub fn to_json(rows: &[RankparRow], reps: usize) -> Json {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("tp", json::num(r.tp as f64)),
+                ("batch", json::num(r.batch as f64)),
+                ("seq", json::num(r.seq as f64)),
+                ("workers", json::num(r.workers as f64)),
+                ("seq_wall_s", json::num_or_null(r.seq_wall_s)),
+                ("par_wall_s", json::num_or_null(r.par_wall_s)),
+                ("speedup", json::num_or_null(r.speedup)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("bench", json::s("rankpar")),
+        ("model", json::s(MODEL)),
+        ("scheme", json::s(SCHEME)),
+        ("metric", json::s("median live prefill wall seconds (TTFT compute+collective)")),
+        ("status", json::s("measured")),
+        ("host_cores", json::num(cores as f64)),
+        ("reps", json::num(reps as f64)),
+        ("rows", json::arr(row_objs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_of_odd_and_even() {
+        assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(vec![4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let rows = vec![RankparRow {
+            tp: 4,
+            batch: 8,
+            seq: 128,
+            workers: 4,
+            seq_wall_s: 0.4,
+            par_wall_s: 0.1,
+            speedup: 4.0,
+        }];
+        let j = to_json(&rows, 5);
+        // round-trips as valid JSON with the tracked fields present
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("rankpar"));
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        let row = parsed.get("rows").unwrap().idx(0).unwrap();
+        assert_eq!(row.get("speedup").unwrap().as_f64(), Some(4.0));
+    }
+}

@@ -5,7 +5,10 @@
 //! engine loop on a dedicated thread (the `xla` client is not `Send`);
 //! front ends (HTTP server, trace replayer, examples) submit
 //! [`GenRequest`]s over a channel and receive [`GenResponse`]s on a
-//! per-request reply channel.
+//! per-request reply channel. Under `--rank-threads` the engine itself
+//! fans each forward out to its per-rank worker pool; the pool is
+//! spawned by the engine builder on this thread and joined when the
+//! coordinator's engine drops at loop exit (clean shutdown).
 
 pub mod sampler;
 pub mod scheduler;
@@ -97,6 +100,20 @@ impl CoordinatorHandle {
 
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// A handle with no engine behind it: `/healthz` and `/metrics`
+    /// serve (fresh registry), `/generate` answers 500. Lets front-end
+    /// tests exercise the HTTP substrate (connection pool, shedding)
+    /// without AOT artifacts.
+    pub fn detached() -> CoordinatorHandle {
+        let (tx, _) = channel();
+        CoordinatorHandle {
+            tx,
+            metrics: Arc::new(Registry::default()),
+            policy_json: Arc::new("{}".to_string()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
     }
 }
 
@@ -317,6 +334,11 @@ impl Coordinator {
         // per-site-group policy counters (engine-side rollups mirrored
         // into the registry so `/metrics` exposes where the bytes go)
         for (key, v) in self.eng.policy_metrics() {
+            self.metrics.set(&key, v);
+        }
+        // per-rank compute/codec utilization gauges (real concurrent
+        // busy time under the rank-thread runtime)
+        for (key, v) in self.eng.rank_metrics() {
             self.metrics.set(&key, v);
         }
         // per-algorithm collective counter (engine-side total mirrored

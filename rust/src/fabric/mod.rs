@@ -1,0 +1,322 @@
+//! Shared-memory collective fabric for the rank-thread runtime.
+//!
+//! The parallel TP engine runs one OS thread per worker, each executing
+//! the stage programs of the ranks it owns. Between stages the workers
+//! meet at this fabric: a poisonable generation-counted **barrier** plus
+//! a set of **rendezvous slots** (one per rank) through which they
+//! publish their partial activations. `exchange` is the all-gather
+//! primitive: deposit the payloads for your owned ranks, wait for every
+//! participant, read back clones of *all* slots in rank order, and wait
+//! again so no fast participant can overwrite a slot before a slow one
+//! has read it.
+//!
+//! Payloads are generic (`T: Clone`); the engine exchanges `Arc`-backed
+//! activation buffers so the clone in the gather step is a refcount
+//! bump, not a copy — workers share one address space, which is exactly
+//! the fidelity the virtual-time link model is layered on top of.
+//!
+//! Error discipline: a worker that fails mid-forward calls [`Fabric::poison`]
+//! before replying, so peers blocked at a barrier wake with
+//! [`FabricPoisoned`] instead of deadlocking. The orchestrator calls
+//! [`Fabric::reset`] once every worker has replied (i.e. no thread is
+//! inside a fabric call) to arm the next forward.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Error returned by fabric operations after [`Fabric::poison`]: the
+/// message names the failure of the worker that poisoned it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricPoisoned(pub String);
+
+impl std::fmt::Display for FabricPoisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fabric poisoned: {}", self.0)
+    }
+}
+
+impl std::error::Error for FabricPoisoned {}
+
+struct Inner<T> {
+    /// participants currently waiting at the barrier
+    arrived: usize,
+    /// bumped every time a barrier releases (sense-reversal)
+    generation: u64,
+    poisoned: Option<String>,
+    /// rendezvous slots, one per rank
+    slots: Vec<Option<T>>,
+}
+
+/// Barrier + rendezvous slots shared by the rank workers of one engine.
+///
+/// `world` is the number of *participants* (worker threads); the slot
+/// count is the number of *ranks* — with rank multiplexing (`tp` ranks
+/// on fewer threads) the two differ, and each participant deposits one
+/// payload per rank it owns.
+pub struct Fabric<T> {
+    world: usize,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T: Clone> Fabric<T> {
+    /// A fabric for `world` participants exchanging over `slots` ranks.
+    pub fn new(world: usize, slots: usize) -> Fabric<T> {
+        assert!(world >= 1, "fabric needs at least one participant");
+        Fabric {
+            world,
+            inner: Mutex::new(Inner {
+                arrived: 0,
+                generation: 0,
+                poisoned: None,
+                slots: (0..slots).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Number of barrier participants.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Number of rendezvous slots (ranks).
+    pub fn slot_count(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    fn err(msg: &str) -> FabricPoisoned {
+        FabricPoisoned(msg.to_string())
+    }
+
+    /// Block until every participant has arrived (or the fabric is
+    /// poisoned). Reusable: each release bumps the generation.
+    pub fn barrier(&self) -> Result<(), FabricPoisoned> {
+        let g = self.inner.lock().unwrap();
+        self.barrier_locked(g, false)
+    }
+
+    /// `clear_slots`: the last arriver empties the rendezvous slots
+    /// before releasing — used by [`Fabric::exchange`]'s trailing
+    /// barrier so the missing-deposit guard stays live on *every*
+    /// round, not just the first (every participant has already read
+    /// its clones by the time it arrives here).
+    fn barrier_locked(
+        &self,
+        mut g: MutexGuard<'_, Inner<T>>,
+        clear_slots: bool,
+    ) -> Result<(), FabricPoisoned> {
+        if let Some(m) = &g.poisoned {
+            return Err(Self::err(m));
+        }
+        g.arrived += 1;
+        if g.arrived == self.world {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            if clear_slots {
+                for s in g.slots.iter_mut() {
+                    *s = None;
+                }
+            }
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = g.generation;
+        while g.generation == gen && g.poisoned.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        match &g.poisoned {
+            Some(m) => Err(Self::err(m)),
+            None => Ok(()),
+        }
+    }
+
+    /// Rendezvous all-gather: deposit `(slot, payload)` for every rank
+    /// this participant owns, synchronize, and return clones of all
+    /// slots in rank order. The trailing barrier guarantees every
+    /// participant has read the slots before any of them can deposit
+    /// the next round's payloads.
+    pub fn exchange(&self, posts: Vec<(usize, T)>) -> Result<Vec<T>, FabricPoisoned> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(m) = &g.poisoned {
+                return Err(Self::err(m));
+            }
+            for (slot, v) in posts {
+                g.slots[slot] = Some(v);
+            }
+        }
+        self.barrier()?;
+        let gathered = {
+            let g = self.inner.lock().unwrap();
+            if let Some(m) = &g.poisoned {
+                return Err(Self::err(m));
+            }
+            let mut out = Vec::with_capacity(g.slots.len());
+            for (i, s) in g.slots.iter().enumerate() {
+                match s {
+                    Some(v) => out.push(v.clone()),
+                    None => return Err(Self::err(&format!("slot {i} never deposited"))),
+                }
+            }
+            out
+        };
+        {
+            let g = self.inner.lock().unwrap();
+            self.barrier_locked(g, true)?;
+        }
+        Ok(gathered)
+    }
+
+    /// Mark the fabric failed: every blocked or future fabric call
+    /// returns [`FabricPoisoned`] until [`Fabric::reset`]. The first
+    /// poisoner's message wins (later ones would describe knock-on
+    /// failures).
+    pub fn poison(&self, msg: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned.is_none() {
+            g.poisoned = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    /// Re-arm after a failed round. Only sound once no participant is
+    /// inside a fabric call (the orchestrator calls this after every
+    /// worker has replied for the round).
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.arrived = 0;
+        g.generation = g.generation.wrapping_add(1);
+        g.poisoned = None;
+        for s in g.slots.iter_mut() {
+            *s = None;
+        }
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Contiguous rank assignment: worker `w` of `workers` owns its
+    /// share of `ranks` (used by the engine's pool and these tests).
+    fn owned(ranks: usize, workers: usize, w: usize) -> Vec<usize> {
+        let base = ranks / workers;
+        let rem = ranks % workers;
+        let start = w * base + w.min(rem);
+        let n = base + usize::from(w < rem);
+        (start..start + n).collect()
+    }
+
+    #[test]
+    fn single_participant_exchange_is_identity() {
+        let f: Fabric<u64> = Fabric::new(1, 3);
+        let out = f.exchange(vec![(0, 10), (1, 11), (2, 12)]).unwrap();
+        assert_eq!(out, vec![10, 11, 12]);
+        // slots are reusable round after round
+        let out = f.exchange(vec![(0, 20), (1, 21), (2, 22)]).unwrap();
+        assert_eq!(out, vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn exchange_gathers_all_ranks_across_thread_counts() {
+        // stress the barrier + rendezvous across worker counts and
+        // multiplexing shapes, many rounds each
+        for (workers, ranks) in [(1usize, 4usize), (2, 2), (2, 4), (3, 8), (4, 4), (8, 8), (16, 16)]
+        {
+            let f: Arc<Fabric<u64>> = Arc::new(Fabric::new(workers, ranks));
+            let rounds = 50;
+            let joins: Vec<_> = (0..workers)
+                .map(|w| {
+                    let f = f.clone();
+                    std::thread::spawn(move || {
+                        for round in 0..rounds {
+                            let posts: Vec<(usize, u64)> = owned(ranks, workers, w)
+                                .into_iter()
+                                .map(|r| (r, (round * 1000 + r) as u64))
+                                .collect();
+                            let got = f.exchange(posts).unwrap();
+                            let want: Vec<u64> =
+                                (0..ranks).map(|r| (round * 1000 + r) as u64).collect();
+                            assert_eq!(got, want, "workers={workers} round={round}");
+                        }
+                    })
+                })
+                .collect();
+            for j in joins {
+                j.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn every_rank_owned_exactly_once() {
+        for workers in 1..=8 {
+            for ranks in workers..=16 {
+                let mut seen = vec![0usize; ranks];
+                for w in 0..workers {
+                    for r in owned(ranks, workers, w) {
+                        seen[r] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "workers={workers} ranks={ranks}");
+            }
+        }
+    }
+
+    #[test]
+    fn poison_unblocks_waiters_and_reset_revives() {
+        let f: Arc<Fabric<u64>> = Arc::new(Fabric::new(2, 2));
+        let f2 = f.clone();
+        let waiter = std::thread::spawn(move || f2.barrier());
+        // give the waiter time to block, then poison instead of joining
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.poison("peer failed");
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("peer failed"), "{err}");
+        // poisoned fabric rejects new calls ...
+        assert!(f.barrier().is_err());
+        assert!(f.exchange(vec![(0, 1)]).is_err());
+        // ... until reset re-arms it
+        f.reset();
+        let f3 = f.clone();
+        let a = std::thread::spawn(move || f3.exchange(vec![(0, 7)]));
+        let b = f.exchange(vec![(1, 9)]).unwrap();
+        assert_eq!(b, vec![7, 9]);
+        assert_eq!(a.join().unwrap().unwrap(), vec![7, 9]);
+    }
+
+    #[test]
+    fn missing_deposit_is_an_error_not_a_hang() {
+        // one participant, two slots, only one deposited
+        let f: Fabric<u64> = Fabric::new(1, 2);
+        let err = f.exchange(vec![(0, 1)]).unwrap_err();
+        assert!(err.to_string().contains("slot 1"), "{err}");
+    }
+
+    #[test]
+    fn slots_clear_between_rounds_so_the_guard_stays_live() {
+        let f: Fabric<u64> = Fabric::new(1, 2);
+        assert_eq!(f.exchange(vec![(0, 1), (1, 2)]).unwrap(), vec![1, 2]);
+        // a later round that misses a deposit must error, not silently
+        // hand back round 1's stale payload
+        let err = f.exchange(vec![(0, 3)]).unwrap_err();
+        assert!(err.to_string().contains("slot 1"), "{err}");
+    }
+
+    #[test]
+    fn arc_payloads_share_not_copy() {
+        let f: Arc<Fabric<Arc<Vec<f32>>>> = Arc::new(Fabric::new(2, 2));
+        let f2 = f.clone();
+        let payload = Arc::new(vec![1.0f32; 1024]);
+        let p2 = payload.clone();
+        let t = std::thread::spawn(move || f2.exchange(vec![(1, p2)]).unwrap());
+        let got = f.exchange(vec![(0, payload.clone())]).unwrap();
+        let other = t.join().unwrap();
+        // both participants see the same allocation, not a copy
+        assert!(Arc::ptr_eq(&got[0], &payload));
+        assert!(Arc::ptr_eq(&got[0], &other[0]));
+        assert_eq!(other[1].len(), 1024);
+    }
+}

@@ -9,8 +9,14 @@
 //!
 //! Layer map (DESIGN.md):
 //! * [`runtime`]    — PJRT CPU client, manifest-driven artifact loading.
-//! * [`tp`]         — TP worker group executing per-shard stage programs;
-//!                    threads the collective plan + per-algo telemetry.
+//! * [`tp`]         — TP engine: a rank-thread runtime (one worker per
+//!                    rank, each owning its own PJRT client and shard)
+//!                    with a sequential reference path behind
+//!                    `--rank-threads off`; threads the collective plan
+//!                    + per-algo telemetry.
+//! * [`fabric`]     — shared-memory collective fabric: poisonable
+//!                    barrier + rendezvous shard-exchange slots the
+//!                    rank workers meet at between stages.
 //! * [`collective`] — topology-aware collective engine: algorithm menu
 //!                    (flat ring, recursive doubling, two-shot,
 //!                    hierarchical) behind one trait, two-level
@@ -43,6 +49,7 @@ pub mod bench;
 pub mod collective;
 pub mod coordinator;
 pub mod eval;
+pub mod fabric;
 pub mod interconnect;
 pub mod metrics;
 pub mod model;

@@ -9,18 +9,23 @@
 //!   table6  (selective-compression ablation: uniform vs paper vs auto)
 //!   table7  (serving under load: capacity at a TTFT SLO per policy)
 //!   load    --model micro --tp 2 --arrival poisson:4 --requests 32 [--policy ...]
+//!   bench   (rank-runtime perf snapshot; --json BENCH_rankpar.json)
 //!   info    (artifact + model inventory)
 //!
 //! `--policy` selects per-site compression (see `rust/src/policy/`):
 //! `uniform:<scheme>`, `paper`, `auto[:budget_pct]`, or a rule string
 //! such as `"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0]=none;decode=none"`.
+//!
+//! `--rank-threads off|auto|N` selects the execution core: worker
+//! threads per TP rank (the default, `auto`) or the sequential
+//! reference path (`off`). `RANK_THREADS` sets the session default.
 
 use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest, Sampling};
 use tpcc::model::weights::Weights;
 use tpcc::runtime::Runtime;
 use tpcc::server::Server;
 use tpcc::tables::{common, table1, table2, table3, table4, table5, table6, table7};
-use tpcc::tp::{EngineOptions, TpEngine};
+use tpcc::tp::{EngineOptions, RankThreads, TpEngine};
 use tpcc::util::cli::Args;
 use tpcc::workload::{self, Arrival, DriveOptions, LenDist, LoadShape, SloSpec, Trace, TraceSpec};
 
@@ -31,6 +36,15 @@ fn main() {
     }
 }
 
+/// Resolve `--rank-threads` (falling back to the `RANK_THREADS` env
+/// default baked into [`EngineOptions::new`]).
+fn rank_threads_arg(args: &Args) -> anyhow::Result<RankThreads> {
+    match args.get("rank-threads") {
+        Some(v) => RankThreads::parse(v),
+        None => Ok(RankThreads::from_env()),
+    }
+}
+
 fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let model = args.get_or("model", "micro").to_string();
     let tp = args.get_usize("tp", 2);
@@ -38,6 +52,7 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let policy = args.get_or("policy", "").to_string();
     let profile = args.get_or("profile", "cpu").to_string();
     let algo = args.get_or("algo", "auto").to_string();
+    let rank_threads = rank_threads_arg(args)?;
     let root = common::artifacts_root()?;
     let rt = Runtime::load(&root)?;
     let weights = Weights::load(&root.join("weights").join(&model))?;
@@ -45,7 +60,8 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
         .with_compress(&compress)
         .with_policy(&policy)
         .with_profile(&profile)
-        .with_algo(&algo);
+        .with_algo(&algo)
+        .with_rank_threads(rank_threads);
     TpEngine::new(rt, &weights, opts)
 }
 
@@ -61,6 +77,7 @@ fn run() -> anyhow::Result<()> {
             let policy = args.get_or("policy", "").to_string();
             let profile = args.get_or("profile", "cpu").to_string();
             let algo = args.get_or("algo", "auto").to_string();
+            let rank_threads = rank_threads_arg(&args)?;
             let copts = CoordinatorOptions {
                 decode_batch: args.get_usize("decode-batch", 8),
                 sampling: if args.has("greedy") {
@@ -82,7 +99,8 @@ fn run() -> anyhow::Result<()> {
                             .with_compress(&compress)
                             .with_policy(&policy)
                             .with_profile(&profile)
-                            .with_algo(&algo),
+                            .with_algo(&algo)
+                            .with_rank_threads(rank_threads),
                     )
                 },
                 copts,
@@ -243,6 +261,27 @@ fn run() -> anyhow::Result<()> {
             table7::print(&rows, &cfg);
             Ok(())
         }
+        "bench" => {
+            // rank-runtime perf snapshot: sequential vs parallel
+            // wall-clock TTFT per live config; --json writes the
+            // tracked BENCH_rankpar.json trajectory file. The parallel
+            // leg defaults to `auto` regardless of RANK_THREADS — the
+            // bench exists to compare against the sequential baseline.
+            let reps = args.get_usize("reps", 5);
+            let rank_threads = match args.get("rank-threads") {
+                Some(v) => RankThreads::parse(v)?,
+                None => RankThreads::Auto,
+            };
+            let rows = tpcc::bench::rankpar::run(reps, rank_threads)?;
+            tpcc::bench::rankpar::print(&rows);
+            if let Some(path) = args.get("json") {
+                let mut body = tpcc::bench::rankpar::to_json(&rows, reps).to_string();
+                body.push('\n');
+                std::fs::write(path, body)?;
+                println!("snapshot written to {path}");
+            }
+            Ok(())
+        }
         "info" => {
             let root = common::artifacts_root()?;
             let rt = Runtime::load(&root)?;
@@ -267,11 +306,13 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | load | table1..table7 | info\n\
+                 commands: serve | gen | eval | load | bench | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
                                --algo auto|ring|recursive_doubling|two_shot|hierarchical\n\
+                               --rank-threads off|auto|N (per-rank worker threads; off = sequential)\n\
+                 bench flags:  --reps N --json BENCH_rankpar.json\n\
                  policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"\n\
                  load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\
                                --prompt-len sharegpt|N|uniform:LO:HI|lognormal:MED:SIG[:CAP]\n\

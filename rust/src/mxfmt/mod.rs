@@ -157,3 +157,25 @@ pub fn compressor_from_spec_ch(
 pub fn compressor_from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
     compressor_from_spec_ch(spec, 0)
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    /// The rank-thread runtime shares compressor *specs* (not objects)
+    /// with its workers, but every codec must still be `Send + Sync`:
+    /// the trait requires it, and this pins the concrete types so a new
+    /// codec with interior mutability (e.g. a non-synchronized scratch
+    /// cache) fails to compile rather than failing under concurrency.
+    #[test]
+    fn compressors_are_send_sync() {
+        assert_send_sync::<NoCompress>();
+        assert_send_sync::<MxCodec>();
+        assert_send_sync::<ChannelInt>();
+        assert_send_sync::<TopK>();
+        assert_send_sync::<baselines::Fp16>();
+        assert_send_sync::<Box<dyn Compressor>>();
+    }
+}

@@ -44,6 +44,14 @@ impl Runtime {
         })
     }
 
+    /// The artifacts directory this runtime was loaded from. The
+    /// rank-thread runtime uses this to construct each worker's own
+    /// `Runtime` (the PJRT client is not `Send`, so every thread builds
+    /// its own from the same root).
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+
     /// Fetch (compiling if needed) the executable for a manifest entry.
     pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
         if let Some(e) = self.cache.borrow().get(name) {

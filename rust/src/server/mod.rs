@@ -6,54 +6,199 @@
 //!   GET  /metrics   -> JSON snapshot of the registry
 //!   GET  /policy    -> JSON of the engine's per-site compression policy
 //!   GET  /healthz
+//!
+//! Connections are served by a **fixed worker pool** over a bounded
+//! pending queue, not thread-per-connection: a burst can never spawn an
+//! unbounded number of OS threads. When the queue is full the accept
+//! loop answers `503 Service Unavailable` immediately instead of
+//! letting the backlog grow without limit — every connection gets an
+//! HTTP answer, bounded by `workers + backlog` in-flight at once
+//! (pinned by `tests/server_pool.rs`).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{CoordinatorHandle, GenRequest};
 use crate::util::json::{self, Json};
 
+/// Observable pool behaviour (tests assert the cap holds under burst).
+#[derive(Default)]
+pub struct PoolStats {
+    active: AtomicUsize,
+    /// high-watermark of concurrently-handling workers
+    peak_active: AtomicUsize,
+    /// connections answered by a worker
+    served: AtomicUsize,
+    /// connections answered 503 because the pending queue was full
+    shed: AtomicUsize,
+}
+
+impl PoolStats {
+    pub fn peak_active(&self) -> usize {
+        self.peak_active.load(Ordering::SeqCst)
+    }
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::SeqCst)
+    }
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::SeqCst)
+    }
+
+    fn enter(&self) {
+        let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_active.fetch_max(now, Ordering::SeqCst);
+    }
+    fn exit(&self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.served.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
 pub struct Server {
     listener: TcpListener,
     handle: CoordinatorHandle,
+    workers: usize,
+    backlog: usize,
+    stats: Arc<PoolStats>,
 }
+
+/// Default worker-pool size: enough for the single-engine coordinator
+/// behind it (requests serialize on the engine anyway) plus headroom
+/// for the cheap read-only endpoints.
+pub const DEFAULT_WORKERS: usize = 8;
+/// Default bound on queued-but-unhandled connections before shedding.
+pub const DEFAULT_BACKLOG: usize = 64;
+/// Per-connection socket I/O timeout. A fixed pool turns a client that
+/// connects and sends nothing into a wedged worker; with the timeout
+/// the read errors out and the worker moves on (the old
+/// thread-per-connection model merely leaked the thread). Generous
+/// enough for slow clients — engine *compute* between read and write
+/// is not bounded by this.
+pub const CLIENT_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 
 impl Server {
     pub fn bind(addr: &str, handle: CoordinatorHandle) -> anyhow::Result<Server> {
-        Ok(Server { listener: TcpListener::bind(addr)?, handle })
+        Ok(Server {
+            listener: TcpListener::bind(addr)?,
+            handle,
+            workers: DEFAULT_WORKERS,
+            backlog: DEFAULT_BACKLOG,
+            stats: Arc::new(PoolStats::default()),
+        })
+    }
+
+    /// Override the worker-pool size and pending-connection cap.
+    pub fn with_pool(mut self, workers: usize, backlog: usize) -> Server {
+        self.workers = workers.max(1);
+        self.backlog = backlog.max(1);
+        self
+    }
+
+    /// Pool observability handle (live counters; cloneable before
+    /// `serve_*` consumes the server).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.stats.clone()
     }
 
     pub fn local_addr(&self) -> anyhow::Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Serve until the process exits (thread-per-connection).
+    fn spawn_workers(
+        &self,
+        rx: Arc<Mutex<Receiver<TcpStream>>>,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        (0..self.workers)
+            .map(|i| {
+                let rx = rx.clone();
+                let handle = self.handle.clone();
+                let stats = self.stats.clone();
+                std::thread::Builder::new()
+                    .name(format!("tpcc-http{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only to dequeue, never while
+                        // handling, or the pool would serialize; a
+                        // poisoned lock (panicking peer) must not
+                        // cascade through the whole pool
+                        let stream = {
+                            let guard =
+                                rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                            match guard.recv() {
+                                Ok(s) => s,
+                                Err(_) => break,
+                            }
+                        };
+                        // a silent client must not wedge a pool worker
+                        let _ = stream.set_read_timeout(Some(CLIENT_IO_TIMEOUT));
+                        let _ = stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT));
+                        stats.enter();
+                        // a handler panic costs this connection, not the
+                        // worker (thread-per-connection parity)
+                        let handle = handle.clone();
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            move || {
+                                let _ = handle_conn(stream, handle);
+                            },
+                        ));
+                        stats.exit();
+                    })
+                    .expect("spawn http worker")
+            })
+            .collect()
+    }
+
+    /// Dispatch one accepted connection: queue it for a worker, or shed
+    /// it with a 503 when the pending queue is full.
+    fn dispatch(
+        stream: TcpStream,
+        tx: &std::sync::mpsc::SyncSender<TcpStream>,
+        stats: &PoolStats,
+    ) {
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(mut stream)) => {
+                stats.shed.fetch_add(1, Ordering::SeqCst);
+                let _ = respond(&mut stream, 503, r#"{"error":"server overloaded"}"#);
+            }
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Serve until the process exits (fixed worker pool).
     pub fn serve_forever(self) -> anyhow::Result<()> {
+        let (tx, rx) = sync_channel::<TcpStream>(self.backlog);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = self.spawn_workers(rx);
         for stream in self.listener.incoming() {
             let stream = match stream {
                 Ok(s) => s,
                 Err(_) => continue,
             };
-            let handle = self.handle.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, handle);
-            });
+            Self::dispatch(stream, &tx, &self.stats);
+        }
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
         }
         Ok(())
     }
 
-    /// Serve exactly `n` connections (tests / bounded demos).
+    /// Accept exactly `n` connections (tests / bounded demos), then
+    /// drain the pool and join the workers.
     pub fn serve_n(self, n: usize) -> anyhow::Result<()> {
-        let mut joins = Vec::new();
+        let (tx, rx) = sync_channel::<TcpStream>(self.backlog);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = self.spawn_workers(rx);
         for stream in self.listener.incoming().take(n) {
             let stream = stream?;
-            let handle = self.handle.clone();
-            joins.push(std::thread::spawn(move || {
-                let _ = handle_conn(stream, handle);
-            }));
+            Self::dispatch(stream, &tx, &self.stats);
         }
-        for j in joins {
-            let _ = j.join();
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
         }
         Ok(())
     }
@@ -101,6 +246,7 @@ fn respond(stream: &mut TcpStream, status: u32, body: &str) -> anyhow::Result<()
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
     write!(

@@ -1,61 +1,58 @@
-//! Batched KV cache owned by the coordinator.
+//! Batched KV cache owned by the coordinator, sharded per TP rank.
 //!
 //! The authoritative cache lives here as contiguous `[B, Hn, T, hd]` f32
 //! buffers per (rank, layer) — exactly the literal layout the decode
 //! attention stage expects, so handing it to PJRT is a single memcpy.
 //! Stage programs only *output* the new-token slices; `write_slices`
 //! mirrors the HLO-side `dynamic_update_slice` on the rust side.
+//!
+//! Each rank's buffers sit behind their own `Arc<Mutex<KvShard>>` so the
+//! rank-thread runtime can hand rank `r`'s shard to the worker that owns
+//! rank `r` ([`BatchKv::shard_handle`]) while the coordinator keeps the
+//! whole-cache view for slot management. Access never contends: during a
+//! forward only the owning worker touches a shard, and the coordinator's
+//! slot operations (`adopt_slot`, `clear_slot`) run between forwards.
+
+use std::sync::{Arc, Mutex};
 
 use crate::model::ModelConfig;
 use crate::runtime::lit_f32;
 
-pub struct BatchKv {
-    /// [rank][layer] -> contiguous [B, Hn, T, hd]
-    k: Vec<Vec<Vec<f32>>>,
-    v: Vec<Vec<Vec<f32>>>,
-    pub batch: usize,
-    pub heads: usize, // per-rank heads (Hn)
-    pub cap: usize,   // T
-    pub head_dim: usize,
+/// One rank's KV cache: per-layer contiguous `[B, Hn, T, hd]` buffers.
+pub struct KvShard {
+    /// [layer] -> contiguous [B, Hn, T, hd]
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    batch: usize,
+    heads: usize, // per-rank heads (Hn)
+    cap: usize,   // T
+    head_dim: usize,
 }
 
-impl BatchKv {
-    pub fn new(cfg: &ModelConfig, tp: usize, batch: usize) -> BatchKv {
-        let hn = cfg.shard_heads(tp);
-        let size = batch * hn * cfg.max_seq * cfg.head_dim;
-        let mk = || {
-            (0..cfg.n_layers)
-                .map(|_| vec![0.0f32; size])
-                .collect::<Vec<_>>()
-        };
-        BatchKv {
-            k: (0..tp).map(|_| mk()).collect(),
-            v: (0..tp).map(|_| mk()).collect(),
+/// Cloneable handle to one rank's shard (what a rank worker receives).
+pub type KvShardRef = Arc<Mutex<KvShard>>;
+
+impl KvShard {
+    fn new(n_layers: usize, batch: usize, heads: usize, cap: usize, head_dim: usize) -> KvShard {
+        let size = batch * heads * cap * head_dim;
+        KvShard {
+            k: (0..n_layers).map(|_| vec![0.0f32; size]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0f32; size]).collect(),
             batch,
-            heads: hn,
-            cap: cfg.max_seq,
-            head_dim: cfg.head_dim,
+            heads,
+            cap,
+            head_dim,
         }
     }
 
-    /// Bytes held by this cache (both K and V, all ranks/layers).
-    pub fn bytes(&self) -> usize {
-        let per: usize = self.k.iter().flat_map(|l| l.iter()).map(|b| b.len() * 4).sum();
-        per * 2
+    fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
     }
 
     /// Write the new-token K/V slices returned by an attention stage.
     /// `ks`/`vs` are `[B, Hn, S, hd]` row-major; row `b`'s tokens land at
     /// positions `pos[b] .. pos[b]+s` of its cache slot.
-    pub fn write_slices(
-        &mut self,
-        rank: usize,
-        layer: usize,
-        s: usize,
-        pos: &[i32],
-        ks: &[f32],
-        vs: &[f32],
-    ) {
+    pub fn write_slices(&mut self, layer: usize, s: usize, pos: &[i32], ks: &[f32], vs: &[f32]) {
         let (bn, hn, t, hd) = (self.batch, self.heads, self.cap, self.head_dim);
         debug_assert_eq!(ks.len(), bn * hn * s * hd);
         for b in 0..bn {
@@ -65,12 +62,102 @@ impl BatchKv {
             for h in 0..hn {
                 let src_base = (b * hn + h) * s * hd;
                 let dst_base = ((b * hn + h) * t + p) * hd;
-                let kdst = &mut self.k[rank][layer][dst_base..dst_base + copy_s * hd];
+                let kdst = &mut self.k[layer][dst_base..dst_base + copy_s * hd];
                 kdst.copy_from_slice(&ks[src_base..src_base + copy_s * hd]);
-                let vdst = &mut self.v[rank][layer][dst_base..dst_base + copy_s * hd];
+                let vdst = &mut self.v[layer][dst_base..dst_base + copy_s * hd];
                 vdst.copy_from_slice(&vs[src_base..src_base + copy_s * hd]);
             }
         }
+    }
+
+    /// Materialize the (k, v) history literals for a decode call.
+    pub fn cache_literals(&self, layer: usize) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let dims = [self.batch, self.heads, self.cap, self.head_dim];
+        Ok((lit_f32(&dims, &self.k[layer])?, lit_f32(&dims, &self.v[layer])?))
+    }
+
+    fn adopt_slot(&mut self, dst_slot: usize, src: &KvShard, src_slot: usize, len: usize) {
+        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
+        assert_eq!(src.heads, hn);
+        assert_eq!(src.head_dim, hd);
+        let n = len.min(t) * hd;
+        for layer in 0..self.k.len() {
+            for h in 0..hn {
+                let dst_base = ((dst_slot * hn + h) * t) * hd;
+                let src_base = ((src_slot * hn + h) * src.cap) * hd;
+                self.k[layer][dst_base..dst_base + n]
+                    .copy_from_slice(&src.k[layer][src_base..src_base + n]);
+                self.v[layer][dst_base..dst_base + n]
+                    .copy_from_slice(&src.v[layer][src_base..src_base + n]);
+            }
+        }
+    }
+
+    fn clear_slot(&mut self, slot: usize) {
+        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
+        let base = slot * hn * t * hd;
+        let n = hn * t * hd;
+        for layer in 0..self.k.len() {
+            self.k[layer][base..base + n].fill(0.0);
+            self.v[layer][base..base + n].fill(0.0);
+        }
+    }
+}
+
+/// The whole-batch KV cache: one [`KvShard`] per TP rank.
+pub struct BatchKv {
+    /// [rank] -> that rank's shard
+    shards: Vec<KvShardRef>,
+    pub batch: usize,
+    pub heads: usize, // per-rank heads (Hn)
+    pub cap: usize,   // T
+    pub head_dim: usize,
+}
+
+impl BatchKv {
+    pub fn new(cfg: &ModelConfig, tp: usize, batch: usize) -> BatchKv {
+        let hn = cfg.shard_heads(tp);
+        BatchKv {
+            shards: (0..tp)
+                .map(|_| {
+                    Arc::new(Mutex::new(KvShard::new(
+                        cfg.n_layers,
+                        batch,
+                        hn,
+                        cfg.max_seq,
+                        cfg.head_dim,
+                    )))
+                })
+                .collect(),
+            batch,
+            heads: hn,
+            cap: cfg.max_seq,
+            head_dim: cfg.head_dim,
+        }
+    }
+
+    /// Handle to rank `r`'s shard, for the worker thread that owns it.
+    pub fn shard_handle(&self, rank: usize) -> KvShardRef {
+        self.shards[rank].clone()
+    }
+
+    /// Bytes held by this cache (both K and V, all ranks/layers).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes()).sum()
+    }
+
+    /// Write the new-token K/V slices returned by an attention stage
+    /// (see [`KvShard::write_slices`]).
+    pub fn write_slices(
+        &mut self,
+        rank: usize,
+        layer: usize,
+        s: usize,
+        pos: &[i32],
+        ks: &[f32],
+        vs: &[f32],
+    ) {
+        self.shards[rank].lock().unwrap().write_slices(layer, s, pos, ks, vs);
     }
 
     /// Materialize the (k, v) history literals for a decode call.
@@ -79,53 +166,32 @@ impl BatchKv {
         rank: usize,
         layer: usize,
     ) -> anyhow::Result<(xla::Literal, xla::Literal)> {
-        let dims = [self.batch, self.heads, self.cap, self.head_dim];
-        Ok((
-            lit_f32(&dims, &self.k[rank][layer])?,
-            lit_f32(&dims, &self.v[rank][layer])?,
-        ))
+        self.shards[rank].lock().unwrap().cache_literals(layer)
     }
 
     /// Copy one sequence slot's cache rows from another BatchKv (used
     /// when a freshly-prefilled sequence joins a decode batch).
     pub fn adopt_slot(&mut self, dst_slot: usize, src: &BatchKv, src_slot: usize, len: usize) {
-        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
-        assert_eq!(src.heads, hn);
-        assert_eq!(src.head_dim, hd);
-        let n = len.min(t) * hd;
-        for rank in 0..self.k.len() {
-            for layer in 0..self.k[rank].len() {
-                for h in 0..hn {
-                    let dst_base = ((dst_slot * hn + h) * t) * hd;
-                    let src_base = ((src_slot * hn + h) * src.cap) * hd;
-                    self.k[rank][layer][dst_base..dst_base + n]
-                        .copy_from_slice(&src.k[rank][layer][src_base..src_base + n]);
-                    self.v[rank][layer][dst_base..dst_base + n]
-                        .copy_from_slice(&src.v[rank][layer][src_base..src_base + n]);
-                }
-            }
+        for rank in 0..self.shards.len() {
+            let mut dst = self.shards[rank].lock().unwrap();
+            let s = src.shards[rank].lock().unwrap();
+            dst.adopt_slot(dst_slot, &s, src_slot, len);
         }
     }
 
     /// Zero one slot (sequence retired).
     pub fn clear_slot(&mut self, slot: usize) {
-        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
-        let base = slot * hn * t * hd;
-        let n = hn * t * hd;
-        for rank in 0..self.k.len() {
-            for layer in 0..self.k[rank].len() {
-                self.k[rank][layer][base..base + n].fill(0.0);
-                self.v[rank][layer][base..base + n].fill(0.0);
-            }
+        for shard in &self.shards {
+            shard.lock().unwrap().clear_slot(slot);
         }
     }
 
-    /// Raw access for tests.
-    pub fn k_at(&self, rank: usize, layer: usize) -> &[f32] {
-        &self.k[rank][layer]
+    /// Raw copies for tests.
+    pub fn k_at(&self, rank: usize, layer: usize) -> Vec<f32> {
+        self.shards[rank].lock().unwrap().k[layer].clone()
     }
-    pub fn v_at(&self, rank: usize, layer: usize) -> &[f32] {
-        &self.v[rank][layer]
+    pub fn v_at(&self, rank: usize, layer: usize) -> Vec<f32> {
+        self.shards[rank].lock().unwrap().v[layer].clone()
     }
 }
 
@@ -220,5 +286,21 @@ mod tests {
         let kv = BatchKv::new(&c, 2, 3);
         // per rank/layer: 3*2*6*2 floats; 2 ranks * 2 layers * 2 (k+v)
         assert_eq!(kv.bytes(), 3 * 2 * 6 * 2 * 4 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn shard_handle_aliases_the_coordinator_view() {
+        let c = cfg();
+        let mut kv = BatchKv::new(&c, 2, 1);
+        let h = kv.shard_handle(1);
+        let s = 1;
+        let ks = vec![3.0f32; 2 * s * 2]; // B*Hn*S*hd = 1*2*1*2
+        // a worker writing through its handle ...
+        h.lock().unwrap().write_slices(0, s, &[0], &ks, &ks);
+        // ... is visible through the coordinator's whole-cache view
+        assert_eq!(kv.k_at(1, 0)[0], 3.0);
+        // and vice versa
+        kv.clear_slot(0);
+        assert!(h.lock().unwrap().k[0].iter().all(|&x| x == 0.0));
     }
 }

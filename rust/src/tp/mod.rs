@@ -2,12 +2,26 @@
 //! ranks and performs the (optionally compressed) collectives between
 //! them.
 //!
-//! On this one-core testbed the ranks execute sequentially on the engine
-//! thread; *virtual* time models the parallel deployment: per lock-step
-//! stage the clock advances by the **max** of the per-rank wall times
-//! (they would run concurrently), and communication advances it by the
-//! interconnect model + the measured (or analytic) codec overhead.
-//! DESIGN.md "Known deviations" discusses fidelity.
+//! Two execution cores share one accounting model:
+//!
+//! * **Rank-thread runtime** (`--rank-threads auto|N`, the default for
+//!   `tp > 1`): [`TpEngine`] orchestrates a pool of worker threads
+//!   ([`rank::RankPool`]), each owning its own PJRT [`Runtime`], weight
+//!   shard literals, and KV shard. Workers exchange partials over the
+//!   shared-memory [`crate::fabric`], so stage programs *and* codec
+//!   encode/decode run concurrently; the virtual clock's max-of-ranks
+//!   stage times and per-collective codec times are real concurrent
+//!   measurements.
+//! * **Sequential reference path** (`--rank-threads off`): the seed's
+//!   single-thread loop, kept bit-identical as the correctness anchor —
+//!   `tests/rank_parallel.rs` pins that both paths produce identical
+//!   logits, sampled tokens, wire bytes, and policy counters.
+//!
+//! In both, *virtual* time models the simulated deployment: per
+//! lock-step stage the clock advances by the **max** of the per-rank
+//! wall times, and communication advances it by the interconnect model
+//! + the measured (or analytic) codec overhead. DESIGN.md "Known
+//! deviations" discusses fidelity.
 //!
 //! Compression is resolved **per site** ([`crate::policy`]): each
 //! collective's (layer, kind, phase) coordinate maps through the bound
@@ -17,6 +31,7 @@
 //! path stays bit-identical (pinned by `tests/property_policy.rs`).
 
 pub mod kv;
+pub mod rank;
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -33,6 +48,7 @@ use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use crate::util::json::Json;
 
 pub use kv::BatchKv;
+pub use rank::RankPool;
 
 /// How the quantize/dequantize overhead enters virtual time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,6 +57,118 @@ pub enum OverheadModel {
     Measured,
     /// charge values / rate (paper-scale accelerator mode)
     Analytic { values_per_s: f64 },
+}
+
+/// The `--rank-threads` knob: how many worker threads execute the TP
+/// ranks. `off` keeps the seed's sequential reference path; `auto`
+/// (the default) spawns `min(tp, cores)` workers; a number pins the
+/// worker count (ranks are multiplexed when fewer workers than ranks).
+///
+/// ```
+/// use tpcc::tp::RankThreads;
+/// assert_eq!(RankThreads::parse("off").unwrap(), RankThreads::Off);
+/// assert_eq!(RankThreads::parse("auto").unwrap(), RankThreads::Auto);
+/// assert_eq!(RankThreads::parse("3").unwrap(), RankThreads::Fixed(3));
+/// assert!(RankThreads::parse("many").is_err());
+/// // tp=1 never spawns workers; `off` never does; fixed counts clamp to tp
+/// assert_eq!(RankThreads::Off.workers(8), 0);
+/// assert_eq!(RankThreads::Fixed(16).workers(4), 4);
+/// assert_eq!(RankThreads::Auto.workers(1), 0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankThreads {
+    /// sequential reference path (the seed's single-thread loop)
+    Off,
+    /// one worker per rank, capped at the host's available parallelism
+    Auto,
+    /// exactly this many workers (clamped to `1..=tp`)
+    Fixed(usize),
+}
+
+impl RankThreads {
+    pub fn parse(s: &str) -> anyhow::Result<RankThreads> {
+        match s {
+            "off" | "seq" | "sequential" => Ok(RankThreads::Off),
+            "" | "auto" => Ok(RankThreads::Auto),
+            n => match n.parse::<usize>() {
+                Ok(0) => Ok(RankThreads::Off),
+                Ok(v) => Ok(RankThreads::Fixed(v)),
+                Err(_) => anyhow::bail!("bad rank-threads spec {n:?} (want off|auto|N)"),
+            },
+        }
+    }
+
+    /// Session default from the `RANK_THREADS` env var (`auto` when
+    /// unset) — how CI pins its sequential-reference leg.
+    ///
+    /// A *set but invalid* value panics instead of silently falling
+    /// back: a typo'd `RANK_THREADS=off` leg that quietly ran the
+    /// parallel engine would let the sequential reference path rot
+    /// behind green CI — exactly what the matrix exists to prevent.
+    pub fn from_env() -> RankThreads {
+        match std::env::var("RANK_THREADS") {
+            Err(_) => RankThreads::Auto,
+            Ok(v) => RankThreads::parse(&v)
+                .unwrap_or_else(|e| panic!("invalid RANK_THREADS env var: {e}")),
+        }
+    }
+
+    /// Worker-thread count for a `tp`-way engine; 0 selects the
+    /// sequential reference path.
+    pub fn workers(self, tp: usize) -> usize {
+        if tp <= 1 {
+            return 0;
+        }
+        match self {
+            RankThreads::Off => 0,
+            RankThreads::Auto => {
+                let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                tp.min(cores.max(1))
+            }
+            RankThreads::Fixed(n) => n.clamp(1, tp),
+        }
+    }
+}
+
+/// Resolve one planned collective's `(codec_s, total_s)` under the
+/// overhead model. Shared by the sequential reference path and the rank
+/// workers so the accounting — the Measured pass-through vs the
+/// Analytic re-score through `plan::score` — cannot drift between the
+/// two execution cores.
+pub(crate) fn comm_times(
+    overhead: OverheadModel,
+    rep: &collective::CommReport,
+    plan: &CollectivePlan,
+    len: usize,
+    world: usize,
+    comp: Option<&dyn Compressor>,
+    topo: &Topology,
+) -> (f64, f64) {
+    match overhead {
+        OverheadModel::Measured => (rep.encode_s + rep.decode_s, rep.total_s()),
+        OverheadModel::Analytic { values_per_s } => {
+            if comp.is_some() {
+                // the planner's own scoring at the engine's rate —
+                // realized analytic time equals the scored objective
+                // (codec values discounted by the codec's cost factor,
+                // overlap per the executed chunk count)
+                let (total, _link, codec_s) = collective::plan::score(
+                    plan.algo, len, world, comp, topo, values_per_s, rep.chunks,
+                );
+                (codec_s, total)
+            } else {
+                (0.0, rep.link_s)
+            }
+        }
+    }
+}
+
+/// Cumulative per-rank busy time (compute stages + codec work), fed by
+/// both execution cores and served as `/metrics` utilization gauges.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankBusy {
+    pub compute_s: f64,
+    pub codec_s: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -69,6 +197,9 @@ pub struct EngineOptions {
     /// the bit-exact rust codec runs — same math, verified by the
     /// golden-vector tests and `fused_path_matches_rust_codec`)
     pub fused: bool,
+    /// rank-thread runtime knob (`off` = sequential reference path);
+    /// defaults to the `RANK_THREADS` env var, `auto` when unset
+    pub rank_threads: RankThreads,
 }
 
 impl EngineOptions {
@@ -82,6 +213,7 @@ impl EngineOptions {
             overhead: OverheadModel::Measured,
             profile: HwProfile::by_name("cpu").unwrap(),
             fused: false,
+            rank_threads: RankThreads::from_env(),
         }
     }
 
@@ -108,6 +240,12 @@ impl EngineOptions {
 
     pub fn with_fused(mut self, fused: bool) -> Self {
         self.fused = fused;
+        self
+    }
+
+    /// Set the rank-thread runtime knob (see [`RankThreads`]).
+    pub fn with_rank_threads(mut self, rt: RankThreads) -> Self {
+        self.rank_threads = rt;
         self
     }
 }
@@ -190,7 +328,12 @@ pub struct TpEngine {
     /// per-rank weight literals, keyed like the python param dict
     wlits: Vec<BTreeMap<String, xla::Literal>>,
     pub clock: VirtualClock,
-    // reusable scratch
+    /// rank-thread worker pool; `None` runs the sequential reference
+    /// path (`--rank-threads off`, or `tp <= 1`)
+    pool: Option<rank::RankPool>,
+    /// cumulative per-rank busy time (compute + codec), both paths
+    rank_busy: Vec<RankBusy>,
+    // reusable scratch (sequential path; workers own their own)
     reduce_buf: Vec<f32>,
     wire_buf: Vec<u8>,
 }
@@ -199,16 +342,24 @@ impl TpEngine {
     pub fn new(rt: Runtime, weights: &Weights, opts: EngineOptions) -> anyhow::Result<TpEngine> {
         let cfg = ModelConfig::from_manifest(&opts.model, &rt.manifest.raw)?;
         let algo_choice = AlgoChoice::parse(&opts.algo)?;
+        // engine-side weight literals feed the sequential path only;
+        // with an active rank pool every forward runs on the workers
+        // (which build their own shard literals), so holding a second
+        // full copy here would double weight memory for nothing
+        let workers = opts.rank_threads.workers(opts.tp);
         let mut wlits = Vec::with_capacity(opts.tp);
-        for rank in 0..opts.tp {
-            let shard = weights.shard(&cfg, opts.tp, rank)?;
-            let mut lits = BTreeMap::new();
-            for (name, t) in &shard.tensors {
-                lits.insert(name.clone(), lit_f32(&t.shape, &t.data)?);
+        if workers == 0 {
+            for rank in 0..opts.tp {
+                let shard = weights.shard(&cfg, opts.tp, rank)?;
+                let mut lits = BTreeMap::new();
+                for (name, t) in &shard.tensors {
+                    lits.insert(name.clone(), lit_f32(&t.shape, &t.data)?);
+                }
+                wlits.push(lits);
             }
-            wlits.push(lits);
         }
         let n_sites = Site::count(cfg.n_layers);
+        let opts_tp = opts.tp;
         let mut eng = TpEngine {
             rt,
             cfg,
@@ -226,12 +377,40 @@ impl TpEngine {
             algo_calls: BTreeMap::new(),
             wlits,
             clock: VirtualClock::default(),
+            pool: None,
+            rank_busy: vec![RankBusy::default(); opts_tp],
             reduce_buf: Vec::new(),
             wire_buf: Vec::new(),
         };
         let policy = eng.opts.policy.clone();
         eng.set_policy(&policy)?;
+        // spawn the rank-thread pool last, so it boots with the fully
+        // resolved policy binding (later rebinds are broadcast)
+        if workers > 0 {
+            let pool = rank::RankPool::spawn(
+                weights,
+                &eng.cfg,
+                eng.rt.root(),
+                eng.opts.tp,
+                workers,
+                eng.bind_spec(),
+            )?;
+            eng.pool = Some(pool);
+        }
         Ok(eng)
+    }
+
+    /// The worker pool's view of the current policy binding.
+    fn bind_spec(&self) -> rank::BindSpec {
+        rank::BindSpec {
+            specs: self.policy_specs.clone(),
+            site_spec: self.site_spec.clone(),
+        }
+    }
+
+    /// Worker threads executing the ranks (0 = sequential reference path).
+    pub fn rank_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.workers())
     }
 
     pub fn link(&self) -> &LinkModel {
@@ -336,6 +515,19 @@ impl TpEngine {
         out
     }
 
+    /// Per-rank utilization gauges for `/metrics`: cumulative compute
+    /// and codec busy seconds per rank (real concurrent measurements
+    /// under the rank-thread runtime), plus the active worker count.
+    pub fn rank_metrics(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::with_capacity(self.rank_busy.len() * 2 + 1);
+        out.push(("rank_workers".to_string(), self.rank_workers() as f64));
+        for (r, b) in self.rank_busy.iter().enumerate() {
+            out.push((format!("rank{r}_compute_busy_s"), b.compute_s));
+            out.push((format!("rank{r}_codec_busy_s"), b.codec_s));
+        }
+        out
+    }
+
     /// Account one collective at `site` into the per-site, per-group
     /// and per-scheme counters.
     fn record_site(&mut self, site: Site, scheme_idx: usize, wire_bytes: u64, raw_bytes: u64) {
@@ -383,6 +575,11 @@ impl TpEngine {
         self.site_stats = vec![SiteStat::default(); Site::count(self.cfg.n_layers)];
         self.group_stats = [[SiteStat::default(); 2]; 2];
         self.plan_cache.clear();
+        // the rank workers mirror the binding (their own compressors,
+        // their own plan memos)
+        if let Some(pool) = &self.pool {
+            pool.bind(self.bind_spec());
+        }
         Ok(())
     }
 
@@ -413,6 +610,14 @@ impl TpEngine {
     /// uncompressed binding for clean statistics (the `auto-live` path
     /// does).
     pub fn capture_calibration(&mut self) -> anyhow::Result<Calibration> {
+        // the capture pass records partials engine-side, so it runs the
+        // sequential reference path — which needs the engine-side weight
+        // literals a pooled engine deliberately does not build
+        anyhow::ensure!(
+            self.wlits.len() == self.opts.tp,
+            "auto-live calibration needs the sequential engine; \
+             rebuild with --rank-threads off (RANK_THREADS=off)"
+        );
         let n_sites = Site::count(self.cfg.n_layers);
         let bb = self.rt.manifest.batch_buckets.iter().copied().min().unwrap_or(1).max(1);
         let sb = self
@@ -547,6 +752,9 @@ impl TpEngine {
             OverheadModel::Measured => enc_once + dt,
             OverheadModel::Analytic { values_per_s } => (values * tp) as f64 / values_per_s,
         };
+        for b in self.rank_busy.iter_mut() {
+            b.codec_s += codec_s;
+        }
         timing.link_s += link_s;
         timing.codec_s += codec_s;
         timing.wire_bytes += (shard_wire * (tp - 1)) as u64;
@@ -622,23 +830,11 @@ impl TpEngine {
         *self.algo_calls.entry(rep.algo).or_insert(0) += 1;
         timing.algo = rep.algo;
 
-        let (codec_s, total_s) = match self.opts.overhead {
-            OverheadModel::Measured => (rep.encode_s + rep.decode_s, rep.total_s()),
-            OverheadModel::Analytic { values_per_s } => {
-                if comp.is_some() {
-                    // the planner's own scoring at the engine's rate —
-                    // realized analytic time equals the scored objective
-                    // (codec values discounted by the codec's cost factor,
-                    // overlap per the executed chunk count)
-                    let (total, _link, codec_s) = collective::plan::score(
-                        plan.algo, len, n, comp, &topo, values_per_s, rep.chunks,
-                    );
-                    (codec_s, total)
-                } else {
-                    (0.0, rep.link_s)
-                }
-            }
-        };
+        let (codec_s, total_s) =
+            comm_times(self.opts.overhead, &rep, &plan, len, n, comp, &topo);
+        for b in self.rank_busy.iter_mut() {
+            b.codec_s += codec_s;
+        }
         // decompose the overlapped total into exposed link + exposed
         // codec so link_s + codec_s == total_s exactly: virtual_total
         // then equals the pipeline schedule and agrees with the clock
@@ -659,7 +855,125 @@ impl TpEngine {
     /// Forward a padded token batch. `mode` selects prefill (S>1, no KV
     /// history) or decode (S=1, `kv` holds history). `pos[b]` is each
     /// row's starting position; logits return as [bb, sb, vocab].
+    ///
+    /// Dispatches to the rank-thread runtime when a pool is active; the
+    /// calibration-capture pass always runs the sequential reference
+    /// path (it records pre-quantization partials engine-side).
     fn forward(
+        &mut self,
+        tokens: &[i32],
+        bb: usize,
+        sb: usize,
+        pos: &[i32],
+        kv: Option<&mut BatchKv>,
+        decode: bool,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        if self.pool.is_some() && self.calib_capture.is_none() {
+            return self.forward_parallel(tokens, bb, sb, pos, kv, decode);
+        }
+        self.forward_seq(tokens, bb, sb, pos, kv, decode)
+    }
+
+    /// Dispatch one forward to the rank pool and fold the workers'
+    /// outcomes into the engine's accounting: stage compute advances the
+    /// clock by the max of the per-rank walls (now a measurement across
+    /// genuinely concurrent threads), collectives advance it once per
+    /// site with codec times maxed across workers, and wire/site/algo
+    /// counters are taken from the leader (deterministically identical
+    /// on every worker).
+    fn forward_parallel(
+        &mut self,
+        tokens: &[i32],
+        bb: usize,
+        sb: usize,
+        pos: &[i32],
+        kv: Option<&mut BatchKv>,
+        decode: bool,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        anyhow::ensure!(tokens.len() == bb * sb && pos.len() == bb);
+        let wall0 = Instant::now();
+        let job = rank::RankJob {
+            tokens: tokens.to_vec(),
+            pos: pos.to_vec(),
+            bb,
+            sb,
+            decode,
+            model: self.opts.model.clone(),
+            tp: self.opts.tp,
+            profile: self.opts.profile,
+            overhead: self.opts.overhead,
+            fused: self.opts.fused,
+            algo: self.algo_choice,
+        };
+        let outcomes = {
+            let pool = self.pool.as_ref().expect("forward_parallel without pool");
+            pool.forward(job, kv.map(|k| &*k))?
+        };
+        let mut timing = StepTiming::default();
+        for (i, ev) in outcomes[0].trace.iter().enumerate() {
+            match ev {
+                rank::TraceEvent::Stage { walls } => {
+                    let mut m = walls.iter().copied().fold(0.0f64, f64::max);
+                    for o in &outcomes[1..] {
+                        if let Some(rank::TraceEvent::Stage { walls }) = o.trace.get(i) {
+                            m = walls.iter().copied().fold(m, f64::max);
+                        }
+                    }
+                    timing.compute_s += m;
+                    self.clock.add_compute(m);
+                }
+                rank::TraceEvent::Comm {
+                    site,
+                    scheme_idx,
+                    algo,
+                    wire_bytes,
+                    raw_bytes,
+                    codec_s,
+                    total_s,
+                } => {
+                    let (mut codec, mut total) = (*codec_s, *total_s);
+                    for o in &outcomes[1..] {
+                        if let Some(rank::TraceEvent::Comm { codec_s, total_s, .. }) =
+                            o.trace.get(i)
+                        {
+                            codec = codec.max(*codec_s);
+                            total = total.max(*total_s);
+                        }
+                    }
+                    // same exposed-link decomposition as the sequential
+                    // path: link_s + codec_s == total_s exactly
+                    let link_exposed = (total - codec).max(0.0);
+                    timing.codec_s += total - link_exposed;
+                    timing.link_s += link_exposed;
+                    timing.wire_bytes += *wire_bytes;
+                    timing.raw_bytes += *raw_bytes;
+                    timing.algo = *algo;
+                    *self.algo_calls.entry(*algo).or_insert(0) += 1;
+                    self.record_site(*site, *scheme_idx, *wire_bytes, *raw_bytes);
+                    self.clock.add_comm(total, *wire_bytes as usize, *raw_bytes as usize);
+                }
+            }
+        }
+        for o in &outcomes {
+            for &(r, compute_s, codec_s) in &o.busy {
+                self.rank_busy[r].compute_s += compute_s;
+                self.rank_busy[r].codec_s += codec_s;
+            }
+        }
+        let logits = outcomes
+            .into_iter()
+            .next()
+            .and_then(|o| o.logits)
+            .ok_or_else(|| anyhow::anyhow!("leader rank worker returned no logits"))?;
+        timing.wall_s = wall0.elapsed().as_secs_f64();
+        Ok((logits, timing))
+    }
+
+    /// The sequential reference implementation (`--rank-threads off`):
+    /// ranks execute one after another on this thread, exactly the
+    /// seed's loop. Kept verbatim as the bit-identical anchor the
+    /// parallel runtime is tested against.
+    fn forward_seq(
         &mut self,
         tokens: &[i32],
         bb: usize,
@@ -686,6 +1000,7 @@ impl TpEngine {
         )?;
         timing.compute_s += dt;
         self.clock.add_compute(dt);
+        self.rank_busy[0].compute_s += dt;
         let mut x = to_vec_f32(&emb_out[0])?;
 
         let pos_lit = lit_i32(&[bb], pos)?;
@@ -737,6 +1052,7 @@ impl TpEngine {
                     self.exec_timed(&attn_name, &args, &mut dt)?
                 };
                 max_s = max_s.max(dt);
+                self.rank_busy[rank].compute_s += dt;
                 if let Some(kvref) = kv.as_deref_mut() {
                     let ks = to_vec_f32(&out[1])?;
                     let vs = to_vec_f32(&out[2])?;
@@ -783,6 +1099,7 @@ impl TpEngine {
                 ];
                 let out = self.exec_timed(&mlp_name, &args, &mut dt)?;
                 max_s = max_s.max(dt);
+                self.rank_busy[rank].compute_s += dt;
                 partials.push(out);
             }
             timing.compute_s += max_s;
@@ -813,6 +1130,7 @@ impl TpEngine {
         )?;
         timing.compute_s += dt;
         self.clock.add_compute(dt);
+        self.rank_busy[0].compute_s += dt;
         let logits = to_vec_f32(&out[0])?;
         timing.wall_s = wall0.elapsed().as_secs_f64();
         Ok((logits, timing))
@@ -868,6 +1186,17 @@ impl TpEngine {
                 .next()
                 .map_or_else(|| "none".to_string(), |c| c.name()),
             None => self.policy.summary(),
+        }
+    }
+}
+
+impl Drop for TpEngine {
+    /// Clean shutdown of the rank pool: every worker drains its queue,
+    /// exits its loop, and is joined before the engine's own runtime
+    /// (and its PJRT client) is torn down.
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
         }
     }
 }

@@ -1,0 +1,782 @@
+//! Per-rank worker runtime: the parallel execution core behind
+//! `--rank-threads`.
+//!
+//! [`RankPool::spawn`] starts one OS thread per worker; each worker
+//! *constructs and owns* its own [`Runtime`] (the PJRT client is not
+//! `Send`, so it must be built on the thread that uses it), the weight
+//! literal shards of the ranks it owns, its per-scheme compressors, and
+//! its own plan memo + scratch buffers (no shared `reduce_buf`/`wire_buf`
+//! — the seed's engine-wide scratch does not survive concurrency).
+//!
+//! Per forward pass every worker runs the same per-rank stage program
+//! the sequential reference path runs, meeting at the shared-memory
+//! [`Fabric`] after each row-parallel stage to exchange partials
+//! (`Arc`-backed, so the gather is a refcount bump). Each worker then
+//! executes the planned collective *locally, concurrently* — encode and
+//! decode run on every rank thread, so the measured codec wall times
+//! feeding the max-of-ranks virtual clock are real concurrent
+//! measurements, not a simulation artifact.
+//!
+//! Determinism: workers compute the reduction over the same partials in
+//! the same rank order with the same plan (the planner is a pure
+//! function of (message, topology, scheme)), so every worker's `x` is
+//! bit-identical to every other's *and* to the sequential path's —
+//! pinned by `tests/rank_parallel.rs`. Rank multiplexing (`tp` ranks on
+//! fewer threads) changes only which thread executes a rank's stages,
+//! never the numbers.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::collective::{pipeline, plan, AlgoChoice, CollectivePlan, ExecCtx, Topology};
+use crate::fabric::Fabric;
+use crate::interconnect::HwProfile;
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::mxfmt::{compressor_from_spec_ch, Compressor, MxScheme};
+use crate::policy::{Phase, Site, SiteKind};
+use crate::runtime::{lit_f32, lit_i32, lit_u8, to_vec_f32, to_vec_u8, Runtime};
+
+use super::kv::{BatchKv, KvShardRef};
+use super::OverheadModel;
+
+/// Payload a worker publishes to the fabric for one rank after a
+/// row-parallel stage: the rank's partial activations plus the measured
+/// stage wall time (so every worker learns the lock-step max).
+#[derive(Clone)]
+pub struct RankPost {
+    pub data: Arc<Vec<f32>>,
+    pub wall_s: f64,
+}
+
+/// One entry of a worker's per-forward execution trace. Workers emit
+/// events in an identical order (embed, then per layer: stage, comm,
+/// stage, comm; the leader appends the final stage), so the orchestrator
+/// merges by position: stage walls max across ranks, collective
+/// accounting taken once (deterministic fields are identical across
+/// workers; measured codec times are maxed).
+pub enum TraceEvent {
+    /// a compute stage; one wall per rank that executed it
+    Stage { walls: Vec<f64> },
+    /// one collective at `site`, already resolved through the worker's
+    /// overhead model: `total_s` is the overlapped schedule, `codec_s`
+    /// the codec share (sequential path decomposes identically)
+    Comm {
+        site: Site,
+        scheme_idx: usize,
+        algo: &'static str,
+        wire_bytes: u64,
+        raw_bytes: u64,
+        codec_s: f64,
+        total_s: f64,
+    },
+}
+
+/// What one worker returns for one forward pass.
+pub struct RankOutcome {
+    pub trace: Vec<TraceEvent>,
+    /// logits from the final stage (leader worker only)
+    pub logits: Option<Vec<f32>>,
+    /// per owned rank: (rank, compute busy s, codec busy s)
+    pub busy: Vec<(usize, f64, f64)>,
+}
+
+/// A policy binding broadcast to the workers: the distinct scheme specs
+/// and the site → scheme-index map (mirrors the engine's own binding).
+#[derive(Clone)]
+pub struct BindSpec {
+    pub specs: Vec<String>,
+    pub site_spec: Vec<u16>,
+}
+
+/// Everything one forward pass needs, snapshotted at dispatch so the
+/// sweeps' direct mutations of `EngineOptions` (profile, overhead,
+/// fused) reach the workers without a rebind round-trip.
+pub struct RankJob {
+    pub tokens: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub bb: usize,
+    pub sb: usize,
+    pub decode: bool,
+    pub model: String,
+    pub tp: usize,
+    pub profile: &'static HwProfile,
+    pub overhead: OverheadModel,
+    pub fused: bool,
+    pub algo: AlgoChoice,
+}
+
+enum RankCmd {
+    Bind(BindSpec),
+    Forward {
+        job: Arc<RankJob>,
+        /// KV shard handles for this worker's owned ranks, in owned order
+        kv: Option<Vec<KvShardRef>>,
+        reply: Sender<(usize, anyhow::Result<RankOutcome>)>,
+    },
+    Shutdown,
+}
+
+/// Contiguous rank assignment: worker `w` of `workers` owns this slice
+/// of the `tp` ranks (worker 0 always owns rank 0, the leader).
+pub fn owned_ranks(tp: usize, workers: usize, w: usize) -> Vec<usize> {
+    let base = tp / workers;
+    let rem = tp % workers;
+    let start = w * base + w.min(rem);
+    let n = base + usize::from(w < rem);
+    (start..start + n).collect()
+}
+
+/// Handle to the spawned worker threads; owned by the orchestrating
+/// [`super::TpEngine`]. Dropping the engine shuts the pool down cleanly
+/// (shutdown command + join).
+pub struct RankPool {
+    txs: Vec<Sender<RankCmd>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    fabric: Arc<Fabric<RankPost>>,
+    tp: usize,
+}
+
+impl RankPool {
+    /// Spawn `workers` rank threads for a `tp`-way engine. Each worker
+    /// loads its own [`Runtime`] from `root` and builds the weight
+    /// literals of its owned ranks; startup errors are collected and
+    /// the partially-started pool is torn down.
+    pub fn spawn(
+        weights: &Weights,
+        cfg: &ModelConfig,
+        root: &std::path::Path,
+        tp: usize,
+        workers: usize,
+        bind: BindSpec,
+    ) -> anyhow::Result<RankPool> {
+        anyhow::ensure!(
+            workers >= 1 && workers <= tp,
+            "rank pool wants 1..=tp workers, got {workers} for tp={tp}"
+        );
+        let fabric = Arc::new(Fabric::new(workers, tp));
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let ranks = owned_ranks(tp, workers, w);
+            let shards: Vec<Weights> = ranks
+                .iter()
+                .map(|&r| weights.shard(cfg, tp, r))
+                .collect::<anyhow::Result<_>>()?;
+            let (tx, rx) = channel();
+            let boot = WorkerBoot {
+                idx: w,
+                ranks,
+                cfg: cfg.clone(),
+                shards,
+                root: root.to_path_buf(),
+                fabric: fabric.clone(),
+                bind: bind.clone(),
+            };
+            let ready = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("tpcc-rank{w}"))
+                .spawn(move || match Worker::build(boot) {
+                    Ok(mut worker) => {
+                        let _ = ready.send(Ok(()));
+                        worker.run(rx);
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(format!("{e:#}")));
+                    }
+                })?;
+            txs.push(tx);
+            joins.push(join);
+        }
+        drop(ready_tx);
+        let mut failure = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(m)) => {
+                    failure = Some(m);
+                    break;
+                }
+                Err(_) => {
+                    failure = Some("rank worker exited during startup".to_string());
+                    break;
+                }
+            }
+        }
+        if let Some(m) = failure {
+            for tx in &txs {
+                let _ = tx.send(RankCmd::Shutdown);
+            }
+            for j in joins {
+                let _ = j.join();
+            }
+            anyhow::bail!("rank pool startup failed: {m}");
+        }
+        Ok(RankPool { txs, joins, fabric, tp })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Broadcast a policy rebind (new distinct schemes + site map).
+    pub fn bind(&self, b: BindSpec) {
+        for tx in &self.txs {
+            let _ = tx.send(RankCmd::Bind(b.clone()));
+        }
+    }
+
+    /// Run one forward across all workers and collect their outcomes
+    /// (indexed by worker). A failed round poisons the fabric so no
+    /// worker deadlocks, then re-arms it once every worker has replied.
+    pub fn forward(&self, job: RankJob, kv: Option<&BatchKv>) -> anyhow::Result<Vec<RankOutcome>> {
+        let workers = self.txs.len();
+        let job = Arc::new(job);
+        let (rtx, rrx) = channel();
+        let mut delivered = 0usize;
+        let mut send_err = None;
+        for (w, tx) in self.txs.iter().enumerate() {
+            let shards = kv.map(|k| {
+                owned_ranks(self.tp, workers, w)
+                    .into_iter()
+                    .map(|r| k.shard_handle(r))
+                    .collect()
+            });
+            let cmd = RankCmd::Forward { job: job.clone(), kv: shards, reply: rtx.clone() };
+            if tx.send(cmd).is_err() {
+                send_err = Some(anyhow::anyhow!("rank worker {w} is gone"));
+                break;
+            }
+            delivered += 1;
+        }
+        drop(rtx);
+        if let Some(e) = send_err {
+            // unblock the workers that did get the job, drain their
+            // replies, then re-arm the fabric for whoever calls next
+            self.fabric.poison("a rank worker is gone");
+            for _ in 0..delivered {
+                let _ = rrx.recv();
+            }
+            self.fabric.reset();
+            return Err(e);
+        }
+        let mut outs: Vec<Option<RankOutcome>> = (0..workers).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..workers {
+            match rrx.recv() {
+                Ok((idx, Ok(o))) => outs[idx] = Some(o),
+                Ok((idx, Err(e))) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("rank worker {idx}")));
+                    }
+                }
+                Err(_) => {
+                    // every sender dropped without a reply: worker died
+                    self.fabric.poison("rank worker died mid-forward");
+                    return Err(anyhow::anyhow!("rank worker died mid-forward"));
+                }
+            }
+        }
+        // all workers idle again — safe to re-arm after a failed round
+        if let Some(e) = first_err {
+            self.fabric.reset();
+            return Err(e);
+        }
+        outs.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("missing rank worker outcome")))
+            .collect()
+    }
+
+    /// Clean shutdown: every worker drains its queue, exits its loop,
+    /// and is joined.
+    pub fn shutdown(self) {
+        for tx in &self.txs {
+            let _ = tx.send(RankCmd::Shutdown);
+        }
+        for j in self.joins {
+            let _ = j.join();
+        }
+    }
+}
+
+struct WorkerBoot {
+    idx: usize,
+    ranks: Vec<usize>,
+    cfg: ModelConfig,
+    /// weight shards for the owned ranks (plain f32 tensors; literals
+    /// are built on the worker thread, which owns the PJRT client)
+    shards: Vec<Weights>,
+    root: std::path::PathBuf,
+    fabric: Arc<Fabric<RankPost>>,
+    bind: BindSpec,
+}
+
+/// Thread-side state of one rank worker.
+struct Worker {
+    idx: usize,
+    ranks: Vec<usize>,
+    cfg: ModelConfig,
+    rt: Runtime,
+    /// weight literals per owned rank (parallel to `ranks`)
+    wlits: Vec<BTreeMap<String, xla::Literal>>,
+    fabric: Arc<Fabric<RankPost>>,
+    specs: Vec<String>,
+    comps: Vec<Option<Box<dyn Compressor>>>,
+    site_spec: Vec<u16>,
+    /// plan memo keyed like the sequential engine's:
+    /// (message len, profile identity, scheme index)
+    plan_memo: BTreeMap<(usize, usize, usize), CollectivePlan>,
+    /// algo knob of the last job; a change invalidates the memo
+    last_algo: Option<AlgoChoice>,
+    /// a failed Bind is reported on the next forward
+    bind_err: Option<String>,
+    // per-worker scratch (replaces the seed's engine-wide buffers)
+    reduce_buf: Vec<f32>,
+    wire_buf: Vec<u8>,
+}
+
+impl Worker {
+    fn build(boot: WorkerBoot) -> anyhow::Result<Worker> {
+        let rt = Runtime::load(&boot.root)?;
+        let mut wlits = Vec::with_capacity(boot.shards.len());
+        for shard in &boot.shards {
+            let mut lits = BTreeMap::new();
+            for (name, t) in &shard.tensors {
+                lits.insert(name.clone(), lit_f32(&t.shape, &t.data)?);
+            }
+            wlits.push(lits);
+        }
+        let mut w = Worker {
+            idx: boot.idx,
+            ranks: boot.ranks,
+            cfg: boot.cfg,
+            rt,
+            wlits,
+            fabric: boot.fabric,
+            specs: Vec::new(),
+            comps: Vec::new(),
+            site_spec: Vec::new(),
+            plan_memo: BTreeMap::new(),
+            last_algo: None,
+            bind_err: None,
+            reduce_buf: Vec::new(),
+            wire_buf: Vec::new(),
+        };
+        w.apply_bind(boot.bind)?;
+        Ok(w)
+    }
+
+    fn run(&mut self, rx: Receiver<RankCmd>) {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                RankCmd::Bind(b) => {
+                    self.bind_err = self.apply_bind(b).err().map(|e| format!("{e:#}"));
+                }
+                RankCmd::Forward { job, kv, reply } => {
+                    let res = catch_unwind(AssertUnwindSafe(|| self.forward(&job, kv.as_deref())));
+                    let res = match res {
+                        Ok(r) => r,
+                        Err(_) => Err(anyhow::anyhow!("rank worker {} panicked", self.idx)),
+                    };
+                    if let Err(e) = &res {
+                        // wake peers blocked at a fabric barrier before
+                        // replying, or the round would deadlock
+                        self.fabric.poison(&format!("worker {}: {e:#}", self.idx));
+                    }
+                    let _ = reply.send((self.idx, res));
+                }
+                RankCmd::Shutdown => break,
+            }
+        }
+    }
+
+    fn apply_bind(&mut self, b: BindSpec) -> anyhow::Result<()> {
+        let mut comps = Vec::with_capacity(b.specs.len());
+        for spec in &b.specs {
+            comps.push(if spec == "none" {
+                None
+            } else {
+                Some(compressor_from_spec_ch(spec, self.cfg.d_model)?)
+            });
+        }
+        self.comps = comps;
+        self.specs = b.specs;
+        self.site_spec = b.site_spec;
+        self.plan_memo.clear();
+        Ok(())
+    }
+
+    fn wl(&self, owned_idx: usize, name: &str) -> &xla::Literal {
+        self.wlits[owned_idx].get(name).expect("weight literal")
+    }
+
+    /// The per-rank stage program for one forward pass — mirrors the
+    /// sequential reference path stage for stage (same artifact names,
+    /// same argument order, same reduction order), so outputs are
+    /// bit-identical.
+    fn forward(
+        &mut self,
+        job: &RankJob,
+        kv: Option<&[KvShardRef]>,
+    ) -> anyhow::Result<RankOutcome> {
+        if let Some(m) = self.bind_err.take() {
+            anyhow::bail!("deferred policy bind failure: {m}");
+        }
+        if self.last_algo != Some(job.algo) {
+            self.plan_memo.clear();
+            self.last_algo = Some(job.algo);
+        }
+        let (bb, sb) = (job.bb, job.sb);
+        let d = self.cfg.d_model;
+        let tp = job.tp;
+        let model = job.model.clone();
+        let phase = if job.decode { Phase::Decode } else { Phase::Prefill };
+        anyhow::ensure!(job.tokens.len() == bb * sb && job.pos.len() == bb);
+        if job.decode {
+            anyhow::ensure!(kv.is_some(), "decode requires kv");
+        }
+        let mut trace: Vec<TraceEvent> = Vec::with_capacity(1 + 4 * self.cfg.n_layers + 1);
+        let mut busy: Vec<(usize, f64, f64)> =
+            self.ranks.iter().map(|&r| (r, 0.0, 0.0)).collect();
+
+        // embed — replicated weights: one execution per worker stands in
+        // for all of its ranks (identical bits rank to rank)
+        let tok_lit = lit_i32(&[bb, sb], &job.tokens)?;
+        let t0 = Instant::now();
+        let emb = self.rt.execute_refs(
+            &format!("{model}/embed_b{bb}_s{sb}"),
+            &[&tok_lit, self.wl(0, "embed")],
+        )?;
+        let dt = t0.elapsed().as_secs_f64();
+        busy[0].1 += dt;
+        trace.push(TraceEvent::Stage { walls: vec![dt] });
+        let mut x = to_vec_f32(&emb[0])?;
+
+        let pos_lit = lit_i32(&[bb], &job.pos)?;
+        // fused executable names per distinct scheme, resolved lazily
+        // once per forward (as in the sequential path)
+        let mut fused_memo: BTreeMap<usize, Option<(String, String)>> = BTreeMap::new();
+        for l in 0..self.cfg.n_layers {
+            // ---- attention ----
+            let attn_name = if job.decode {
+                format!("{model}/attn_tp{tp}_b{bb}_s{sb}")
+            } else {
+                format!("{model}/attn_prefill_tp{tp}_b{bb}_s{sb}")
+            };
+            let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            let mut stage_outs = Vec::with_capacity(self.ranks.len());
+            for i in 0..self.ranks.len() {
+                let an = format!("l{l}.attn_norm");
+                let wq = format!("l{l}.wq");
+                let wk = format!("l{l}.wk");
+                let wv = format!("l{l}.wv");
+                let wo = format!("l{l}.wo");
+                let timed = if job.decode {
+                    let (kl, vl) = kv.unwrap()[i].lock().unwrap().cache_literals(l)?;
+                    let args: Vec<&xla::Literal> = vec![
+                        &x_lit,
+                        self.wl(i, &an),
+                        self.wl(i, &wq),
+                        self.wl(i, &wk),
+                        self.wl(i, &wv),
+                        self.wl(i, &wo),
+                        &kl,
+                        &vl,
+                        &pos_lit,
+                    ];
+                    let t0 = Instant::now();
+                    let out = self.rt.execute_refs(&attn_name, &args)?;
+                    (t0.elapsed().as_secs_f64(), out)
+                } else {
+                    let args: Vec<&xla::Literal> = vec![
+                        &x_lit,
+                        self.wl(i, &an),
+                        self.wl(i, &wq),
+                        self.wl(i, &wk),
+                        self.wl(i, &wv),
+                        self.wl(i, &wo),
+                        &pos_lit,
+                    ];
+                    let t0 = Instant::now();
+                    let out = self.rt.execute_refs(&attn_name, &args)?;
+                    (t0.elapsed().as_secs_f64(), out)
+                };
+                stage_outs.push(timed);
+            }
+            let site = Site { layer: l, kind: SiteKind::AttnOut, phase };
+            x = self.stage_collect(
+                job, site, x, stage_outs, kv, l, sb, &mut fused_memo, &mut trace, &mut busy,
+            )?;
+
+            // ---- MLP ----
+            let mlp_name = format!("{model}/mlp_tp{tp}_b{bb}_s{sb}");
+            let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            let mut stage_outs = Vec::with_capacity(self.ranks.len());
+            for i in 0..self.ranks.len() {
+                let mn = format!("l{l}.mlp_norm");
+                let wg = format!("l{l}.w_gate");
+                let wu = format!("l{l}.w_up");
+                let wd = format!("l{l}.w_down");
+                let args: Vec<&xla::Literal> = vec![
+                    &x_lit,
+                    self.wl(i, &mn),
+                    self.wl(i, &wg),
+                    self.wl(i, &wu),
+                    self.wl(i, &wd),
+                ];
+                let t0 = Instant::now();
+                let out = self.rt.execute_refs(&mlp_name, &args)?;
+                stage_outs.push((t0.elapsed().as_secs_f64(), out));
+            }
+            let site = Site { layer: l, kind: SiteKind::MlpOut, phase };
+            x = self.stage_collect(
+                job, site, x, stage_outs, None, l, sb, &mut fused_memo, &mut trace, &mut busy,
+            )?;
+        }
+
+        // final norm + logits — leader (rank 0) only
+        let logits = if self.ranks[0] == 0 {
+            let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            let t0 = Instant::now();
+            let out = self.rt.execute_refs(
+                &format!("{model}/final_b{bb}_s{sb}"),
+                &[&x_lit, self.wl(0, "final_norm"), self.wl(0, "lm_head")],
+            )?;
+            let dt = t0.elapsed().as_secs_f64();
+            busy[0].1 += dt;
+            trace.push(TraceEvent::Stage { walls: vec![dt] });
+            Some(to_vec_f32(&out[0])?)
+        } else {
+            None
+        };
+        Ok(RankOutcome { trace, logits, busy })
+    }
+
+    /// Post-stage bookkeeping shared by the attention and MLP sites:
+    /// write KV slices (attention only), publish the owned partials to
+    /// the fabric, gather all ranks', and run the collective.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_collect(
+        &mut self,
+        job: &RankJob,
+        site: Site,
+        x: Vec<f32>,
+        stage_outs: Vec<(f64, Vec<xla::Literal>)>,
+        kv: Option<&[KvShardRef]>,
+        layer: usize,
+        s: usize,
+        fused_memo: &mut BTreeMap<usize, Option<(String, String)>>,
+        trace: &mut Vec<TraceEvent>,
+        busy: &mut [(usize, f64, f64)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut posts = Vec::with_capacity(stage_outs.len());
+        for (i, (wall, out)) in stage_outs.into_iter().enumerate() {
+            busy[i].1 += wall;
+            if let Some(shards) = kv {
+                let ks = to_vec_f32(&out[1])?;
+                let vs = to_vec_f32(&out[2])?;
+                shards[i].lock().unwrap().write_slices(layer, s, &job.pos, &ks, &vs);
+            }
+            let data = Arc::new(to_vec_f32(&out[0])?);
+            posts.push((self.ranks[i], RankPost { data, wall_s: wall }));
+        }
+        let all = self.fabric.exchange(posts)?;
+        trace.push(TraceEvent::Stage { walls: all.iter().map(|p| p.wall_s).collect() });
+        self.communicate(job, site, x, &all, fused_memo, trace, busy)
+    }
+
+    /// The collective after a row-parallel stage, executed locally on
+    /// this worker (every worker computes the identical reduction, which
+    /// is exactly what concurrent ranks do in a real deployment).
+    #[allow(clippy::too_many_arguments)]
+    fn communicate(
+        &mut self,
+        job: &RankJob,
+        site: Site,
+        x: Vec<f32>,
+        posts: &[RankPost],
+        fused_memo: &mut BTreeMap<usize, Option<(String, String)>>,
+        trace: &mut Vec<TraceEvent>,
+        busy: &mut [(usize, f64, f64)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let si = site.index();
+        let ci = self.site_spec[si] as usize;
+        let len = x.len();
+        let n = posts.len();
+        let topo = Topology::from_profile(job.profile, job.tp);
+
+        // fused on-accelerator compression, when exported for this
+        // site's scheme + bucket (otherwise the bit-exact host codec)
+        if job.fused {
+            let names = match fused_memo.get(&ci) {
+                Some(v) => v.clone(),
+                None => {
+                    let v = self.fused_names(job, ci);
+                    fused_memo.insert(ci, v.clone());
+                    v
+                }
+            };
+            if let Some((qname, dname)) = names {
+                return self
+                    .communicate_fused(job, site, ci, &x, posts, &qname, &dname, trace, busy);
+            }
+        }
+
+        let memo_key = (len, job.profile as *const HwProfile as usize, ci);
+        let plan = match self.plan_memo.get(&memo_key).copied() {
+            Some(p) => p,
+            None => {
+                let p = plan::choose(
+                    len,
+                    n,
+                    self.comps[ci].as_deref(),
+                    &topo,
+                    job.profile.quant_values_per_s,
+                    job.algo,
+                );
+                self.plan_memo.insert(memo_key, p);
+                p
+            }
+        };
+        let comp = self.comps[ci].as_deref();
+        let measure = job.overhead == OverheadModel::Measured;
+        let ctx = ExecCtx { comp, topo: &topo, measure };
+        let refs: Vec<&[f32]> = posts.iter().map(|p| p.data.as_slice()).collect();
+        let mut out = std::mem::take(&mut self.reduce_buf);
+        let mut wire = std::mem::take(&mut self.wire_buf);
+        let algo_impl = plan.algo.implementation();
+        let rep =
+            pipeline::run_chunked(algo_impl, &x, &refs, &ctx, plan.chunks, &mut out, &mut wire);
+        // the overhead-model resolution is shared with the sequential
+        // path (super::comm_times) so the two cores cannot drift
+        let (codec_s, total_s) =
+            super::comm_times(job.overhead, &rep, &plan, len, n, comp, &topo);
+        for b in busy.iter_mut() {
+            b.2 += codec_s;
+        }
+        trace.push(TraceEvent::Comm {
+            site,
+            scheme_idx: ci,
+            algo: rep.algo,
+            wire_bytes: rep.wire_bytes as u64,
+            raw_bytes: rep.raw_bytes as u64,
+            codec_s,
+            total_s,
+        });
+        self.wire_buf = wire;
+        // the consumed x becomes next collective's scratch buffer
+        self.reduce_buf = x;
+        self.reduce_buf.clear();
+        Ok(out)
+    }
+
+    /// Names of the fused quantize / dequant-reduce-add executables for
+    /// scheme `ci` at this job's bucket, if exported (mirrors the
+    /// sequential `fused_names_site`).
+    fn fused_names(&self, job: &RankJob, ci: usize) -> Option<(String, String)> {
+        let spec = &self.specs[ci];
+        if spec == "none" {
+            return None;
+        }
+        let (model, tp, bb, sb) = (&job.model, job.tp, job.bb, job.sb);
+        let q = format!("{model}/quant_{spec}_b{bb}_s{sb}");
+        let d = format!("{model}/dqra_{spec}_tp{tp}_b{bb}_s{sb}");
+        (self.rt.manifest.by_name(&q).is_some() && self.rt.manifest.by_name(&d).is_some())
+            .then_some((q, d))
+    }
+
+    /// Fused on-accelerator collective on this worker's own runtime —
+    /// the same quantize/stack/dequant-reduce-add program the sequential
+    /// path runs, so outputs and wire accounting are identical.
+    #[allow(clippy::too_many_arguments)]
+    fn communicate_fused(
+        &mut self,
+        job: &RankJob,
+        site: Site,
+        ci: usize,
+        x: &[f32],
+        posts: &[RankPost],
+        qname: &str,
+        dname: &str,
+        trace: &mut Vec<TraceEvent>,
+        busy: &mut [(usize, f64, f64)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let tp = job.tp;
+        let (bb, sb) = (job.bb, job.sb);
+        let values = bb * sb * d;
+        let scheme = MxScheme::parse(&self.specs[ci])?;
+        let block = scheme.block;
+        let nb = d / block;
+
+        let mut codes_all = Vec::with_capacity(tp * values);
+        let mut scales_all = Vec::with_capacity(tp * values / block);
+        let mut enc_once = 0.0f64;
+        for (rank, p) in posts.iter().enumerate() {
+            let p_lit = lit_f32(&[bb, sb, d], &p.data)?;
+            let t0 = Instant::now();
+            let out = self.rt.execute_refs(qname, &[&p_lit])?;
+            let dt = t0.elapsed().as_secs_f64();
+            if rank == 0 {
+                enc_once = dt;
+            }
+            codes_all.extend(to_vec_u8(&out[0])?);
+            scales_all.extend(to_vec_u8(&out[1])?);
+        }
+        let x_lit = lit_f32(&[bb, sb, d], x)?;
+        let codes = lit_u8(&[tp, bb, sb, d], &codes_all)?;
+        let scales = lit_u8(&[tp, bb, sb, nb], &scales_all)?;
+        let t0 = Instant::now();
+        let out = self.rt.execute_refs(dname, &[&x_lit, &codes, &scales])?;
+        let dqra_s = t0.elapsed().as_secs_f64();
+        let reduced = to_vec_f32(&out[0])?;
+
+        let shard_wire = scheme.wire_bytes(values);
+        let link_s = job.profile.link.all_gather_time(shard_wire, tp);
+        let codec_s = match job.overhead {
+            OverheadModel::Measured => enc_once + dqra_s,
+            OverheadModel::Analytic { values_per_s } => (values * tp) as f64 / values_per_s,
+        };
+        for b in busy.iter_mut() {
+            b.2 += codec_s;
+        }
+        // the fused HLO executables bake in the all-gather layout, so
+        // this path always accounts as the flat ring
+        trace.push(TraceEvent::Comm {
+            site,
+            scheme_idx: ci,
+            algo: "ring",
+            wire_bytes: (shard_wire * (tp - 1)) as u64,
+            raw_bytes: (values * 2 * (tp - 1)) as u64,
+            codec_s,
+            total_s: link_s + codec_s,
+        });
+        Ok(reduced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_ranks_cover_contiguously() {
+        for tp in 1..=8usize {
+            for workers in 1..=tp {
+                let mut all = Vec::new();
+                for w in 0..workers {
+                    let r = owned_ranks(tp, workers, w);
+                    assert!(!r.is_empty(), "tp={tp} workers={workers} w={w}");
+                    all.extend(r);
+                }
+                assert_eq!(all, (0..tp).collect::<Vec<_>>(), "tp={tp} workers={workers}");
+            }
+        }
+        // worker 0 always owns the leader rank
+        assert_eq!(owned_ranks(8, 3, 0)[0], 0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Rank-thread runtime equivalence: the parallel execution core must be
+//! **bit-identical** to the sequential reference path — logits, sampled
+//! tokens, wire bytes, per-site stats, and `/metrics` policy counters —
+//! across TP degrees and policies. Engine-level tests need AOT
+//! artifacts (self-skip without them, like the other engine suites);
+//! the knob/assignment tests run everywhere.
+
+use tpcc::model::weights::Weights;
+use tpcc::runtime::Runtime;
+use tpcc::tp::{BatchKv, EngineOptions, RankThreads, TpEngine};
+
+const SCHEME: &str = "fp4_e2m1_b32_e8m0";
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = tpcc::artifacts_dir();
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn make_engine(
+    root: &std::path::Path,
+    tp: usize,
+    compress: &str,
+    policy: &str,
+    rank_threads: RankThreads,
+) -> TpEngine {
+    let rt = Runtime::load(root).unwrap();
+    let weights = Weights::load(&root.join("weights/nano")).unwrap();
+    let opts = EngineOptions::new("nano", tp)
+        .with_compress(compress)
+        .with_policy(policy)
+        .with_rank_threads(rank_threads);
+    TpEngine::new(rt, &weights, opts).unwrap()
+}
+
+/// TP degrees with exported prefill stage programs for this bucket.
+fn available_degrees(root: &std::path::Path) -> Vec<usize> {
+    let rt = Runtime::load(root).unwrap();
+    [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|tp| {
+            *tp == 1
+                || rt
+                    .manifest
+                    .by_name(&format!("nano/attn_prefill_tp{tp}_b1_s128"))
+                    .is_some()
+        })
+        .collect()
+}
+
+fn prompt() -> Vec<i32> {
+    (0..128).map(|i| (i * 13 + 5) % 256).collect()
+}
+
+/// Run one prefill on both cores and assert everything observable is
+/// identical; returns both engines for follow-on checks.
+fn assert_prefill_equivalent(
+    root: &std::path::Path,
+    tp: usize,
+    policy: &str,
+) -> (TpEngine, TpEngine) {
+    let toks = prompt();
+    let mut seq = make_engine(root, tp, SCHEME, policy, RankThreads::Off);
+    let mut par = make_engine(root, tp, SCHEME, policy, RankThreads::Auto);
+    if tp > 1 {
+        assert!(par.rank_workers() >= 1, "tp={tp}: pool did not spawn");
+    }
+    let (l_seq, t_seq) = seq.prefill(&toks, 1, 128, &[0], None).unwrap();
+    let (l_par, t_par) = par.prefill(&toks, 1, 128, &[0], None).unwrap();
+    assert_eq!(l_seq, l_par, "tp={tp} policy={policy:?}: logits not bit-identical");
+    assert_eq!(t_seq.wire_bytes, t_par.wire_bytes, "tp={tp} {policy:?}: wire bytes differ");
+    assert_eq!(t_seq.raw_bytes, t_par.raw_bytes, "tp={tp} {policy:?}: raw bytes differ");
+    assert_eq!(t_seq.algo, t_par.algo, "tp={tp} {policy:?}: planned algo differs");
+    // per-site telemetry identical (calls, wire, raw per site)
+    let s_stats: Vec<(u64, u64, u64)> =
+        seq.site_stats().iter().map(|s| (s.calls, s.wire_bytes, s.raw_bytes)).collect();
+    let p_stats: Vec<(u64, u64, u64)> =
+        par.site_stats().iter().map(|s| (s.calls, s.wire_bytes, s.raw_bytes)).collect();
+    assert_eq!(s_stats, p_stats, "tp={tp} {policy:?}: site stats differ");
+    // the /metrics policy counter rollups agree exactly
+    assert_eq!(
+        seq.policy_metrics(),
+        par.policy_metrics(),
+        "tp={tp} {policy:?}: policy metrics differ"
+    );
+    (seq, par)
+}
+
+#[test]
+fn parallel_matches_sequential_across_tp_degrees() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let degrees = available_degrees(&root);
+    assert!(degrees.contains(&2), "nano tp=2 artifacts missing");
+    for tp in degrees {
+        let (_seq, par) = assert_prefill_equivalent(&root, tp, "");
+        if tp > 1 {
+            // every rank accumulated real busy time on the workers
+            let gauges = par.rank_metrics();
+            for r in 0..tp {
+                let key = format!("rank{r}_compute_busy_s");
+                let v = gauges.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap();
+                assert!(v > 0.0, "tp={tp}: {key} never accumulated");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_for_selective_policies() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for policy in ["paper", "auto", "attn=none;decode=none"] {
+        assert_prefill_equivalent(&root, 2, policy);
+    }
+}
+
+#[test]
+fn parallel_decode_and_kv_match_sequential() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let toks = prompt();
+    let mut seq = make_engine(&root, 2, SCHEME, "", RankThreads::Off);
+    let mut par = make_engine(&root, 2, SCHEME, "", RankThreads::Fixed(2));
+    let cfg = seq.cfg.clone();
+    let mut kv_seq = BatchKv::new(&cfg, 2, 1);
+    let mut kv_par = BatchKv::new(&cfg, 2, 1);
+    let (_, _) = seq.prefill(&toks, 1, 128, &[0], Some(&mut kv_seq)).unwrap();
+    let (_, _) = par.prefill(&toks, 1, 128, &[0], Some(&mut kv_par)).unwrap();
+    // the KV contents the workers wrote must match the sequential writes
+    for rank in 0..2 {
+        for layer in 0..cfg.n_layers {
+            assert_eq!(
+                kv_seq.k_at(rank, layer),
+                kv_par.k_at(rank, layer),
+                "kv k differs at rank {rank} layer {layer}"
+            );
+            assert_eq!(
+                kv_seq.v_at(rank, layer),
+                kv_par.v_at(rank, layer),
+                "kv v differs at rank {rank} layer {layer}"
+            );
+        }
+    }
+    // greedy decode continues identically for a few steps
+    let v = cfg.vocab;
+    let mut tok_seq = 1i32;
+    let mut tok_par = 1i32;
+    for step in 0..3 {
+        let pos = 128 + step;
+        let (ls, _) = seq.decode(&[tok_seq], &[pos], &mut kv_seq).unwrap();
+        let (lp, _) = par.decode(&[tok_par], &[pos], &mut kv_par).unwrap();
+        assert_eq!(ls, lp, "decode logits diverge at step {step}");
+        let argmax = |l: &[f32]| {
+            (0..v)
+                .max_by(|&a, &b| l[a].partial_cmp(&l[b]).unwrap())
+                .unwrap() as i32
+        };
+        tok_seq = argmax(&ls);
+        tok_par = argmax(&lp);
+        assert_eq!(tok_seq, tok_par, "sampled tokens diverge at step {step}");
+    }
+}
+
+#[test]
+fn policy_rebind_reaches_the_worker_pool() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let toks = prompt();
+    let mut seq = make_engine(&root, 2, SCHEME, "", RankThreads::Off);
+    let mut par = make_engine(&root, 2, SCHEME, "", RankThreads::Auto);
+    for policy in ["mlp=none", "uniform:fp5_e2m2_b16_e8m0", ""] {
+        seq.set_policy(policy).unwrap();
+        par.set_policy(policy).unwrap();
+        let (ls, ts) = seq.prefill(&toks, 1, 128, &[0], None).unwrap();
+        let (lp, tp_) = par.prefill(&toks, 1, 128, &[0], None).unwrap();
+        assert_eq!(ls, lp, "policy {policy:?}: logits differ after rebind");
+        assert_eq!(ts.wire_bytes, tp_.wire_bytes, "policy {policy:?}: wire bytes differ");
+    }
+}
+
+/// End-to-end serving equality: greedy generations through the full
+/// coordinator must be byte-identical between the two cores.
+#[test]
+fn coordinator_generations_identical_across_cores() {
+    use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest};
+
+    let Some(_) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let spawn_with = |rank_threads: RankThreads| {
+        spawn(
+            move || {
+                let root = tpcc::artifacts_dir();
+                let rt = Runtime::load(&root)?;
+                let weights = Weights::load(&root.join("weights/nano"))?;
+                TpEngine::new(
+                    rt,
+                    &weights,
+                    EngineOptions::new("nano", 2)
+                        .with_compress(SCHEME)
+                        .with_rank_threads(rank_threads),
+                )
+            },
+            CoordinatorOptions::default(),
+        )
+        .unwrap()
+    };
+    let (h_seq, j_seq) = spawn_with(RankThreads::Off);
+    let (h_par, j_par) = spawn_with(RankThreads::Auto);
+    let req = GenRequest {
+        prompt: "The parish church of ".into(),
+        max_new_tokens: 12,
+        greedy: true,
+        stop_token: -1,
+    };
+    let a = h_seq.generate(req.clone()).unwrap();
+    let b = h_par.generate(req).unwrap();
+    assert_eq!(a.text, b.text, "sampled tokens differ between cores");
+    assert_eq!(a.new_tokens, b.new_tokens);
+    for (h, j) in [(h_seq, j_seq), (h_par, j_par)] {
+        h.shutdown();
+        drop(h);
+        j.join().unwrap().unwrap();
+    }
+}
+
+// ---- knob / assignment sanity (no artifacts needed) ----
+
+#[test]
+fn rank_threads_knob_parses_and_resolves() {
+    assert_eq!(RankThreads::parse("off").unwrap(), RankThreads::Off);
+    assert_eq!(RankThreads::parse("sequential").unwrap(), RankThreads::Off);
+    assert_eq!(RankThreads::parse("auto").unwrap(), RankThreads::Auto);
+    assert_eq!(RankThreads::parse("").unwrap(), RankThreads::Auto);
+    assert_eq!(RankThreads::parse("2").unwrap(), RankThreads::Fixed(2));
+    assert_eq!(RankThreads::parse("0").unwrap(), RankThreads::Off);
+    assert!(RankThreads::parse("fast").is_err());
+    // off and tp=1 never spawn; fixed clamps to tp; auto caps at cores
+    assert_eq!(RankThreads::Off.workers(8), 0);
+    assert_eq!(RankThreads::Auto.workers(1), 0);
+    assert_eq!(RankThreads::Fixed(9).workers(4), 4);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    assert_eq!(RankThreads::Auto.workers(64), 64.min(cores));
+    assert!(RankThreads::Auto.workers(2) >= 1);
+}
+
+#[test]
+fn rank_ownership_is_contiguous_and_leader_first() {
+    use tpcc::tp::rank::owned_ranks;
+    for tp in [2usize, 4, 8] {
+        for workers in 1..=tp {
+            let mut all = Vec::new();
+            for w in 0..workers {
+                all.extend(owned_ranks(tp, workers, w));
+            }
+            assert_eq!(all, (0..tp).collect::<Vec<_>>());
+            assert_eq!(owned_ranks(tp, workers, 0)[0], 0);
+        }
+    }
+}

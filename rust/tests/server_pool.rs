@@ -1,0 +1,111 @@
+//! HTTP substrate integration: the fixed worker pool must bound
+//! concurrency under a connection burst — every connection gets an HTTP
+//! answer (200 or a 503 shed), no unbounded thread spawning, and the
+//! read-only endpoints keep working through the pool. Runs without AOT
+//! artifacts via a detached coordinator handle.
+
+use std::sync::Arc;
+
+use tpcc::coordinator::CoordinatorHandle;
+use tpcc::server::{http_get, http_post, Server};
+
+fn bind_detached(workers: usize, backlog: usize) -> (Server, String, Arc<tpcc::server::PoolStats>) {
+    let server = Server::bind("127.0.0.1:0", CoordinatorHandle::detached())
+        .unwrap()
+        .with_pool(workers, backlog);
+    let addr = server.local_addr().unwrap().to_string();
+    let stats = server.stats();
+    (server, addr, stats)
+}
+
+#[test]
+fn burst_is_bounded_and_fully_answered() {
+    let burst = 32usize;
+    let workers = 3usize;
+    let (server, addr, stats) = bind_detached(workers, 4);
+    let srv = std::thread::spawn(move || server.serve_n(burst).unwrap());
+
+    // a synchronized burst: all clients connect at once
+    let joins: Vec<_> = (0..burst)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || http_get(&addr, "/healthz").unwrap())
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for j in joins {
+        let (code, body) = j.join().unwrap();
+        match code {
+            200 => {
+                assert!(body.contains("ok"));
+                ok += 1;
+            }
+            503 => {
+                assert!(body.contains("overloaded"), "{body}");
+                shed += 1;
+            }
+            other => panic!("connection got status {other}: {body}"),
+        }
+    }
+    srv.join().unwrap();
+    // every connection was answered, one way or the other ...
+    assert_eq!(ok + shed, burst);
+    assert_eq!(stats.served() + stats.shed(), burst);
+    assert_eq!(stats.served(), ok);
+    // ... and the pool never ran more handlers than it has workers
+    assert!(
+        stats.peak_active() <= workers,
+        "peak {} exceeded the {workers}-worker cap",
+        stats.peak_active()
+    );
+    assert!(ok > 0, "pool served nothing");
+}
+
+#[test]
+fn pool_serves_endpoints_and_404s() {
+    let (server, addr, stats) = bind_detached(2, 8);
+    let srv = std::thread::spawn(move || server.serve_n(4).unwrap());
+
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("ok"));
+
+    // detached registry still serves a valid metrics snapshot
+    let (code, body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let m = tpcc::util::json::Json::parse(&body).unwrap();
+    assert_eq!(m.get("requests_completed").unwrap().as_i64(), Some(0));
+
+    let (code, _) = http_get(&addr, "/nope").unwrap();
+    assert_eq!(code, 404);
+
+    // /generate with no engine behind the handle answers 500, not a drop
+    let (code, body) =
+        http_post(&addr, "/generate", r#"{"prompt": "x", "max_tokens": 1}"#).unwrap();
+    assert_eq!(code, 500, "{body}");
+    assert!(body.contains("error"));
+
+    srv.join().unwrap();
+    assert_eq!(stats.served(), 4);
+    assert_eq!(stats.shed(), 0);
+}
+
+#[test]
+fn malformed_requests_still_answered_through_pool() {
+    use std::io::{Read as _, Write as _};
+
+    let (server, addr, _stats) = bind_detached(2, 8);
+    let srv = std::thread::spawn(move || server.serve_n(2).unwrap());
+
+    let (code, body) = http_post(&addr, "/generate", "{not json").unwrap();
+    assert_eq!(code, 400, "{body}");
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "got {raw:?}");
+
+    srv.join().unwrap();
+}
