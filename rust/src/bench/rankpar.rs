@@ -9,11 +9,23 @@
 //! reference on a host with ≥ tp cores. Virtual-time TTFT is identical
 //! between the modes by construction (pinned by `tests/rank_parallel.rs`);
 //! this bench tracks the *real* speedup.
+//!
+//! A third leg re-runs the parallel engine with the span recorder
+//! enabled: the per-phase breakdown columns (compute / codec / fabric
+//! wait / link) come from the recorder's measured phase accumulators,
+//! and `trace_overhead_pct` pins the recorder's cost against the
+//! untraced parallel wall (asserted under `TPCC_TRACE_OVERHEAD_PCT`,
+//! default 5%).
 
 use crate::model::weights::Weights;
 use crate::runtime::Runtime;
 use crate::tp::{BatchKv, EngineOptions, RankThreads, TpEngine};
 use crate::util::json::{self, Json};
+
+/// Default ceiling (percent) on the recorder's wall-clock overhead;
+/// override with the `TPCC_TRACE_OVERHEAD_PCT` env var (`0` disables
+/// the assertion for noisy hosts).
+pub const DEFAULT_TRACE_OVERHEAD_PCT: f64 = 5.0;
 
 /// The scheme every config compresses with (the paper's headline pick).
 pub const SCHEME: &str = "fp4_e2m1_b32_e8m0";
@@ -33,9 +45,19 @@ pub struct RankparRow {
     pub workers: usize,
     /// median sequential (`--rank-threads off`) prefill wall seconds
     pub seq_wall_s: f64,
-    /// median parallel prefill wall seconds
+    /// median parallel prefill wall seconds (recorder off)
     pub par_wall_s: f64,
     pub speedup: f64,
+    /// median parallel wall with the span recorder enabled
+    pub traced_wall_s: f64,
+    /// recorder cost: (traced/untraced - 1) · 100
+    pub trace_overhead_pct: f64,
+    /// measured per-phase thread-seconds per rep, from the recorder's
+    /// phase accumulators over the traced reps
+    pub phase_compute_s: f64,
+    pub phase_codec_s: f64,
+    pub phase_fabric_wait_s: f64,
+    pub phase_link_s: f64,
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
@@ -77,6 +99,29 @@ fn measure(eng: &mut TpEngine, batch: usize, seq: usize, reps: usize) -> anyhow:
     Ok(median(walls))
 }
 
+/// Re-measure with the span recorder on, returning the median wall and
+/// the per-rep phase deltas [compute, codec, fabric_wait, link].
+fn measure_traced(
+    eng: &mut TpEngine,
+    batch: usize,
+    seq: usize,
+    reps: usize,
+) -> anyhow::Result<(f64, [f64; 4])> {
+    eng.tracer().set_enabled(true);
+    let before = eng.tracer().phase_snapshot();
+    let wall = measure(eng, batch, seq, reps)?;
+    let after = eng.tracer().phase_snapshot();
+    eng.tracer().set_enabled(false);
+    // measure() runs one warmup pass + reps timed passes on the clock;
+    // the phase accumulators see warmup too, so scale by reps+1
+    let passes = (reps.max(1) + 1) as f64;
+    let mut phases = [0.0f64; 4];
+    for i in 0..4 {
+        phases[i] = (after[i] - before[i]) / passes;
+    }
+    Ok((wall, phases))
+}
+
 /// Run the sequential-vs-parallel sweep. `rank_threads` picks the
 /// parallel leg's worker policy (`auto` by default); configs whose
 /// stage programs are not in the manifest are skipped.
@@ -95,6 +140,21 @@ pub fn run(reps: usize, rank_threads: RankThreads) -> anyhow::Result<Vec<Rankpar
         let mut par_eng = build_engine(&root, tp, rank_threads)?;
         let workers = par_eng.rank_workers();
         let par_wall_s = measure(&mut par_eng, batch, seq, reps)?;
+        // third leg: same engine (already warm), recorder on — the
+        // traced/untraced delta is the recorder's measured cost
+        let (traced_wall_s, phases) = measure_traced(&mut par_eng, batch, seq, reps)?;
+        let trace_overhead_pct = (traced_wall_s / par_wall_s - 1.0) * 100.0;
+        let limit = std::env::var("TPCC_TRACE_OVERHEAD_PCT")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(DEFAULT_TRACE_OVERHEAD_PCT);
+        if limit > 0.0 {
+            anyhow::ensure!(
+                trace_overhead_pct < limit,
+                "span recorder overhead {trace_overhead_pct:.2}% exceeds {limit}% \
+                 (tp={tp}; raise/disable via TPCC_TRACE_OVERHEAD_PCT)"
+            );
+        }
         rows.push(RankparRow {
             tp,
             batch,
@@ -103,6 +163,12 @@ pub fn run(reps: usize, rank_threads: RankThreads) -> anyhow::Result<Vec<Rankpar
             seq_wall_s,
             par_wall_s,
             speedup: seq_wall_s / par_wall_s,
+            traced_wall_s,
+            trace_overhead_pct,
+            phase_compute_s: phases[0],
+            phase_codec_s: phases[1],
+            phase_fabric_wait_s: phases[2],
+            phase_link_s: phases[3],
         });
     }
     anyhow::ensure!(!rows.is_empty(), "no bench config matches the exported buckets");
@@ -113,19 +179,25 @@ pub fn print(rows: &[RankparRow]) {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("\nrankpar bench — {MODEL} + {SCHEME}, seq vs --rank-threads ({cores} cores)");
     println!(
-        "{:<8} {:>8} {:>9} {:>14} {:>14} {:>9}",
-        "tp", "input", "workers", "seq wall", "par wall", "speedup"
+        "{:<4} {:>8} {:>8} {:>12} {:>12} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "tp", "input", "workers", "seq wall", "par wall", "speedup", "compute", "codec",
+        "fabwait", "link", "trace%"
     );
-    println!("{}", "-".repeat(68));
+    println!("{}", "-".repeat(110));
     for r in rows {
         println!(
-            "{:<8} {:>8} {:>9} {:>13.1}ms {:>13.1}ms {:>8.2}x",
+            "{:<4} {:>8} {:>8} {:>11.1}ms {:>11.1}ms {:>7.2}x {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>7.2}%",
             r.tp,
             format!("{}x{}", r.batch, r.seq),
             r.workers,
             r.seq_wall_s * 1e3,
             r.par_wall_s * 1e3,
-            r.speedup
+            r.speedup,
+            r.phase_compute_s * 1e3,
+            r.phase_codec_s * 1e3,
+            r.phase_fabric_wait_s * 1e3,
+            r.phase_link_s * 1e3,
+            r.trace_overhead_pct
         );
     }
 }
@@ -144,11 +216,18 @@ pub fn to_json(rows: &[RankparRow], reps: usize) -> Json {
                 ("seq_wall_s", json::num_or_null(r.seq_wall_s)),
                 ("par_wall_s", json::num_or_null(r.par_wall_s)),
                 ("speedup", json::num_or_null(r.speedup)),
+                ("traced_wall_s", json::num_or_null(r.traced_wall_s)),
+                ("trace_overhead_pct", json::num_or_null(r.trace_overhead_pct)),
+                ("phase_compute_s", json::num_or_null(r.phase_compute_s)),
+                ("phase_codec_s", json::num_or_null(r.phase_codec_s)),
+                ("phase_fabric_wait_s", json::num_or_null(r.phase_fabric_wait_s)),
+                ("phase_link_s", json::num_or_null(r.phase_link_s)),
             ])
         })
         .collect();
     json::obj(vec![
         ("bench", json::s("rankpar")),
+        ("schema", json::num(2.0)),
         ("model", json::s(MODEL)),
         ("scheme", json::s(SCHEME)),
         ("metric", json::s("median live prefill wall seconds (TTFT compute+collective)")),
@@ -179,13 +258,22 @@ mod tests {
             seq_wall_s: 0.4,
             par_wall_s: 0.1,
             speedup: 4.0,
+            traced_wall_s: 0.102,
+            trace_overhead_pct: 2.0,
+            phase_compute_s: 0.08,
+            phase_codec_s: 0.01,
+            phase_fabric_wait_s: 0.005,
+            phase_link_s: 0.002,
         }];
         let j = to_json(&rows, 5);
         // round-trips as valid JSON with the tracked fields present
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("rankpar"));
+        assert_eq!(parsed.get("schema").unwrap().as_f64(), Some(2.0));
         assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
         let row = parsed.get("rows").unwrap().idx(0).unwrap();
         assert_eq!(row.get("speedup").unwrap().as_f64(), Some(4.0));
+        assert_eq!(row.get("phase_compute_s").unwrap().as_f64(), Some(0.08));
+        assert_eq!(row.get("trace_overhead_pct").unwrap().as_f64(), Some(2.0));
     }
 }

@@ -26,6 +26,7 @@ use std::time::Instant;
 use super::topology::Topology;
 use super::CommReport;
 use crate::mxfmt::Compressor;
+use crate::obs::{self, Cat};
 
 /// Which collective algorithm to run (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -210,13 +211,19 @@ fn gather_reduce_exec(
                 let mut enc_once = 0.0;
                 for (r, p) in partials.iter().enumerate() {
                     let t0 = Instant::now();
-                    c.encode(p, wire);
+                    {
+                        let _g = obs::span("mx.encode", Cat::Encode);
+                        c.encode(p, wire);
+                    }
                     let dt = t0.elapsed().as_secs_f64();
                     if r == 0 {
                         enc_once = dt;
                     }
                     let t1 = Instant::now();
-                    c.decode_add(wire, len, out);
+                    {
+                        let _g = obs::span("mx.decode", Cat::Decode);
+                        c.decode_add(wire, len, out);
+                    }
                     report.decode_s += t1.elapsed().as_secs_f64();
                 }
                 report.encode_s = enc_once;
@@ -444,10 +451,16 @@ impl CollectiveAlgo for TwoShot {
                 }
                 if ctx.measure {
                     let t0 = Instant::now();
-                    c.encode(&p[sl.clone()], wire);
+                    {
+                        let _g = obs::span("mx.encode", Cat::Encode);
+                        c.encode(&p[sl.clone()], wire);
+                    }
                     enc_p1 += t0.elapsed().as_secs_f64();
                     let t1 = Instant::now();
-                    c.decode_add(wire, sl.len(), &mut tmp);
+                    {
+                        let _g = obs::span("mx.decode", Cat::Decode);
+                        c.decode_add(wire, sl.len(), &mut tmp);
+                    }
                     dec_p1 += t1.elapsed().as_secs_f64();
                 } else {
                     c.requant_add(&p[sl.clone()], &mut tmp, wire);
@@ -458,10 +471,16 @@ impl CollectiveAlgo for TwoShot {
             // non-owner receives).
             if ctx.measure {
                 let t0 = Instant::now();
-                c.encode(&tmp, wire);
+                {
+                    let _g = obs::span("mx.encode", Cat::Encode);
+                    c.encode(&tmp, wire);
+                }
                 enc_p2 += t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
-                c.decode_add(wire, sl.len(), &mut out[sl.clone()]);
+                {
+                    let _g = obs::span("mx.decode", Cat::Decode);
+                    c.decode_add(wire, sl.len(), &mut out[sl.clone()]);
+                }
                 dec_p2 += t1.elapsed().as_secs_f64();
             } else {
                 c.requant_add(&tmp, &mut out[sl.clone()], wire);
@@ -585,10 +604,16 @@ impl CollectiveAlgo for Hierarchical {
                 debug_assert_eq!(partials[r].len(), len);
                 if ctx.measure {
                     let t0 = Instant::now();
-                    c.encode(partials[r], wire);
+                    {
+                        let _g = obs::span("mx.encode", Cat::Encode);
+                        c.encode(partials[r], wire);
+                    }
                     enc_a += t0.elapsed().as_secs_f64();
                     let t1 = Instant::now();
-                    c.decode_add(wire, len, &mut tmp);
+                    {
+                        let _g = obs::span("mx.decode", Cat::Decode);
+                        c.decode_add(wire, len, &mut tmp);
+                    }
                     dec_a += t1.elapsed().as_secs_f64();
                 } else {
                     c.requant_add(partials[r], &mut tmp, wire);
@@ -598,10 +623,16 @@ impl CollectiveAlgo for Hierarchical {
             // crosses the inter link, and is re-broadcast intra-node
             if ctx.measure {
                 let t0 = Instant::now();
-                c.encode(&tmp, wire);
+                {
+                    let _g = obs::span("mx.encode", Cat::Encode);
+                    c.encode(&tmp, wire);
+                }
                 enc_b += t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
-                c.decode_add(wire, len, out);
+                {
+                    let _g = obs::span("mx.decode", Cat::Decode);
+                    c.decode_add(wire, len, out);
+                }
                 dec_b += t1.elapsed().as_secs_f64();
             } else {
                 c.requant_add(&tmp, out, wire);

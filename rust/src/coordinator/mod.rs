@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use crate::collective::AlgoKind;
 use crate::metrics::Registry;
+use crate::obs::{self, Cat, Tracer};
 use crate::tokenizer::ByteTokenizer;
 use crate::tp::{BatchKv, StepTiming, TpEngine};
 
@@ -59,6 +60,9 @@ pub struct CoordinatorOptions {
     pub max_wait_s: f64,
     pub sampling: Sampling,
     pub seed: u64,
+    /// enable the engine's span recorder at startup (`tpcc serve` /
+    /// `tpcc trace`); spans are served at `GET /trace`
+    pub trace: bool,
 }
 
 impl Default for CoordinatorOptions {
@@ -68,6 +72,7 @@ impl Default for CoordinatorOptions {
             max_wait_s: 0.05,
             sampling: Sampling::Greedy,
             seed: 0,
+            trace: false,
         }
     }
 }
@@ -82,6 +87,9 @@ pub struct CoordinatorHandle {
     /// JSON snapshot of the engine's bound compression policy (the
     /// per-site scheme table), served at `GET /policy`
     pub policy_json: Arc<String>,
+    /// the engine's span recorder, shared so front ends can serve
+    /// `GET /trace` without a round-trip through the engine thread
+    pub tracer: Arc<Tracer>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -112,6 +120,7 @@ impl CoordinatorHandle {
             tx,
             metrics: Arc::new(Registry::default()),
             policy_json: Arc::new("{}".to_string()),
+            tracer: Tracer::new(),
             shutdown: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -142,10 +151,15 @@ impl Coordinator {
         let (tx, rx) = channel();
         let metrics = Arc::new(Registry::default());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let tracer = eng.tracer().clone();
+        if opts.trace {
+            tracer.set_enabled(true);
+        }
         let handle = CoordinatorHandle {
             tx,
             metrics: metrics.clone(),
             policy_json: Arc::new(eng.policy_json().to_string()),
+            tracer,
             shutdown: shutdown.clone(),
         };
         let seed = opts.seed;
@@ -286,6 +300,9 @@ impl Coordinator {
             s.record_prefill_start();
             if let Some(w) = s.queue_wait() {
                 self.metrics.queue_wait.record(w);
+                // queue-wait span on the request's own timeline (pid =
+                // request id), stamped retroactively from arrival
+                obs::record_abs("queue", Cat::Queue, s.id, obs::TID_COORD, s.arrived, w);
             }
         }
 
@@ -336,9 +353,13 @@ impl Coordinator {
         for (key, v) in self.eng.policy_metrics() {
             self.metrics.set(&key, v);
         }
-        // per-rank compute/codec utilization gauges (real concurrent
-        // busy time under the rank-thread runtime)
+        // per-rank compute/codec/fabric-wait utilization gauges (real
+        // concurrent busy time under the rank-thread runtime)
         for (key, v) in self.eng.rank_metrics() {
+            self.metrics.set(&key, v);
+        }
+        // per-phase trace gauges (compute / codec / fabric wait / link)
+        for (key, v) in self.eng.trace_metrics() {
             self.metrics.set(&key, v);
         }
         // per-algorithm collective counter (engine-side total mirrored
@@ -368,6 +389,8 @@ impl Coordinator {
         self.metrics.requests_completed.inc();
         if let Some(e2e) = s.e2e() {
             self.metrics.e2e_latency.record(e2e);
+            // whole-request span (arrival → last token) on pid = req id
+            obs::record_abs("request", Cat::Request, s.id, obs::TID_COORD, s.arrived, e2e);
         }
         if let Some(tpot) = s.tpot() {
             self.metrics.tpot.record(tpot);

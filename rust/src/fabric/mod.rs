@@ -22,6 +22,7 @@
 //! inside a fabric call) to arm the next forward.
 
 use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// Error returned by fabric operations after [`Fabric::poison`]: the
 /// message names the failure of the worker that poisoned it.
@@ -91,6 +92,12 @@ impl<T: Clone> Fabric<T> {
     /// Block until every participant has arrived (or the fabric is
     /// poisoned). Reusable: each release bumps the generation.
     pub fn barrier(&self) -> Result<(), FabricPoisoned> {
+        self.barrier_wait().map(|_| ())
+    }
+
+    /// [`Fabric::barrier`], returning the seconds this participant
+    /// spent blocked waiting for its peers (0 for the last arriver).
+    pub fn barrier_wait(&self) -> Result<f64, FabricPoisoned> {
         let g = self.inner.lock().unwrap();
         self.barrier_locked(g, false)
     }
@@ -99,12 +106,13 @@ impl<T: Clone> Fabric<T> {
     /// before releasing — used by [`Fabric::exchange`]'s trailing
     /// barrier so the missing-deposit guard stays live on *every*
     /// round, not just the first (every participant has already read
-    /// its clones by the time it arrives here).
+    /// its clones by the time it arrives here). Returns the seconds
+    /// spent blocked in the condvar wait.
     fn barrier_locked(
         &self,
         mut g: MutexGuard<'_, Inner<T>>,
         clear_slots: bool,
-    ) -> Result<(), FabricPoisoned> {
+    ) -> Result<f64, FabricPoisoned> {
         if let Some(m) = &g.poisoned {
             return Err(Self::err(m));
         }
@@ -118,15 +126,17 @@ impl<T: Clone> Fabric<T> {
                 }
             }
             self.cv.notify_all();
-            return Ok(());
+            return Ok(0.0);
         }
         let gen = g.generation;
+        let t0 = Instant::now();
         while g.generation == gen && g.poisoned.is_none() {
             g = self.cv.wait(g).unwrap();
         }
+        let waited = t0.elapsed().as_secs_f64();
         match &g.poisoned {
             Some(m) => Err(Self::err(m)),
-            None => Ok(()),
+            None => Ok(waited),
         }
     }
 
@@ -136,6 +146,18 @@ impl<T: Clone> Fabric<T> {
     /// participant has read the slots before any of them can deposit
     /// the next round's payloads.
     pub fn exchange(&self, posts: Vec<(usize, T)>) -> Result<Vec<T>, FabricPoisoned> {
+        self.exchange_timed(posts).map(|(out, _)| out)
+    }
+
+    /// [`Fabric::exchange`], additionally returning the seconds this
+    /// participant spent *blocked* waiting for peers across the two
+    /// barriers (excluding deposit and gather work) — the fabric-wait
+    /// signal behind the `rank{r}_fabric_wait_s` gauges and the
+    /// `phase_fabric_wait_s` trace phase.
+    pub fn exchange_timed(
+        &self,
+        posts: Vec<(usize, T)>,
+    ) -> Result<(Vec<T>, f64), FabricPoisoned> {
         {
             let mut g = self.inner.lock().unwrap();
             if let Some(m) = &g.poisoned {
@@ -145,7 +167,7 @@ impl<T: Clone> Fabric<T> {
                 g.slots[slot] = Some(v);
             }
         }
-        self.barrier()?;
+        let mut waited = self.barrier_wait()?;
         let gathered = {
             let g = self.inner.lock().unwrap();
             if let Some(m) = &g.poisoned {
@@ -162,9 +184,9 @@ impl<T: Clone> Fabric<T> {
         };
         {
             let g = self.inner.lock().unwrap();
-            self.barrier_locked(g, true)?;
+            waited += self.barrier_locked(g, true)?;
         }
-        Ok(gathered)
+        Ok((gathered, waited))
     }
 
     /// Mark the fabric failed: every blocked or future fabric call
@@ -303,6 +325,23 @@ mod tests {
         // hand back round 1's stale payload
         let err = f.exchange(vec![(0, 3)]).unwrap_err();
         assert!(err.to_string().contains("slot 1"), "{err}");
+    }
+
+    #[test]
+    fn exchange_timed_measures_blocked_time() {
+        // A arrives immediately, B arrives ~100 ms late: A's measured
+        // wait must cover most of that gap, and both waits are finite
+        // and non-negative. Generous margins keep this robust on a
+        // loaded host.
+        let f: Arc<Fabric<u64>> = Arc::new(Fabric::new(2, 2));
+        let f2 = f.clone();
+        let early = std::thread::spawn(move || f2.exchange_timed(vec![(0, 1)]).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (_, late_wait) = f.exchange_timed(vec![(1, 2)]).unwrap();
+        let (got, early_wait) = early.join().unwrap();
+        assert_eq!(got, vec![1, 2]);
+        assert!(early_wait >= 0.05, "early participant waited {early_wait}s");
+        assert!(late_wait >= 0.0 && late_wait < early_wait, "late waited {late_wait}s");
     }
 
     #[test]

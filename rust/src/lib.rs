@@ -34,6 +34,10 @@
 //!                    hardware profiles (PCIe/NVLink intra, Ethernet/IB
 //!                    inter).
 //! * [`coordinator`]  — continuous batcher, KV-cache pool, sessions.
+//! * [`obs`]        — structured tracing: per-thread span rings threaded
+//!                    from request admission down to the codec passes,
+//!                    Chrome-trace/Perfetto export (`tpcc trace`,
+//!                    `GET /trace`), per-phase gauges on `/metrics`.
 //! * [`server`]     — minimal HTTP/1.1 front end (per-algorithm
 //!                    collective counters on `/metrics`).
 //! * [`eval`]       — perplexity harness (Tables 1/2/5).
@@ -54,6 +58,7 @@ pub mod interconnect;
 pub mod metrics;
 pub mod model;
 pub mod mxfmt;
+pub mod obs;
 pub mod policy;
 pub mod runtime;
 pub mod server;

@@ -10,6 +10,9 @@
 //!   table7  (serving under load: capacity at a TTFT SLO per policy)
 //!   load    --model micro --tp 2 --arrival poisson:4 --requests 32 [--policy ...]
 //!   bench   (rank-runtime perf snapshot; --json BENCH_rankpar.json)
+//!   trace   --model micro --tp 2 [--requests 4] [--out trace.json]
+//!           (run requests with the span recorder on, export
+//!            Chrome-trace JSON for Perfetto / chrome://tracing)
 //!   info    (artifact + model inventory)
 //!
 //! `--policy` selects per-site compression (see `rust/src/policy/`):
@@ -85,6 +88,10 @@ fn run() -> anyhow::Result<()> {
                 } else {
                     Sampling::Temperature { t: 0.8, top_k: 40 }
                 },
+                // span recorder on by default so GET /trace has data;
+                // --no-trace turns it off (sub-5% overhead, but zero is
+                // zero)
+                trace: !args.has("no-trace"),
                 ..Default::default()
             };
             let (handle, _join) = spawn(
@@ -108,7 +115,9 @@ fn run() -> anyhow::Result<()> {
             // goodput on /metrics is measured against this TTFT SLO
             handle.metrics.set_ttft_slo(args.get_f64("slo-ttft", 0.25));
             let server = Server::bind(&addr, handle)?;
-            println!("tpcc serving on http://{addr}  (POST /generate, GET /metrics)");
+            println!(
+                "tpcc serving on http://{addr}  (POST /generate, GET /metrics, GET /trace)"
+            );
             server.serve_forever()
         }
         "load" => {
@@ -282,6 +291,57 @@ fn run() -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "trace" => {
+            // capture a span timeline: run a few requests through the
+            // coordinator with the recorder enabled, then export the
+            // merged spans as Chrome-trace JSON (load the file in
+            // Perfetto or chrome://tracing; tid = rank, pid = request /
+            // forward step)
+            let requests = args.get_usize("requests", 4);
+            let max_tokens = args.get_usize("max-tokens", 8);
+            let prompt = args.get_or("prompt", "The parish church of ").to_string();
+            let args2 = args.clone();
+            let (handle, join) = spawn(
+                move || build_engine(&args2),
+                CoordinatorOptions {
+                    decode_batch: args.get_usize("decode-batch", 8),
+                    trace: true,
+                    ..Default::default()
+                },
+            )?;
+            let pending: Vec<_> = (0..requests)
+                .map(|i| {
+                    handle.submit(GenRequest {
+                        prompt: format!("{prompt}{i}"),
+                        max_new_tokens: max_tokens,
+                        greedy: true,
+                        stop_token: -1,
+                    })
+                })
+                .collect();
+            for rx in pending {
+                let _ = rx.recv();
+            }
+            let dump = handle.tracer.drain();
+            eprintln!(
+                "tpcc trace: {} spans captured ({} dropped) across {requests} requests",
+                dump.spans.len(),
+                dump.dropped
+            );
+            let mut body = dump.to_chrome_json().to_string();
+            body.push('\n');
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &body)?;
+                    eprintln!("chrome-trace JSON written to {path}");
+                }
+                None => print!("{body}"),
+            }
+            handle.shutdown();
+            drop(handle);
+            join.join().unwrap()?;
+            Ok(())
+        }
         "info" => {
             let root = common::artifacts_root()?;
             let rt = Runtime::load(&root)?;
@@ -306,13 +366,14 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | load | bench | table1..table7 | info\n\
+                 commands: serve | gen | eval | load | bench | trace | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
                                --algo auto|ring|recursive_doubling|two_shot|hierarchical\n\
                                --rank-threads off|auto|N (per-rank worker threads; off = sequential)\n\
                  bench flags:  --reps N --json BENCH_rankpar.json\n\
+                 trace flags:  --requests N --max-tokens N --out trace.json (default: stdout)\n\
                  policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"\n\
                  load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\
                                --prompt-len sharegpt|N|uniform:LO:HI|lognormal:MED:SIG[:CAP]\n\

@@ -8,6 +8,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::json::{self, Json};
+use crate::workload::stats::LogHistogram;
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -24,16 +25,24 @@ impl Counter {
     }
 }
 
-/// Reservoir-less recording histogram: keeps all samples (benchmark-scale
-/// cardinality) and answers exact percentiles.
+/// Bounded-memory recording histogram, backed by the mergeable
+/// log-bucketed [`LogHistogram`]: O(1) record, O(buckets) quantile,
+/// fixed footprint no matter how long the server runs. Quantiles carry
+/// the bucket layout's bounded relative error
+/// ([`crate::workload::stats::GROWTH`], ~4.4%); min/max/mean/stddev are
+/// exact. Non-finite samples are rejected — a NaN latency (e.g. from a
+/// request that never produced a token) must not poison `/metrics`.
 #[derive(Default)]
 pub struct Histogram {
-    samples: Mutex<Vec<f64>>,
+    inner: Mutex<LogHistogram>,
 }
 
 impl Histogram {
     pub fn record(&self, v: f64) {
-        self.samples.lock().unwrap().push(v);
+        if !v.is_finite() {
+            return;
+        }
+        self.inner.lock().unwrap().record(v);
     }
 
     pub fn record_duration(&self, d: Duration) {
@@ -41,67 +50,48 @@ impl Histogram {
     }
 
     pub fn count(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        self.inner.lock().unwrap().count() as usize
     }
 
     pub fn snapshot(&self) -> HistogramSnapshot {
-        let mut s = self.samples.lock().unwrap().clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        HistogramSnapshot { sorted: s }
+        HistogramSnapshot { h: self.inner.lock().unwrap().clone() }
     }
 
     pub fn clear(&self) {
-        self.samples.lock().unwrap().clear();
+        *self.inner.lock().unwrap() = LogHistogram::new();
     }
 }
 
 pub struct HistogramSnapshot {
-    sorted: Vec<f64>,
+    h: LogHistogram,
 }
 
 impl HistogramSnapshot {
     pub fn count(&self) -> usize {
-        self.sorted.len()
+        self.h.count() as usize
     }
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.sorted.is_empty() {
-            return f64::NAN;
-        }
-        let rank = (p / 100.0 * (self.sorted.len() - 1) as f64).round() as usize;
-        self.sorted[rank.min(self.sorted.len() - 1)]
+        self.h.percentile(p)
     }
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
     pub fn mean(&self) -> f64 {
-        if self.sorted.is_empty() {
-            return f64::NAN;
-        }
-        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+        self.h.mean()
     }
     pub fn min(&self) -> f64 {
-        self.sorted.first().copied().unwrap_or(f64::NAN)
+        self.h.min()
     }
     pub fn max(&self) -> f64 {
-        self.sorted.last().copied().unwrap_or(f64::NAN)
+        self.h.max()
     }
     pub fn stddev(&self) -> f64 {
-        if self.sorted.len() < 2 {
-            return 0.0;
-        }
-        let m = self.mean();
-        (self.sorted.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
-            / (self.sorted.len() - 1) as f64)
-            .sqrt()
+        self.h.stddev()
     }
     /// Fraction of samples `<= threshold` (NaN when empty) — goodput
     /// when `threshold` is a latency SLO.
     pub fn fraction_below(&self, threshold: f64) -> f64 {
-        if self.sorted.is_empty() {
-            return f64::NAN;
-        }
-        let below = self.sorted.partition_point(|&v| v <= threshold);
-        below as f64 / self.sorted.len() as f64
+        self.h.fraction_below(threshold)
     }
 }
 
@@ -204,17 +194,43 @@ mod tests {
         }
         let s = h.snapshot();
         assert_eq!(s.count(), 100);
-        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
-        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+        // log-bucketed backing: quantiles are exact to within one
+        // bucket (GROWTH ≈ 4.4% relative), extremes and mean exact
+        let growth = crate::workload::stats::GROWTH;
+        for (p, exact) in [(50.0, 50.0), (95.0, 95.0)] {
+            let got = s.percentile(p);
+            assert!(
+                got / exact <= growth + 1e-9 && exact / got <= growth + 1e-9,
+                "p{p}: got {got}"
+            );
+        }
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 100.0);
         assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.stddev() - (83325.0f64 / 99.0).sqrt()).abs() < 1e-9);
     }
 
     #[test]
     fn empty_histogram_is_nan() {
         let h = Histogram::default();
         assert!(h.snapshot().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn non_finite_samples_are_rejected_not_recorded() {
+        // the old exact-sample histogram panicked in snapshot() when a
+        // NaN hit partial_cmp; now NaN/Inf never enter the histogram
+        let h = Histogram::default();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(0.5);
+        assert_eq!(h.count(), 1);
+        let s = h.snapshot();
+        assert_eq!(s.percentile(50.0), 0.5);
+        assert_eq!(s.max(), 0.5);
+        h.clear();
+        assert_eq!(h.count(), 0);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Chrome-trace / Perfetto JSON export of a [`TraceDump`].
+//!
+//! Emits the JSON-object flavour of the Trace Event Format: complete
+//! (`"ph":"X"`) events with microsecond `ts`/`dur`, `pid` = request or
+//! forward-step id, `tid` = TP rank (or the coordinator pseudo-thread).
+//! Metadata events name each process and thread so Perfetto / `chrome://
+//! tracing` render "req 3" lanes with "rank0…rankN" tracks instead of
+//! bare integers. Output is deterministic for a fixed dump: spans keep
+//! their merge order and metadata is emitted in sorted id order.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::{self, Json};
+
+use super::{TraceDump, TID_COORD};
+
+fn thread_label(tid: u32) -> String {
+    if tid == TID_COORD {
+        "coordinator".to_string()
+    } else {
+        format!("rank{tid}")
+    }
+}
+
+/// Build the `{"traceEvents": [...]}` document for `dump`.
+pub fn to_chrome_json(dump: &TraceDump) -> Json {
+    let mut events = Vec::with_capacity(dump.spans.len() + 16);
+    let mut pids = BTreeSet::new();
+    let mut threads = BTreeSet::new();
+    for s in &dump.spans {
+        pids.insert(s.pid);
+        threads.insert((s.pid, s.tid));
+        let mut args = vec![("seq", json::num(s.seq as f64))];
+        if s.arg >= 0 {
+            args.push(("site", json::num(s.arg as f64)));
+        }
+        events.push(json::obj(vec![
+            ("name", json::s(s.name)),
+            ("cat", json::s(s.cat.name())),
+            ("ph", json::s("X")),
+            ("ts", json::num(s.t0_ns as f64 / 1e3)),
+            ("dur", json::num(s.dur_ns as f64 / 1e3)),
+            ("pid", json::num(s.pid as f64)),
+            ("tid", json::num(s.tid as f64)),
+            ("args", json::obj(args)),
+        ]));
+    }
+    for pid in &pids {
+        events.push(metadata("process_name", *pid, None, &format!("req {pid}")));
+    }
+    for (pid, tid) in &threads {
+        events.push(metadata("thread_name", *pid, Some(*tid), &thread_label(*tid)));
+    }
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("droppedSpans", json::num(dump.dropped as f64)),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+fn metadata(kind: &str, pid: u64, tid: Option<u32>, label: &str) -> Json {
+    let mut pairs = vec![
+        ("name", json::s(kind)),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+        ("args", json::obj(vec![("name", json::s(label))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", json::num(t as f64)));
+    }
+    json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Cat, Span};
+
+    fn dump() -> TraceDump {
+        let spans = vec![
+            Span {
+                name: "attn",
+                cat: Cat::Compute,
+                pid: 1,
+                tid: 0,
+                t0_ns: 1_000,
+                dur_ns: 2_500,
+                seq: 0,
+                arg: 3,
+            },
+            Span {
+                name: "exchange",
+                cat: Cat::Fabric,
+                pid: 1,
+                tid: TID_COORD,
+                t0_ns: 4_000,
+                dur_ns: 500,
+                seq: 1,
+                arg: -1,
+            },
+        ];
+        TraceDump { spans, dropped: 2 }
+    }
+
+    #[test]
+    fn export_is_valid_and_roundtrips() {
+        let j = to_chrome_json(&dump());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 spans + 1 process + 2 threads of metadata
+        assert_eq!(events.len(), 5);
+        let first = &events[0];
+        assert_eq!(first.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(first.get("cat").unwrap().as_str(), Some("compute"));
+        assert_eq!(first.get("ts").unwrap().as_f64(), Some(1.0)); // µs
+        assert_eq!(first.get("dur").unwrap().as_f64(), Some(2.5));
+        assert_eq!(first.path("args.site").unwrap().as_i64(), Some(3));
+        assert_eq!(parsed.get("droppedSpans").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn golden_export_is_stable() {
+        // byte-for-byte golden: catches accidental schema drift
+        let d = TraceDump {
+            spans: vec![Span {
+                name: "embed",
+                cat: Cat::Compute,
+                pid: 7,
+                tid: 2,
+                t0_ns: 2_000,
+                dur_ns: 1_000,
+                seq: 4,
+                arg: -1,
+            }],
+            dropped: 0,
+        };
+        let got = to_chrome_json(&d).to_string();
+        let want = concat!(
+            r#"{"displayTimeUnit":"ms","droppedSpans":0,"traceEvents":["#,
+            r#"{"args":{"seq":4},"cat":"compute","dur":1,"name":"embed","ph":"X","pid":7,"tid":2,"ts":2},"#,
+            r#"{"args":{"name":"req 7"},"name":"process_name","ph":"M","pid":7},"#,
+            r#"{"args":{"name":"rank2"},"name":"thread_name","ph":"M","pid":7,"tid":2}"#,
+            r#"]}"#,
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn thread_labels() {
+        assert_eq!(thread_label(0), "rank0");
+        assert_eq!(thread_label(TID_COORD), "coordinator");
+    }
+}

@@ -1,0 +1,644 @@
+//! Structured tracing: span timelines from request admission down to
+//! the codec passes.
+//!
+//! The engine's older telemetry answers *how much* (byte counters,
+//! busy-second gauges) but not *where the wall-clock went*. This module
+//! records **spans** — named, categorised intervals with a process id
+//! (`pid` = request / forward step) and a thread id (`tid` = TP rank,
+//! or [`TID_COORD`] for the coordinator) — into per-thread bounded ring
+//! buffers, merged on drain and exported as Chrome-trace/Perfetto JSON
+//! (see [`export`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Near-zero cost when disabled.** [`span`] checks one relaxed
+//!    atomic through a thread-local and returns an inert guard; no
+//!    clock is read. Tracing is off unless something (serve loop,
+//!    `tpcc trace`, the rankpar bench) turns it on.
+//! 2. **No cross-thread contention when enabled.** Each recording
+//!    thread owns its own [`SpanRing`]; only that thread pushes to it.
+//!    The ring's mutex is uncontended except while a drain/snapshot
+//!    briefly clones it out.
+//! 3. **Bounded memory.** Rings hold [`DEFAULT_RING_CAP`] spans;
+//!    overflow drops the *oldest* span and counts it, so a long-running
+//!    server keeps the recent window instead of OOMing or stalling.
+//!
+//! Spans are sequence-numbered from one shared counter **at close**
+//! (children close before parents, so a child's `seq` is smaller than
+//! its parent's). Drain merges all rings and sorts by `(t0_ns, seq)`,
+//! which is deterministic for any fixed set of spans.
+//!
+//! Besides the timeline, the tracer folds every closed span into
+//! cumulative per-phase counters (`phase_compute_s`, `phase_codec_s`,
+//! `phase_fabric_wait_s`, `phase_link_s`) that the coordinator mirrors
+//! into `/metrics`. Fabric wait and link time are credited explicitly
+//! ([`Tracer::add_phase`]) rather than from guard durations: the
+//! exchange span covers the whole rendezvous (deposit + gather + wait)
+//! while the phase gauge must count only the time actually blocked,
+//! and link time is *modeled* (virtual clock), not walled.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// `tid` used for spans recorded on the coordinator / engine thread
+/// (rank tids are the small integers `0..tp`).
+pub const TID_COORD: u32 = 1000;
+
+/// Default per-thread ring capacity (spans). A forward pass on an
+/// 8-rank micro model closes a few hundred spans, so this keeps many
+/// recent steps without unbounded growth.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// Span category: names the phase a span belongs to and drives both
+/// the Chrome-trace `cat` field and the `/metrics` phase gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    /// XLA stage execution (embed / attn / mlp / final)
+    Compute,
+    /// mx quantization (encode side of the codec)
+    Encode,
+    /// mx dequant + reduce (decode side of the codec)
+    Decode,
+    /// blocked in a fabric barrier / rendezvous
+    Fabric,
+    /// modeled wire time (virtual clock, never walled)
+    Link,
+    /// request waiting for admission
+    Queue,
+    /// whole request lifetime (arrival to finish)
+    Request,
+    /// structural wrapper (forward pass, collective call) — excluded
+    /// from phase accounting so it never double-counts its children
+    Step,
+}
+
+/// Number of phase accumulators (compute, codec, fabric_wait, link).
+const N_PHASE: usize = 4;
+
+impl Cat {
+    /// Chrome-trace `cat` string.
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Compute => "compute",
+            Cat::Encode => "codec.encode",
+            Cat::Decode => "codec.decode",
+            Cat::Fabric => "fabric",
+            Cat::Link => "link",
+            Cat::Queue => "queue",
+            Cat::Request => "request",
+            Cat::Step => "step",
+        }
+    }
+
+    /// Phase accumulator slot, or `None` when the category is excluded
+    /// from guard-driven accounting (wrappers; explicitly-credited
+    /// fabric/link; request/queue, which the latency histograms own).
+    fn phase_slot(self) -> Option<usize> {
+        match self {
+            Cat::Compute => Some(0),
+            Cat::Encode | Cat::Decode => Some(1),
+            _ => None,
+        }
+    }
+}
+
+/// Slot indices for [`Tracer::add_phase`]'s explicitly-credited phases.
+const PHASE_FABRIC: usize = 2;
+const PHASE_LINK: usize = 3;
+
+/// One closed interval. Times are nanoseconds since the tracer's epoch
+/// (its construction instant); the exporter converts to microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    pub cat: Cat,
+    /// request id (coordinator spans) or forward-step id (engine spans)
+    pub pid: u64,
+    /// TP rank, or [`TID_COORD`]
+    pub tid: u32,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+    /// global close-order sequence number (unique per tracer)
+    pub seq: u64,
+    /// site / layer index, `-1` when not applicable
+    pub arg: i64,
+}
+
+struct RingInner {
+    buf: VecDeque<Span>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Bounded per-thread span buffer. Only the owning thread pushes;
+/// drains lock briefly from the draining thread.
+pub struct SpanRing {
+    #[allow(dead_code)] // debugging aid; not exported (tids carry identity)
+    label: String,
+    inner: Mutex<RingInner>,
+}
+
+impl SpanRing {
+    fn new(label: &str, cap: usize) -> SpanRing {
+        SpanRing {
+            label: label.to_string(),
+            inner: Mutex::new(RingInner { buf: VecDeque::with_capacity(cap.min(1024)), cap, dropped: 0 }),
+        }
+    }
+
+    /// Append a span, dropping (and counting) the oldest on overflow.
+    pub fn record(&self, s: Span) {
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() == g.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(s);
+    }
+
+    fn take(&self) -> (Vec<Span>, u64) {
+        let mut g = self.inner.lock().unwrap();
+        let spans = g.buf.drain(..).collect();
+        let dropped = g.dropped;
+        g.dropped = 0;
+        (spans, dropped)
+    }
+
+    fn peek(&self) -> (Vec<Span>, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.buf.iter().cloned().collect(), g.dropped)
+    }
+}
+
+/// A merged, time-ordered view of every ring.
+#[derive(Debug, Clone)]
+pub struct TraceDump {
+    /// sorted by `(t0_ns, seq)`
+    pub spans: Vec<Span>,
+    /// spans lost to ring overflow since the last drain
+    pub dropped: u64,
+}
+
+impl TraceDump {
+    /// Keep only the last `n` spans (by start time).
+    pub fn tail(mut self, n: usize) -> TraceDump {
+        let len = self.spans.len();
+        if len > n {
+            self.spans.drain(..len - n);
+        }
+        self
+    }
+
+    /// Chrome-trace / Perfetto JSON (see [`export::to_chrome_json`]).
+    pub fn to_chrome_json(&self) -> crate::util::json::Json {
+        export::to_chrome_json(self)
+    }
+}
+
+/// The recorder shared by every thread of one engine + coordinator.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    seq: AtomicU64,
+    ring_cap: usize,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    /// cumulative nanoseconds per phase slot (see [`Cat::phase_slot`])
+    phase_ns: [AtomicU64; N_PHASE],
+}
+
+impl Tracer {
+    /// A disabled tracer with the default ring capacity.
+    pub fn new() -> Arc<Tracer> {
+        Tracer::with_capacity(DEFAULT_RING_CAP)
+    }
+
+    /// A disabled tracer whose rings hold `cap` spans each.
+    pub fn with_capacity(cap: usize) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            ring_cap: cap.max(1),
+            rings: Mutex::new(Vec::new()),
+            phase_ns: Default::default(),
+        })
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Register a new ring (one per recording thread).
+    pub fn register(&self, label: &str) -> Arc<SpanRing> {
+        let ring = Arc::new(SpanRing::new(label, self.ring_cap));
+        self.rings.lock().unwrap().push(ring.clone());
+        ring
+    }
+
+    /// Nanoseconds since this tracer's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn instant_ns(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn add_phase_ns(&self, slot: usize, ns: u64) {
+        self.phase_ns[slot].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Credit measured fabric-wait or modeled link seconds to the
+    /// matching phase gauge (only [`Cat::Fabric`] / [`Cat::Link`] are
+    /// accepted; other categories accumulate via their span guards).
+    pub fn add_phase(&self, cat: Cat, secs: f64) {
+        if !self.enabled() || !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        let slot = match cat {
+            Cat::Fabric => PHASE_FABRIC,
+            Cat::Link => PHASE_LINK,
+            _ => return,
+        };
+        self.add_phase_ns(slot, (secs * 1e9) as u64);
+    }
+
+    /// Cumulative seconds per phase: `[compute, codec, fabric_wait, link]`.
+    pub fn phase_snapshot(&self) -> [f64; N_PHASE] {
+        let mut out = [0.0; N_PHASE];
+        for (o, p) in out.iter_mut().zip(&self.phase_ns) {
+            *o = p.load(Ordering::Relaxed) as f64 * 1e-9;
+        }
+        out
+    }
+
+    /// Spans lost to ring overflow (not reset by reading).
+    pub fn dropped_total(&self) -> u64 {
+        self.rings.lock().unwrap().iter().map(|r| r.inner.lock().unwrap().dropped).sum()
+    }
+
+    /// `/metrics` gauges derived from the phase accumulators.
+    pub fn phase_metrics(&self) -> Vec<(String, f64)> {
+        let p = self.phase_snapshot();
+        vec![
+            ("phase_compute_s".to_string(), p[0]),
+            ("phase_codec_s".to_string(), p[1]),
+            ("phase_fabric_wait_s".to_string(), p[2]),
+            ("phase_link_s".to_string(), p[3]),
+            ("trace_spans_dropped".to_string(), self.dropped_total() as f64),
+        ]
+    }
+
+    fn collect(&self, destructive: bool) -> TraceDump {
+        let rings = self.rings.lock().unwrap();
+        let mut spans = Vec::new();
+        let mut dropped = 0;
+        for r in rings.iter() {
+            let (s, d) = if destructive { r.take() } else { r.peek() };
+            spans.extend(s);
+            dropped += d;
+        }
+        drop(rings);
+        spans.sort_by_key(|s| (s.t0_ns, s.seq));
+        TraceDump { spans, dropped }
+    }
+
+    /// Merge + sort every ring, emptying them (CLI export).
+    pub fn drain(&self) -> TraceDump {
+        self.collect(true)
+    }
+
+    /// Merge + sort without consuming (the `/trace` endpoint, so
+    /// polling observers don't steal each other's spans).
+    pub fn snapshot(&self) -> TraceDump {
+        self.collect(false)
+    }
+}
+
+// ---- thread-local recording context ---------------------------------
+
+struct ThreadCtx {
+    tracer: Arc<Tracer>,
+    ring: Arc<SpanRing>,
+    pid: u64,
+    tid: u32,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = RefCell::new(None);
+}
+
+/// Bind this thread to `tracer`: registers a fresh ring and makes
+/// [`span`] / [`record_abs`] record into it. Re-installing (e.g. a new
+/// engine built on the same thread) replaces the previous binding.
+pub fn install(tracer: &Arc<Tracer>, label: &str, tid: u32) {
+    let ring = tracer.register(label);
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(ThreadCtx { tracer: tracer.clone(), ring, pid: 0, tid });
+    });
+}
+
+/// Set the `pid` stamped on this thread's future spans (request id or
+/// forward-step id).
+pub fn set_pid(pid: u64) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.pid = pid;
+        }
+    });
+}
+
+/// Set the `tid` stamped on this thread's future spans (the TP rank a
+/// multiplexing worker is currently executing).
+pub fn set_tid(tid: u32) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.tid = tid;
+        }
+    });
+}
+
+struct LiveSpan {
+    tracer: Arc<Tracer>,
+    ring: Arc<SpanRing>,
+    name: &'static str,
+    cat: Cat,
+    pid: u64,
+    tid: u32,
+    arg: i64,
+    t0: Instant,
+}
+
+/// Scoped span: records the enclosed interval when dropped. Inert (no
+/// clock read, nothing recorded) when the thread has no tracer bound
+/// or tracing is disabled.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            let dur_ns = l.t0.elapsed().as_nanos() as u64;
+            if let Some(slot) = l.cat.phase_slot() {
+                l.tracer.add_phase_ns(slot, dur_ns);
+            }
+            l.ring.record(Span {
+                name: l.name,
+                cat: l.cat,
+                pid: l.pid,
+                tid: l.tid,
+                t0_ns: l.tracer.instant_ns(l.t0),
+                dur_ns,
+                seq: l.tracer.next_seq(),
+                arg: l.arg,
+            });
+        }
+    }
+}
+
+/// Open a scoped span (see [`SpanGuard`]).
+pub fn span(name: &'static str, cat: Cat) -> SpanGuard {
+    span_arg(name, cat, -1)
+}
+
+/// [`span`] with a site/layer argument.
+pub fn span_arg(name: &'static str, cat: Cat, arg: i64) -> SpanGuard {
+    CTX.with(|c| {
+        let b = c.borrow();
+        match b.as_ref() {
+            Some(ctx) if ctx.tracer.enabled() => SpanGuard {
+                live: Some(LiveSpan {
+                    tracer: ctx.tracer.clone(),
+                    ring: ctx.ring.clone(),
+                    name,
+                    cat,
+                    pid: ctx.pid,
+                    tid: ctx.tid,
+                    arg,
+                    t0: Instant::now(),
+                }),
+            },
+            _ => SpanGuard { live: None },
+        }
+    })
+}
+
+/// Record an already-measured interval with explicit ids — used for
+/// spans whose endpoints live outside any one scope (queue wait,
+/// request lifetime reconstructed from session timestamps). No-op when
+/// the thread has no tracer bound or tracing is disabled.
+pub fn record_abs(name: &'static str, cat: Cat, pid: u64, tid: u32, start: Instant, dur_s: f64) {
+    if !dur_s.is_finite() || dur_s < 0.0 {
+        return;
+    }
+    CTX.with(|c| {
+        let b = c.borrow();
+        if let Some(ctx) = b.as_ref() {
+            if !ctx.tracer.enabled() {
+                return;
+            }
+            ctx.ring.record(Span {
+                name,
+                cat,
+                pid,
+                tid,
+                t0_ns: ctx.tracer.instant_ns(start),
+                dur_ns: (dur_s * 1e9) as u64,
+                seq: ctx.tracer.next_seq(),
+                arg: -1,
+            });
+        }
+    });
+}
+
+/// Credit modeled (virtual-clock) seconds to a phase gauge through the
+/// thread's bound tracer — no span is recorded.
+pub fn add_virtual(cat: Cat, secs: f64) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            ctx.tracer.add_phase(cat, secs);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn raw(name: &'static str, t0_ns: u64, dur_ns: u64, seq: u64) -> Span {
+        Span { name, cat: Cat::Compute, pid: 1, tid: 0, t0_ns, dur_ns, seq, arg: -1 }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        install(&t, "test", 0);
+        {
+            let _g = span("work", Cat::Compute);
+        }
+        assert!(t.drain().spans.is_empty());
+        assert_eq!(t.phase_snapshot(), [0.0; N_PHASE]);
+    }
+
+    #[test]
+    fn span_without_install_is_inert() {
+        // fresh thread: no ctx bound — must not panic or record
+        std::thread::spawn(|| {
+            let _g = span("orphan", Cat::Compute);
+            record_abs("orphan", Cat::Queue, 0, 0, Instant::now(), 0.1);
+            add_virtual(Cat::Link, 0.1);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn guard_records_and_accumulates_phase() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        install(&t, "test", 3);
+        set_pid(42);
+        {
+            let _g = span_arg("attn", Cat::Compute, 5);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 1);
+        let s = &d.spans[0];
+        assert_eq!((s.name, s.pid, s.tid, s.arg), ("attn", 42, 3, 5));
+        assert!(s.dur_ns >= 1_000_000, "dur {} ns", s.dur_ns);
+        let p = t.phase_snapshot();
+        assert!(p[0] > 0.0, "compute phase not accumulated");
+        assert_eq!(p[1], 0.0);
+    }
+
+    #[test]
+    fn nesting_orders_child_before_parent_and_contains_it() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        install(&t, "test", 0);
+        {
+            let _outer = span("outer", Cat::Step);
+            std::thread::sleep(Duration::from_millis(1));
+            {
+                let _inner = span("inner", Cat::Compute);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 2);
+        // sorted by start: outer first
+        assert_eq!(d.spans[0].name, "outer");
+        assert_eq!(d.spans[1].name, "inner");
+        let (outer, inner) = (&d.spans[0], &d.spans[1]);
+        // child closes first, so its seq is smaller
+        assert!(inner.seq < outer.seq);
+        // containment
+        assert!(inner.t0_ns >= outer.t0_ns);
+        assert!(inner.t0_ns + inner.dur_ns <= outer.t0_ns + outer.dur_ns);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let t = Tracer::with_capacity(4);
+        let ring = t.register("test");
+        for i in 0..10u64 {
+            ring.record(raw("s", i, 1, i));
+        }
+        let d = t.drain();
+        assert_eq!(d.dropped, 6);
+        let starts: Vec<u64> = d.spans.iter().map(|s| s.t0_ns).collect();
+        assert_eq!(starts, vec![6, 7, 8, 9], "newest spans kept");
+        // drained: counters reset
+        assert_eq!(t.drain().dropped, 0);
+    }
+
+    #[test]
+    fn cross_thread_merge_is_deterministic() {
+        // same spans pushed from different threads in different
+        // interleavings must drain in the same order
+        let order = |shuffle: bool| {
+            let t = Tracer::with_capacity(64);
+            let mk = |r: &SpanRing, ids: &[u64]| {
+                for &i in ids {
+                    r.record(raw("s", i * 10, 5, i));
+                }
+            };
+            let (a, b) = (t.register("a"), t.register("b"));
+            if shuffle {
+                mk(&b, &[1, 3, 5]);
+                mk(&a, &[0, 2, 4]);
+            } else {
+                mk(&a, &[0, 2, 4]);
+                mk(&b, &[1, 3, 5]);
+            }
+            t.drain().spans.iter().map(|s| s.seq).collect::<Vec<_>>()
+        };
+        assert_eq!(order(false), order(true));
+        assert_eq!(order(false), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn snapshot_is_nondestructive_and_tail_keeps_newest() {
+        let t = Tracer::with_capacity(64);
+        let ring = t.register("test");
+        for i in 0..8u64 {
+            ring.record(raw("s", i, 1, i));
+        }
+        assert_eq!(t.snapshot().spans.len(), 8);
+        assert_eq!(t.snapshot().spans.len(), 8, "snapshot consumed spans");
+        let tail = t.snapshot().tail(3);
+        assert_eq!(tail.spans.iter().map(|s| s.t0_ns).collect::<Vec<_>>(), vec![5, 6, 7]);
+        assert_eq!(t.drain().spans.len(), 8);
+        assert_eq!(t.drain().spans.len(), 0);
+    }
+
+    #[test]
+    fn explicit_phase_credit_and_virtual_link() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        install(&t, "test", 0);
+        t.add_phase(Cat::Fabric, 0.5);
+        add_virtual(Cat::Link, 0.25);
+        t.add_phase(Cat::Link, f64::NAN); // ignored
+        t.add_phase(Cat::Compute, 9.0); // wrong slot: ignored
+        let p = t.phase_snapshot();
+        assert!((p[2] - 0.5).abs() < 1e-9, "fabric {p:?}");
+        assert!((p[3] - 0.25).abs() < 1e-9, "link {p:?}");
+        assert_eq!(p[0], 0.0);
+        let m = t.phase_metrics();
+        assert_eq!(m[0].0, "phase_compute_s");
+        assert!(m.iter().any(|(k, v)| k == "phase_fabric_wait_s" && (*v - 0.5).abs() < 1e-9));
+    }
+
+    #[test]
+    fn record_abs_stamps_explicit_ids() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        install(&t, "test", 7);
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        record_abs("queue", Cat::Queue, 99, TID_COORD, start, 0.001);
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 1);
+        assert_eq!(d.spans[0].pid, 99);
+        assert_eq!(d.spans[0].tid, TID_COORD);
+        assert_eq!(d.spans[0].dur_ns, 1_000_000);
+    }
+}

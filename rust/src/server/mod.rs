@@ -5,6 +5,8 @@
 //!   POST /generate  {"prompt": "...", "max_tokens": 32, "greedy": true}
 //!   GET  /metrics   -> JSON snapshot of the registry
 //!   GET  /policy    -> JSON of the engine's per-site compression policy
+//!   GET  /trace     -> Chrome-trace JSON of recorded spans (?last=N
+//!                      keeps the newest N; snapshot, non-destructive)
 //!   GET  /healthz
 //!
 //! Connections are served by a **fixed worker pool** over a bounded
@@ -265,13 +267,31 @@ fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Resu
         Ok(r) => r,
         Err(_) => return respond(&mut stream, 400, r#"{"error":"malformed request"}"#),
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    // split the query string off so routes match path-only
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
         ("GET", "/metrics") => {
             let body = handle.metrics.to_json().to_string();
             respond(&mut stream, 200, &body)
         }
         ("GET", "/policy") => respond(&mut stream, 200, &handle.policy_json),
+        ("GET", "/trace") => {
+            // ?last=N trims to the newest N spans (by end time)
+            let last = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("last="))
+                .and_then(|v| v.parse::<usize>().ok());
+            let mut dump = handle.tracer.snapshot();
+            if let Some(n) = last {
+                dump = dump.tail(n);
+            }
+            let body = dump.to_chrome_json().to_string();
+            respond(&mut stream, 200, &body)
+        }
         ("POST", "/generate") => {
             let parsed = std::str::from_utf8(&req.body)
                 .ok()

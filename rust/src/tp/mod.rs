@@ -34,6 +34,7 @@ pub mod kv;
 pub mod rank;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collective::{self, AlgoChoice, CollectivePlan, Topology};
@@ -41,6 +42,7 @@ use crate::interconnect::{HwProfile, LinkModel, VirtualClock};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
 use crate::mxfmt::{compressor_from_spec_ch, Compressor};
+use crate::obs::{self, Cat, Tracer};
 use crate::policy::{
     self, Calibration, CompressionPolicy, Phase, PolicyTable, SearchScenario, Site, SiteKind,
 };
@@ -163,12 +165,17 @@ pub(crate) fn comm_times(
     }
 }
 
-/// Cumulative per-rank busy time (compute stages + codec work), fed by
-/// both execution cores and served as `/metrics` utilization gauges.
+/// Cumulative per-rank busy time (compute stages + codec work + fabric
+/// waits), fed by both execution cores and served as `/metrics`
+/// utilization gauges.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RankBusy {
     pub compute_s: f64,
     pub codec_s: f64,
+    /// time this rank's execution was blocked in a fabric barrier or
+    /// rendezvous waiting for its peers (parallel core only; a
+    /// multiplexing worker's wait is credited to each rank it owns)
+    pub fabric_wait_s: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -333,6 +340,13 @@ pub struct TpEngine {
     pool: Option<rank::RankPool>,
     /// cumulative per-rank busy time (compute + codec), both paths
     rank_busy: Vec<RankBusy>,
+    /// structured span recorder shared with the rank workers (and the
+    /// coordinator); disabled until serving / `tpcc trace` / the
+    /// rankpar bench turns it on
+    tracer: Arc<Tracer>,
+    /// monotonically increasing forward-step id, stamped as the span
+    /// `pid` of engine-level timelines
+    next_step: u64,
     // reusable scratch (sequential path; workers own their own)
     reduce_buf: Vec<f32>,
     wire_buf: Vec<u8>,
@@ -360,6 +374,11 @@ impl TpEngine {
         }
         let n_sites = Site::count(cfg.n_layers);
         let opts_tp = opts.tp;
+        // span recorder: the engine thread records through it (and the
+        // rank workers register their own rings at boot); tracing stays
+        // disabled until a caller opts in
+        let tracer = Tracer::new();
+        obs::install(&tracer, "engine", obs::TID_COORD);
         let mut eng = TpEngine {
             rt,
             cfg,
@@ -379,6 +398,8 @@ impl TpEngine {
             clock: VirtualClock::default(),
             pool: None,
             rank_busy: vec![RankBusy::default(); opts_tp],
+            tracer,
+            next_step: 0,
             reduce_buf: Vec::new(),
             wire_buf: Vec::new(),
         };
@@ -394,6 +415,7 @@ impl TpEngine {
                 eng.opts.tp,
                 workers,
                 eng.bind_spec(),
+                eng.tracer.clone(),
             )?;
             eng.pool = Some(pool);
         }
@@ -411,6 +433,22 @@ impl TpEngine {
     /// Worker threads executing the ranks (0 = sequential reference path).
     pub fn rank_workers(&self) -> usize {
         self.pool.as_ref().map_or(0, |p| p.workers())
+    }
+
+    /// The engine's span recorder, shared with its rank workers. Enable
+    /// with `tracer().set_enabled(true)`; drain/snapshot for export.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// `/metrics` gauges derived from the tracer — measured per-phase
+    /// totals next to the virtual clock's modeled totals, so the
+    /// modeled-vs-measured gap is directly visible.
+    pub fn trace_metrics(&self) -> Vec<(String, f64)> {
+        let mut out = self.tracer.phase_metrics();
+        out.push(("virtual_compute_s".to_string(), self.clock.compute()));
+        out.push(("virtual_comm_s".to_string(), self.clock.comm()));
+        out
     }
 
     pub fn link(&self) -> &LinkModel {
@@ -515,15 +553,17 @@ impl TpEngine {
         out
     }
 
-    /// Per-rank utilization gauges for `/metrics`: cumulative compute
-    /// and codec busy seconds per rank (real concurrent measurements
-    /// under the rank-thread runtime), plus the active worker count.
+    /// Per-rank utilization gauges for `/metrics`: cumulative compute,
+    /// codec, and fabric-wait seconds per rank (real concurrent
+    /// measurements under the rank-thread runtime), plus the active
+    /// worker count.
     pub fn rank_metrics(&self) -> Vec<(String, f64)> {
-        let mut out = Vec::with_capacity(self.rank_busy.len() * 2 + 1);
+        let mut out = Vec::with_capacity(self.rank_busy.len() * 3 + 1);
         out.push(("rank_workers".to_string(), self.rank_workers() as f64));
         for (r, b) in self.rank_busy.iter().enumerate() {
             out.push((format!("rank{r}_compute_busy_s"), b.compute_s));
             out.push((format!("rank{r}_codec_busy_s"), b.codec_s));
+            out.push((format!("rank{r}_fabric_wait_s"), b.fabric_wait_s));
         }
         out
     }
@@ -730,7 +770,11 @@ impl TpEngine {
         let mut enc_once = 0.0f64;
         let mut dt = 0.0f64;
         for (rank, p) in partial_lits.iter().enumerate() {
-            let out = self.exec_timed(qname, &[p], &mut dt)?;
+            obs::set_tid(rank as u32);
+            let out = {
+                let _g = obs::span_arg("quant.fused", Cat::Encode, site.index() as i64);
+                self.exec_timed(qname, &[p], &mut dt)?
+            };
             if rank == 0 {
                 enc_once = dt;
             }
@@ -740,7 +784,11 @@ impl TpEngine {
         let x_lit = lit_f32(&[bb, sb, d], x)?;
         let codes = crate::runtime::lit_u8(&[tp, bb, sb, d], &codes_all)?;
         let scales = crate::runtime::lit_u8(&[tp, bb, sb, nb], &scales_all)?;
-        let out = self.exec_timed(dname, &[&x_lit, &codes, &scales], &mut dt)?;
+        obs::set_tid(0);
+        let out = {
+            let _g = obs::span_arg("dqra.fused", Cat::Decode, site.index() as i64);
+            self.exec_timed(dname, &[&x_lit, &codes, &scales], &mut dt)?
+        };
         let reduced = to_vec_f32(&out[0])?;
 
         // accounting: wire size is the bit-packed size the scheme would
@@ -755,6 +803,7 @@ impl TpEngine {
         for b in self.rank_busy.iter_mut() {
             b.codec_s += codec_s;
         }
+        self.tracer.add_phase(Cat::Link, link_s);
         timing.link_s += link_s;
         timing.codec_s += codec_s;
         timing.wire_bytes += (shard_wire * (tp - 1)) as u64;
@@ -791,6 +840,8 @@ impl TpEngine {
         let topo = self.topology();
         let si = site.index();
         let ci = self.site_spec[si] as usize;
+        obs::set_tid(0);
+        let _site_span = obs::span_arg("collective", Cat::Step, si as i64);
         // calibration capture: record each site's first pre-quantization
         // partials (block-aligned prefix)
         if let Some(cap) = self.calib_capture.as_mut() {
@@ -840,6 +891,7 @@ impl TpEngine {
         // then equals the pipeline schedule and agrees with the clock
         // even when overlap hides part of the codec work
         let link_exposed = (total_s - codec_s).max(0.0);
+        self.tracer.add_phase(Cat::Link, link_exposed);
         timing.codec_s += total_s - link_exposed;
         timing.link_s += link_exposed;
         timing.wire_bytes += rep.wire_bytes as u64;
@@ -868,6 +920,13 @@ impl TpEngine {
         kv: Option<&mut BatchKv>,
         decode: bool,
     ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        // every forward is one trace "process": engine-thread spans are
+        // stamped with the step id, and the wrapper span frames the
+        // whole pass on the coordinator track
+        self.next_step += 1;
+        obs::set_pid(self.next_step);
+        obs::set_tid(obs::TID_COORD);
+        let _step = obs::span(if decode { "decode" } else { "prefill" }, Cat::Step);
         if self.pool.is_some() && self.calib_capture.is_none() {
             return self.forward_parallel(tokens, bb, sb, pos, kv, decode);
         }
@@ -904,6 +963,7 @@ impl TpEngine {
             overhead: self.opts.overhead,
             fused: self.opts.fused,
             algo: self.algo_choice,
+            pid: self.next_step,
         };
         let outcomes = {
             let pool = self.pool.as_ref().expect("forward_parallel without pool");
@@ -943,6 +1003,9 @@ impl TpEngine {
                     // same exposed-link decomposition as the sequential
                     // path: link_s + codec_s == total_s exactly
                     let link_exposed = (total - codec).max(0.0);
+                    // modeled wire time enters the link phase gauge once
+                    // per site (on the merge, not per worker)
+                    self.tracer.add_phase(Cat::Link, link_exposed);
                     timing.codec_s += total - link_exposed;
                     timing.link_s += link_exposed;
                     timing.wire_bytes += *wire_bytes;
@@ -955,9 +1018,10 @@ impl TpEngine {
             }
         }
         for o in &outcomes {
-            for &(r, compute_s, codec_s) in &o.busy {
-                self.rank_busy[r].compute_s += compute_s;
-                self.rank_busy[r].codec_s += codec_s;
+            for &(r, b) in &o.busy {
+                self.rank_busy[r].compute_s += b.compute_s;
+                self.rank_busy[r].codec_s += b.codec_s;
+                self.rank_busy[r].fabric_wait_s += b.fabric_wait_s;
             }
         }
         let logits = outcomes
@@ -993,11 +1057,15 @@ impl TpEngine {
         // embed (replicated: every worker computes it; charge one)
         let tok_lit = lit_i32(&[bb, sb], tokens)?;
         let mut dt = 0.0;
-        let emb_out = self.exec_timed(
-            &format!("{model}/embed_b{bb}_s{sb}"),
-            &[&tok_lit, self.wlit(0, "embed")],
-            &mut dt,
-        )?;
+        obs::set_tid(0);
+        let emb_out = {
+            let _g = obs::span("embed", Cat::Compute);
+            self.exec_timed(
+                &format!("{model}/embed_b{bb}_s{sb}"),
+                &[&tok_lit, self.wlit(0, "embed")],
+                &mut dt,
+            )?
+        };
         timing.compute_s += dt;
         self.clock.add_compute(dt);
         self.rank_busy[0].compute_s += dt;
@@ -1019,6 +1087,8 @@ impl TpEngine {
             let mut partials = Vec::with_capacity(tp);
             let mut max_s = 0.0f64;
             for rank in 0..tp {
+                obs::set_tid(rank as u32);
+                let _rank_span = obs::span_arg("attn", Cat::Compute, l as i64);
                 let an = format!("l{l}.attn_norm");
                 let wq = format!("l{l}.wq");
                 let wk = format!("l{l}.wk");
@@ -1086,6 +1156,8 @@ impl TpEngine {
             let mut partials = Vec::with_capacity(tp);
             let mut max_s = 0.0f64;
             for rank in 0..tp {
+                obs::set_tid(rank as u32);
+                let _rank_span = obs::span_arg("mlp", Cat::Compute, l as i64);
                 let mn = format!("l{l}.mlp_norm");
                 let wg = format!("l{l}.w_gate");
                 let wu = format!("l{l}.w_up");
@@ -1123,11 +1195,15 @@ impl TpEngine {
 
         // final norm + logits (leader only)
         let x_lit = lit_f32(&[bb, sb, d], &x)?;
-        let out = self.exec_timed(
-            &format!("{model}/final_b{bb}_s{sb}"),
-            &[&x_lit, self.wlit(0, "final_norm"), self.wlit(0, "lm_head")],
-            &mut dt,
-        )?;
+        obs::set_tid(0);
+        let out = {
+            let _g = obs::span("final", Cat::Compute);
+            self.exec_timed(
+                &format!("{model}/final_b{bb}_s{sb}"),
+                &[&x_lit, self.wlit(0, "final_norm"), self.wlit(0, "lm_head")],
+                &mut dt,
+            )?
+        };
         timing.compute_s += dt;
         self.clock.add_compute(dt);
         self.rank_busy[0].compute_s += dt;

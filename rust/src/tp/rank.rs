@@ -37,11 +37,12 @@ use crate::interconnect::HwProfile;
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
 use crate::mxfmt::{compressor_from_spec_ch, Compressor, MxScheme};
+use crate::obs::{self, Cat, Tracer};
 use crate::policy::{Phase, Site, SiteKind};
 use crate::runtime::{lit_f32, lit_i32, lit_u8, to_vec_f32, to_vec_u8, Runtime};
 
 use super::kv::{BatchKv, KvShardRef};
-use super::OverheadModel;
+use super::{OverheadModel, RankBusy};
 
 /// Payload a worker publishes to the fabric for one rank after a
 /// row-parallel stage: the rank's partial activations plus the measured
@@ -80,8 +81,8 @@ pub struct RankOutcome {
     pub trace: Vec<TraceEvent>,
     /// logits from the final stage (leader worker only)
     pub logits: Option<Vec<f32>>,
-    /// per owned rank: (rank, compute busy s, codec busy s)
-    pub busy: Vec<(usize, f64, f64)>,
+    /// per owned rank: (rank, accumulated compute/codec/fabric-wait)
+    pub busy: Vec<(usize, RankBusy)>,
 }
 
 /// A policy binding broadcast to the workers: the distinct scheme specs
@@ -98,6 +99,9 @@ pub struct BindSpec {
 pub struct RankJob {
     pub tokens: Vec<i32>,
     pub pos: Vec<i32>,
+    /// forward-step id; workers stamp it as the span `pid` so engine-
+    /// and worker-side spans of the same step share a timeline
+    pub pid: u64,
     pub bb: usize,
     pub sb: usize,
     pub decode: bool,
@@ -152,6 +156,7 @@ impl RankPool {
         tp: usize,
         workers: usize,
         bind: BindSpec,
+        tracer: Arc<Tracer>,
     ) -> anyhow::Result<RankPool> {
         anyhow::ensure!(
             workers >= 1 && workers <= tp,
@@ -176,6 +181,7 @@ impl RankPool {
                 root: root.to_path_buf(),
                 fabric: fabric.clone(),
                 bind: bind.clone(),
+                tracer: tracer.clone(),
             };
             let ready = ready_tx.clone();
             let join = std::thread::Builder::new()
@@ -313,6 +319,7 @@ struct WorkerBoot {
     root: std::path::PathBuf,
     fabric: Arc<Fabric<RankPost>>,
     bind: BindSpec,
+    tracer: Arc<Tracer>,
 }
 
 /// Thread-side state of one rank worker.
@@ -341,6 +348,13 @@ struct Worker {
 
 impl Worker {
     fn build(boot: WorkerBoot) -> anyhow::Result<Worker> {
+        // runs on the worker thread: bind its span ring to the shared
+        // tracer (tid defaults to the lead rank; stages retag per rank)
+        obs::install(
+            &boot.tracer,
+            &format!("rank-worker{}", boot.idx),
+            boot.ranks[0] as u32,
+        );
         let rt = Runtime::load(&boot.root)?;
         let mut wlits = Vec::with_capacity(boot.shards.len());
         for shard in &boot.shards {
@@ -439,20 +453,25 @@ impl Worker {
         if job.decode {
             anyhow::ensure!(kv.is_some(), "decode requires kv");
         }
+        obs::set_pid(job.pid);
         let mut trace: Vec<TraceEvent> = Vec::with_capacity(1 + 4 * self.cfg.n_layers + 1);
-        let mut busy: Vec<(usize, f64, f64)> =
-            self.ranks.iter().map(|&r| (r, 0.0, 0.0)).collect();
+        let mut busy: Vec<(usize, RankBusy)> =
+            self.ranks.iter().map(|&r| (r, RankBusy::default())).collect();
 
         // embed — replicated weights: one execution per worker stands in
         // for all of its ranks (identical bits rank to rank)
         let tok_lit = lit_i32(&[bb, sb], &job.tokens)?;
+        obs::set_tid(self.ranks[0] as u32);
         let t0 = Instant::now();
-        let emb = self.rt.execute_refs(
-            &format!("{model}/embed_b{bb}_s{sb}"),
-            &[&tok_lit, self.wl(0, "embed")],
-        )?;
+        let emb = {
+            let _g = obs::span("embed", Cat::Compute);
+            self.rt.execute_refs(
+                &format!("{model}/embed_b{bb}_s{sb}"),
+                &[&tok_lit, self.wl(0, "embed")],
+            )?
+        };
         let dt = t0.elapsed().as_secs_f64();
-        busy[0].1 += dt;
+        busy[0].1.compute_s += dt;
         trace.push(TraceEvent::Stage { walls: vec![dt] });
         let mut x = to_vec_f32(&emb[0])?;
 
@@ -470,6 +489,8 @@ impl Worker {
             let x_lit = lit_f32(&[bb, sb, d], &x)?;
             let mut stage_outs = Vec::with_capacity(self.ranks.len());
             for i in 0..self.ranks.len() {
+                obs::set_tid(self.ranks[i] as u32);
+                let _rank_span = obs::span_arg("attn", Cat::Compute, l as i64);
                 let an = format!("l{l}.attn_norm");
                 let wq = format!("l{l}.wq");
                 let wk = format!("l{l}.wk");
@@ -517,6 +538,8 @@ impl Worker {
             let x_lit = lit_f32(&[bb, sb, d], &x)?;
             let mut stage_outs = Vec::with_capacity(self.ranks.len());
             for i in 0..self.ranks.len() {
+                obs::set_tid(self.ranks[i] as u32);
+                let _rank_span = obs::span_arg("mlp", Cat::Compute, l as i64);
                 let mn = format!("l{l}.mlp_norm");
                 let wg = format!("l{l}.w_gate");
                 let wu = format!("l{l}.w_up");
@@ -541,13 +564,17 @@ impl Worker {
         // final norm + logits — leader (rank 0) only
         let logits = if self.ranks[0] == 0 {
             let x_lit = lit_f32(&[bb, sb, d], &x)?;
+            obs::set_tid(0);
             let t0 = Instant::now();
-            let out = self.rt.execute_refs(
-                &format!("{model}/final_b{bb}_s{sb}"),
-                &[&x_lit, self.wl(0, "final_norm"), self.wl(0, "lm_head")],
-            )?;
+            let out = {
+                let _g = obs::span("final", Cat::Compute);
+                self.rt.execute_refs(
+                    &format!("{model}/final_b{bb}_s{sb}"),
+                    &[&x_lit, self.wl(0, "final_norm"), self.wl(0, "lm_head")],
+                )?
+            };
             let dt = t0.elapsed().as_secs_f64();
-            busy[0].1 += dt;
+            busy[0].1.compute_s += dt;
             trace.push(TraceEvent::Stage { walls: vec![dt] });
             Some(to_vec_f32(&out[0])?)
         } else {
@@ -571,11 +598,11 @@ impl Worker {
         s: usize,
         fused_memo: &mut BTreeMap<usize, Option<(String, String)>>,
         trace: &mut Vec<TraceEvent>,
-        busy: &mut [(usize, f64, f64)],
+        busy: &mut [(usize, RankBusy)],
     ) -> anyhow::Result<Vec<f32>> {
         let mut posts = Vec::with_capacity(stage_outs.len());
         for (i, (wall, out)) in stage_outs.into_iter().enumerate() {
-            busy[i].1 += wall;
+            busy[i].1.compute_s += wall;
             if let Some(shards) = kv {
                 let ks = to_vec_f32(&out[1])?;
                 let vs = to_vec_f32(&out[2])?;
@@ -584,7 +611,19 @@ impl Worker {
             let data = Arc::new(to_vec_f32(&out[0])?);
             posts.push((self.ranks[i], RankPost { data, wall_s: wall }));
         }
-        let all = self.fabric.exchange(posts)?;
+        // the exchange span covers the whole rendezvous; only the
+        // *blocked* portion (measured inside the fabric) feeds the
+        // fabric-wait gauges — a multiplexing worker's wait is credited
+        // to each rank it owns, the phase gauge once per worker
+        obs::set_tid(self.ranks[0] as u32);
+        let (all, wait_s) = {
+            let _g = obs::span("exchange", Cat::Fabric);
+            self.fabric.exchange_timed(posts)?
+        };
+        for b in busy.iter_mut() {
+            b.1.fabric_wait_s += wait_s;
+        }
+        obs::add_virtual(Cat::Fabric, wait_s);
         trace.push(TraceEvent::Stage { walls: all.iter().map(|p| p.wall_s).collect() });
         self.communicate(job, site, x, &all, fused_memo, trace, busy)
     }
@@ -601,10 +640,11 @@ impl Worker {
         posts: &[RankPost],
         fused_memo: &mut BTreeMap<usize, Option<(String, String)>>,
         trace: &mut Vec<TraceEvent>,
-        busy: &mut [(usize, f64, f64)],
+        busy: &mut [(usize, RankBusy)],
     ) -> anyhow::Result<Vec<f32>> {
         let si = site.index();
         let ci = self.site_spec[si] as usize;
+        let _site_span = obs::span_arg("collective", Cat::Step, si as i64);
         let len = x.len();
         let n = posts.len();
         let topo = Topology::from_profile(job.profile, job.tp);
@@ -656,7 +696,7 @@ impl Worker {
         let (codec_s, total_s) =
             super::comm_times(job.overhead, &rep, &plan, len, n, comp, &topo);
         for b in busy.iter_mut() {
-            b.2 += codec_s;
+            b.1.codec_s += codec_s;
         }
         trace.push(TraceEvent::Comm {
             site,
@@ -703,7 +743,7 @@ impl Worker {
         qname: &str,
         dname: &str,
         trace: &mut Vec<TraceEvent>,
-        busy: &mut [(usize, f64, f64)],
+        busy: &mut [(usize, RankBusy)],
     ) -> anyhow::Result<Vec<f32>> {
         let d = self.cfg.d_model;
         let tp = job.tp;
@@ -719,7 +759,10 @@ impl Worker {
         for (rank, p) in posts.iter().enumerate() {
             let p_lit = lit_f32(&[bb, sb, d], &p.data)?;
             let t0 = Instant::now();
-            let out = self.rt.execute_refs(qname, &[&p_lit])?;
+            let out = {
+                let _g = obs::span_arg("quant.fused", Cat::Encode, site.index() as i64);
+                self.rt.execute_refs(qname, &[&p_lit])?
+            };
             let dt = t0.elapsed().as_secs_f64();
             if rank == 0 {
                 enc_once = dt;
@@ -731,7 +774,10 @@ impl Worker {
         let codes = lit_u8(&[tp, bb, sb, d], &codes_all)?;
         let scales = lit_u8(&[tp, bb, sb, nb], &scales_all)?;
         let t0 = Instant::now();
-        let out = self.rt.execute_refs(dname, &[&x_lit, &codes, &scales])?;
+        let out = {
+            let _g = obs::span_arg("dqra.fused", Cat::Decode, site.index() as i64);
+            self.rt.execute_refs(dname, &[&x_lit, &codes, &scales])?
+        };
         let dqra_s = t0.elapsed().as_secs_f64();
         let reduced = to_vec_f32(&out[0])?;
 
@@ -742,7 +788,7 @@ impl Worker {
             OverheadModel::Analytic { values_per_s } => (values * tp) as f64 / values_per_s,
         };
         for b in busy.iter_mut() {
-            b.2 += codec_s;
+            b.1.codec_s += codec_s;
         }
         // the fused HLO executables bake in the all-gather layout, so
         // this path always accounts as the flat ring

@@ -36,6 +36,7 @@ pub struct LogHistogram {
     underflow: u64,
     total: u64,
     sum: f64,
+    sum_sq: f64,
     min: f64,
     max: f64,
 }
@@ -47,6 +48,7 @@ impl Default for LogHistogram {
             underflow: 0,
             total: 0,
             sum: 0.0,
+            sum_sq: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
         }
@@ -78,6 +80,7 @@ impl LogHistogram {
         }
         self.total += 1;
         self.sum += v;
+        self.sum_sq += v * v;
         self.min = self.min.min(v);
         self.max = self.max.max(v);
         if v < MIN_VALUE {
@@ -97,6 +100,7 @@ impl LogHistogram {
         self.underflow += other.underflow;
         self.total += other.total;
         self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
@@ -114,6 +118,17 @@ impl LogHistogram {
             return f64::NAN;
         }
         self.sum / self.total as f64
+    }
+
+    /// Sample standard deviation (Bessel-corrected) from the exact
+    /// streaming moments; 0 with fewer than two observations.
+    pub fn stddev(&self) -> f64 {
+        if self.total < 2 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
     }
 
     pub fn min(&self) -> f64 {
@@ -262,6 +277,25 @@ mod tests {
         }
         assert_eq!(a.fraction_below(1.0), all.fraction_below(1.0));
         assert!((a.sum() - all.sum()).abs() < 1e-9);
+        assert!((a.stddev() - all.stddev()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stddev_matches_direct_computation() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.stddev(), 0.0);
+        h.record(0.5);
+        assert_eq!(h.stddev(), 0.0); // one sample: no spread
+        let vals = [0.1, 0.2, 0.3, 0.4, 0.5];
+        let mut h = LogHistogram::new();
+        for v in vals {
+            h.record(v);
+        }
+        let m = vals.iter().sum::<f64>() / vals.len() as f64;
+        let want = (vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (vals.len() - 1) as f64)
+            .sqrt();
+        assert!((h.stddev() - want).abs() < 1e-12, "{} vs {want}", h.stddev());
     }
 
     #[test]

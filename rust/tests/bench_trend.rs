@@ -1,0 +1,130 @@
+//! Bench-trend smoke over the committed `BENCH_*.json` trajectory
+//! files at the repo root: every snapshot must parse, the rankpar
+//! snapshot must carry the schema-2 column set (schema drift in the
+//! emitter without regenerating the committed file fails here), and
+//! any *measured* row must satisfy the acceptance floors (speedup
+//! regression guard). Null rows — the unmeasured scaffold the
+//! artifact-less authoring container commits — are reported and
+//! skipped, never failed.
+//!
+//! Runs everywhere: these tests read committed files only and need no
+//! AOT artifacts.
+
+use std::path::{Path, PathBuf};
+
+use tpcc::util::json::Json;
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ sits inside the repo")
+}
+
+fn bench_files() -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(repo_root())
+        .expect("read repo root")
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            let name = p.file_name()?.to_str()?;
+            (name.starts_with("BENCH_") && name.ends_with(".json")).then_some(p)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn load(path: &Path) -> Json {
+    let body = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    Json::parse(&body).unwrap_or_else(|e| panic!("parse {}: {e:#}", path.display()))
+}
+
+#[test]
+fn every_committed_bench_snapshot_parses() {
+    let files = bench_files();
+    assert!(!files.is_empty(), "no BENCH_*.json at {}", repo_root().display());
+    for f in files {
+        let j = load(&f);
+        assert!(
+            j.get("bench").and_then(|b| b.as_str()).is_some(),
+            "{}: missing \"bench\" name",
+            f.display()
+        );
+        assert!(
+            j.get("rows").and_then(|r| r.as_arr()).is_some(),
+            "{}: missing \"rows\" array",
+            f.display()
+        );
+    }
+}
+
+/// The rankpar row columns the emitter writes (schema 2). A committed
+/// snapshot missing any of these means the emitter and the tracked
+/// file drifted apart — regenerate the file.
+const RANKPAR_COLUMNS: &[&str] = &[
+    "tp",
+    "batch",
+    "seq",
+    "workers",
+    "seq_wall_s",
+    "par_wall_s",
+    "speedup",
+    "traced_wall_s",
+    "trace_overhead_pct",
+    "phase_compute_s",
+    "phase_codec_s",
+    "phase_fabric_wait_s",
+    "phase_link_s",
+];
+
+#[test]
+fn rankpar_schema_and_speedup_floors() {
+    let path = repo_root().join("BENCH_rankpar.json");
+    let j = load(&path);
+    assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("rankpar"));
+    let schema = j.get("schema").and_then(|s| s.as_f64()).unwrap_or(0.0);
+    assert!(schema >= 2.0, "rankpar snapshot predates schema 2 (got {schema})");
+
+    let rows = j.get("rows").and_then(|r| r.as_arr()).expect("rows array");
+    assert!(!rows.is_empty(), "rankpar snapshot has no rows");
+    let mut measured = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        for col in RANKPAR_COLUMNS {
+            assert!(
+                row.get(col).is_some(),
+                "row {i}: column {col:?} missing (emitter/schema drift — regenerate)"
+            );
+        }
+        let tp = row.get("tp").and_then(|v| v.as_f64()).expect("tp is numeric") as usize;
+        let (seq_w, par_w, speedup) = (
+            row.get("seq_wall_s").and_then(|v| v.as_f64()),
+            row.get("par_wall_s").and_then(|v| v.as_f64()),
+            row.get("speedup").and_then(|v| v.as_f64()),
+        );
+        let (Some(seq_w), Some(par_w), Some(speedup)) = (seq_w, par_w, speedup) else {
+            eprintln!("rankpar row {i} (tp={tp}): null measurements, skipping floors");
+            continue;
+        };
+        measured += 1;
+        // internal consistency: the stored ratio is the stored walls'
+        let ratio = seq_w / par_w;
+        assert!(
+            (speedup - ratio).abs() / ratio < 0.05,
+            "row {i}: speedup {speedup:.3} disagrees with seq/par {ratio:.3}"
+        );
+        // acceptance floors from the bench's tracked targets
+        let floor = if tp >= 4 { 2.0 } else { 1.2 };
+        assert!(
+            speedup >= floor,
+            "row {i} (tp={tp}): speedup {speedup:.2}x regressed below the {floor}x floor"
+        );
+        // recorder cost, when measured, stays under the bench's ceiling
+        if let Some(pct) = row.get("trace_overhead_pct").and_then(|v| v.as_f64()) {
+            assert!(
+                pct < tpcc::bench::rankpar::DEFAULT_TRACE_OVERHEAD_PCT,
+                "row {i}: committed trace overhead {pct:.2}% over the ceiling"
+            );
+        }
+    }
+    if measured == 0 {
+        eprintln!("rankpar snapshot is an unmeasured scaffold (all rows null) — schema checked only");
+    }
+}

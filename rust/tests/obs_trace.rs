@@ -1,0 +1,154 @@
+//! Integration tests for the span recorder + Chrome-trace export,
+//! exercised through the crate's public API (including the HTTP
+//! `GET /trace` endpoint via a detached coordinator handle). Runs
+//! without AOT artifacts — these tests never touch the engine.
+
+use std::sync::Arc;
+
+use tpcc::coordinator::CoordinatorHandle;
+use tpcc::obs::{self, Cat, Tracer};
+use tpcc::server::{http_get, Server};
+use tpcc::util::json::Json;
+
+/// Count "X" (complete-span) events in a Chrome-trace document.
+fn x_events(doc: &Json) -> Vec<&Json> {
+    doc.get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect()
+}
+
+#[test]
+fn cross_thread_spans_merge_into_one_sorted_timeline() {
+    let tracer = Tracer::new();
+    tracer.set_enabled(true);
+    let joins: Vec<_> = (0..4u32)
+        .map(|t| {
+            let tracer = tracer.clone();
+            std::thread::spawn(move || {
+                obs::install(&tracer, &format!("worker{t}"), t);
+                obs::set_pid(1);
+                for _ in 0..8 {
+                    let _g = obs::span("stage", Cat::Compute);
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dump = tracer.drain();
+    assert_eq!(dump.spans.len(), 32);
+    assert_eq!(dump.dropped, 0);
+    // merged stream is sorted by start time
+    for w in dump.spans.windows(2) {
+        assert!(w[0].t0_ns <= w[1].t0_ns);
+    }
+    // every thread's spans survived the merge
+    for t in 0..4u32 {
+        assert_eq!(dump.spans.iter().filter(|s| s.tid == t).count(), 8, "tid {t}");
+    }
+    // recorder drained: a second drain is empty
+    assert!(tracer.drain().spans.is_empty());
+}
+
+#[test]
+fn export_is_valid_json_with_rank_thread_labels() {
+    let tracer = Tracer::new();
+    tracer.set_enabled(true);
+    obs::install(&tracer, "test", 0);
+    obs::set_pid(3);
+    {
+        let _outer = obs::span("prefill", Cat::Step);
+        obs::set_tid(1);
+        let _inner = obs::span_arg("attn", Cat::Compute, 0);
+    }
+    let body = tracer.drain().to_chrome_json().to_string();
+    let doc = Json::parse(&body).expect("valid JSON");
+    let xs = x_events(&doc);
+    assert_eq!(xs.len(), 2);
+    // per-rank thread labels land in the metadata events
+    let names: Vec<&str> = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()))
+        .collect();
+    assert!(names.contains(&"rank1"), "{names:?}");
+}
+
+#[test]
+fn trace_endpoint_serves_snapshot_and_last_n() {
+    let handle = CoordinatorHandle::detached();
+    let tracer: Arc<Tracer> = handle.tracer.clone();
+    tracer.set_enabled(true);
+    obs::install(&tracer, "http-test", 0);
+    obs::set_pid(7);
+    {
+        let _a = obs::span("older", Cat::Compute);
+    }
+    {
+        let _b = obs::span("newer", Cat::Encode);
+    }
+
+    let server = Server::bind("127.0.0.1:0", handle).unwrap().with_pool(2, 8);
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.serve_n(3).unwrap());
+
+    let (code, body) = http_get(&addr, "/trace").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).expect("chrome-trace JSON");
+    assert_eq!(x_events(&doc).len(), 2);
+
+    // ?last=1 keeps only the newest span
+    let (code, body) = http_get(&addr, "/trace?last=1").unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    let xs = x_events(&doc);
+    assert_eq!(xs.len(), 1);
+    assert_eq!(xs[0].get("name").and_then(|n| n.as_str()), Some("newer"));
+
+    // the endpoint snapshots (non-destructive): spans still present
+    let (_, body) = http_get(&addr, "/trace").unwrap();
+    assert_eq!(x_events(&Json::parse(&body).unwrap()).len(), 2);
+    srv.join().unwrap();
+}
+
+#[test]
+fn ring_overflow_keeps_newest_and_counts_dropped() {
+    let tracer = Tracer::with_capacity(4);
+    tracer.set_enabled(true);
+    obs::install(&tracer, "overflow", 0);
+    obs::set_pid(1);
+    for _ in 0..10 {
+        let _g = obs::span("s", Cat::Compute);
+    }
+    let dump = tracer.drain();
+    assert_eq!(dump.spans.len(), 4);
+    assert_eq!(dump.dropped, 6);
+    assert!(tracer.dropped_total() >= 6);
+}
+
+#[test]
+fn phase_gauges_mirror_guard_and_explicit_credit() {
+    let tracer = Tracer::new();
+    tracer.set_enabled(true);
+    obs::install(&tracer, "phases", 2);
+    {
+        let _g = obs::span("embed", Cat::Compute);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    obs::add_virtual(Cat::Link, 0.25);
+    obs::add_virtual(Cat::Fabric, 0.5);
+    let m: std::collections::BTreeMap<String, f64> =
+        tracer.phase_metrics().into_iter().collect();
+    assert!(m["phase_compute_s"] > 0.0);
+    assert_eq!(m["phase_codec_s"], 0.0);
+    assert_eq!(m["phase_link_s"], 0.25);
+    assert_eq!(m["phase_fabric_wait_s"], 0.5);
+    assert_eq!(m["trace_spans_dropped"], 0.0);
+}

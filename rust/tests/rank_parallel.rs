@@ -233,6 +233,39 @@ fn coordinator_generations_identical_across_cores() {
     }
 }
 
+/// Turning the span recorder on must not perturb results: traced
+/// parallel logits stay bit-identical to the untraced sequential
+/// reference, and the drained timeline carries compute and fabric
+/// spans from the rank workers.
+#[test]
+fn tracing_enabled_keeps_logits_bit_identical() {
+    use tpcc::obs::Cat;
+
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let toks = prompt();
+    let mut seq = make_engine(&root, 2, SCHEME, "", RankThreads::Off);
+    let mut par = make_engine(&root, 2, SCHEME, "", RankThreads::Auto);
+    // sequential reference runs untraced (recorder off by default)
+    let (l_seq, _) = seq.prefill(&toks, 1, 128, &[0], None).unwrap();
+    par.tracer().set_enabled(true);
+    let (l_par, _) = par.prefill(&toks, 1, 128, &[0], None).unwrap();
+    par.tracer().set_enabled(false);
+    assert_eq!(l_seq, l_par, "tracing changed the parallel logits");
+    let dump = par.tracer().drain();
+    assert!(!dump.spans.is_empty(), "traced prefill recorded no spans");
+    assert!(dump.spans.iter().any(|s| s.cat == Cat::Compute), "no compute spans");
+    assert!(
+        dump.spans.iter().any(|s| s.cat == Cat::Fabric),
+        "no fabric exchange spans from the rank workers"
+    );
+    // the phase gauges accumulated real wall time
+    let p = par.tracer().phase_snapshot();
+    assert!(p[0] > 0.0, "phase_compute_s never accumulated: {p:?}");
+}
+
 // ---- knob / assignment sanity (no artifacts needed) ----
 
 #[test]
