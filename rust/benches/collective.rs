@@ -8,7 +8,7 @@
 
 use tpcc::bench::Bench;
 use tpcc::collective::plan::{self, AlgoChoice};
-use tpcc::collective::{execute, AlgoKind, CollectivePlan, Topology};
+use tpcc::collective::{execute, AlgoKind, CollectivePlan, CommScratch, Topology};
 use tpcc::interconnect::HwProfile;
 use tpcc::mxfmt::{compressor_from_spec, Compressor};
 use tpcc::util::rng::Rng;
@@ -46,13 +46,14 @@ fn main() {
                         est_link_s: 0.0,
                         est_codec_s: 0.0,
                     };
-                    let (mut out, mut wire) = (Vec::new(), Vec::new());
+                    let mut out = Vec::new();
+                    let mut scratch = CommScratch::default();
                     let mut last = None;
                     b.run(
                         &format!("{}/{label}/tp{tp}/{prof_name}/{spec}", kind.name()),
                         || {
                             let rep = execute(
-                                &p, &x, &parts, comp.as_deref(), &topo, true, &mut out, &mut wire,
+                                &p, &x, &parts, comp.as_deref(), &topo, true, &mut out, &mut scratch,
                             );
                             std::hint::black_box(&out);
                             last = Some(rep);

@@ -1,0 +1,23 @@
+//! cargo-fuzz target: decoder robustness on untrusted wire bytes.
+//!
+//! The byte string head claims an `n_values` (deliberately decoupled
+//! from the actual byte count — the decoder must length-check, never
+//! trust the caller); the rest is fed verbatim as wire bytes to every
+//! codec family's validating `try_decode_add`. Returning `Err` is
+//! fine; panicking or reading/writing out of bounds is the finding
+//! (run under ASan via `cargo fuzz run codec_decode_robust` to catch
+//! the latter even where safe Rust wouldn't panic).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Some((&[a, b], wire)) = data.split_first_chunk::<2>() else {
+        return;
+    };
+    // up to 64 Ki claimed values — far beyond any wire the fuzzer
+    // sends, so the truncation paths get constant exercise
+    let n_values = u16::from_le_bytes([a, b]) as usize;
+    tpcc::mxfmt::fuzz::decoder_arbitrary_bytes(wire, n_values);
+});

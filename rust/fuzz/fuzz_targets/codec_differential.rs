@@ -1,0 +1,42 @@
+//! cargo-fuzz target: differential fast-vs-reference codec check.
+//!
+//! The fuzzer's byte string is the whole test case: the head picks the
+//! scheme (element format × block × scale width), the tail is
+//! reinterpreted as raw f32 bit patterns — so libFuzzer mutates the
+//! *exact* input floats, including NaN payloads, ±Inf, subnormals and
+//! ±0, and coverage feedback steers it into the codec's branch
+//! structure. Odd tail lengths fall out of arbitrary byte counts.
+//!
+//! Any divergence between `MxCodec` and the `RefMxCodec` oracle —
+//! wire bytes, decode_add bits, requant bits, stored-length
+//! accounting, truncation acceptance — panics inside
+//! `differential_slice` and becomes a reproducible finding.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use tpcc::mxfmt::fuzz::{FUZZ_BLOCKS, FUZZ_SCALE_EBITS};
+use tpcc::mxfmt::{ELEM_FORMATS, MxScheme};
+
+fuzz_target!(|data: &[u8]| {
+    let Some((&[e, b, s], rest)) = data.split_first_chunk::<3>() else {
+        return;
+    };
+    let elem = &ELEM_FORMATS[e as usize % ELEM_FORMATS.len()];
+    let block = FUZZ_BLOCKS[b as usize % FUZZ_BLOCKS.len()];
+    let ebits = FUZZ_SCALE_EBITS[s as usize % FUZZ_SCALE_EBITS.len()];
+    let scheme = MxScheme::new(elem.name, block, ebits).expect("interned format");
+
+    // cap the slice so one case stays fast; 4 KiB of input is plenty
+    // to cover multi-block layouts at every block size
+    let rest = &rest[..rest.len().min(4096)];
+    let x: Vec<f32> = rest
+        .chunks(4)
+        .map(|c| {
+            let mut w = [0u8; 4];
+            w[..c.len()].copy_from_slice(c); // short tail chunk zero-padded
+            f32::from_bits(u32::from_le_bytes(w))
+        })
+        .collect();
+    tpcc::mxfmt::fuzz::differential_slice(&x, scheme);
+});

@@ -1,0 +1,229 @@
+//! `tpcc bench --codec` — codec roofline snapshot: fast-path vs
+//! reference encode/decode throughput per scheme × block, against the
+//! host's measured `memcpy` ceiling (`BENCH_codec.json`).
+//!
+//! The measured quantity is GB/s of the **f32 side** of the transform
+//! (4 bytes per value regardless of wire width), so rows are
+//! comparable across element formats and directly placeable under the
+//! memcpy roofline: a codec at the ceiling would compress for free.
+//! `enc_speedup` / `dec_speedup` are the fast path over
+//! [`RefMxCodec`] — the acceptance floor in `tests/bench_trend.rs`
+//! wants ≥ 3× encode on at least one scheme × block point.
+
+use std::time::Instant;
+
+use crate::mxfmt::{Compressor, MxCodec, MxScheme, RefMxCodec};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Element formats the roofline sweeps (the paper's working set: the
+/// headline FP4, the wider FP5, the narrow FP3, and the INT4 baseline).
+pub const ELEMS: &[&str] = &["fp4_e2m1", "fp5_e2m2", "fp3_e1m1", "int4"];
+
+/// Block sizes per element format.
+pub const BLOCKS: &[usize] = &[8, 16, 32];
+
+/// Values per measured payload (1 Mi f32 = 4 MiB: large enough to
+/// stream past L2 and amortize timer overhead on one pass).
+pub const N_VALUES: usize = 1 << 20;
+
+#[derive(Debug, Clone)]
+pub struct CodecRow {
+    pub scheme: String,
+    pub block: usize,
+    pub n_values: usize,
+    pub fast_enc_gbps: f64,
+    pub ref_enc_gbps: f64,
+    pub enc_speedup: f64,
+    pub fast_dec_gbps: f64,
+    pub ref_dec_gbps: f64,
+    pub dec_speedup: f64,
+    pub memcpy_gbps: f64,
+}
+
+/// Time `f` in a repeat-until-budget loop (min one run) and return the
+/// best per-iteration seconds — min, not median: for a fixed-work
+/// kernel the minimum is the least-noise estimate.
+fn bench_loop(mut f: impl FnMut(), budget_s: f64) -> f64 {
+    // one untimed warmup populates caches / faults pages
+    f();
+    let mut best = f64::INFINITY;
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() >= budget_s {
+            return best.max(1e-12);
+        }
+    }
+}
+
+/// Measured `memcpy` ceiling (GB/s) over the same payload size.
+fn memcpy_ceiling(n_values: usize, budget_s: f64) -> f64 {
+    let src = vec![1.0f32; n_values];
+    let mut dst = vec![0.0f32; n_values];
+    let t = bench_loop(
+        || {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&mut dst);
+        },
+        budget_s,
+    );
+    n_values as f64 * 4.0 / 1e9 / t
+}
+
+/// Run the roofline sweep. `budget_s` is the per-measurement time
+/// budget (the CLI uses ~0.1s; tests use a tiny budget for speed).
+pub fn run(budget_s: f64) -> Vec<CodecRow> {
+    let mut rng = Rng::new(0xC0DEC);
+    let mut x = vec![0.0f32; N_VALUES];
+    rng.fill_activations(&mut x, 2.0);
+    let memcpy_gbps = memcpy_ceiling(N_VALUES, budget_s);
+    let gb = N_VALUES as f64 * 4.0 / 1e9;
+
+    let mut rows = Vec::new();
+    for elem in ELEMS {
+        for &block in BLOCKS {
+            let scheme = MxScheme::new(elem, block, 8).unwrap();
+            let fast = MxCodec::new(scheme);
+            let refc = RefMxCodec::new(scheme);
+            let mut wire = Vec::new();
+            fast.encode(&x, &mut wire); // size + warm the scratch
+            let mut acc = vec![0.0f32; N_VALUES];
+
+            let fe = bench_loop(|| fast.encode(&x, &mut wire), budget_s);
+            let re = bench_loop(|| refc.encode(&x, &mut wire), budget_s);
+            // re-encode with the fast path so both decoders read the
+            // same (bit-identical anyway) wire bytes
+            fast.encode(&x, &mut wire);
+            let fd = bench_loop(
+                || {
+                    fast.decode_add(&wire, N_VALUES, &mut acc);
+                    std::hint::black_box(&mut acc);
+                },
+                budget_s,
+            );
+            let rd = bench_loop(
+                || {
+                    refc.decode_add(&wire, N_VALUES, &mut acc);
+                    std::hint::black_box(&mut acc);
+                },
+                budget_s,
+            );
+            rows.push(CodecRow {
+                scheme: scheme.name(),
+                block,
+                n_values: N_VALUES,
+                fast_enc_gbps: gb / fe,
+                ref_enc_gbps: gb / re,
+                enc_speedup: re / fe,
+                fast_dec_gbps: gb / fd,
+                ref_dec_gbps: gb / rd,
+                dec_speedup: rd / fd,
+                memcpy_gbps,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print(rows: &[CodecRow]) {
+    let ceiling = rows.first().map(|r| r.memcpy_gbps).unwrap_or(0.0);
+    println!("\ncodec roofline — f32-side GB/s, memcpy ceiling {ceiling:.2} GB/s");
+    println!(
+        "{:<20} {:>6} {:>9} {:>9} {:>7} {:>9} {:>9} {:>7}",
+        "scheme", "block", "fast enc", "ref enc", "spd", "fast dec", "ref dec", "spd"
+    );
+    println!("{}", "-".repeat(82));
+    for r in rows {
+        println!(
+            "{:<20} {:>6} {:>9.3} {:>9.3} {:>6.2}x {:>9.3} {:>9.3} {:>6.2}x",
+            r.scheme,
+            r.block,
+            r.fast_enc_gbps,
+            r.ref_enc_gbps,
+            r.enc_speedup,
+            r.fast_dec_gbps,
+            r.ref_dec_gbps,
+            r.dec_speedup
+        );
+    }
+}
+
+/// The tracked `BENCH_codec.json` snapshot.
+pub fn to_json(rows: &[CodecRow]) -> Json {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let memcpy = rows.first().map(|r| r.memcpy_gbps).unwrap_or(0.0);
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("scheme", json::s(&r.scheme)),
+                ("block", json::num(r.block as f64)),
+                ("n_values", json::num(r.n_values as f64)),
+                ("fast_enc_gbps", json::num_or_null(r.fast_enc_gbps)),
+                ("ref_enc_gbps", json::num_or_null(r.ref_enc_gbps)),
+                ("enc_speedup", json::num_or_null(r.enc_speedup)),
+                ("fast_dec_gbps", json::num_or_null(r.fast_dec_gbps)),
+                ("ref_dec_gbps", json::num_or_null(r.ref_dec_gbps)),
+                ("dec_speedup", json::num_or_null(r.dec_speedup)),
+                ("memcpy_gbps", json::num_or_null(r.memcpy_gbps)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("bench", json::s("codec")),
+        ("schema", json::num(1.0)),
+        (
+            "metric",
+            json::s(
+                "codec roofline: encode/decode GB/s of f32 payload per scheme x block, \
+                 fast path vs mxfmt::reference, against the measured memcpy ceiling",
+            ),
+        ),
+        ("status", json::s("measured")),
+        ("host_cores", json::num(cores as f64)),
+        ("memcpy_gbps", json::num_or_null(memcpy)),
+        ("rows", json::arr(row_objs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_grid_and_emits_schema() {
+        // tiny budget: one timed pass per cell — shape test, not perf
+        let rows = run(0.0);
+        assert_eq!(rows.len(), ELEMS.len() * BLOCKS.len());
+        for r in &rows {
+            assert!(r.fast_enc_gbps > 0.0 && r.ref_enc_gbps > 0.0);
+            assert!(r.fast_dec_gbps > 0.0 && r.ref_dec_gbps > 0.0);
+            assert!(r.memcpy_gbps > 0.0);
+            assert!(r.scheme.contains(&format!("_b{}_", r.block)));
+        }
+        let parsed = Json::parse(&to_json(&rows).to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("codec"));
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap().len(),
+            rows.len()
+        );
+        let row = parsed.get("rows").unwrap().idx(0).unwrap();
+        for key in [
+            "scheme",
+            "block",
+            "n_values",
+            "fast_enc_gbps",
+            "ref_enc_gbps",
+            "enc_speedup",
+            "fast_dec_gbps",
+            "ref_dec_gbps",
+            "dec_speedup",
+            "memcpy_gbps",
+        ] {
+            assert!(row.get(key).is_some(), "row missing {key}");
+        }
+    }
+}

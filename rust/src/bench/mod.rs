@@ -5,7 +5,10 @@
 //!
 //! [`rankpar`] is the `tpcc bench` subcommand: the tracked
 //! sequential-vs-parallel rank-runtime snapshot (`BENCH_rankpar.json`).
+//! [`codec`] is `tpcc bench --codec`: the codec roofline snapshot
+//! (`BENCH_codec.json`).
 
+pub mod codec;
 pub mod rankpar;
 
 use std::time::Instant;

@@ -24,7 +24,7 @@ use std::ops::Range;
 use std::time::Instant;
 
 use super::topology::Topology;
-use super::CommReport;
+use super::{CommReport, CommScratch};
 use crate::mxfmt::Compressor;
 use crate::obs::{self, Cat};
 
@@ -133,14 +133,16 @@ pub trait CollectiveAlgo: Sync {
     /// Execute `out = x + Σ partials` with this algorithm's phase
     /// structure and fill a [`CommReport`]. `partials` are borrowed
     /// slices so chunked execution can hand out sub-ranges without
-    /// copying payload data.
+    /// copying payload data. All transient buffers (wire bytes, phase
+    /// partials) live in `scratch` so a warmed-up caller allocates
+    /// nothing per collective.
     fn run(
         &self,
         x: &[f32],
         partials: &[&[f32]],
         ctx: &ExecCtx,
         out: &mut Vec<f32>,
-        wire: &mut Vec<u8>,
+        scratch: &mut CommScratch,
     ) -> CommReport;
 }
 
@@ -149,23 +151,38 @@ pub(crate) fn wire_bytes_of(comp: Option<&dyn Compressor>, len: usize) -> usize 
     comp.map_or(len * 2, |c| c.wire_bytes(len))
 }
 
-/// Partition `[0, len)` into `parts` contiguous ranges whose lengths are
-/// multiples of `align` (the compressor's block granularity), so every
-/// slice stays independently encodable. Requires `len % align == 0`
-/// (true for every TP partial: len = batch·seq·d_model, d_model a block
-/// multiple) — otherwise degrades to unit granularity. Trailing ranges
-/// may be empty when `parts · align > len`.
+/// Partition `[0, len)` into `parts` contiguous ranges whose interior
+/// boundaries fall on multiples of `align` (the compressor's block
+/// granularity), so every slice stays independently encodable without
+/// splitting a quantization block across two messages. When `len` is
+/// not a multiple of `align` the sub-block remainder rides on the last
+/// non-empty slice (only the final range may end off-grid — mirroring
+/// the codec's trailing partial block). Trailing ranges may be empty
+/// when `parts · align > len`.
+///
+/// Historical bug, kept fixed by `property_collective`: this used to
+/// degrade to *unit* granularity whenever `len % align != 0`, silently
+/// splitting MX blocks mid-stream for any odd hidden size and changing
+/// two-shot numerics vs the unchunked path.
 pub(crate) fn aligned_slices(len: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
-    let align = if align > 1 && len % align == 0 { align } else { 1 };
+    let align = align.max(1);
     let units = len / align;
     let base = units / parts;
     let rem = units % parts;
+    let mut sizes = Vec::with_capacity(parts);
+    for j in 0..parts {
+        sizes.push((base + usize::from(j < rem)) * align);
+    }
+    let tail = len - units * align;
+    if tail > 0 {
+        let last = sizes.iter().rposition(|&s| s > 0).unwrap_or(parts - 1);
+        sizes[last] += tail;
+    }
     let mut out = Vec::with_capacity(parts);
     let mut at = 0usize;
-    for j in 0..parts {
-        let u = (base + usize::from(j < rem)) * align;
-        out.push(at..at + u);
-        at += u;
+    for s in sizes {
+        out.push(at..at + s);
+        at += s;
     }
     out
 }
@@ -189,9 +206,10 @@ fn gather_reduce_exec(
     partials: &[&[f32]],
     ctx: &ExecCtx,
     out: &mut Vec<f32>,
-    wire: &mut Vec<u8>,
+    scratch: &mut CommScratch,
     report: &mut CommReport,
 ) {
+    let wire = &mut scratch.wire;
     let len = x.len();
     out.clear();
     out.extend_from_slice(x);
@@ -274,10 +292,10 @@ impl CollectiveAlgo for FlatRing {
         partials: &[&[f32]],
         ctx: &ExecCtx,
         out: &mut Vec<f32>,
-        wire: &mut Vec<u8>,
+        scratch: &mut CommScratch,
     ) -> CommReport {
         let mut report = base_report(AlgoKind::FlatRing, x.len(), partials.len(), ctx.comp);
-        gather_reduce_exec(x, partials, ctx, out, wire, &mut report);
+        gather_reduce_exec(x, partials, ctx, out, scratch, &mut report);
         report.link_s = self.link_time(x.len(), partials.len(), ctx.comp, ctx.topo);
         report
     }
@@ -329,10 +347,10 @@ impl CollectiveAlgo for RecursiveDoubling {
         partials: &[&[f32]],
         ctx: &ExecCtx,
         out: &mut Vec<f32>,
-        wire: &mut Vec<u8>,
+        scratch: &mut CommScratch,
     ) -> CommReport {
         let mut report = base_report(AlgoKind::RecursiveDoubling, x.len(), partials.len(), ctx.comp);
-        gather_reduce_exec(x, partials, ctx, out, wire, &mut report);
+        gather_reduce_exec(x, partials, ctx, out, scratch, &mut report);
         report.link_s = self.link_time(x.len(), partials.len(), ctx.comp, ctx.topo);
         report
     }
@@ -393,8 +411,9 @@ impl CollectiveAlgo for TwoShot {
         partials: &[&[f32]],
         ctx: &ExecCtx,
         out: &mut Vec<f32>,
-        wire: &mut Vec<u8>,
+        scratch: &mut CommScratch,
     ) -> CommReport {
+        let CommScratch { wire, tmp, .. } = scratch;
         let n = partials.len();
         let len = x.len();
         let mut report = base_report(AlgoKind::TwoShot, len, n, ctx.comp);
@@ -407,7 +426,6 @@ impl CollectiveAlgo for TwoShot {
             // path's slice-wise owner-first summation order so the
             // NoCompress codec (a bit-exact f32 round-trip) produces the
             // same bits as this branch.
-            let mut tmp: Vec<f32> = Vec::new();
             for (j, sl) in aligned_slices(len, n, 1).iter().enumerate() {
                 if sl.is_empty() {
                     continue;
@@ -423,7 +441,7 @@ impl CollectiveAlgo for TwoShot {
                         *t += v;
                     }
                 }
-                for (o, t) in out[sl.clone()].iter_mut().zip(&tmp) {
+                for (o, t) in out[sl.clone()].iter_mut().zip(tmp.iter()) {
                     *o += t;
                 }
             }
@@ -433,7 +451,6 @@ impl CollectiveAlgo for TwoShot {
 
         let slices = aligned_slices(len, n, c.alignment());
         let mut wire_sum = 0usize;
-        let mut tmp: Vec<f32> = Vec::new();
         // measured buckets, scaled to one rank's critical path below
         let (mut enc_p1, mut dec_p1, mut enc_p2, mut dec_p2) = (0.0f64, 0.0, 0.0, 0.0);
         for (j, sl) in slices.iter().enumerate() {
@@ -545,8 +562,9 @@ impl CollectiveAlgo for Hierarchical {
         partials: &[&[f32]],
         ctx: &ExecCtx,
         out: &mut Vec<f32>,
-        wire: &mut Vec<u8>,
+        scratch: &mut CommScratch,
     ) -> CommReport {
+        let CommScratch { wire, tmp, .. } = scratch;
         let n = partials.len();
         let len = x.len();
         let topo = ctx.topo;
@@ -561,7 +579,6 @@ impl CollectiveAlgo for Hierarchical {
             // bitwise identical to this branch
             let m = topo.nodes.max(1);
             let g = topo.gpus_per_node.max(1);
-            let mut tmp: Vec<f32> = Vec::new();
             for node in 0..m {
                 // ranks are node-major, so node k's members are the
                 // contiguous range k·g .. (k+1)·g
@@ -577,7 +594,7 @@ impl CollectiveAlgo for Hierarchical {
                         *t += v;
                     }
                 }
-                for (o, t) in out.iter_mut().zip(&tmp) {
+                for (o, t) in out.iter_mut().zip(tmp.iter()) {
                     *o += t;
                 }
             }
@@ -587,7 +604,6 @@ impl CollectiveAlgo for Hierarchical {
 
         let m = topo.nodes.max(1);
         let g = topo.gpus_per_node.max(1);
-        let mut tmp: Vec<f32> = Vec::new();
         let (mut enc_a, mut dec_a, mut enc_b, mut dec_b) = (0.0f64, 0.0, 0.0, 0.0);
         for node in 0..m {
             // phase A — intra-node gather + reduce (every member's
@@ -695,21 +711,46 @@ mod tests {
 
     #[test]
     fn aligned_slices_cover_and_align() {
-        for (len, parts, align) in
-            [(1024, 4, 32), (96, 3, 32), (192, 8, 32), (7, 3, 1), (64, 8, 16)]
-        {
+        for (len, parts, align) in [
+            (1024, 4, 32),
+            (96, 3, 32),
+            (192, 8, 32),
+            (7, 3, 1),
+            (64, 8, 16),
+            // odd lengths: every interior boundary still block-aligned
+            (100, 3, 32),
+            (1438, 3, 32),
+            (7, 3, 32),
+            (33, 4, 32),
+        ] {
             let sl = aligned_slices(len, parts, align);
             assert_eq!(sl.len(), parts);
             let mut at = 0;
             for s in &sl {
                 assert_eq!(s.start, at);
-                if len % align == 0 {
-                    assert_eq!(s.len() % align, 0, "{len}/{parts}/{align}: {s:?}");
+                // interior boundaries never split a block; only the
+                // final range may end off-grid (the sub-block tail)
+                if s.end != len {
+                    assert_eq!(s.end % align, 0, "{len}/{parts}/{align}: {s:?}");
                 }
                 at = s.end;
             }
             assert_eq!(at, len);
         }
+        // the historical bug: len=100, align=32 degraded to unit
+        // granularity ([34, 33, 33]); now the tail rides the last slice
+        let sl = aligned_slices(100, 3, 32);
+        assert_eq!(
+            sl.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            vec![32, 32, 36]
+        );
+        // tail shorter than one block on every part: all of it lands in
+        // the last slot rather than splitting
+        let sl = aligned_slices(7, 3, 32);
+        assert_eq!(
+            sl.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            vec![0, 0, 7]
+        );
     }
 
     #[test]

@@ -30,6 +30,24 @@ pub use topology::Topology;
 use crate::interconnect::LinkModel;
 use crate::mxfmt::Compressor;
 
+/// Reusable scratch buffers threaded through every collective so a
+/// warmed-up caller (rank worker, engine step loop) allocates nothing
+/// per collective: wire bytes, phase partials, and pipeline staging all
+/// live here and only ever grow to the high-water mark.
+///
+/// The fields are disjoint on purpose — algorithms destructure the
+/// struct to borrow `wire` and `tmp` simultaneously.
+#[derive(Debug, Default)]
+pub struct CommScratch {
+    /// packed wire bytes (encode target / decode source)
+    pub wire: Vec<u8>,
+    /// slice-length partial accumulator (two-shot reduce-scatter slices,
+    /// hierarchical node sums)
+    pub tmp: Vec<f32>,
+    /// per-chunk output staging for the pipelined schedule
+    pub chunk_out: Vec<f32>,
+}
+
 /// Outcome of one collective, for virtual-time accounting + telemetry.
 #[derive(Debug, Clone)]
 pub struct CommReport {
@@ -99,11 +117,11 @@ pub fn execute(
     topo: &Topology,
     measure: bool,
     out: &mut Vec<f32>,
-    wire: &mut Vec<u8>,
+    scratch: &mut CommScratch,
 ) -> CommReport {
     let ctx = ExecCtx { comp, topo, measure };
     let refs: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
-    pipeline::run_chunked(plan.algo.implementation(), x, &refs, &ctx, plan.chunks, out, wire)
+    pipeline::run_chunked(plan.algo.implementation(), x, &refs, &ctx, plan.chunks, out, scratch)
 }
 
 /// All-gather + reduce over `partials` (one slice per worker, equal
@@ -128,7 +146,13 @@ pub fn all_gather_reduce_add(
     let topo = Topology::flat(partials.len(), *link);
     let ctx = ExecCtx { comp, topo: &topo, measure: true };
     let refs: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
-    algo::FlatRing.run(x, &refs, &ctx, out, wire)
+    // keep the historical (out, wire) signature: lend the caller's wire
+    // buffer to a scratch for the duration of the collective
+    let mut scratch = CommScratch::default();
+    std::mem::swap(&mut scratch.wire, wire);
+    let rep = algo::FlatRing.run(x, &refs, &ctx, out, &mut scratch);
+    std::mem::swap(&mut scratch.wire, wire);
+    rep
 }
 
 #[cfg(test)]
@@ -233,8 +257,9 @@ mod tests {
         };
         let (mut o1, mut o2) = (Vec::new(), Vec::new());
         let mut wire = Vec::new();
+        let mut scratch = CommScratch::default();
         let r1 = all_gather_reduce_add(&x, &parts, Some(&c), &link(), &mut o1, &mut wire);
-        let r2 = execute(&plan, &x, &parts, Some(&c), &topo, true, &mut o2, &mut wire);
+        let r2 = execute(&plan, &x, &parts, Some(&c), &topo, true, &mut o2, &mut scratch);
         assert_eq!(o1, o2);
         assert_eq!(r1.link_s, r2.link_s);
         assert_eq!(r1.wire_bytes, r2.wire_bytes);
@@ -255,9 +280,9 @@ mod tests {
         let ctx_a = ExecCtx { comp: Some(&c), topo: &topo, measure: false };
         let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
         let (mut om, mut oa) = (Vec::new(), Vec::new());
-        let mut wire = Vec::new();
-        let rm = algo::FlatRing.run(&x, &refs, &ctx_m, &mut om, &mut wire);
-        let ra = algo::FlatRing.run(&x, &refs, &ctx_a, &mut oa, &mut wire);
+        let mut scratch = CommScratch::default();
+        let rm = algo::FlatRing.run(&x, &refs, &ctx_m, &mut om, &mut scratch);
+        let ra = algo::FlatRing.run(&x, &refs, &ctx_a, &mut oa, &mut scratch);
         assert_eq!(om, oa, "requant path must be bit-equal to the wire path");
         assert!(rm.encode_s > 0.0 && rm.decode_s > 0.0);
         assert_eq!(ra.encode_s, 0.0);

@@ -12,7 +12,7 @@
 //! the wire, but every chunk pays the per-message α again.
 
 use super::algo::{aligned_slices, CollectiveAlgo, ExecCtx};
-use super::CommReport;
+use super::{CommReport, CommScratch};
 use crate::mxfmt::Compressor;
 
 /// Virtual-time cost of one pipeline chunk.
@@ -80,11 +80,11 @@ pub fn run_chunked(
     ctx: &ExecCtx,
     chunks: usize,
     out: &mut Vec<f32>,
-    wire: &mut Vec<u8>,
+    scratch: &mut CommScratch,
 ) -> CommReport {
     let chunks = chunks.max(1);
     if chunks == 1 || x.is_empty() {
-        return algo.run(x, partials, ctx, out, wire);
+        return algo.run(x, partials, ctx, out, scratch);
     }
     let len = x.len();
     let align = ctx.comp.map_or(1, |c| c.alignment());
@@ -93,21 +93,23 @@ pub fn run_chunked(
         .filter(|sl| !sl.is_empty())
         .collect();
     if ranges.len() <= 1 {
-        return algo.run(x, partials, ctx, out, wire);
+        return algo.run(x, partials, ctx, out, scratch);
     }
 
     out.clear();
     out.reserve(len);
     let mut report = CommReport::default();
     let mut costs = Vec::with_capacity(ranges.len());
-    let mut chunk_out: Vec<f32> = Vec::new();
+    // chunk_out is taken out of the scratch (not borrowed) so the
+    // scratch can still be lent to each chunk's run
+    let mut chunk_out = std::mem::take(&mut scratch.chunk_out);
     let mut chunk_parts: Vec<&[f32]> = Vec::with_capacity(partials.len());
     for sl in &ranges {
         // re-borrow each partial's sub-range — no payload copies
         chunk_parts.clear();
         chunk_parts.extend(partials.iter().map(|p| &p[sl.clone()]));
         let rep =
-            algo.run(&x[sl.clone()], &chunk_parts, ctx, &mut chunk_out, wire);
+            algo.run(&x[sl.clone()], &chunk_parts, ctx, &mut chunk_out, scratch);
         out.extend_from_slice(&chunk_out);
         costs.push(ChunkCost {
             encode_s: rep.encode_s,
@@ -125,6 +127,7 @@ pub fn run_chunked(
     }
     report.chunks = costs.len();
     report.pipelined_s = schedule(&costs);
+    scratch.chunk_out = chunk_out;
     report
 }
 
@@ -176,9 +179,9 @@ mod tests {
         let ctx = ExecCtx { comp: Some(&c), topo: &topo, measure: true };
         let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
         let (mut o1, mut o2) = (Vec::new(), Vec::new());
-        let mut wire = Vec::new();
-        let r1 = FlatRing.run(&x, &refs, &ctx, &mut o1, &mut wire);
-        let r4 = run_chunked(&FlatRing, &x, &refs, &ctx, 4, &mut o2, &mut wire);
+        let mut scratch = CommScratch::default();
+        let r1 = FlatRing.run(&x, &refs, &ctx, &mut o1, &mut scratch);
+        let r4 = run_chunked(&FlatRing, &x, &refs, &ctx, 4, &mut o2, &mut scratch);
         // chunking respects block boundaries, so the quantization grid —
         // and therefore the payload — is identical
         assert_eq!(o1, o2);

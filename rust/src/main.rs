@@ -10,6 +10,8 @@
 //!   table7  (serving under load: capacity at a TTFT SLO per policy)
 //!   load    --model micro --tp 2 --arrival poisson:4 --requests 32 [--policy ...]
 //!   bench   (rank-runtime perf snapshot; --json BENCH_rankpar.json)
+//!   bench --codec   (codec roofline; --json BENCH_codec.json)
+//!   golden --emit   (regenerate rust/tests/golden_codec.json)
 //!   trace   --model micro --tp 2 [--requests 4] [--out trace.json]
 //!           (run requests with the span recorder on, export
 //!            Chrome-trace JSON for Perfetto / chrome://tracing)
@@ -271,6 +273,22 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "bench" => {
+            // --codec: codec roofline snapshot (fast vs reference
+            // GB/s per scheme x block against the memcpy ceiling);
+            // --json writes the tracked BENCH_codec.json file. Needs
+            // no artifacts — the codec is self-contained.
+            if args.has("codec") {
+                let budget = args.get_f64("budget", 0.1);
+                let rows = tpcc::bench::codec::run(budget);
+                tpcc::bench::codec::print(&rows);
+                if let Some(path) = args.get("json") {
+                    let mut body = tpcc::bench::codec::to_json(&rows).to_string();
+                    body.push('\n');
+                    std::fs::write(path, body)?;
+                    println!("snapshot written to {path}");
+                }
+                return Ok(());
+            }
             // rank-runtime perf snapshot: sequential vs parallel
             // wall-clock TTFT per live config; --json writes the
             // tracked BENCH_rankpar.json trajectory file. The parallel
@@ -342,6 +360,26 @@ fn run() -> anyhow::Result<()> {
             join.join().unwrap()?;
             Ok(())
         }
+        "golden" => {
+            // regenerate the committed codec golden vectors
+            // (rust/tests/golden_codec.json). The emitter asserts the
+            // fast codec's wire bit-identical to the reference on
+            // every scheme before writing anything, so a drifted file
+            // can never be committed by accident.
+            anyhow::ensure!(
+                args.has("emit"),
+                "golden: pass --emit to regenerate (writes to stdout, or --out PATH)"
+            );
+            let body = tpcc::mxfmt::golden::emit();
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &body)?;
+                    eprintln!("golden vectors written to {path} (n={})", tpcc::mxfmt::golden::GOLDEN_N);
+                }
+                None => print!("{body}"),
+            }
+            Ok(())
+        }
         "info" => {
             let root = common::artifacts_root()?;
             let rt = Runtime::load(&root)?;
@@ -366,13 +404,15 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | load | bench | trace | table1..table7 | info\n\
+                 commands: serve | gen | eval | load | bench | golden | trace | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
                                --algo auto|ring|recursive_doubling|two_shot|hierarchical\n\
                                --rank-threads off|auto|N (per-rank worker threads; off = sequential)\n\
                  bench flags:  --reps N --json BENCH_rankpar.json\n\
+                               --codec [--budget S] --json BENCH_codec.json (codec roofline)\n\
+                 golden flags: --emit [--out rust/tests/golden_codec.json]\n\
                  trace flags:  --requests N --max-tokens N --out trace.json (default: stdout)\n\
                  policy rules: \"mlp=fp4_e2m1_b32_e8m0;attn=none;layers[0-1]=none;decode=none\"\n\
                  load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\

@@ -2,7 +2,7 @@
 //! channel-wise INT quantization and TopK sparsification, plus an FP16
 //! truncation baseline.
 
-use super::Compressor;
+use super::{CodecError, Compressor};
 
 /// Channel-wise INTk: one f32 absmax scale per channel (the last-axis
 /// stride), symmetric integer codes. For a `[rows, channels]` partial
@@ -105,6 +105,11 @@ impl Compressor for ChannelInt {
     fn alignment(&self) -> usize {
         self.channels.max(1)
     }
+
+    /// Stored layout: one f32 scale per channel, then a byte per value.
+    fn encoded_len(&self, n_values: usize) -> usize {
+        self.resolve_channels(n_values) * 4 + n_values
+    }
 }
 
 /// TopK sparsification: keep the `1/ratio_den` largest-magnitude values
@@ -166,6 +171,50 @@ impl Compressor for TopK {
     /// selection pass over all values, but trivial decode
     fn compute_cost_factor(&self) -> f64 {
         0.8
+    }
+
+    /// Stored layout: k records of (u32 index, f32 value).
+    fn encoded_len(&self, n_values: usize) -> usize {
+        if n_values == 0 {
+            return 0;
+        }
+        self.keep_count(n_values) * 8
+    }
+
+    /// TopK is the one codec whose wire carries *addresses*: a corrupt
+    /// index would scatter-add out of bounds, so the untrusted path
+    /// range-checks every record before applying any of them.
+    fn try_decode_add(
+        &self,
+        wire: &[u8],
+        n_values: usize,
+        acc: &mut [f32],
+    ) -> Result<(), CodecError> {
+        if n_values == 0 {
+            return Ok(());
+        }
+        let k = self.keep_count(n_values);
+        let need = k * 8;
+        if wire.len() < need {
+            return Err(CodecError::Truncated { needed: need, got: wire.len() });
+        }
+        if acc.len() < n_values {
+            return Err(CodecError::Malformed(format!(
+                "accumulator holds {} values, message carries {}",
+                acc.len(),
+                n_values
+            )));
+        }
+        for rec in wire.chunks_exact(8).take(k) {
+            let i = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+            if i >= n_values {
+                return Err(CodecError::Malformed(format!(
+                    "topk index {i} out of range for {n_values} values"
+                )));
+            }
+        }
+        self.decode_add(wire, n_values, acc);
+        Ok(())
     }
 }
 
@@ -333,6 +382,23 @@ mod tests {
             let tol = if v != 0.0 && v.abs() < 6.1e-5 { 1e-2 } else { 1e-3 };
             assert!(rel < tol, "{v} -> {back}");
         }
+    }
+
+    #[test]
+    fn topk_try_decode_rejects_corrupt_index() {
+        let x = vec![1.0f32; 64];
+        let t = TopK::new(3.0);
+        let mut wire = Vec::new();
+        t.encode(&x, &mut wire);
+        let mut acc = vec![0.0f32; 64];
+        assert!(t.try_decode_add(&wire, 64, &mut acc).is_ok());
+        // corrupt the first record's index to something out of range
+        wire[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let before = acc.clone();
+        let err = t.try_decode_add(&wire, 64, &mut acc);
+        assert!(matches!(err, Err(CodecError::Malformed(_))), "{err:?}");
+        // validation happens before any mutation: acc untouched
+        assert_eq!(acc, before);
     }
 
     #[test]

@@ -1,14 +1,51 @@
-//! The MX quantize/dequantize codec — bit-exact twin of ref.py.
+//! The MX quantize/dequantize codec — the fused wide-word hot path.
+//!
+//! Wire layout per message (shared with [`super::reference`]):
+//! `[codes: ceil(n*elem_bits/8) bytes][scales: ceil(n/block) bytes]`.
+//!
+//! §Perf — how the hot path earns its keep (DESIGN.md §Codec hot path):
+//!
+//! * **Table-driven element encode.** `quantize_code_float` costs an
+//!   exponent extract, clamp, multiply, `round_ties_even` and a pair of
+//!   saturating integer ops per element. The fast path replaces all of
+//!   it with one 16..32 KiB lookup keyed on the scaled value's sign
+//!   bit, biased exponent, top `mbits+1` mantissa bits, and a sticky-OR
+//!   of the rest — exactly the bits that can influence the sign test
+//!   and ties-to-even rounding at any representable step size, so the
+//!   lookup is completely branchless and the table is *provably* exact,
+//!   not approximately so (an exhaustive 2^32-input sweep per format
+//!   checked every f32 bit pattern; the fuzz/property/golden suites
+//!   keep enforcing it against [`super::reference`]).
+//! * **u64 bit pump.** Codes stream through [`packed::BitWriter`] /
+//!   [`packed::BitReader`]: eight-byte accumulator stores/loads instead
+//!   of the reference's per-code read-modify-write bytes. (An earlier
+//!   fused attempt with byte-granularity stores measured *slower* than
+//!   two-pass — 193 vs 242 MB/s — which is why the pump is the load-
+//!   bearing piece; see EXPERIMENTS.md §Perf iteration log.)
+//! * **Zero steady-state allocation.** `encode` sizes its output with
+//!   resize/truncate and overwrites every byte; `decode_add`/`requant_add`
+//!   build a 32-entry decode table on the stack and borrow everything
+//!   else. Rank workers and the collective engine thread one
+//!   [`crate::collective::CommScratch`] through, so forward steps reuse
+//!   the same wire/partial buffers forever.
+//!
+//! The scalar original lives on as [`super::reference::RefMxCodec`] —
+//! the differential oracle every change here is judged against.
 
-use super::packed::{pack_bits, unpack_into};
-use super::types::{exp2i, floor_log2, ElemFormat, MxScheme};
-use super::Compressor;
+use std::sync::OnceLock;
+
+use super::packed::{BitReader, BitWriter};
+use super::types::{exp2i, floor_log2, ElemFormat, MxScheme, ELEM_FORMATS};
+use super::{CodecError, Compressor};
 
 /// Stateless MX codec for one scheme. Wire layout (per message):
 /// `[codes: ceil(n*elem_bits/8) bytes][scales: nblocks bytes]`
 /// (scales are stored byte-per-block on the wire for decode speed; the
 ///  *accounted* size uses `MxScheme::wire_bytes`, which bit-packs both —
 ///  the interconnect simulator charges the accounted size.)
+///
+/// Inputs of any length are accepted: a trailing partial block is
+/// scaled over the elements it actually contains.
 #[derive(Debug, Clone, Copy)]
 pub struct MxCodec {
     pub scheme: MxScheme,
@@ -19,67 +56,27 @@ impl MxCodec {
         MxCodec { scheme }
     }
 
-    /// Quantize one block-scale-worth of values into (code, scale) bytes.
-    /// Exposed unpacked for the golden-vector tests.
-    ///
-    /// Hot path (§Perf): element quantize+encode are fused into a direct
-    /// integer-code computation (`quantize_code_float`) — one exponent
-    /// extraction, one multiply, one round per element; binade carries
-    /// and saturation fall out of integer-code arithmetic. Bit-equal to
-    /// the two-step reference path (golden-vector tests enforce it).
+    /// Quantize into unpacked (code, scale) bytes — the scalar view
+    /// used by golden-vector tests and tools. Delegates to the
+    /// reference codec: unpacked output is not a hot path.
     pub fn quantize_unpacked(&self, x: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
-        let s = &self.scheme;
-        assert_eq!(x.len() % s.block, 0, "input not block-aligned");
-        codes.clear();
-        scales.clear();
-        codes.reserve(x.len());
-        scales.reserve(x.len() / s.block);
-        let e = &s.elem;
-        for blk in x.chunks_exact(s.block) {
-            let mut amax = 0.0f32;
-            for &v in blk {
-                amax = amax.max(v.abs());
-            }
-            let sexp = block_scale_exp(amax, s);
-            let inv = exp2i(-sexp);
-            scales.push((sexp + s.scale.bias()) as u8);
-            if e.is_float {
-                for &v in blk {
-                    codes.push(quantize_code_float(v * inv, e));
-                }
-            } else {
-                for &v in blk {
-                    codes.push(quantize_code_int(v * inv, e));
-                }
-            }
-        }
+        super::reference::RefMxCodec::new(self.scheme).quantize_unpacked(x, codes, scales)
     }
 
     /// Inverse of `quantize_unpacked`.
     pub fn dequantize_unpacked(&self, codes: &[u8], scales: &[u8], out: &mut Vec<f32>) {
-        let s = &self.scheme;
-        out.clear();
-        out.reserve(codes.len());
-        for (bi, blk) in codes.chunks_exact(s.block).enumerate() {
-            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
-            if s.elem.is_float {
-                for &c in blk {
-                    out.push(decode_elem_float(c, &s.elem) * scale);
-                }
-            } else {
-                for &c in blk {
-                    out.push(decode_elem_int(c, &s.elem) * scale);
-                }
-            }
-        }
+        super::reference::RefMxCodec::new(self.scheme).dequantize_unpacked(codes, scales, out)
     }
 
     /// quantize -> dequantize round trip (error-injection view; used by
     /// the eval harness when simulating compression without the wire).
+    ///
+    /// Stays on the scalar element grid (`quantize_elem_*`): this is an
+    /// error model, not a wire path, and its historical NaN semantics
+    /// (saturate to `max_value`) are part of the eval contract.
     pub fn fake_quantize(&self, x: &mut [f32]) {
         let s = &self.scheme;
-        assert_eq!(x.len() % s.block, 0);
-        for blk in x.chunks_exact_mut(s.block) {
+        for blk in x.chunks_mut(s.block) {
             let mut amax = 0.0f32;
             for &v in blk.iter() {
                 amax = amax.max(v.abs());
@@ -97,6 +94,15 @@ impl MxCodec {
                 }
             }
         }
+    }
+
+    /// Actual bytes this codec writes for an n-value message (codes
+    /// region + byte-per-block scales). The *accounted* wire size is
+    /// `MxScheme::wire_bytes` (bit-packed scales).
+    #[inline]
+    pub fn stored_len(&self, n_values: usize) -> usize {
+        let code_bytes = (n_values * self.scheme.elem.bits() as usize).div_ceil(8);
+        code_bytes + n_values.div_ceil(self.scheme.block)
     }
 }
 
@@ -227,6 +233,98 @@ pub fn decode_elem_int(code: u8, e: &ElemFormat) -> f32 {
     }
 }
 
+// ---------------------------------------------------------------------
+// Table-driven element encode.
+//
+// Key = (sign bit || 8-bit biased exponent || top mbits+1 mantissa bits
+// || sticky-OR of the remaining mantissa bits) of v. Those bits fully
+// determine the reference code: rounding at any binade needs at most
+// the kept bits plus a guard, the sticky bit settles ties-to-even and
+// the deepest emin-clamp depths, and folding the sign into the key
+// makes the lookup completely branchless (negative NaNs and -0.0 land
+// on sign-dropping entries exactly like the reference's `(v < 0.0)`
+// test, because the table builder runs the reference on each key's
+// representative). Proven by an exhaustive 2^32 sweep per format
+// against `quantize_code_float`/`_int` and re-enforced forever by the
+// differential fuzz suite.
+// ---------------------------------------------------------------------
+
+const N_LUTS: usize = ELEM_FORMATS.len();
+static ENC_LUTS: [OnceLock<Box<[u8]>>; N_LUTS] = [const { OnceLock::new() }; N_LUTS];
+
+struct EncLut {
+    table: &'static [u8],
+    shift: u32,
+    low_mask: u32,
+}
+
+fn build_enc_lut(e: &ElemFormat) -> Box<[u8]> {
+    let keep = e.mbits + 1;
+    let shift = 23 - keep;
+    let n_keys = 1usize << (9 + keep);
+    let mut table = vec![0u8; n_keys << 1];
+    for key in 0..n_keys as u32 {
+        for sticky in 0..2u32 {
+            // representative: sign + kept bits in place, sticky sets the
+            // lowest mantissa bit (any nonzero dropped-bit pattern
+            // rounds alike)
+            let rep = f32::from_bits((key << shift) | sticky);
+            let code = if e.is_float {
+                quantize_code_float(rep, e)
+            } else {
+                quantize_code_int(rep, e)
+            };
+            table[((key << 1) | sticky) as usize] = code;
+        }
+    }
+    table.into_boxed_slice()
+}
+
+/// Lazily-built shared table for an interned element format. `None`
+/// for a hand-rolled `ElemFormat` outside `ELEM_FORMATS` (the scalar
+/// fallback handles those).
+fn enc_lut(e: &ElemFormat) -> Option<EncLut> {
+    let idx = ELEM_FORMATS.iter().position(|f| f == e)?;
+    let keep = e.mbits + 1;
+    let shift = 23 - keep;
+    Some(EncLut {
+        table: ENC_LUTS[idx].get_or_init(|| build_enc_lut(e)),
+        shift,
+        low_mask: (1u32 << shift) - 1,
+    })
+}
+
+#[inline(always)]
+fn lut_code(l: &EncLut, v: f32) -> u8 {
+    let bits = v.to_bits();
+    let idx = ((bits >> l.shift) << 1) | ((bits & l.low_mask) != 0) as u32;
+    l.table[idx as usize]
+}
+
+#[inline]
+fn scalar_code(v: f32, e: &ElemFormat) -> u8 {
+    if e.is_float {
+        quantize_code_float(v, e)
+    } else {
+        quantize_code_int(v, e)
+    }
+}
+
+/// Per-call stack decode table: code -> element value (unscaled).
+/// At most 32 entries for <=5-bit formats; cheap next to any message.
+#[inline]
+fn build_dec_lut(e: &ElemFormat) -> [f32; 256] {
+    let mut dlut = [0.0f32; 256];
+    for c in 0..(1u32 << e.bits()) {
+        dlut[c as usize] = if e.is_float {
+            decode_elem_float(c as u8, e)
+        } else {
+            decode_elem_int(c as u8, e)
+        };
+    }
+    dlut
+}
+
 impl Compressor for MxCodec {
     fn name(&self) -> String {
         self.scheme.name()
@@ -240,19 +338,64 @@ impl Compressor for MxCodec {
         self.scheme.wire_bytes(n_values)
     }
 
-    /// Wire: bit-packed codes, then byte-per-block scales.
-    ///
-    /// §Perf note: a fused quantize+pack single-pass variant was tried
-    /// and measured SLOWER than this two-pass form (193 vs 242 MB/s —
-    /// the byte-at-a-time accumulator store defeats vectorization of
-    /// the quantize loop); see EXPERIMENTS.md §Perf iteration log.
+    fn encoded_len(&self, n_values: usize) -> usize {
+        self.stored_len(n_values)
+    }
+
+    /// Fused single pass per block: amax scan, scale, table encode,
+    /// u64 bit pump — no intermediate code buffer, no allocation once
+    /// `out` has warmed up (resize/truncate + full overwrite).
     fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
-        let mut codes = Vec::new();
-        let mut scales = Vec::new();
-        self.quantize_unpacked(x, &mut codes, &mut scales);
-        out.clear();
-        pack_bits(&codes, self.scheme.elem.bits(), out);
-        out.extend_from_slice(&scales);
+        let s = &self.scheme;
+        let n = x.len();
+        let w = s.elem.bits();
+        let code_bytes = (n * w as usize).div_ceil(8);
+        let nblocks = n.div_ceil(s.block);
+        let total = code_bytes + nblocks;
+        if out.len() < total {
+            out.resize(total, 0);
+        } else {
+            out.truncate(total);
+        }
+        let (code_buf, scale_buf) = out.split_at_mut(code_bytes);
+        let mut bw = BitWriter::new(code_buf);
+        let lut = enc_lut(&s.elem);
+        let mut i = 0usize;
+        for b in 0..nblocks {
+            let end = (i + s.block).min(n);
+            let blk = &x[i..end];
+            let mut amax = 0.0f32;
+            for &v in blk {
+                amax = amax.max(v.abs());
+            }
+            let sexp = block_scale_exp(amax, s);
+            let inv = exp2i(-sexp);
+            scale_buf[b] = (sexp + s.scale.bias()) as u8;
+            match &lut {
+                Some(l) => {
+                    // assemble 8 codes per u64 word: one pump branch per
+                    // 8 elements instead of per element (8*w <= 40 bits)
+                    let mut it = blk.chunks_exact(8);
+                    for ch in &mut it {
+                        let mut word = 0u64;
+                        for (k, &v) in ch.iter().enumerate() {
+                            word |= (lut_code(l, v * inv) as u64) << (k as u32 * w);
+                        }
+                        bw.push(word, 8 * w);
+                    }
+                    for &v in it.remainder() {
+                        bw.push(lut_code(l, v * inv) as u64, w);
+                    }
+                }
+                None => {
+                    for &v in blk {
+                        bw.push(scalar_code(v * inv, &s.elem) as u64, w);
+                    }
+                }
+            }
+            i = end;
+        }
+        bw.finish();
     }
 
     fn alignment(&self) -> usize {
@@ -260,13 +403,20 @@ impl Compressor for MxCodec {
     }
 
     /// Fused quantize+dequantize+accumulate without the bit-packing
-    /// round-trip. Bit-equal to `encode` + `decode_add` (packing is
-    /// lossless and `fake_quantize_matches_roundtrip` pins the grid
-    /// math), ~2x cheaper — the collective engine's Analytic-mode path.
+    /// round-trip: encode table in, decode table out, same `v * inv`
+    /// multiply — bit-equal to `encode` + `decode_add` by construction
+    /// (packing is lossless), ~2x cheaper. The collective engine's
+    /// Analytic-mode path.
     fn requant_add(&self, x: &[f32], acc: &mut [f32], _scratch: &mut Vec<u8>) {
         let s = &self.scheme;
-        assert_eq!(x.len() % s.block, 0, "input not block-aligned");
-        for (bi, blk) in x.chunks_exact(s.block).enumerate() {
+        let n = x.len();
+        let dlut = build_dec_lut(&s.elem);
+        let lut = enc_lut(&s.elem);
+        let nblocks = n.div_ceil(s.block);
+        let mut i = 0usize;
+        for _ in 0..nblocks {
+            let end = (i + s.block).min(n);
+            let blk = &x[i..end];
             let mut amax = 0.0f32;
             for &v in blk {
                 amax = amax.max(v.abs());
@@ -274,46 +424,72 @@ impl Compressor for MxCodec {
             let sexp = block_scale_exp(amax, s);
             let inv = exp2i(-sexp);
             let scale = exp2i(sexp);
-            let dst = &mut acc[bi * s.block..(bi + 1) * s.block];
-            if s.elem.is_float {
-                for (d, &v) in dst.iter_mut().zip(blk) {
-                    *d += quantize_elem_float(v * inv, &s.elem) * scale;
+            let dst = &mut acc[i..end];
+            match &lut {
+                Some(l) => {
+                    for (d, &v) in dst.iter_mut().zip(blk) {
+                        *d += dlut[lut_code(l, v * inv) as usize] * scale;
+                    }
                 }
-            } else {
-                for (d, &v) in dst.iter_mut().zip(blk) {
-                    *d += quantize_elem_int(v * inv, &s.elem) * scale;
+                None => {
+                    for (d, &v) in dst.iter_mut().zip(blk) {
+                        *d += dlut[scalar_code(v * inv, &s.elem) as usize] * scale;
+                    }
                 }
             }
+            i = end;
         }
     }
 
+    /// Streaming table decode: u64 refills, per-block scale, fused add.
     fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
         let s = &self.scheme;
-        let nb = s.elem.bits();
-        let code_bytes = (n_values * nb as usize).div_ceil(8);
-        let nblocks = n_values / s.block;
+        let w = s.elem.bits();
+        let code_bytes = (n_values * w as usize).div_ceil(8);
+        let nblocks = n_values.div_ceil(s.block);
         let scales = &wire[code_bytes..code_bytes + nblocks];
-        let mut codes = vec![0u8; n_values];
-        unpack_into(&wire[..code_bytes], nb, &mut codes);
-        for (bi, blk) in codes.chunks_exact(s.block).enumerate() {
-            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
-            let dst = &mut acc[bi * s.block..(bi + 1) * s.block];
-            if s.elem.is_float {
-                for (d, &c) in dst.iter_mut().zip(blk) {
-                    *d += decode_elem_float(c, &s.elem) * scale;
-                }
-            } else {
-                for (d, &c) in dst.iter_mut().zip(blk) {
-                    *d += decode_elem_int(c, &s.elem) * scale;
-                }
+        let dlut = build_dec_lut(&s.elem);
+        let mut br = BitReader::new(&wire[..code_bytes]);
+        let mut i = 0usize;
+        for &sb in scales {
+            let scale = exp2i(sb as i32 - s.scale.bias());
+            let end = (i + s.block).min(n_values);
+            for d in &mut acc[i..end] {
+                *d += dlut[br.next(w) as usize] * scale;
             }
+            i = end;
         }
+    }
+
+    fn try_decode_add(
+        &self,
+        wire: &[u8],
+        n_values: usize,
+        acc: &mut [f32],
+    ) -> Result<(), CodecError> {
+        let need = self.stored_len(n_values);
+        if wire.len() < need {
+            return Err(CodecError::Truncated { needed: need, got: wire.len() });
+        }
+        if acc.len() < n_values {
+            return Err(CodecError::Malformed(format!(
+                "accumulator holds {} values, message carries {}",
+                acc.len(),
+                n_values
+            )));
+        }
+        // length checks are sufficient: the bit reader is constructed
+        // over exactly the code region and every scale byte decodes to
+        // a (possibly huge) power of two — no byte pattern is invalid.
+        self.decode_add(wire, n_values, acc);
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mxfmt::reference::RefMxCodec;
     use crate::util::rng::Rng;
 
     fn codec(name: &str) -> MxCodec {
@@ -479,5 +655,75 @@ mod tests {
             errs.push(mse);
         }
         assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn fast_wire_matches_reference_wire() {
+        // Quick in-crate differential (the heavy version lives in the
+        // fuzz/property suites): byte-identical wires, bit-identical
+        // decodes, every format, odd lengths, hostile values.
+        let mut rng = Rng::new(0xC0DEC);
+        for e in ELEM_FORMATS {
+            for (block, n) in [(8usize, 256usize), (32, 199), (3, 100), (16, 1)] {
+                let scheme = MxScheme::new(e.name, block, 8).unwrap();
+                let fast = MxCodec::new(scheme);
+                let refc = RefMxCodec::new(scheme);
+                let mut x = vec![0.0f32; n];
+                rng.fill_activations(&mut x, 4.0);
+                x[0] = f32::NAN;
+                if n > 4 {
+                    x[1] = f32::INFINITY;
+                    x[2] = -0.0;
+                    x[3] = 1e-40;
+                    x[4] = -f32::NAN;
+                }
+                let (mut wf, mut wr) = (Vec::new(), Vec::new());
+                fast.encode(&x, &mut wf);
+                refc.encode(&x, &mut wr);
+                assert_eq!(wf, wr, "{} b{} n{}", e.name, block, n);
+                let (mut af, mut ar) = (vec![0.5f32; n], vec![0.5f32; n]);
+                fast.decode_add(&wf, n, &mut af);
+                refc.decode_add(&wr, n, &mut ar);
+                let fb: Vec<u32> = af.iter().map(|v| v.to_bits()).collect();
+                let rb: Vec<u32> = ar.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(fb, rb, "{} b{} n{}", e.name, block, n);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_reuses_buffer_without_realloc() {
+        let c = codec("fp4_e2m1_b32_e8m0");
+        let mut rng = Rng::new(21);
+        let mut x = vec![0.0f32; 4096];
+        rng.fill_activations(&mut x, 2.0);
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let cap = wire.capacity();
+        let ptr = wire.as_ptr();
+        for _ in 0..10 {
+            c.encode(&x, &mut wire);
+            // same allocation, steady state: no growth, no move
+            assert_eq!(wire.capacity(), cap);
+            assert_eq!(wire.as_ptr(), ptr);
+        }
+        // shrinking message reuses the same buffer too
+        c.encode(&x[..1024], &mut wire);
+        assert_eq!(wire.as_ptr(), ptr);
+        assert_eq!(wire.len(), c.stored_len(1024));
+    }
+
+    #[test]
+    fn try_decode_add_rejects_truncated() {
+        let c = codec("fp4_e2m1_b32_e8m0");
+        let x = vec![1.0f32; 64];
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let mut acc = vec![0.0f32; 64];
+        assert!(c.try_decode_add(&wire, 64, &mut acc).is_ok());
+        let err = c.try_decode_add(&wire[..wire.len() - 1], 64, &mut acc);
+        assert!(matches!(err, Err(CodecError::Truncated { .. })), "{err:?}");
+        let err = c.try_decode_add(&wire, 65, &mut acc);
+        assert!(err.is_err(), "n_values beyond acc must error");
     }
 }

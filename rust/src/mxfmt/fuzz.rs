@@ -1,0 +1,235 @@
+//! Shared fuzz drivers for the codec differential + robustness harness.
+//!
+//! The same bodies run in three places (dnglab-style):
+//!
+//! * `rust/tests/fuzz_codec.rs` — fixed-seed smoke (default 500 cases)
+//!   on every `cargo test`, so CI exercises the harness unconditionally;
+//!   `TPCC_FUZZ_ITERS` raises the count for soak runs.
+//! * `rust/fuzz/fuzz_targets/*` — `cargo fuzz` coverage-guided entry
+//!   points feeding arbitrary bytes into the same drivers.
+//! * the property suite replays `rust/tests/corpus/*.json` regression
+//!   cases (previously-shrunk failures) through
+//!   [`differential_slice`].
+//!
+//! Two properties are load-bearing:
+//!
+//! 1. **Differential**: for arbitrary f32 slices (NaN/Inf/subnormal/±0,
+//!    odd lengths, every block size) the fast [`MxCodec`] must produce
+//!    byte-identical wires, bit-identical decodes, and bit-identical
+//!    requantization vs the [`RefMxCodec`] oracle.
+//! 2. **Robustness**: `try_decode_add` on arbitrary (truncated,
+//!    corrupt, adversarial) bytes must return `Err` or decode garbage
+//!    values — but never panic or touch memory out of bounds.
+
+use super::reference::RefMxCodec;
+use super::types::{MxScheme, ELEM_FORMATS};
+use super::{ChannelInt, Compressor, MxCodec, NoCompress, TopK};
+use crate::util::rng::Rng;
+
+/// Block sizes the structure-aware generator draws from — deliberately
+/// including 1, primes, and non-powers-of-two.
+pub const FUZZ_BLOCKS: &[usize] = &[1, 2, 3, 8, 16, 32, 64, 100];
+/// Scale exponent widths: the full e8m0 plus the clamping small formats.
+pub const FUZZ_SCALE_EBITS: &[u32] = &[4, 5, 8];
+
+/// Hostile-but-deterministic f32 bit patterns: ±0, ±inf, quiet/signaling
+/// NaN (both signs), min/max subnormal, min normal, max finite, and a
+/// few grid-adjacent values.
+pub const SPECIAL_BITS: &[u32] = &[
+    0x0000_0000, 0x8000_0000, 0x7F80_0000, 0xFF80_0000, 0x7FC0_0000, 0xFFC0_0000,
+    0x7F80_0001, 0x0000_0001, 0x8000_0001, 0x007F_FFFF, 0x0080_0000, 0x7F7F_FFFF,
+    0xFF7F_FFFF, 0x3F80_0000, 0x3380_0000,
+];
+
+/// Draw one value; `mode` picks the distribution (raw bits / uniform /
+/// special / near-grid-tie).
+pub fn fuzz_value(rng: &mut Rng, mode: u64) -> f32 {
+    match mode {
+        0 => f32::from_bits(rng.next_u64() as u32),
+        1 => {
+            let u = (rng.next_u64() >> 40) as f32 / (1u32 << 24) as f32;
+            (u - 0.5) * 8.0
+        }
+        2 => f32::from_bits(SPECIAL_BITS[(rng.next_u64() % SPECIAL_BITS.len() as u64) as usize]),
+        _ => {
+            // values sitting on or near grid steps, where ties-to-even
+            // and guard/sticky handling actually matter
+            let base = super::types::exp2i((rng.next_u64() % 16) as i32 - 8);
+            let m = (rng.next_u64() % 32) as f32 / 8.0;
+            let sign = if rng.next_u64() & 1 == 1 { -1.0 } else { 1.0 };
+            sign * base * m
+        }
+    }
+}
+
+/// Draw a whole slice, mixing modes within the slice when `mode == 3`.
+pub fn fuzz_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mode_mix = rng.next_u64() % 4;
+    (0..n)
+        .map(|_| {
+            let m = if mode_mix == 3 { rng.next_u64() % 4 } else { mode_mix };
+            fuzz_value(rng, m)
+        })
+        .collect()
+}
+
+/// Draw a scheme across every element format × hostile block sizes ×
+/// all scale widths.
+pub fn fuzz_scheme(rng: &mut Rng) -> MxScheme {
+    let e = &ELEM_FORMATS[(rng.next_u64() % ELEM_FORMATS.len() as u64) as usize];
+    let block = FUZZ_BLOCKS[(rng.next_u64() % FUZZ_BLOCKS.len() as u64) as usize];
+    let se = FUZZ_SCALE_EBITS[(rng.next_u64() % FUZZ_SCALE_EBITS.len() as u64) as usize];
+    MxScheme::new(e.name, block, se).expect("interned format")
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str, scheme: &MxScheme, n: usize) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what} diverged: scheme {} n {n} index {i}: fast {g:?} ({:#010x}) vs ref {w:?} ({:#010x})",
+            scheme.name(),
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// The differential body: fast codec vs reference oracle on one slice.
+/// Panics (= fuzz finding) on any divergence.
+pub fn differential_slice(x: &[f32], scheme: MxScheme) {
+    let fast = MxCodec::new(scheme);
+    let oracle = RefMxCodec::new(scheme);
+    let n = x.len();
+
+    // 1. byte-identical wires
+    let (mut wf, mut wr) = (Vec::new(), Vec::new());
+    fast.encode(x, &mut wf);
+    oracle.encode(x, &mut wr);
+    assert_eq!(
+        wf,
+        wr,
+        "encode wire diverged: scheme {} n {n} x {x:?}",
+        scheme.name()
+    );
+    assert_eq!(wf.len(), fast.encoded_len(n), "stored-length accounting drifted");
+
+    // 2. bit-identical decode-accumulate into a non-trivial accumulator
+    let seed_acc: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+    let (mut af, mut ar) = (seed_acc.clone(), seed_acc.clone());
+    fast.decode_add(&wf, n, &mut af);
+    oracle.decode_add(&wr, n, &mut ar);
+    assert_bits_eq(&af, &ar, "decode_add", &scheme, n);
+
+    // 3. bit-identical requantization (the Analytic-mode path) — the
+    //    oracle's requant is the trait default (encode + decode_add)
+    let (mut qf, mut qr) = (seed_acc.clone(), seed_acc);
+    let mut scratch = Vec::new();
+    fast.requant_add(x, &mut qf, &mut scratch);
+    oracle.requant_add(x, &mut qr, &mut scratch);
+    assert_bits_eq(&qf, &qr, "requant_add", &scheme, n);
+
+    // 4. the validating decoder accepts its own wire and rejects any
+    //    truncation of it
+    let mut acc = vec![0.0f32; n];
+    fast.try_decode_add(&wf, n, &mut acc).expect("own wire must validate");
+    if !wf.is_empty() {
+        for cut in [0usize, wf.len() / 2, wf.len() - 1] {
+            assert!(
+                fast.try_decode_add(&wf[..cut], n, &mut acc).is_err(),
+                "truncated wire ({cut}/{} bytes) must error",
+                wf.len()
+            );
+        }
+    }
+}
+
+/// One seeded differential case: derive (scheme, length, values) from
+/// the seed and run [`differential_slice`].
+pub fn differential_case(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xD1FF_C0DE);
+    let scheme = fuzz_scheme(&mut rng);
+    let n = (rng.next_u64() % 778) as usize; // 0..=777, odd lengths included
+    let x = fuzz_values(&mut rng, n);
+    differential_slice(&x, scheme);
+}
+
+/// The robustness body: feed one byte buffer to every codec family's
+/// validating decoder. Any `Result` is acceptable; panics and OOB are
+/// findings. (Safe Rust turns OOB into a panic, so "no panic" covers
+/// both.)
+pub fn decoder_arbitrary_bytes(bytes: &[u8], n_values: usize) {
+    let mut codecs: Vec<Box<dyn Compressor>> = vec![
+        Box::new(NoCompress),
+        Box::new(super::baselines::Fp16),
+        Box::new(ChannelInt::with_channels(4, 32)),
+        Box::new(TopK::new(3.0)),
+    ];
+    for name in ["fp4_e2m1_b32_e8m0", "fp5_e1m3_b3_e8m0", "int5_b8_e4m0", "fp3_e1m1_b1_e8m0"] {
+        codecs.push(Box::new(MxCodec::new(MxScheme::parse(name).unwrap())));
+        codecs.push(Box::new(RefMxCodec::new(MxScheme::parse(name).unwrap())));
+    }
+    for c in &codecs {
+        let mut acc = vec![0.0f32; n_values];
+        let _ = c.try_decode_add(bytes, n_values, &mut acc);
+    }
+}
+
+/// One seeded robustness case: random length/bytes, sometimes a valid
+/// wire with flipped bytes or a lying `n_values` (structure-aware
+/// corruption finds more than pure noise).
+pub fn decoder_case(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xDEC0_DE00);
+    let n = (rng.next_u64() % 600) as usize;
+    match rng.next_u64() % 3 {
+        0 => {
+            // pure noise
+            let len = (rng.next_u64() % 4096) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            decoder_arbitrary_bytes(&bytes, n);
+        }
+        1 => {
+            // valid wire, corrupted bytes
+            let scheme = fuzz_scheme(&mut rng);
+            let c = MxCodec::new(scheme);
+            let x = fuzz_values(&mut rng, n);
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            for _ in 0..(rng.next_u64() % 8 + 1) {
+                if wire.is_empty() {
+                    break;
+                }
+                let at = (rng.next_u64() % wire.len() as u64) as usize;
+                wire[at] ^= rng.next_u64() as u8;
+            }
+            decoder_arbitrary_bytes(&wire, n);
+        }
+        _ => {
+            // valid wire, lying n_values (decoder must length-check,
+            // not trust the caller's count against the byte count)
+            let scheme = fuzz_scheme(&mut rng);
+            let c = MxCodec::new(scheme);
+            let x = fuzz_values(&mut rng, n);
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            let lied = (rng.next_u64() % 1200) as usize;
+            decoder_arbitrary_bytes(&wire, lied);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The real workout lives in rust/tests/fuzz_codec.rs (seeded smoke)
+    // and rust/fuzz/ (coverage-guided). Here: just pin the drivers run.
+    #[test]
+    fn drivers_execute() {
+        super::differential_case(1);
+        super::decoder_case(1);
+    }
+
+    #[test]
+    fn empty_slice_roundtrips() {
+        let scheme = crate::mxfmt::MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap();
+        super::differential_slice(&[], scheme);
+    }
+}

@@ -1,0 +1,181 @@
+//! Golden-vector generator for the MX codec — `tpcc golden --emit`.
+//!
+//! Emits `rust/tests/golden_codec.json`: a fixed input slice (special
+//! f32 bit patterns + deterministic RNG fill) pushed through the
+//! reference codec ([`super::RefMxCodec`]) for a grid of schemes, with
+//! every intermediate recorded — unpacked codes, scale bytes, packed
+//! wire, decoded bits. The committed file is the regression anchor: the
+//! golden test regenerates it via [`emit`] and diffs byte-for-byte, so
+//! any semantic change to the codec (reference *or* fast path — the
+//! generator asserts their wires identical) shows up as a readable
+//! per-scheme diff instead of a silent drift.
+//!
+//! Everything here is integer-derived (bit patterns, not float
+//! literals) so regeneration is exact across hosts and toolchains.
+
+use std::fmt::Write;
+
+use super::reference::RefMxCodec;
+use super::types::MxScheme;
+use super::{Compressor, MxCodec};
+use crate::util::rng::Rng;
+
+/// Seed for the RNG-derived tail of the input slice (date-stamped at
+/// first emission; changing it invalidates the committed golden file).
+pub const GOLDEN_SEED: u64 = 20260807;
+
+/// Input length. Deliberately odd and non-block-aligned so every
+/// scheme in the grid exercises a partial tail block.
+pub const GOLDEN_N: usize = 199;
+
+/// Hand-picked f32 bit patterns covering the codec's edge cases:
+/// ±0, ±Inf, quiet/signaling NaN, min/max subnormal, smallest normal,
+/// ±f32::MAX, exact grid points, ties, π, a subnormal-scale value,
+/// 2^127 (scale clamp), a 25-bit integer (rounding), and magnitudes
+/// far below/above the representable block range.
+pub const GOLDEN_SPECIALS: [u32; 24] = [
+    0x0000_0000, 0x8000_0000, 0x7F80_0000, 0xFF80_0000, 0x7FC0_0000, 0xFFC0_0000,
+    0x7F80_0001, 0xFF80_0001, 0x0000_0001, 0x8000_0001, 0x007F_FFFF, 0x0080_0000,
+    0x7F7F_FFFF, 0xFF7F_FFFF, 0x3F80_0000, 0xBF80_0000, 0x3F00_0000, 0x3FC0_0000,
+    0x4049_0FDB, 0x3586_37BD, 0x7F00_0000, 0x00FF_FFFF, 0x3380_0000, 0x4B80_0000,
+];
+
+/// The scheme grid the golden file covers: every element format at
+/// blocks {8, 32} with the standard E8M0 scale, plus oddities — a b16
+/// point, a narrow E4M0 scale, a 5-bit INT with E5M0, and a block-3
+/// scheme (scale byte granularity ≠ code byte granularity).
+pub fn golden_schemes() -> Vec<MxScheme> {
+    let mut grid = Vec::new();
+    for e in super::ELEM_FORMATS {
+        for block in [8usize, 32] {
+            grid.push(MxScheme::new(e.name, block, 8).unwrap());
+        }
+    }
+    grid.push(MxScheme::new("fp4_e2m1", 16, 8).unwrap());
+    grid.push(MxScheme::new("fp4_e2m1", 8, 4).unwrap());
+    grid.push(MxScheme::new("int5", 32, 5).unwrap());
+    grid.push(MxScheme::new("fp5_e1m3", 3, 8).unwrap());
+    grid
+}
+
+/// The golden input slice as raw f32 bit patterns: the special table
+/// first, then RNG words (the RNG only advances on non-special
+/// indices, so the tail is independent of the table length).
+pub fn golden_input_bits() -> Vec<u32> {
+    let mut rng = Rng::new(GOLDEN_SEED);
+    (0..GOLDEN_N)
+        .map(|i| match GOLDEN_SPECIALS.get(i) {
+            Some(&b) => b,
+            None => rng.next_u64() as u32,
+        })
+        .collect()
+}
+
+fn push_hex(out: &mut String, bytes: &[u8]) {
+    for b in bytes {
+        write!(out, "{b:02x}").unwrap();
+    }
+}
+
+fn push_bits_array(out: &mut String, bits: &[u32]) {
+    for (i, b) in bits.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        write!(out, "\"{b:08x}\"").unwrap();
+    }
+}
+
+/// Render the golden JSON document. Byte-stable: fixed key order,
+/// fixed float-free integer/hex formatting, trailing newline. Panics
+/// (never silently emits) if the fast codec's wire diverges from the
+/// reference wire on any scheme — the file must only ever record
+/// vectors both implementations agree on.
+pub fn emit() -> String {
+    let bits = golden_input_bits();
+    let x: Vec<f32> = bits.iter().map(|&b| f32::from_bits(b)).collect();
+
+    let mut out = String::with_capacity(80_000);
+    out.push_str("{\n  \"generator\": \"tpcc golden --emit\",\n");
+    write!(out, "  \"seed\": {GOLDEN_SEED},\n  \"n\": {GOLDEN_N},\n").unwrap();
+    out.push_str("  \"x_bits\": [");
+    push_bits_array(&mut out, &bits);
+    out.push_str("],\n  \"schemes\": [\n");
+
+    let mut codes = Vec::new();
+    let mut scales = Vec::new();
+    let mut wire = Vec::new();
+    let mut fast_wire = Vec::new();
+    for (gi, scheme) in golden_schemes().into_iter().enumerate() {
+        let r = RefMxCodec::new(scheme);
+        let f = MxCodec::new(scheme);
+        r.quantize_unpacked(&x, &mut codes, &mut scales);
+        r.encode(&x, &mut wire);
+        f.encode(&x, &mut fast_wire);
+        assert_eq!(
+            wire,
+            fast_wire,
+            "golden: fast/ref wire mismatch for {}",
+            scheme.name()
+        );
+        let mut dec = vec![0.0f32; GOLDEN_N];
+        r.decode_add(&wire, GOLDEN_N, &mut dec);
+        let dec_bits: Vec<u32> = dec.iter().map(|v| v.to_bits()).collect();
+
+        if gi > 0 {
+            out.push_str(",\n");
+        }
+        write!(out, "    {{\"scheme\": \"{}\", \"codes\": \"", scheme.name()).unwrap();
+        push_hex(&mut out, &codes);
+        out.push_str("\", \"scales\": \"");
+        push_hex(&mut out, &scales);
+        out.push_str("\", \"wire\": \"");
+        push_hex(&mut out, &wire);
+        out.push_str("\", \"dec_bits\": [");
+        push_bits_array(&mut out, &dec_bits);
+        out.push_str("]}");
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inputs_are_deterministic_and_cover_specials() {
+        let a = golden_input_bits();
+        let b = golden_input_bits();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), GOLDEN_N);
+        assert_eq!(&a[..GOLDEN_SPECIALS.len()], &GOLDEN_SPECIALS[..]);
+        // the RNG tail actually varies (not stuck on one word)
+        let tail = &a[GOLDEN_SPECIALS.len()..];
+        assert!(tail.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn grid_names_are_unique_and_parse_back() {
+        let grid = golden_schemes();
+        assert_eq!(grid.len(), 22);
+        let mut names: Vec<String> = grid.iter().map(|s| s.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 22, "duplicate scheme in golden grid");
+        for s in &grid {
+            assert_eq!(MxScheme::parse(&s.name()).unwrap(), *s);
+        }
+    }
+
+    #[test]
+    fn emit_is_stable_and_well_formed() {
+        let doc = emit();
+        assert_eq!(doc, emit());
+        assert!(doc.starts_with("{\n  \"generator\": \"tpcc golden --emit\",\n"));
+        assert!(doc.ends_with("\n  ]\n}\n"));
+        assert_eq!(doc.matches("\"scheme\": ").count(), 22);
+        let v = crate::util::json::Json::parse(&doc).expect("golden emit must be valid JSON");
+        assert_eq!(v.get("n").and_then(|n| n.as_i64()), Some(GOLDEN_N as i64));
+    }
+}

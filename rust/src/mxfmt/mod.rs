@@ -15,13 +15,42 @@
 
 pub mod baselines;
 pub mod codec;
+pub mod fuzz;
+pub mod golden;
 pub mod packed;
+pub mod reference;
 pub mod types;
 
 pub use baselines::{ChannelInt, TopK};
 pub use codec::MxCodec;
 pub use packed::{pack_bits, unpack_bits, PackedMx};
+pub use reference::RefMxCodec;
 pub use types::{ElemFormat, MxScheme, ScaleFormat, ELEM_FORMATS};
+
+/// Decode-side failure on untrusted wire bytes. The contract for every
+/// [`Compressor::try_decode_add`]: arbitrary input may *error* with one
+/// of these, but must never panic or touch memory out of bounds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The wire buffer is shorter than the message header/layout demands.
+    Truncated { needed: usize, got: usize },
+    /// The bytes are long enough but internally inconsistent
+    /// (out-of-range index, impossible count, ...).
+    Malformed(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { needed, got } => {
+                write!(f, "truncated wire: need {needed} bytes, got {got}")
+            }
+            CodecError::Malformed(why) => write!(f, "malformed wire: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Any compression applied to TP collective traffic.
 ///
@@ -82,6 +111,42 @@ pub trait Compressor: Send + Sync {
     fn requant_add(&self, x: &[f32], acc: &mut [f32], scratch: &mut Vec<u8>) {
         self.encode(x, scratch);
         self.decode_add(scratch, x.len(), acc);
+    }
+
+    /// Actual bytes `encode` emits for an n-value message. Defaults to
+    /// the *accounted* [`Compressor::wire_bytes`]; codecs whose stored
+    /// layout differs (e.g. MX stores byte-per-block scales, channel-wise
+    /// INT stores f32 scale headers) must override so
+    /// [`Compressor::try_decode_add`] validates against real bytes.
+    fn encoded_len(&self, n_values: usize) -> usize {
+        self.wire_bytes(n_values)
+    }
+
+    /// Validating decode for **untrusted** wire bytes: length/layout
+    /// checks first, then the fused decode. Arbitrary (truncated,
+    /// corrupt, adversarial) input must return `Err`, never panic or
+    /// read/write out of bounds — the decoder fuzz targets enforce
+    /// this. Codecs that read indices or counts out of the wire (TopK)
+    /// must override and range-check them.
+    fn try_decode_add(
+        &self,
+        wire: &[u8],
+        n_values: usize,
+        acc: &mut [f32],
+    ) -> Result<(), CodecError> {
+        let need = self.encoded_len(n_values);
+        if wire.len() < need {
+            return Err(CodecError::Truncated { needed: need, got: wire.len() });
+        }
+        if acc.len() < n_values {
+            return Err(CodecError::Malformed(format!(
+                "accumulator holds {} values, message carries {}",
+                acc.len(),
+                n_values
+            )));
+        }
+        self.decode_add(wire, n_values, acc);
+        Ok(())
     }
 
     /// Convenience: decode into a fresh zeroed buffer.
@@ -173,6 +238,7 @@ mod tests {
     fn compressors_are_send_sync() {
         assert_send_sync::<NoCompress>();
         assert_send_sync::<MxCodec>();
+        assert_send_sync::<RefMxCodec>();
         assert_send_sync::<ChannelInt>();
         assert_send_sync::<TopK>();
         assert_send_sync::<baselines::Fp16>();

@@ -47,6 +47,95 @@ pub fn unpack_bits(wire: &[u8], width: u32, count: usize) -> Vec<u8> {
     out
 }
 
+/// Streaming LSB-first bit packer over a `u64` accumulator — the wide
+/// word hot path. Produces the exact byte stream of [`pack_bits`]
+/// (fuzz + `writer_matches_pack_bits` enforce it) but stores eight
+/// bytes per flush instead of read-modify-writing each byte, so the
+/// quantize loop that feeds it stays branch-light and store-bound.
+///
+/// In-bounds by arithmetic, no unsafe: a flush fires only when >= 64
+/// bits are pending, and 64 pending bits imply >= 8 unwritten bytes
+/// remain in a buffer sized `ceil(total_bits/8)`; `finish` writes the
+/// tail one byte at a time. The accumulator's bits above the pending
+/// count are always zero, so trailing pad bits land as zeros exactly
+/// like `pack_bits`' zero-filled buffer.
+pub struct BitWriter<'a> {
+    buf: &'a mut [u8],
+    acc: u64,
+    bits: u32,
+    pos: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    /// `buf` must hold `ceil(sum(width)/8)` bytes for all pushes to
+    /// come; it does not need to be zeroed (every byte is overwritten).
+    pub fn new(buf: &'a mut [u8]) -> BitWriter<'a> {
+        BitWriter { buf, acc: 0, bits: 0, pos: 0 }
+    }
+
+    /// Append `width` bits of `code` (callers pass `code < 2^width`).
+    #[inline]
+    pub fn push(&mut self, code: u64, width: u32) {
+        self.acc |= code << self.bits;
+        self.bits += width;
+        if self.bits >= 64 {
+            self.buf[self.pos..self.pos + 8].copy_from_slice(&self.acc.to_le_bytes());
+            self.pos += 8;
+            self.bits -= 64;
+            // bits of `code` that didn't fit before the flush
+            self.acc = if self.bits == 0 { 0 } else { code >> (width - self.bits) };
+        }
+    }
+
+    /// Flush the partial tail word (one byte at a time).
+    pub fn finish(mut self) {
+        let mut acc = self.acc;
+        let mut bits = self.bits;
+        while bits > 0 {
+            self.buf[self.pos] = acc as u8;
+            self.pos += 1;
+            acc >>= 8;
+            bits = bits.saturating_sub(8);
+        }
+    }
+}
+
+/// Streaming LSB-first bit reader, dual of [`BitWriter`]: refills the
+/// `u64` accumulator up to eight bytes at a time. Construct it over
+/// exactly the code region (`&wire[..ceil(n*width/8)]`) — the region
+/// always holds at least `n*width` bits, so `next` never underruns
+/// when called at most `n` times.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    acc: u64,
+    bits: u32,
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, acc: 0, bits: 0, pos: 0 }
+    }
+
+    /// Read the next `width` bits (1..=8).
+    #[inline]
+    pub fn next(&mut self, width: u32) -> u64 {
+        if self.bits < width {
+            let want = ((64 - self.bits) >> 3) as usize;
+            let take = want.min(self.buf.len() - self.pos);
+            let mut chunk = [0u8; 8];
+            chunk[..take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+            self.acc |= u64::from_le_bytes(chunk) << self.bits;
+            self.pos += take;
+            self.bits += (take * 8) as u32;
+        }
+        let v = self.acc & ((1u64 << width) - 1);
+        self.acc >>= width;
+        self.bits -= width;
+        v
+    }
+}
+
 /// A packed MX message (codes + scales), used by tests and tools.
 #[derive(Debug, Clone)]
 pub struct PackedMx {
@@ -91,5 +180,45 @@ mod tests {
         pack_bits(&codes, 3, &mut wire);
         let back = unpack_bits(&wire, 3, 4);
         assert_eq!(back, codes);
+    }
+
+    #[test]
+    fn writer_matches_pack_bits() {
+        // The u64 pump must emit byte-for-byte what the scalar packer
+        // emits, including tail-byte zero padding — every width, odd
+        // lengths, dirty destination buffer.
+        let mut rng = Rng::new(77);
+        for w in 1..=8u32 {
+            for n in [1usize, 7, 63, 64, 65, 257, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << w) - 1)) as u8).collect();
+                let mut want = Vec::new();
+                pack_bits(&codes, w, &mut want);
+                let mut got = vec![0xAAu8; (n * w as usize).div_ceil(8)];
+                let mut bw = BitWriter::new(&mut got);
+                for &c in &codes {
+                    bw.push(c as u64, w);
+                }
+                bw.finish();
+                assert_eq!(got, want, "width {w} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reader_matches_unpack_into() {
+        let mut rng = Rng::new(78);
+        for w in 1..=8u32 {
+            for n in [1usize, 7, 64, 65, 257] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << w) - 1)) as u8).collect();
+                let mut wire = Vec::new();
+                pack_bits(&codes, w, &mut wire);
+                let mut br = BitReader::new(&wire);
+                for (i, &c) in codes.iter().enumerate() {
+                    assert_eq!(br.next(w) as u8, c, "width {w} n {n} idx {i}");
+                }
+            }
+        }
     }
 }

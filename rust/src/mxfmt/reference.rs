@@ -1,0 +1,197 @@
+//! The scalar reference MX codec — the differential oracle.
+//!
+//! This is the original per-element, per-byte implementation the fast
+//! path in [`super::codec`] replaced. It stays in the tree on purpose:
+//! every fused wide-word trick in `MxCodec` is only trusted because the
+//! fuzz/property/golden suites prove its output **byte-identical** to
+//! this code. Keep it boring: one element at a time, allocating, no
+//! bit pumps, no lookup tables — each arithmetic step visible.
+//!
+//! Oracle invariant (see DESIGN.md §Codec hot path): `RefMxCodec`
+//! deliberately does NOT override [`Compressor::requant_add`], so its
+//! requantization semantic is exactly `encode` + `decode_add`. That
+//! makes the oracle single-valued: there is one reference answer per
+//! input, the wire answer. (The historical `quantize_elem_float`
+//! shortcut disagrees with the wire path on NaN inputs — NaN saturates
+//! to `max_value` element-wise but encodes to the `2^(emax-1)` code —
+//! so it must not serve as the oracle.)
+
+use super::codec::{
+    block_scale_exp, decode_elem_float, decode_elem_int, quantize_code_float, quantize_code_int,
+};
+use super::packed::{pack_bits, unpack_into};
+use super::types::{exp2i, MxScheme};
+use super::Compressor;
+
+/// Reference MX codec for one scheme. Same wire layout as the fast
+/// [`super::MxCodec`]: `[codes: ceil(n*elem_bits/8) bytes][scales:
+/// nblocks bytes]`, tail blocks (n not a multiple of `block`) scaled
+/// over the elements they actually contain.
+#[derive(Debug, Clone, Copy)]
+pub struct RefMxCodec {
+    pub scheme: MxScheme,
+}
+
+impl RefMxCodec {
+    pub fn new(scheme: MxScheme) -> RefMxCodec {
+        RefMxCodec { scheme }
+    }
+
+    /// Quantize into unpacked (code, scale) bytes, one code byte per
+    /// value, one scale byte per (possibly partial) block.
+    pub fn quantize_unpacked(&self, x: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
+        let s = &self.scheme;
+        codes.clear();
+        scales.clear();
+        codes.reserve(x.len());
+        scales.reserve(x.len().div_ceil(s.block.max(1)));
+        let e = &s.elem;
+        for blk in x.chunks(s.block) {
+            let mut amax = 0.0f32;
+            for &v in blk {
+                amax = amax.max(v.abs());
+            }
+            let sexp = block_scale_exp(amax, s);
+            let inv = exp2i(-sexp);
+            scales.push((sexp + s.scale.bias()) as u8);
+            if e.is_float {
+                for &v in blk {
+                    codes.push(quantize_code_float(v * inv, e));
+                }
+            } else {
+                for &v in blk {
+                    codes.push(quantize_code_int(v * inv, e));
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`RefMxCodec::quantize_unpacked`].
+    pub fn dequantize_unpacked(&self, codes: &[u8], scales: &[u8], out: &mut Vec<f32>) {
+        let s = &self.scheme;
+        out.clear();
+        out.reserve(codes.len());
+        for (bi, blk) in codes.chunks(s.block).enumerate() {
+            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
+            if s.elem.is_float {
+                for &c in blk {
+                    out.push(decode_elem_float(c, &s.elem) * scale);
+                }
+            } else {
+                for &c in blk {
+                    out.push(decode_elem_int(c, &s.elem) * scale);
+                }
+            }
+        }
+    }
+}
+
+impl Compressor for RefMxCodec {
+    fn name(&self) -> String {
+        format!("ref:{}", self.scheme.name())
+    }
+
+    fn effective_bits(&self, _n: usize) -> f64 {
+        self.scheme.effective_bits()
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> usize {
+        self.scheme.wire_bytes(n_values)
+    }
+
+    fn alignment(&self) -> usize {
+        self.scheme.block
+    }
+
+    fn encoded_len(&self, n_values: usize) -> usize {
+        let code_bytes = (n_values * self.scheme.elem.bits() as usize).div_ceil(8);
+        code_bytes + n_values.div_ceil(self.scheme.block)
+    }
+
+    fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        self.quantize_unpacked(x, &mut codes, &mut scales);
+        out.clear();
+        pack_bits(&codes, self.scheme.elem.bits(), out);
+        out.extend_from_slice(&scales);
+    }
+
+    fn decode_add(&self, wire: &[u8], n_values: usize, acc: &mut [f32]) {
+        let s = &self.scheme;
+        let nb = s.elem.bits();
+        let code_bytes = (n_values * nb as usize).div_ceil(8);
+        let nblocks = n_values.div_ceil(s.block);
+        let scales = &wire[code_bytes..code_bytes + nblocks];
+        let mut codes = vec![0u8; n_values];
+        unpack_into(&wire[..code_bytes], nb, &mut codes);
+        for (bi, blk) in codes.chunks(s.block).enumerate() {
+            let scale = exp2i(scales[bi] as i32 - s.scale.bias());
+            let dst = &mut acc[bi * s.block..bi * s.block + blk.len()];
+            if s.elem.is_float {
+                for (d, &c) in dst.iter_mut().zip(blk) {
+                    *d += decode_elem_float(c, &s.elem) * scale;
+                }
+            } else {
+                for (d, &c) in dst.iter_mut().zip(blk) {
+                    *d += decode_elem_int(c, &s.elem) * scale;
+                }
+            }
+        }
+    }
+
+    // NO requant_add override — see the module docs: the trait default
+    // (encode + decode_add) IS the oracle semantic.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn codec(name: &str) -> RefMxCodec {
+        RefMxCodec::new(MxScheme::parse(name).unwrap())
+    }
+
+    #[test]
+    fn grid_values_survive_reference() {
+        let c = codec("fp4_e2m1_b8_e8m0");
+        let x = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        assert_eq!(c.decode(&wire, 8), x);
+    }
+
+    #[test]
+    fn tail_block_scales_over_actual_elements() {
+        // 5 values, block 4: tail block of 1 must scale on its own amax,
+        // not inherit garbage from a phantom full block.
+        let c = codec("fp4_e2m1_b4_e8m0");
+        let x = [1.0f32, 1.0, 1.0, 1.0, 1024.0];
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        c.quantize_unpacked(&x, &mut codes, &mut scales);
+        assert_eq!(scales.len(), 2);
+        let mut out = Vec::new();
+        c.dequantize_unpacked(&codes, &scales, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn odd_length_wire_roundtrip() {
+        let mut rng = Rng::new(13);
+        for n in [1usize, 7, 31, 33, 100, 199] {
+            let c = codec("fp5_e2m2_b32_e8m0");
+            let mut x = vec![0.0f32; n];
+            rng.fill_activations(&mut x, 2.0);
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            assert_eq!(wire.len(), c.encoded_len(n));
+            let out = c.decode(&wire, n);
+            assert_eq!(out.len(), n);
+            for (a, b) in x.iter().zip(&out) {
+                assert!((a - b).abs() <= a.abs() * 0.26 + 1e-6);
+            }
+        }
+    }
+}

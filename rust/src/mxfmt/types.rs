@@ -132,12 +132,49 @@ impl MxScheme {
         16.0 / self.effective_bits()
     }
 
-    /// Bit-packed wire size for a block-aligned value count.
+    /// Bit-packed wire size for any value count; a trailing partial
+    /// block still pays one full scale. (For block-aligned counts this
+    /// is exactly the historical `nblocks * (block*elem + scale)` math.)
     pub fn wire_bytes(&self, n_values: usize) -> usize {
-        assert_eq!(n_values % self.block, 0);
-        let nblocks = n_values / self.block;
-        let bits = nblocks * (self.block * self.elem.bits() as usize + self.scale.ebits as usize);
+        let nblocks = n_values.div_ceil(self.block);
+        let bits = n_values * self.elem.bits() as usize + nblocks * self.scale.ebits as usize;
         bits.div_ceil(8)
+    }
+
+    /// Analytic worst-case absolute error for one element of a block
+    /// whose absolute max is `amax` — the bound the property suite
+    /// holds every codec round trip to. Three regimes, take the max:
+    ///
+    /// * **rounding**: scale 2^s puts every |v| <= amax below
+    ///   2^(emax+1) in scaled units; the grid step there is at most
+    ///   2^(emax-mbits), and in-range rounding plus top-of-binade
+    ///   saturation both stay within one step (INT: one unit step).
+    /// * **flush**: when the scale clamps *up* (tiny amax vs the EdM0
+    ///   range), values below half the smallest subnormal flush to
+    ///   zero — bounded by half a subnormal step at the clamped scale.
+    /// * **clamp**: when the scale clamps *down* (huge amax), the
+    ///   representable max falls short of amax by `amax - maxv*2^s`.
+    ///
+    /// NaN inputs have no meaningful error bound (they quantize to an
+    /// arbitrary grid point) and are excluded by contract.
+    pub fn block_error_bound(&self, amax: f32) -> f32 {
+        let e = &self.elem;
+        let sexp = {
+            // mirror codec::block_scale_exp without the circular import
+            let raw = if amax > 0.0 { floor_log2(amax) - e.emax() } else { self.scale.emin() };
+            raw.clamp(self.scale.emin(), self.scale.emax())
+        };
+        let scale = exp2i(sexp);
+        let rounding = if e.is_float {
+            exp2i(sexp + e.emax() - e.mbits as i32)
+        } else {
+            // one full unit step: half for rounding, plus the top of the
+            // scaled range (just under 2^mbits) clamping onto qmax
+            scale
+        };
+        let flush = if e.is_float { exp2i(sexp + e.emin() - e.mbits as i32 - 1) } else { 0.5 * scale };
+        let clamp = (amax - e.max_value() * scale).max(0.0);
+        rounding.max(flush).max(clamp)
     }
 }
 
@@ -196,6 +233,31 @@ mod tests {
         let int4 = elem_by_name("int4").unwrap();
         assert_eq!(int4.int_qmax(), 7);
         assert_eq!(int4.bits(), 4);
+    }
+
+    #[test]
+    fn wire_bytes_tail_blocks() {
+        let s = MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap();
+        // aligned counts keep the historical accounting
+        assert_eq!(s.wire_bytes(64), (64 * 4 + 2 * 8) / 8);
+        // a 33rd value opens a second block: 33*4 + 2*8 bits = 148 -> 19
+        assert_eq!(s.wire_bytes(33), 19);
+        assert_eq!(s.wire_bytes(1), 2); // 4 + 8 bits -> 2 bytes
+        assert_eq!(s.wire_bytes(0), 0);
+    }
+
+    #[test]
+    fn block_error_bound_regimes() {
+        let s = MxScheme::parse("fp4_e2m1_b32_e8m0").unwrap();
+        // mid-range: bound is amax-relative (2^(emax-mbits) scaled)
+        let b = s.block_error_bound(1.0);
+        assert!(b > 0.0 && b <= 1.0, "{b}");
+        // huge amax with a small scale format: clamp term dominates
+        let s4 = MxScheme::parse("fp4_e2m1_b8_e4m0").unwrap();
+        let b = s4.block_error_bound(1e20);
+        assert!(b > 1e19, "{b}");
+        // zero block: bound collapses to the smallest representable step
+        assert!(s.block_error_bound(0.0) < 1e-35);
     }
 
     #[test]

@@ -349,7 +349,7 @@ pub struct TpEngine {
     next_step: u64,
     // reusable scratch (sequential path; workers own their own)
     reduce_buf: Vec<f32>,
-    wire_buf: Vec<u8>,
+    comm_scratch: collective::CommScratch,
 }
 
 impl TpEngine {
@@ -401,7 +401,7 @@ impl TpEngine {
             tracer,
             next_step: 0,
             reduce_buf: Vec::new(),
-            wire_buf: Vec::new(),
+            comm_scratch: collective::CommScratch::default(),
         };
         let policy = eng.opts.policy.clone();
         eng.set_policy(&policy)?;
@@ -876,8 +876,9 @@ impl TpEngine {
         let comp = self.policy_comps[ci].as_deref();
         let measure = self.opts.overhead == OverheadModel::Measured;
         let mut out = std::mem::take(&mut self.reduce_buf);
-        let mut wire = std::mem::take(&mut self.wire_buf);
-        let rep = collective::execute(&plan, x, partials, comp, &topo, measure, &mut out, &mut wire);
+        let rep = collective::execute(
+            &plan, x, partials, comp, &topo, measure, &mut out, &mut self.comm_scratch,
+        );
         *self.algo_calls.entry(rep.algo).or_insert(0) += 1;
         timing.algo = rep.algo;
 
@@ -898,7 +899,6 @@ impl TpEngine {
         timing.raw_bytes += rep.raw_bytes as u64;
         self.record_site(site, ci, rep.wire_bytes as u64, rep.raw_bytes as u64);
         self.clock.add_comm(total_s, rep.wire_bytes, rep.raw_bytes);
-        self.wire_buf = wire;
         let result = out.clone();
         self.reduce_buf = out;
         result

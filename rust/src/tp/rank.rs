@@ -5,8 +5,9 @@
 //! *constructs and owns* its own [`Runtime`] (the PJRT client is not
 //! `Send`, so it must be built on the thread that uses it), the weight
 //! literal shards of the ranks it owns, its per-scheme compressors, and
-//! its own plan memo + scratch buffers (no shared `reduce_buf`/`wire_buf`
-//! — the seed's engine-wide scratch does not survive concurrency).
+//! its own plan memo + scratch buffers (no shared `reduce_buf` or
+//! [`CommScratch`] — the seed's engine-wide scratch does not survive
+//! concurrency).
 //!
 //! Per forward pass every worker runs the same per-rank stage program
 //! the sequential reference path runs, meeting at the shared-memory
@@ -31,7 +32,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::collective::{pipeline, plan, AlgoChoice, CollectivePlan, ExecCtx, Topology};
+use crate::collective::{pipeline, plan, AlgoChoice, CollectivePlan, CommScratch, ExecCtx, Topology};
 use crate::fabric::Fabric;
 use crate::interconnect::HwProfile;
 use crate::model::weights::Weights;
@@ -343,7 +344,7 @@ struct Worker {
     bind_err: Option<String>,
     // per-worker scratch (replaces the seed's engine-wide buffers)
     reduce_buf: Vec<f32>,
-    wire_buf: Vec<u8>,
+    comm_scratch: CommScratch,
 }
 
 impl Worker {
@@ -378,7 +379,7 @@ impl Worker {
             last_algo: None,
             bind_err: None,
             reduce_buf: Vec::new(),
-            wire_buf: Vec::new(),
+            comm_scratch: CommScratch::default(),
         };
         w.apply_bind(boot.bind)?;
         Ok(w)
@@ -687,10 +688,10 @@ impl Worker {
         let ctx = ExecCtx { comp, topo: &topo, measure };
         let refs: Vec<&[f32]> = posts.iter().map(|p| p.data.as_slice()).collect();
         let mut out = std::mem::take(&mut self.reduce_buf);
-        let mut wire = std::mem::take(&mut self.wire_buf);
         let algo_impl = plan.algo.implementation();
-        let rep =
-            pipeline::run_chunked(algo_impl, &x, &refs, &ctx, plan.chunks, &mut out, &mut wire);
+        let rep = pipeline::run_chunked(
+            algo_impl, &x, &refs, &ctx, plan.chunks, &mut out, &mut self.comm_scratch,
+        );
         // the overhead-model resolution is shared with the sequential
         // path (super::comm_times) so the two cores cannot drift
         let (codec_s, total_s) =
@@ -707,7 +708,6 @@ impl Worker {
             codec_s,
             total_s,
         });
-        self.wire_buf = wire;
         // the consumed x becomes next collective's scratch buffer
         self.reduce_buf = x;
         self.reduce_buf.clear();

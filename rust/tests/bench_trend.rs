@@ -1,11 +1,14 @@
 //! Bench-trend smoke over the committed `BENCH_*.json` trajectory
 //! files at the repo root: every snapshot must parse, the rankpar
-//! snapshot must carry the schema-2 column set (schema drift in the
-//! emitter without regenerating the committed file fails here), and
-//! any *measured* row must satisfy the acceptance floors (speedup
-//! regression guard). Null rows — the unmeasured scaffold the
-//! artifact-less authoring container commits — are reported and
-//! skipped, never failed.
+//! snapshot must carry the schema-2 column set and the codec snapshot
+//! the roofline column set (schema drift in an emitter without
+//! regenerating the committed file fails here), and any *measured*
+//! row must satisfy the acceptance floors (speedup regression
+//! guards — including the codec hot path's 3x encode floor). Null
+//! rows — the unmeasured scaffold the artifact-less authoring
+//! container commits for artifact-dependent benches — are reported
+//! and skipped, never failed; the codec bench needs no artifacts, so
+//! its snapshot must always be measured.
 //!
 //! Runs everywhere: these tests read committed files only and need no
 //! AOT artifacts.
@@ -127,4 +130,88 @@ fn rankpar_schema_and_speedup_floors() {
     if measured == 0 {
         eprintln!("rankpar snapshot is an unmeasured scaffold (all rows null) — schema checked only");
     }
+}
+
+/// The codec-roofline row columns (`BENCH_codec.json`, schema 1) —
+/// must match what `bench::codec::to_json` emits.
+const CODEC_COLUMNS: &[&str] = &[
+    "scheme",
+    "block",
+    "n_values",
+    "fast_enc_gbps",
+    "ref_enc_gbps",
+    "enc_speedup",
+    "fast_dec_gbps",
+    "ref_dec_gbps",
+    "dec_speedup",
+    "memcpy_gbps",
+];
+
+#[test]
+fn codec_schema_and_speedup_floors() {
+    let path = repo_root().join("BENCH_codec.json");
+    let j = load(&path);
+    assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("codec"));
+    let rows = j.get("rows").and_then(|r| r.as_arr()).expect("rows array");
+    assert!(!rows.is_empty(), "codec snapshot has no rows");
+
+    let mut measured = 0usize;
+    let mut best_enc_speedup = 0.0f64;
+    for (i, row) in rows.iter().enumerate() {
+        for col in CODEC_COLUMNS {
+            assert!(
+                row.get(col).is_some(),
+                "row {i}: column {col:?} missing (emitter/schema drift — regenerate)"
+            );
+        }
+        let scheme = row.get("scheme").and_then(|v| v.as_str()).expect("scheme is a string");
+        // every committed scheme must still parse (grid drift guard)
+        tpcc::mxfmt::MxScheme::parse(scheme)
+            .unwrap_or_else(|e| panic!("row {i}: scheme {scheme:?} no longer parses: {e:#}"));
+        let (fe, re, spd) = (
+            row.get("fast_enc_gbps").and_then(|v| v.as_f64()),
+            row.get("ref_enc_gbps").and_then(|v| v.as_f64()),
+            row.get("enc_speedup").and_then(|v| v.as_f64()),
+        );
+        let (Some(fe), Some(re), Some(spd)) = (fe, re, spd) else {
+            eprintln!("codec row {i} ({scheme}): null measurements, skipping floors");
+            continue;
+        };
+        measured += 1;
+        // internal consistency: the stored speedup is the stored rates'
+        let ratio = fe / re;
+        assert!(
+            (spd - ratio).abs() / ratio < 0.05,
+            "row {i} ({scheme}): enc_speedup {spd:.3} disagrees with fast/ref {ratio:.3}"
+        );
+        // the fast path must never lose to the reference it replaced
+        assert!(
+            spd >= 1.0,
+            "row {i} ({scheme}): fast encode is SLOWER than the reference ({spd:.2}x)"
+        );
+        if let Some(d) = row.get("dec_speedup").and_then(|v| v.as_f64()) {
+            assert!(
+                d >= 1.0,
+                "row {i} ({scheme}): fast decode is SLOWER than the reference ({d:.2}x)"
+            );
+        }
+        // a committed rate can't exceed the host's own memcpy ceiling
+        if let Some(ceiling) = row.get("memcpy_gbps").and_then(|v| v.as_f64()) {
+            assert!(
+                fe <= ceiling * 1.05,
+                "row {i} ({scheme}): encode {fe:.2} GB/s beats the memcpy ceiling {ceiling:.2}"
+            );
+        }
+        best_enc_speedup = best_enc_speedup.max(spd);
+    }
+    // unlike rankpar, the codec bench needs no AOT artifacts — there
+    // is never a reason to commit a null scaffold for this file
+    assert!(measured > 0, "BENCH_codec.json must carry measured rows (run `tpcc bench --codec`)");
+    // the acceptance floor: the fused hot path is only worth its
+    // complexity if at least one scheme x block point encodes >= 3x
+    // the scalar reference
+    assert!(
+        best_enc_speedup >= 3.0,
+        "no measured row reaches the 3x encode-speedup floor (best {best_enc_speedup:.2}x)"
+    );
 }

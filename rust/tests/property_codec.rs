@@ -4,7 +4,8 @@
 
 use tpcc::collective::all_gather_reduce_add;
 use tpcc::interconnect::LinkModel;
-use tpcc::mxfmt::{Compressor, ElemFormat, MxCodec, MxScheme, ELEM_FORMATS};
+use tpcc::mxfmt::{fuzz, Compressor, ElemFormat, MxCodec, MxScheme, RefMxCodec, ELEM_FORMATS};
+use tpcc::util::json::Json;
 use tpcc::util::rng::Rng;
 
 fn schemes(rng: &mut Rng) -> MxScheme {
@@ -169,5 +170,135 @@ fn prop_wire_size_exact() {
         assert!(c.wire_bytes(n) <= n * 2, "never larger than fp16: {}", s.name());
         // analytic effective bits match the scheme definition
         assert!((c.effective_bits(n) - s.effective_bits()).abs() < 1e-12);
+    }
+}
+
+/// Odd (non-block-multiple) length, including the empty slice: pick
+/// anything in [0, 5·block + block-1).
+fn odd_len(rng: &mut Rng, block: usize) -> usize {
+    rng.below(5 * block + block.max(2) - 1)
+}
+
+/// Wire-level encode∘decode idempotence, odd lengths included: the
+/// decoded tensor lies on the representable grid, so a second wire
+/// round trip reproduces it bit-for-bit — for both the fast codec and
+/// the reference oracle.
+#[test]
+fn prop_wire_roundtrip_idempotent() {
+    let mut rng = Rng::new(808);
+    for case in 0..60 {
+        let s = schemes(&mut rng);
+        let n = odd_len(&mut rng, s.block);
+        let x = data(&mut rng, n, rng.range_f32(0.5, 6.0));
+        for c in [&MxCodec::new(s) as &dyn Compressor, &RefMxCodec::new(s)] {
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            let once = c.decode(&wire, n);
+            let mut wire2 = Vec::new();
+            c.encode(&once, &mut wire2);
+            let twice = c.decode(&wire2, n);
+            for (i, (a, b)) in once.iter().zip(&twice).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "case {case} {} [{i}]: {a:?} re-quantized to {b:?}",
+                    c.name()
+                );
+            }
+        }
+    }
+}
+
+/// Every round-tripped element honors the analytic per-block error
+/// bound from `MxScheme::block_error_bound` (the bound the perf model
+/// and the paper's error analysis lean on), including tail blocks that
+/// compute amax over fewer than `block` elements.
+#[test]
+fn prop_error_bound_analytic() {
+    let mut rng = Rng::new(909);
+    for case in 0..60 {
+        let s = schemes(&mut rng);
+        let c = MxCodec::new(s);
+        let n = odd_len(&mut rng, s.block);
+        let x = data(&mut rng, n, rng.range_f32(0.5, 8.0));
+        let mut wire = Vec::new();
+        c.encode(&x, &mut wire);
+        let dec = c.decode(&wire, n);
+        for (bi, blk) in x.chunks(s.block).enumerate() {
+            let amax = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let bound = s.block_error_bound(amax);
+            for (i, (a, d)) in blk.iter().zip(&dec[bi * s.block..]).enumerate() {
+                let err = (a - d).abs();
+                assert!(
+                    err <= bound * (1.0 + 1e-6),
+                    "case {case} scheme {} block {bi} elem {i}: |{a} - {d}| = {err} > bound {bound} (amax {amax})",
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+/// `requant_add` (the Analytic-mode path that skips bit-packing) is
+/// bit-equal to the packed path (`encode` + `decode_add`) on the same
+/// seeded accumulator — fast codec and oracle alike, odd lengths
+/// included. This is the equivalence that lets the collective engine
+/// swap modes without changing numerics.
+#[test]
+fn prop_requant_equals_packed_roundtrip() {
+    let mut rng = Rng::new(1010);
+    for case in 0..60 {
+        let s = schemes(&mut rng);
+        let n = odd_len(&mut rng, s.block);
+        let x = data(&mut rng, n, rng.range_f32(0.5, 6.0));
+        let seed_acc: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        for c in [&MxCodec::new(s) as &dyn Compressor, &RefMxCodec::new(s)] {
+            let mut packed = seed_acc.clone();
+            let mut wire = Vec::new();
+            c.encode(&x, &mut wire);
+            c.decode_add(&wire, n, &mut packed);
+            let mut analytic = seed_acc.clone();
+            let mut scratch = Vec::new();
+            c.requant_add(&x, &mut analytic, &mut scratch);
+            for (i, (p, a)) in packed.iter().zip(&analytic).enumerate() {
+                assert!(
+                    p.to_bits() == a.to_bits(),
+                    "case {case} {} [{i}]: packed {p:?} vs analytic {a:?}",
+                    c.name()
+                );
+            }
+        }
+    }
+}
+
+/// Replay the committed shrunk-regression corpus (`tests/corpus/*.json`)
+/// through the full differential harness: each file is a fuzz finding
+/// (or a hand-written hostile case) reduced to `scheme` + raw input
+/// bits, and must stay green forever.
+#[test]
+fn corpus_regressions_replay() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
+    let mut files: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            (p.extension()? == "json").then_some(p)
+        })
+        .collect();
+    files.sort();
+    assert!(files.len() >= 8, "corpus shrank: {} files in {}", files.len(), dir.display());
+    for path in files {
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let name = doc.get("scheme").and_then(|s| s.as_str()).expect("corpus: scheme");
+        let scheme = MxScheme::parse(name).unwrap();
+        let x: Vec<f32> = doc
+            .get("x_bits")
+            .and_then(|v| v.as_arr())
+            .expect("corpus: x_bits")
+            .iter()
+            .map(|b| f32::from_bits(u32::from_str_radix(b.as_str().unwrap(), 16).unwrap()))
+            .collect();
+        fuzz::differential_slice(&x, scheme);
+        println!("corpus ok: {} ({} values, {name})", path.display(), x.len());
     }
 }

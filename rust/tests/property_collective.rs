@@ -5,7 +5,7 @@
 //! non-power-of-two message lengths.
 
 use tpcc::collective::algo::{AlgoKind, CollectiveAlgo, ExecCtx};
-use tpcc::collective::Topology;
+use tpcc::collective::{pipeline, CommScratch, Topology};
 use tpcc::interconnect::LinkModel;
 use tpcc::mxfmt::{compressor_from_spec, Compressor, NoCompress};
 use tpcc::util::rng::Rng;
@@ -63,8 +63,8 @@ fn run_algo(
     let ctx = ExecCtx { comp, topo, measure: true };
     let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
     let mut out = Vec::new();
-    let mut wire = Vec::new();
-    let rep = kind.implementation().run(x, &refs, &ctx, &mut out, &mut wire);
+    let mut scratch = CommScratch::default();
+    let rep = kind.implementation().run(x, &refs, &ctx, &mut out, &mut scratch);
     assert_eq!(rep.algo, kind.name());
     assert_eq!(out.len(), x.len(), "{:?}: wrong output length", kind);
     out
@@ -184,9 +184,9 @@ fn analytic_and_measured_paths_agree_for_every_algorithm() {
                 let ctx_a = ExecCtx { comp: Some(c.as_ref()), topo: &topo, measure: false };
                 let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
                 let (mut om, mut oa) = (Vec::new(), Vec::new());
-                let mut wire = Vec::new();
-                let rm = kind.implementation().run(&x, &refs, &ctx_m, &mut om, &mut wire);
-                let ra = kind.implementation().run(&x, &refs, &ctx_a, &mut oa, &mut wire);
+                let mut scratch = CommScratch::default();
+                let rm = kind.implementation().run(&x, &refs, &ctx_m, &mut om, &mut scratch);
+                let ra = kind.implementation().run(&x, &refs, &ctx_a, &mut oa, &mut scratch);
                 assert_eq!(om, oa, "{kind:?} world={world} nodes={}", topo.nodes);
                 // link model is timing-mode independent
                 assert_eq!(rm.link_s, ra.link_s);
@@ -195,5 +195,43 @@ fn analytic_and_measured_paths_agree_for_every_algorithm() {
                 assert_eq!(ra.decode_s, 0.0);
             }
         }
+    }
+}
+
+#[test]
+fn odd_hidden_sizes_respect_block_alignment() {
+    // Regression (failing-first against the old `aligned_slices`): when
+    // the message length is NOT a multiple of the compressor's block,
+    // slicing used to silently degrade to unit granularity, splitting
+    // MX blocks across chunk boundaries and changing the quantization
+    // grid. Chunked gather collectives must stay bit-identical to the
+    // unchunked run for odd hidden sizes too — only the final slice may
+    // carry the sub-block tail.
+    let c = compressor_from_spec("fp4_e2m1_b32_e8m0").unwrap();
+    let topo = Topology::flat(3, LinkModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9 });
+    for len in [100usize, 1438, 3 * 479] {
+        let (x, parts, exact) = make_case(3, len, len as u64 ^ 0x0DD);
+        let refs: Vec<&[f32]> = parts.iter().map(Vec::as_slice).collect();
+        let ctx = ExecCtx { comp: Some(c.as_ref()), topo: &topo, measure: true };
+        let algo = AlgoKind::FlatRing.implementation();
+        let (mut mono, mut chunked) = (Vec::new(), Vec::new());
+        let mut scratch = CommScratch::default();
+        algo.run(&x, &refs, &ctx, &mut mono, &mut scratch);
+        for chunks in [2usize, 3, 5] {
+            let rep = pipeline::run_chunked(
+                algo, &x, &refs, &ctx, chunks, &mut chunked, &mut scratch,
+            );
+            assert_eq!(
+                mono, chunked,
+                "tp=3 len={len} chunks={chunks}: chunk boundaries split an MX block                  (quantization grid changed vs the unchunked collective)"
+            );
+            assert!(rep.chunks >= 1);
+        }
+        // two-shot slices per rank internally — the odd tail must ride
+        // the last slice, keeping every value on the global block grid
+        // and the result within the scheme's error bound
+        let out = run_algo(AlgoKind::TwoShot, &x, &parts, Some(c.as_ref()), &topo);
+        let rel = rel_l2(&out, &exact);
+        assert!(rel < 0.40, "two-shot tp=3 len={len}: rel {rel}");
     }
 }

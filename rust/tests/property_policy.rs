@@ -7,7 +7,7 @@
 //! other engine integration tests).
 
 use tpcc::collective::plan::{self, AlgoChoice};
-use tpcc::collective::{execute, Topology};
+use tpcc::collective::{execute, CommScratch, Topology};
 use tpcc::interconnect::{HwProfile, LinkModel};
 use tpcc::mxfmt::{compressor_from_spec_ch, Compressor};
 use tpcc::policy::{
@@ -58,7 +58,8 @@ fn prop_uniform_policy_bit_identical_to_seed_path() {
                     profile.quant_values_per_s,
                     AlgoChoice::Auto,
                 );
-                let (mut seed_out, mut wire) = (Vec::new(), Vec::new());
+                let mut seed_out = Vec::new();
+                let mut scratch = CommScratch::default();
                 let seed_rep = execute(
                     &seed_plan,
                     &x,
@@ -67,7 +68,7 @@ fn prop_uniform_policy_bit_identical_to_seed_path() {
                     &topo,
                     true,
                     &mut seed_out,
-                    &mut wire,
+                    &mut scratch,
                 );
 
                 // ... and the per-site-resolved compressor reproduces the
@@ -83,9 +84,9 @@ fn prop_uniform_policy_bit_identical_to_seed_path() {
                     AlgoChoice::Auto,
                 );
                 assert_eq!(p, seed_plan, "{spec}/w{world}/{len}: plans differ");
-                let (mut out, mut wire) = (Vec::new(), Vec::new());
+                let mut out = Vec::new();
                 let rep =
-                    execute(&p, &x, &parts, Some(comp.as_ref()), &topo, true, &mut out, &mut wire);
+                    execute(&p, &x, &parts, Some(comp.as_ref()), &topo, true, &mut out, &mut scratch);
                 assert_eq!(
                     out, seed_out,
                     "{spec}/w{world}/{len}: outputs not bit-identical"
