@@ -10,14 +10,21 @@
 //! between the modes by construction (pinned by `tests/rank_parallel.rs`);
 //! this bench tracks the *real* speedup.
 //!
-//! A third leg re-runs the parallel engine with the span recorder
-//! enabled: the per-phase breakdown columns (compute / codec / fabric
+//! A third leg re-runs the parallel engine with the **full telemetry
+//! stack** enabled — the span recorder, a live metrics time-series
+//! sampler at the serving cadence, and one flight-recorder record per
+//! pass: the per-phase breakdown columns (compute / codec / fabric
 //! wait / link) come from the recorder's measured phase accumulators,
-//! and `trace_overhead_pct` pins the recorder's cost against the
+//! and `trace_overhead_pct` pins the whole stack's cost against the
 //! untraced parallel wall (asserted under `TPCC_TRACE_OVERHEAD_PCT`,
 //! default 5%).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::{Registry, DEFAULT_SAMPLE_PERIOD_S};
 use crate::model::weights::Weights;
+use crate::obs::flight::{FlightRecorder, PhaseCost, RequestRecord};
 use crate::runtime::Runtime;
 use crate::tp::{BatchKv, EngineOptions, RankThreads, TpEngine};
 use crate::util::json::{self, Json};
@@ -99,8 +106,12 @@ fn measure(eng: &mut TpEngine, batch: usize, seq: usize, reps: usize) -> anyhow:
     Ok(median(walls))
 }
 
-/// Re-measure with the span recorder on, returning the median wall and
-/// the per-rep phase deltas [compute, codec, fabric_wait, link].
+/// Re-measure with the full telemetry stack on — span recorder, a
+/// background time-series sampler at the serving cadence, and one
+/// flight-recorder record per pass — returning the median wall and the
+/// per-rep phase deltas [compute, codec, fabric_wait, link]. The
+/// traced/untraced delta is therefore the cost of everything a serving
+/// deployment's observability adds.
 fn measure_traced(
     eng: &mut TpEngine,
     batch: usize,
@@ -109,10 +120,61 @@ fn measure_traced(
 ) -> anyhow::Result<(f64, [f64; 4])> {
     eng.tracer().set_enabled(true);
     let before = eng.tracer().phase_snapshot();
-    let wall = measure(eng, batch, seq, reps)?;
+    let registry = Arc::new(Registry::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let (registry, stop) = (registry.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                registry.sample_history();
+                std::thread::sleep(std::time::Duration::from_secs_f64(DEFAULT_SAMPLE_PERIOD_S));
+            }
+        })
+    };
+    let flight = FlightRecorder::default();
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| (i * 31 + 7) as i32 % 256).collect();
+    let pos = vec![0i32; batch];
+    let mut kv = BatchKv::new(&eng.cfg.clone(), eng.opts.tp, batch);
+    let _ = eng.prefill(&tokens, batch, seq, &pos, Some(&mut kv))?;
+    let mut walls = Vec::with_capacity(reps);
+    for rep in 0..reps.max(1) {
+        let (_, t) = eng.prefill(&tokens, batch, seq, &pos, Some(&mut kv))?;
+        // the per-request bookkeeping a serving coordinator does, so
+        // the gate prices it: counters, a flight record, one sample
+        registry.requests_received.inc();
+        registry.requests_completed.inc();
+        registry.tokens_generated.inc();
+        registry.comm_bytes_sent.add(t.wire_bytes);
+        registry.comm_bytes_saved.add(t.raw_bytes.saturating_sub(t.wire_bytes));
+        registry.ttft.record(t.wall_s);
+        flight.record(RequestRecord {
+            id: rep as u64,
+            prompt_tokens: batch * seq,
+            new_tokens: 1,
+            batch_peak: batch,
+            queue_wait_s: 0.0,
+            ttft_s: t.wall_s,
+            e2e_s: t.wall_s,
+            tpot_s: f64::NAN,
+            prefill: PhaseCost {
+                compute_s: t.compute_s,
+                codec_s: t.codec_s,
+                link_s: t.link_s,
+                wire_bytes: t.wire_bytes,
+            },
+            decode: PhaseCost::default(),
+            fabric_wait_s: eng.fabric_wait_total(),
+            site_wire_bytes: eng.group_wire_bytes(),
+        });
+        registry.sample_history();
+        walls.push(t.wall_s);
+    }
+    stop.store(true, Ordering::Relaxed);
+    let wall = median(walls);
     let after = eng.tracer().phase_snapshot();
     eng.tracer().set_enabled(false);
-    // measure() runs one warmup pass + reps timed passes on the clock;
+    let _ = sampler.join();
+    // the loop runs one warmup pass + reps timed passes on the clock;
     // the phase accumulators see warmup too, so scale by reps+1
     let passes = (reps.max(1) + 1) as f64;
     let mut phases = [0.0f64; 4];
@@ -140,8 +202,9 @@ pub fn run(reps: usize, rank_threads: RankThreads) -> anyhow::Result<Vec<Rankpar
         let mut par_eng = build_engine(&root, tp, rank_threads)?;
         let workers = par_eng.rank_workers();
         let par_wall_s = measure(&mut par_eng, batch, seq, reps)?;
-        // third leg: same engine (already warm), recorder on — the
-        // traced/untraced delta is the recorder's measured cost
+        // third leg: same engine (already warm), full telemetry stack
+        // on — the traced/untraced delta prices recorder + sampler +
+        // flight recorder together
         let (traced_wall_s, phases) = measure_traced(&mut par_eng, batch, seq, reps)?;
         let trace_overhead_pct = (traced_wall_s / par_wall_s - 1.0) * 100.0;
         let limit = std::env::var("TPCC_TRACE_OVERHEAD_PCT")

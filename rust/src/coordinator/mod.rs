@@ -16,10 +16,11 @@ pub mod session;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::collective::AlgoKind;
-use crate::metrics::Registry;
+use crate::metrics::{Registry, DEFAULT_SAMPLE_PERIOD_S};
+use crate::obs::flight::{FlightRecorder, PhaseCost, RequestRecord};
 use crate::obs::{self, Cat, Tracer};
 use crate::tokenizer::ByteTokenizer;
 use crate::tp::{BatchKv, StepTiming, TpEngine};
@@ -63,6 +64,13 @@ pub struct CoordinatorOptions {
     /// enable the engine's span recorder at startup (`tpcc serve` /
     /// `tpcc trace`); spans are served at `GET /trace`
     pub trace: bool,
+    /// metrics time-series sampling cadence (seconds); the background
+    /// sampler thread pushes one registry snapshot per period into the
+    /// bounded history ring served at `GET /metrics/history`
+    pub sample_period_s: f64,
+    /// when set, the coordinator automatically rebinds sites the drift
+    /// sentinel trips to the never-worse `none` scheme
+    pub drift_fallback: bool,
 }
 
 impl Default for CoordinatorOptions {
@@ -73,11 +81,21 @@ impl Default for CoordinatorOptions {
             sampling: Sampling::Greedy,
             seed: 0,
             trace: false,
+            sample_period_s: DEFAULT_SAMPLE_PERIOD_S,
+            drift_fallback: false,
         }
     }
 }
 
 type Submission = (GenRequest, Sender<GenResponse>);
+
+/// Fold one engine step's cost into a flight-recorder phase bucket.
+fn add_timing(c: &mut PhaseCost, t: &StepTiming) {
+    c.compute_s += t.compute_s;
+    c.codec_s += t.codec_s;
+    c.link_s += t.link_s;
+    c.wire_bytes += t.wire_bytes;
+}
 
 /// Handle used by front ends to submit work (cheaply cloneable).
 #[derive(Clone)]
@@ -85,11 +103,16 @@ pub struct CoordinatorHandle {
     tx: Sender<Submission>,
     pub metrics: Arc<Registry>,
     /// JSON snapshot of the engine's bound compression policy (the
-    /// per-site scheme table), served at `GET /policy`
-    pub policy_json: Arc<String>,
+    /// per-site scheme table plus the sentinel's `policy_drift`
+    /// section), served at `GET /policy`; the coordinator refreshes it
+    /// whenever the sentinel's version moves
+    pub policy_json: Arc<Mutex<String>>,
     /// the engine's span recorder, shared so front ends can serve
     /// `GET /trace` without a round-trip through the engine thread
     pub tracer: Arc<Tracer>,
+    /// per-request flight recorder (slowest-K + recent-K), served at
+    /// `GET /debug/requests` and read by `tpcc explain`
+    pub flight: Arc<FlightRecorder>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -119,8 +142,9 @@ impl CoordinatorHandle {
         CoordinatorHandle {
             tx,
             metrics: Arc::new(Registry::default()),
-            policy_json: Arc::new("{}".to_string()),
+            policy_json: Arc::new(Mutex::new("{}".to_string())),
             tracer: Tracer::new(),
+            flight: Arc::new(FlightRecorder::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -136,12 +160,29 @@ pub struct Coordinator {
     next_id: u64,
     sampler: Sampler,
     tokenizer: ByteTokenizer,
+    flight: Arc<FlightRecorder>,
+    policy_json: Arc<Mutex<String>>,
+    /// sentinel version the served `/policy` body was rendered at
+    drift_version: u64,
 }
 
 struct ActiveSlot {
     session: Session,
     reply: Sender<GenResponse>,
     virtual_prefill_s: f64,
+    /// this request's prefill batch cost (window attribution: the whole
+    /// batch's cost, charged to each request admitted in it)
+    prefill_cost: PhaseCost,
+    /// decode cost accumulated while this request was resident (each
+    /// decode step's cost is charged to every resident request)
+    decode_cost: PhaseCost,
+    /// engine-wide per-group wire bytes when this request was admitted;
+    /// the finish-time delta is the traffic the request coexisted with
+    wire_at_admit: [u64; 4],
+    /// engine-wide fabric-wait seconds at admission
+    fabric_at_admit: f64,
+    /// widest decode batch this request was resident in
+    batch_peak: usize,
 }
 
 impl Coordinator {
@@ -155,14 +196,34 @@ impl Coordinator {
         if opts.trace {
             tracer.set_enabled(true);
         }
+        let flight = Arc::new(FlightRecorder::default());
+        flight.set_group_schemes(eng.group_schemes());
+        let policy_json = Arc::new(Mutex::new(eng.policy_json().to_string()));
         let handle = CoordinatorHandle {
             tx,
             metrics: metrics.clone(),
-            policy_json: Arc::new(eng.policy_json().to_string()),
+            policy_json: policy_json.clone(),
             tracer,
+            flight: flight.clone(),
             shutdown: shutdown.clone(),
         };
+        // background time-series sampler: one registry snapshot per
+        // period into the bounded history ring, until shutdown (the run
+        // loop raises the flag on its way out, so drained coordinators
+        // reap the thread too)
+        {
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let period = opts.sample_period_s.clamp(0.01, 60.0);
+            let _ = std::thread::Builder::new().name("tpcc-sampler".into()).spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    metrics.sample_history();
+                    std::thread::sleep(std::time::Duration::from_secs_f64(period));
+                }
+            });
+        }
         let seed = opts.seed;
+        let drift_version = eng.sentinel().version();
         (
             Coordinator {
                 eng,
@@ -173,6 +234,9 @@ impl Coordinator {
                 next_id: 1,
                 sampler: Sampler::new(seed),
                 tokenizer: ByteTokenizer,
+                flight,
+                policy_json,
+                drift_version,
             },
             handle,
         )
@@ -183,7 +247,8 @@ impl Coordinator {
         let cfg = self.eng.cfg.clone();
         let db = self.opts.decode_batch;
         let tp = self.eng.opts.tp;
-        let mut decode_kv = BatchKv::new(&cfg, tp, db);
+        let mut decode_kv =
+            BatchKv::new(&cfg, tp, db).with_gauge(self.metrics.kv_blocks_in_use.clone());
         let mut slots: Vec<Option<ActiveSlot>> = (0..db).map(|_| None).collect();
         let mut waiting: Vec<(Session, Sender<GenResponse>)> = Vec::new();
 
@@ -210,6 +275,8 @@ impl Coordinator {
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         if waiting.is_empty() && slots.iter().all(Option::is_none) {
+                            // raise the flag so the sampler thread exits
+                            self.shutdown.store(true, Ordering::SeqCst);
                             return Ok(());
                         }
                         break;
@@ -260,6 +327,13 @@ impl Coordinator {
             let (logits, timing) = self.eng.decode(&tokens, &pos, &mut decode_kv)?;
             self.metrics.batches_executed.inc();
             self.record_comm(&timing);
+            // window attribution: this step's cost is charged to every
+            // resident request (they shared the batch)
+            for &i in &active {
+                let slot = slots[i].as_mut().unwrap();
+                add_timing(&mut slot.decode_cost, &timing);
+                slot.batch_peak = slot.batch_peak.max(active.len());
+            }
             let v = cfg.vocab;
             for &i in &active {
                 let slot = slots[i].as_mut().unwrap();
@@ -311,11 +385,17 @@ impl Coordinator {
             tokens[row * sb..row * sb + s.prompt_tokens.len()]
                 .copy_from_slice(&s.prompt_tokens);
         }
+        // flight-recorder baselines: per-group wire and fabric wait
+        // before this batch's prefill, so finish-time deltas include it
+        let wire_at_admit = self.eng.group_wire_bytes();
+        let fabric_at_admit = self.eng.fabric_wait_total();
         let mut kv = BatchKv::new(&cfg, self.eng.opts.tp, bb);
         let (logits, timing) =
             self.eng.prefill(&tokens, bb, sb, &vec![0; bb], Some(&mut kv))?;
         self.record_comm(&timing);
         self.metrics.batches_executed.inc();
+        let mut prefill_cost = PhaseCost::default();
+        add_timing(&mut prefill_cost, &timing);
 
         let v = cfg.vocab;
         for (row, (mut session, reply)) in admitted.into_iter().enumerate() {
@@ -335,8 +415,16 @@ impl Coordinator {
                 session,
                 reply,
                 virtual_prefill_s: timing.virtual_total(),
+                prefill_cost,
+                decode_cost: PhaseCost::default(),
+                wire_at_admit,
+                fabric_at_admit,
+                batch_peak: bb,
             };
             if active.session.is_done() {
+                // done at first token: release the slot it was adopted
+                // into (keeps the kv_blocks_in_use gauge honest)
+                decode_kv.clear_slot(slot_idx);
                 self.finish(active);
             } else {
                 slots[slot_idx] = Some(active);
@@ -345,9 +433,30 @@ impl Coordinator {
         Ok(())
     }
 
-    fn record_comm(&self, t: &StepTiming) {
+    fn record_comm(&mut self, t: &StepTiming) {
         self.metrics.comm_bytes_sent.add(t.wire_bytes);
         self.metrics.comm_bytes_saved.add(t.raw_bytes.saturating_sub(t.wire_bytes));
+        // drift sentinel: optionally rebind tripped sites to `none`,
+        // then mirror the drift counters and refresh the served /policy
+        // body whenever the sentinel state moved
+        if self.opts.drift_fallback && !self.eng.sentinel().tripped().is_empty() {
+            match self.eng.apply_drift_fallback() {
+                Ok(sites) => {
+                    let labels: Vec<String> = sites.iter().map(|s| s.label()).collect();
+                    eprintln!("[coordinator] drift fallback: {} -> none", labels.join(", "));
+                    self.flight.set_group_schemes(self.eng.group_schemes());
+                }
+                Err(e) => eprintln!("[coordinator] drift fallback failed: {e:#}"),
+            }
+        }
+        for (key, v) in self.eng.sentinel_metrics() {
+            self.metrics.set(key, v);
+        }
+        let drift_v = self.eng.sentinel().version();
+        if drift_v != self.drift_version {
+            self.drift_version = drift_v;
+            *self.policy_json.lock().unwrap() = self.eng.policy_json().to_string();
+        }
         // per-site-group policy counters (engine-side rollups mirrored
         // into the registry so `/metrics` exposes where the bytes go)
         for (key, v) in self.eng.policy_metrics() {
@@ -395,6 +504,27 @@ impl Coordinator {
         if let Some(tpot) = s.tpot() {
             self.metrics.tpot.record(tpot);
         }
+        // flight recorder: structured per-request record (slowest-K +
+        // recent-K retention), attribution source for `tpcc explain`
+        let wire_now = self.eng.group_wire_bytes();
+        let mut site_wire_bytes = [0u64; 4];
+        for (g, w) in site_wire_bytes.iter_mut().enumerate() {
+            *w = wire_now[g].saturating_sub(slot.wire_at_admit[g]);
+        }
+        self.flight.record(RequestRecord {
+            id: s.id,
+            prompt_tokens: s.prompt_tokens.len(),
+            new_tokens: s.generated.len(),
+            batch_peak: slot.batch_peak,
+            queue_wait_s: resp.queue_wait_s,
+            ttft_s: resp.ttft_s,
+            e2e_s: resp.e2e_s,
+            tpot_s: resp.tpot_s,
+            prefill: slot.prefill_cost,
+            decode: slot.decode_cost,
+            fabric_wait_s: (self.eng.fabric_wait_total() - slot.fabric_at_admit).max(0.0),
+            site_wire_bytes,
+        });
         let _ = slot.reply.send(resp);
     }
 }

@@ -27,7 +27,10 @@
 //!                    collective site (layer × {attn-out, mlp-out} ×
 //!                    {prefill, decode}) to a compressor spec; built-in
 //!                    `uniform` / `paper` / `auto` policies plus a
-//!                    compact CLI spec grammar and JSON for the server.
+//!                    compact CLI spec grammar and JSON for the server;
+//!                    online drift sentinel ([`policy::Sentinel`])
+//!                    comparing observed quantization error against the
+//!                    calibration budget, with a never-worse fallback.
 //! * [`mxfmt`]      — MX codec (bit-exact vs the Pallas kernels) + the
 //!                    Bian et al. baselines (channel-wise INT, TopK).
 //! * [`interconnect`] — α/β link simulator with single- and multi-node
@@ -37,7 +40,15 @@
 //! * [`obs`]        — structured tracing: per-thread span rings threaded
 //!                    from request admission down to the codec passes,
 //!                    Chrome-trace/Perfetto export (`tpcc trace`,
-//!                    `GET /trace`), per-phase gauges on `/metrics`.
+//!                    `GET /trace`), per-phase gauges on `/metrics`;
+//!                    per-request flight recorder ([`obs::flight`],
+//!                    `GET /debug/requests`, `tpcc explain`).
+//! * [`metrics`]    — counters/gauges/histograms plus a bounded
+//!                    time-series ring ([`metrics::MetricsHistory`]):
+//!                    windowed QPS / tokens-per-s / wire rates and
+//!                    TTFT-SLO burn rate over 1m/5m/30m windows
+//!                    (`GET /metrics/history`), Prometheus text
+//!                    exposition (`GET /metrics?format=prom`).
 //! * [`server`]     — minimal HTTP/1.1 front end (per-algorithm
 //!                    collective counters on `/metrics`).
 //! * [`eval`]       — perplexity harness (Tables 1/2/5).

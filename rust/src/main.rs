@@ -9,6 +9,10 @@
 //!   table6  (selective-compression ablation: uniform vs paper vs auto)
 //!   table7  (serving under load: capacity at a TTFT SLO per policy)
 //!   load    --model micro --tp 2 --arrival poisson:4 --requests 32 [--policy ...]
+//!           [--explain]  (append the flight-recorder attribution table)
+//!   explain --addr 127.0.0.1:8080   (p50-vs-tail attribution from a
+//!           running server's GET /debug/requests; without --addr,
+//!           drives an inline load first — same flags as `load`)
 //!   bench   (rank-runtime perf snapshot; --json BENCH_rankpar.json)
 //!   bench --codec   (codec roofline; --json BENCH_codec.json)
 //!   golden --emit   (regenerate rust/tests/golden_codec.json)
@@ -70,6 +74,68 @@ fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     TpEngine::new(rt, &weights, opts)
 }
 
+/// Print the flight-recorder attribution table (`tpcc explain`).
+fn print_explain(records: &[tpcc::obs::flight::RequestRecord]) {
+    match tpcc::obs::flight::attribution(records) {
+        Some(a) => print!("{}", tpcc::obs::flight::render_attribution(&a)),
+        None => println!("explain: need at least two completed requests to attribute"),
+    }
+}
+
+/// The `load` command body (also `explain` without `--addr`): drive a
+/// trace through a fresh coordinator, print the load report, and — when
+/// `explain` — the flight-recorder attribution table.
+fn run_load(args: &Args, explain: bool) -> anyhow::Result<()> {
+    // trace: replayed from --trace FILE, or generated from
+    // --arrival/--prompt-len/--output-len/--requests/--seed
+    let trace = match args.get("trace") {
+        Some(path) => Trace::parse_jsonl(&std::fs::read_to_string(path)?)?,
+        None => {
+            let spec = TraceSpec {
+                arrival: Arrival::parse(args.get_or("arrival", "poisson:4"))?,
+                prompt_len: LenDist::parse(args.get_or("prompt-len", "sharegpt"))?,
+                output_len: LenDist::parse(args.get_or("output-len", "lognormal:16:0.7:64"))?,
+                requests: args.get_usize("requests", 32),
+                seed: args.get_usize("seed", 42) as u64,
+            };
+            spec.generate()
+        }
+    };
+    if let Some(path) = args.get("save-trace") {
+        std::fs::write(path, trace.to_jsonl())?;
+        println!("trace saved to {path} ({} events)", trace.events.len());
+    }
+    let slo_ttft_s = args.get_f64("slo-ttft", 0.25);
+    let args2 = args.clone();
+    let (handle, join) = spawn(
+        move || build_engine(&args2),
+        CoordinatorOptions {
+            decode_batch: args.get_usize("decode-batch", 8),
+            drift_fallback: args.has("drift-fallback"),
+            ..Default::default()
+        },
+    )?;
+    handle.metrics.set_ttft_slo(slo_ttft_s);
+    println!(
+        "tpcc load: {} requests, {} events span {:.1}s",
+        trace.events.len(),
+        if trace.closed_loop.is_some() { "closed-loop" } else { "open-loop" },
+        trace.span_s()
+    );
+    let report = workload::drive(&handle, &trace, &DriveOptions { slo_ttft_s });
+    report.publish(&handle.metrics);
+    report.print("load");
+    if explain {
+        let records: Vec<_> =
+            handle.flight.records().iter().map(|r| (**r).clone()).collect();
+        print_explain(&records);
+    }
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap()?;
+    Ok(())
+}
+
 fn run() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -94,6 +160,9 @@ fn run() -> anyhow::Result<()> {
                 // --no-trace turns it off (sub-5% overhead, but zero is
                 // zero)
                 trace: !args.has("no-trace"),
+                // --drift-fallback: auto-rebind sites the error
+                // sentinel trips to the never-worse `none` scheme
+                drift_fallback: args.has("drift-fallback"),
                 ..Default::default()
             };
             let (handle, _join) = spawn(
@@ -118,53 +187,31 @@ fn run() -> anyhow::Result<()> {
             handle.metrics.set_ttft_slo(args.get_f64("slo-ttft", 0.25));
             let server = Server::bind(&addr, handle)?;
             println!(
-                "tpcc serving on http://{addr}  (POST /generate, GET /metrics, GET /trace)"
+                "tpcc serving on http://{addr}  (POST /generate, GET /metrics[?format=prom], \
+                 GET /metrics/history, GET /debug/requests, GET /policy, GET /trace)"
             );
             server.serve_forever()
         }
-        "load" => {
-            // trace: replayed from --trace FILE, or generated from
-            // --arrival/--prompt-len/--output-len/--requests/--seed
-            let trace = match args.get("trace") {
-                Some(path) => Trace::parse_jsonl(&std::fs::read_to_string(path)?)?,
-                None => {
-                    let spec = TraceSpec {
-                        arrival: Arrival::parse(args.get_or("arrival", "poisson:4"))?,
-                        prompt_len: LenDist::parse(args.get_or("prompt-len", "sharegpt"))?,
-                        output_len: LenDist::parse(args.get_or("output-len", "lognormal:16:0.7:64"))?,
-                        requests: args.get_usize("requests", 32),
-                        seed: args.get_usize("seed", 42) as u64,
-                    };
-                    spec.generate()
-                }
-            };
-            if let Some(path) = args.get("save-trace") {
-                std::fs::write(path, trace.to_jsonl())?;
-                println!("trace saved to {path} ({} events)", trace.events.len());
+        "load" => run_load(&args, args.has("explain")),
+        "explain" => {
+            // p50-vs-tail attribution table from a flight-recorder
+            // dump: a running server's (`--addr HOST:PORT` hits its
+            // GET /debug/requests), or an inline load driven right
+            // here (same flags as `load`)
+            if let Some(addr) = args.get("addr") {
+                let (status, body) = tpcc::server::http_get(addr, "/debug/requests")?;
+                anyhow::ensure!(status == 200, "GET /debug/requests -> HTTP {status}");
+                let parsed = tpcc::util::json::Json::parse(&body)?;
+                let records = tpcc::obs::flight::records_from_json(&parsed);
+                println!(
+                    "tpcc explain: {} flight records from http://{addr}/debug/requests",
+                    records.len()
+                );
+                print_explain(&records);
+                Ok(())
+            } else {
+                run_load(&args, true)
             }
-            let slo_ttft_s = args.get_f64("slo-ttft", 0.25);
-            let args2 = args.clone();
-            let (handle, join) = spawn(
-                move || build_engine(&args2),
-                CoordinatorOptions {
-                    decode_batch: args.get_usize("decode-batch", 8),
-                    ..Default::default()
-                },
-            )?;
-            handle.metrics.set_ttft_slo(slo_ttft_s);
-            println!(
-                "tpcc load: {} requests, {} events span {:.1}s",
-                trace.events.len(),
-                if trace.closed_loop.is_some() { "closed-loop" } else { "open-loop" },
-                trace.span_s()
-            );
-            let report = workload::drive(&handle, &trace, &DriveOptions { slo_ttft_s });
-            report.publish(&handle.metrics);
-            report.print("load");
-            handle.shutdown();
-            drop(handle);
-            join.join().unwrap()?;
-            Ok(())
         }
         "gen" => {
             let prompt = args.get_or("prompt", "The parish church of ").to_string();
@@ -404,7 +451,7 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | load | bench | golden | trace | table1..table7 | info\n\
+                 commands: serve | gen | eval | load | explain | bench | golden | trace | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
@@ -418,7 +465,9 @@ fn run() -> anyhow::Result<()> {
                  load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\
                                --prompt-len sharegpt|N|uniform:LO:HI|lognormal:MED:SIG[:CAP]\n\
                                --output-len ... --requests N --seed S --slo-ttft S\n\
-                               --trace FILE | --save-trace FILE",
+                               --trace FILE | --save-trace FILE | --explain\n\
+                 explain flags: --addr HOST:PORT (read a live server) | load flags\n\
+                 serve flags:  --drift-fallback (sentinel rebinds drifting sites to none)",
                 tpcc::version()
             );
             Ok(())

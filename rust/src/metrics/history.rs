@@ -1,0 +1,403 @@
+//! Time-series core: a bounded ring of periodic [`Registry`] snapshots
+//! turned into windowed rates and SLO burn-rates.
+//!
+//! The coordinator runs a background sampler thread that captures one
+//! [`Sample`] per cadence tick ([`DEFAULT_SAMPLE_PERIOD_S`]); the load
+//! driver additionally pushes a sample per completed request so short
+//! `tpcc load` runs produce a dense series. Samples are cumulative
+//! counter snapshots — rates come from the *delta* between the newest
+//! sample and the oldest sample inside a lookback window, so a wrapped
+//! ring (old samples evicted) degrades gracefully: the window clamps to
+//! whatever span is still retained and `window_s` in the output reports
+//! the span actually used.
+//!
+//! Burn-rate follows the SRE convention: over a window, the fraction of
+//! requests that missed the TTFT SLO divided by the error budget
+//! ([`DEFAULT_SLO_ERROR_BUDGET`]). 1.0 means the service is consuming
+//! its budget exactly at the sustainable pace; >1 means the budget
+//! exhausts early.
+//!
+//! [`Registry`]: super::Registry
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Ring capacity: at the 4 Hz default cadence this retains ~34 minutes,
+/// enough to cover the longest (30 m) burn-rate window.
+pub const DEFAULT_HISTORY_CAP: usize = 8192;
+
+/// Sampler cadence of the coordinator's background thread.
+pub const DEFAULT_SAMPLE_PERIOD_S: f64 = 0.25;
+
+/// Lookback windows rates and burn-rates are reported over. The short
+/// window makes `tpcc load` smoke runs observable; 60/300/1800 are the
+/// conventional 1m/5m/30m SLO windows.
+pub const RATE_WINDOWS_S: [f64; 4] = [10.0, 60.0, 300.0, 1800.0];
+
+/// Burn-rate windows (1m/5m/30m).
+pub const BURN_WINDOWS_S: [f64; 3] = [60.0, 300.0, 1800.0];
+
+/// Fraction of requests allowed to miss the TTFT SLO (99% goodput
+/// target). Burn-rate 1.0 == missing exactly this fraction.
+pub const DEFAULT_SLO_ERROR_BUDGET: f64 = 0.01;
+
+/// One cumulative snapshot of the registry's counters. Fixed fields
+/// (no map) keep the ring footprint bounded: ~72 bytes per sample,
+/// ~590 KiB at the default capacity.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Sample {
+    /// Seconds since the ring's epoch (the registry's construction).
+    pub t_s: f64,
+    pub requests_received: u64,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub comm_bytes_sent: u64,
+    pub comm_bytes_saved: u64,
+    /// Cumulative TTFT observations (== first tokens produced).
+    pub ttft_count: u64,
+    /// Of those, how many met the TTFT SLO (== `ttft_count` when no SLO
+    /// is set, so burn deltas read zero misses).
+    pub ttft_slo_hits: u64,
+}
+
+/// Windowed rates derived from a pair of samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rates {
+    /// The span actually used (≤ the requested window when the ring
+    /// holds less history).
+    pub window_s: f64,
+    pub qps: f64,
+    pub tokens_per_s: f64,
+    pub prefill_tokens_per_s: f64,
+    pub wire_gb_per_s: f64,
+    pub saved_gb_per_s: f64,
+}
+
+/// Bounded ring of [`Sample`]s with windowed delta queries. All pushes
+/// and reads go through one mutex — the ring is touched a few times per
+/// second, never per token.
+pub struct MetricsHistory {
+    inner: Mutex<VecDeque<Sample>>,
+    cap: usize,
+    epoch: Instant,
+    evicted: AtomicU64,
+}
+
+impl Default for MetricsHistory {
+    fn default() -> MetricsHistory {
+        MetricsHistory::new(DEFAULT_HISTORY_CAP)
+    }
+}
+
+impl MetricsHistory {
+    pub fn new(cap: usize) -> MetricsHistory {
+        MetricsHistory {
+            inner: Mutex::new(VecDeque::with_capacity(cap.clamp(2, DEFAULT_HISTORY_CAP))),
+            cap: cap.max(2),
+            epoch: Instant::now(),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Seconds since this ring's epoch — the time base every sampler
+    /// (coordinator thread, load driver) shares.
+    pub fn elapsed_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Append a sample, evicting the oldest when full. Samples are
+    /// expected in nondecreasing `t_s` order (all producers stamp from
+    /// [`elapsed_s`](Self::elapsed_s)); an out-of-order push is dropped
+    /// rather than corrupting window queries.
+    pub fn push(&self, s: Sample) {
+        let mut ring = self.inner.lock().unwrap();
+        if let Some(last) = ring.back() {
+            if s.t_s < last.t_s {
+                return;
+            }
+        }
+        if ring.len() == self.cap {
+            ring.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Samples evicted from the front of the ring so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Time span currently retained (0 with fewer than two samples).
+    pub fn span_s(&self) -> f64 {
+        let ring = self.inner.lock().unwrap();
+        match (ring.front(), ring.back()) {
+            (Some(a), Some(b)) => b.t_s - a.t_s,
+            _ => 0.0,
+        }
+    }
+
+    pub fn latest(&self) -> Option<Sample> {
+        self.inner.lock().unwrap().back().copied()
+    }
+
+    /// (oldest-within-window, newest) pair for a lookback of `window_s`
+    /// seconds. When the ring retains less than the window, the oldest
+    /// retained sample anchors the delta (clamped window). None with
+    /// fewer than two samples.
+    pub fn window_pair(&self, window_s: f64) -> Option<(Sample, Sample)> {
+        let ring = self.inner.lock().unwrap();
+        let newest = *ring.back()?;
+        if ring.len() < 2 {
+            return None;
+        }
+        let cutoff = newest.t_s - window_s;
+        // the oldest sample at-or-after the cutoff, but never the
+        // newest itself (a delta needs two distinct points)
+        let mut base = *ring.front().unwrap();
+        for s in ring.iter() {
+            if s.t_s >= cutoff {
+                base = *s;
+                break;
+            }
+        }
+        if base.t_s >= newest.t_s {
+            base = ring[ring.len() - 2];
+        }
+        Some((base, newest))
+    }
+
+    /// Windowed rates, None with fewer than two samples or zero span.
+    pub fn rates(&self, window_s: f64) -> Option<Rates> {
+        let (a, b) = self.window_pair(window_s)?;
+        let dt = b.t_s - a.t_s;
+        if dt <= 0.0 {
+            return None;
+        }
+        let d = |hi: u64, lo: u64| hi.saturating_sub(lo) as f64 / dt;
+        Some(Rates {
+            window_s: dt,
+            qps: d(b.requests_completed, a.requests_completed),
+            tokens_per_s: d(b.tokens_generated, a.tokens_generated),
+            prefill_tokens_per_s: d(b.prefill_tokens, a.prefill_tokens),
+            wire_gb_per_s: d(b.comm_bytes_sent, a.comm_bytes_sent) / 1e9,
+            saved_gb_per_s: d(b.comm_bytes_saved, a.comm_bytes_saved) / 1e9,
+        })
+    }
+
+    /// TTFT-SLO burn-rate over a window: (missed / observed) / budget.
+    /// 0.0 when no first tokens landed in the window; None with fewer
+    /// than two samples or a non-positive budget.
+    pub fn burn_rate(&self, window_s: f64, error_budget: f64) -> Option<f64> {
+        if error_budget <= 0.0 {
+            return None;
+        }
+        let (a, b) = self.window_pair(window_s)?;
+        let observed = b.ttft_count.saturating_sub(a.ttft_count);
+        if observed == 0 {
+            return Some(0.0);
+        }
+        let hits = b.ttft_slo_hits.saturating_sub(a.ttft_slo_hits);
+        let missed = observed.saturating_sub(hits);
+        Some((missed as f64 / observed as f64) / error_budget)
+    }
+
+    /// The `GET /metrics/history` body. `slo_ttft_s` <= 0 suppresses
+    /// burn-rates (no SLO to burn against).
+    pub fn to_json(&self, slo_ttft_s: f64) -> Json {
+        let rates = RATE_WINDOWS_S
+            .iter()
+            .map(|&w| match self.rates(w) {
+                Some(r) => json::obj(vec![
+                    ("requested_window_s", json::num(w)),
+                    ("window_s", json::num(r.window_s)),
+                    ("qps", json::num(r.qps)),
+                    ("tokens_per_s", json::num(r.tokens_per_s)),
+                    ("prefill_tokens_per_s", json::num(r.prefill_tokens_per_s)),
+                    ("wire_gb_per_s", json::num(r.wire_gb_per_s)),
+                    ("saved_gb_per_s", json::num(r.saved_gb_per_s)),
+                ]),
+                None => json::obj(vec![
+                    ("requested_window_s", json::num(w)),
+                    ("window_s", Json::Null),
+                ]),
+            })
+            .collect();
+        let burn = BURN_WINDOWS_S
+            .iter()
+            .map(|&w| {
+                let rate = if slo_ttft_s > 0.0 {
+                    self.burn_rate(w, DEFAULT_SLO_ERROR_BUDGET)
+                } else {
+                    None
+                };
+                json::obj(vec![
+                    ("window_s", json::num(w)),
+                    ("burn_rate", rate.map(json::num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let last = match self.latest() {
+            Some(s) => json::obj(vec![
+                ("t_s", json::num(s.t_s)),
+                ("requests_received", json::num(s.requests_received as f64)),
+                ("requests_completed", json::num(s.requests_completed as f64)),
+                ("tokens_generated", json::num(s.tokens_generated as f64)),
+                ("prefill_tokens", json::num(s.prefill_tokens as f64)),
+                ("comm_bytes_sent", json::num(s.comm_bytes_sent as f64)),
+                ("comm_bytes_saved", json::num(s.comm_bytes_saved as f64)),
+                ("ttft_count", json::num(s.ttft_count as f64)),
+                ("ttft_slo_hits", json::num(s.ttft_slo_hits as f64)),
+            ]),
+            None => Json::Null,
+        };
+        json::obj(vec![
+            ("samples", json::num(self.len() as f64)),
+            ("capacity", json::num(self.cap as f64)),
+            ("evicted", json::num(self.evicted() as f64)),
+            ("span_s", json::num(self.span_s())),
+            ("sample_period_s", json::num(DEFAULT_SAMPLE_PERIOD_S)),
+            ("slo_ttft_s", if slo_ttft_s > 0.0 { json::num(slo_ttft_s) } else { Json::Null }),
+            ("slo_error_budget", json::num(DEFAULT_SLO_ERROR_BUDGET)),
+            ("rates", Json::Arr(rates)),
+            ("burn", Json::Arr(burn)),
+            ("last", last),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(t: f64, completed: u64, tokens: u64) -> Sample {
+        Sample {
+            t_s: t,
+            requests_completed: completed,
+            requests_received: completed,
+            tokens_generated: tokens,
+            ..Sample::default()
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_evicts_oldest() {
+        let h = MetricsHistory::new(4);
+        for i in 0..10u64 {
+            h.push(s(i as f64, i, 0));
+        }
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.evicted(), 6);
+        // front is t=6 after eviction
+        let (a, b) = h.window_pair(1e9).unwrap();
+        assert_eq!(a.t_s, 6.0);
+        assert_eq!(b.t_s, 9.0);
+        assert_eq!(h.span_s(), 3.0);
+    }
+
+    #[test]
+    fn rates_across_wrapped_window_clamp_to_retained_span() {
+        let h = MetricsHistory::new(4);
+        // 10 completed per second, 100 tokens per second
+        for i in 0..20u64 {
+            h.push(s(i as f64, 10 * i, 100 * i));
+        }
+        // a 1-hour window only has t=16..19 retained: still 10 qps
+        let r = h.rates(3600.0).unwrap();
+        assert_eq!(r.window_s, 3.0);
+        assert!((r.qps - 10.0).abs() < 1e-9, "qps {}", r.qps);
+        assert!((r.tokens_per_s - 100.0).abs() < 1e-9);
+        // a 2-second window uses only the tail
+        let r2 = h.rates(2.0).unwrap();
+        assert_eq!(r2.window_s, 2.0);
+        assert!((r2.qps - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_pushes_are_dropped() {
+        let h = MetricsHistory::new(8);
+        h.push(s(5.0, 1, 0));
+        h.push(s(3.0, 2, 0)); // dropped
+        h.push(s(6.0, 3, 0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.latest().unwrap().t_s, 6.0);
+    }
+
+    #[test]
+    fn burn_rate_against_known_stream() {
+        let h = MetricsHistory::new(64);
+        // 100 first-tokens per tick; miss rate ramps from 0 to 2%
+        let mut count = 0u64;
+        let mut hits = 0u64;
+        for i in 0..10u64 {
+            count += 100;
+            hits += if i < 5 { 100 } else { 98 }; // 2% misses in back half
+            h.push(Sample {
+                t_s: i as f64,
+                ttft_count: count,
+                ttft_slo_hits: hits,
+                ..Sample::default()
+            });
+        }
+        // whole window: 10 misses / 1000 observed = 1% => burn 1.0 at 1% budget
+        let b = h.burn_rate(1e9, 0.01).unwrap();
+        assert!((b - 1.0).abs() < 1e-9, "burn {b}");
+        // tail window (last 4 ticks): 8 misses / 400 = 2% => burn 2.0
+        let b4 = h.burn_rate(4.0, 0.01).unwrap();
+        assert!((b4 - 2.0).abs() < 1e-9, "burn {b4}");
+        // zero-budget is undefined
+        assert!(h.burn_rate(4.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn burn_rate_zero_when_no_traffic() {
+        let h = MetricsHistory::new(8);
+        h.push(Sample { t_s: 0.0, ..Sample::default() });
+        h.push(Sample { t_s: 1.0, ..Sample::default() });
+        assert_eq!(h.burn_rate(60.0, 0.01), Some(0.0));
+    }
+
+    #[test]
+    fn empty_and_single_sample_report_none() {
+        let h = MetricsHistory::default();
+        assert!(h.rates(60.0).is_none());
+        assert!(h.burn_rate(60.0, 0.01).is_none());
+        h.push(s(0.0, 1, 1));
+        assert!(h.rates(60.0).is_none());
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn history_json_shape() {
+        let h = MetricsHistory::new(8);
+        h.push(s(0.0, 0, 0));
+        h.push(s(2.0, 10, 200));
+        let j = h.to_json(0.25);
+        let body = j.to_string();
+        let parsed = Json::parse(&body).unwrap();
+        assert_eq!(parsed.get("samples").unwrap().as_i64(), Some(2));
+        let rates = parsed.get("rates").unwrap().as_arr().unwrap();
+        assert_eq!(rates.len(), RATE_WINDOWS_S.len());
+        assert_eq!(rates[0].get("qps").unwrap().as_f64(), Some(5.0));
+        assert_eq!(rates[0].get("tokens_per_s").unwrap().as_f64(), Some(100.0));
+        let burn = parsed.get("burn").unwrap().as_arr().unwrap();
+        assert_eq!(burn.len(), BURN_WINDOWS_S.len());
+        assert_eq!(parsed.get("last").unwrap().get("t_s").unwrap().as_f64(), Some(2.0));
+        // no SLO => burn entries null
+        let j2 = h.to_json(0.0);
+        assert_eq!(j2.get("burn").unwrap().idx(0).unwrap().get("burn_rate"), Some(&Json::Null));
+    }
+}

@@ -1,14 +1,23 @@
 //! Telemetry: counters, gauges and latency histograms with percentile
 //! queries. Lock-free-ish (atomics for counters, mutex for histograms —
 //! histograms are touched once per request, not per token).
+//!
+//! [`history`] holds the time-series layer: a bounded ring of periodic
+//! [`Registry`] snapshots ([`Registry::sample_history`]) the coordinator's
+//! sampler thread and the load driver both publish into, serving windowed
+//! rates and SLO burn-rates at `GET /metrics/history`.
+
+pub mod history;
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::json::{self, Json};
 use crate::workload::stats::LogHistogram;
+
+pub use history::{MetricsHistory, Rates, Sample, DEFAULT_SAMPLE_PERIOD_S};
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -21,6 +30,32 @@ impl Counter {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable up/down gauge. Cloneable — the shared atomic lets the
+/// registry hand a live handle into the subsystem that owns the
+/// underlying resource (e.g. [`crate::tp::kv::BatchKv`] carrying the
+/// `kv_blocks_in_use` gauge), so the value can never drift from the
+/// allocation/free events it mirrors.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -93,7 +128,38 @@ impl HistogramSnapshot {
     pub fn fraction_below(&self, threshold: f64) -> f64 {
         self.h.fraction_below(threshold)
     }
+    /// Exact sum of all recorded samples (Prometheus summary `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.h.sum()
+    }
 }
+
+/// Keys `to_json` emits from built-in registry state. Custom entries
+/// merge into the same output map *after* these, so an unguarded
+/// `set("ttft_p50_s", …)` would silently shadow the real percentile —
+/// [`Registry::set`] quarantines colliding keys instead.
+const BUILTIN_KEYS: &[&str] = &[
+    "requests_received",
+    "requests_completed",
+    "tokens_generated",
+    "prefill_tokens",
+    "batches_executed",
+    "comm_bytes_sent",
+    "comm_bytes_saved",
+    "kv_blocks_in_use",
+    "ttft_p50_s",
+    "ttft_p95_s",
+    "ttft_p99_s",
+    "tpot_p50_s",
+    "e2e_p50_s",
+    "e2e_p95_s",
+    "e2e_p99_s",
+    "queue_wait_p50_s",
+    "queue_wait_p95_s",
+    "queue_wait_p99_s",
+    "ttft_slo_s",
+    "ttft_goodput",
+];
 
 /// The serving stack's metric registry (one per coordinator).
 #[derive(Default)]
@@ -105,11 +171,16 @@ pub struct Registry {
     pub batches_executed: Counter,
     pub comm_bytes_sent: Counter,
     pub comm_bytes_saved: Counter,
-    pub kv_blocks_in_use: Counter,
+    /// Decode KV slots currently holding a live sequence. A real gauge:
+    /// the coordinator clones it into its decode [`crate::tp::kv::BatchKv`],
+    /// which incs on slot adoption and decs on retirement.
+    pub kv_blocks_in_use: Gauge,
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub e2e_latency: Histogram,
     pub queue_wait: Histogram,
+    /// Bounded ring of periodic snapshots behind `GET /metrics/history`.
+    pub history: MetricsHistory,
     /// TTFT SLO (f64 bits; 0 = unset) the `ttft_goodput` metric is
     /// measured against
     slo_ttft_bits: AtomicU64,
@@ -117,8 +188,50 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Record a custom gauge. A key that would shadow a built-in
+    /// `/metrics` field is stored under `custom_<key>` instead of
+    /// overwriting the real metric.
     pub fn set(&self, key: &str, v: f64) {
-        self.custom.lock().unwrap().insert(key.to_string(), v);
+        let key = if BUILTIN_KEYS.contains(&key) {
+            format!("custom_{key}")
+        } else {
+            key.to_string()
+        };
+        self.custom.lock().unwrap().insert(key, v);
+    }
+
+    /// Capture one cumulative [`Sample`] of this registry into the
+    /// time-series ring, stamped on the ring's own clock. Called by the
+    /// coordinator's sampler thread at the
+    /// [`DEFAULT_SAMPLE_PERIOD_S`] cadence and by the load driver per
+    /// completed request.
+    pub fn sample_history(&self) {
+        let ttft = self.ttft.snapshot();
+        let slo = self.ttft_slo();
+        let count = ttft.count() as u64;
+        // With no SLO set every first token counts as a hit, so burn
+        // deltas read zero misses.
+        let hits = if slo > 0.0 && count > 0 {
+            (ttft.fraction_below(slo) * count as f64).round() as u64
+        } else {
+            count
+        };
+        self.history.push(Sample {
+            t_s: self.history.elapsed_s(),
+            requests_received: self.requests_received.get(),
+            requests_completed: self.requests_completed.get(),
+            tokens_generated: self.tokens_generated.get(),
+            prefill_tokens: self.prefill_tokens.get(),
+            comm_bytes_sent: self.comm_bytes_sent.get(),
+            comm_bytes_saved: self.comm_bytes_saved.get(),
+            ttft_count: count,
+            ttft_slo_hits: hits,
+        });
+    }
+
+    /// The `GET /metrics/history` body.
+    pub fn history_json(&self) -> Json {
+        self.history.to_json(self.ttft_slo())
     }
 
     /// Set the TTFT SLO that `/metrics` reports goodput against.
@@ -145,6 +258,7 @@ impl Registry {
             ("batches_executed", json::num(self.batches_executed.get() as f64)),
             ("comm_bytes_sent", json::num(self.comm_bytes_sent.get() as f64)),
             ("comm_bytes_saved", json::num(self.comm_bytes_saved.get() as f64)),
+            ("kv_blocks_in_use", json::num(self.kv_blocks_in_use.get() as f64)),
             ("ttft_p50_s", json::num_or_null(ttft.percentile(50.0))),
             ("ttft_p95_s", json::num_or_null(ttft.percentile(95.0))),
             ("ttft_p99_s", json::num_or_null(ttft.percentile(99.0))),
@@ -172,6 +286,106 @@ impl Registry {
         }
         Json::Obj(obj)
     }
+
+    /// Prometheus text exposition (format 0.0.4), served at
+    /// `GET /metrics?format=prom`. Built-in counters keep their JSON
+    /// names under a `tpcc_` prefix; latency histograms export as
+    /// summaries (`quantile` labels + `_sum`/`_count`); custom entries
+    /// export as gauges with invalid name characters mapped to `_`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP tpcc_{name} {help}\n# TYPE tpcc_{name} counter\ntpcc_{name} {v}\n"
+            ));
+        };
+        counter(
+            "requests_received",
+            "Requests accepted by the coordinator.",
+            self.requests_received.get(),
+        );
+        counter("requests_completed", "Requests fully generated.", self.requests_completed.get());
+        counter("tokens_generated", "Decode tokens produced.", self.tokens_generated.get());
+        counter("prefill_tokens", "Prompt tokens prefilled.", self.prefill_tokens.get());
+        counter("batches_executed", "Decode batches executed.", self.batches_executed.get());
+        counter(
+            "comm_bytes_sent",
+            "Collective wire bytes actually sent.",
+            self.comm_bytes_sent.get(),
+        );
+        counter(
+            "comm_bytes_saved",
+            "Wire bytes saved by compression.",
+            self.comm_bytes_saved.get(),
+        );
+        out.push_str(&format!(
+            "# HELP tpcc_kv_blocks_in_use Decode KV slots holding a live sequence.\n\
+             # TYPE tpcc_kv_blocks_in_use gauge\n\
+             tpcc_kv_blocks_in_use {}\n",
+            self.kv_blocks_in_use.get()
+        ));
+        let mut summary = |name: &str, help: &str, h: &Histogram| {
+            let s = h.snapshot();
+            out.push_str(&format!("# HELP tpcc_{name} {help}\n# TYPE tpcc_{name} summary\n"));
+            if s.count() > 0 {
+                for q in [0.5, 0.95, 0.99] {
+                    out.push_str(&format!(
+                        "tpcc_{name}{{quantile=\"{q}\"}} {}\n",
+                        s.percentile(q * 100.0)
+                    ));
+                }
+            }
+            out.push_str(&format!("tpcc_{name}_sum {}\n", s.sum()));
+            out.push_str(&format!("tpcc_{name}_count {}\n", s.count()));
+        };
+        summary("ttft_seconds", "Time to first token.", &self.ttft);
+        summary("tpot_seconds", "Time per output token.", &self.tpot);
+        summary("e2e_seconds", "End-to-end request latency.", &self.e2e_latency);
+        summary("queue_wait_seconds", "Admission queue wait.", &self.queue_wait);
+        let slo = self.ttft_slo();
+        if slo > 0.0 {
+            out.push_str(&format!(
+                "# HELP tpcc_ttft_slo_seconds Configured TTFT SLO.\n\
+                 # TYPE tpcc_ttft_slo_seconds gauge\ntpcc_ttft_slo_seconds {slo}\n"
+            ));
+            let goodput = self.ttft.snapshot().fraction_below(slo);
+            if goodput.is_finite() {
+                out.push_str(&format!(
+                    "# HELP tpcc_ttft_goodput Fraction of requests meeting the TTFT SLO.\n\
+                     # TYPE tpcc_ttft_goodput gauge\ntpcc_ttft_goodput {goodput}\n"
+                ));
+            }
+        }
+        let custom = self.custom.lock().unwrap();
+        for (k, v) in custom.iter() {
+            if !v.is_finite() {
+                continue;
+            }
+            let name = prom_sanitize(k);
+            out.push_str(&format!("# TYPE tpcc_{name} gauge\ntpcc_{name} {v}\n"));
+        }
+        out
+    }
+}
+
+/// Map an arbitrary custom-metric key onto the Prometheus metric-name
+/// charset `[a-zA-Z0-9_:]` (leading digits get a `_` prefix).
+fn prom_sanitize(key: &str) -> String {
+    let mut name = String::with_capacity(key.len());
+    for c in key.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            name.push(c);
+        } else {
+            name.push('_');
+        }
+    }
+    if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        name.insert(0, '_');
+    }
+    if name.is_empty() {
+        name.push('_');
+    }
+    name
 }
 
 #[cfg(test)]
@@ -269,6 +483,98 @@ mod tests {
         assert_eq!(j.get("ttft_slo_s").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("ttft_goodput").unwrap().as_f64(), Some(0.5));
         assert_eq!(j.get("queue_wait_p50_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn gauge_up_and_down() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        // clones share the underlying cell — the registry's view tracks
+        // the subsystem holding the handle
+        let h = g.clone();
+        h.add(4);
+        assert_eq!(g.get(), 5);
+        g.set(0);
+        assert_eq!(h.get(), 0);
+    }
+
+    #[test]
+    fn custom_keys_cannot_shadow_builtins() {
+        let r = Registry::default();
+        r.ttft.record(0.25);
+        r.set("ttft_p50_s", 99.0); // hostile/buggy caller
+        r.set("kv_blocks_in_use", 7.0);
+        let j = r.to_json();
+        // the real metrics survive ...
+        assert_eq!(j.get("ttft_p50_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("kv_blocks_in_use").unwrap().as_f64(), Some(0.0));
+        // ... and the custom values land under a quarantined name
+        assert_eq!(j.get("custom_ttft_p50_s").unwrap().as_f64(), Some(99.0));
+        assert_eq!(j.get("custom_kv_blocks_in_use").unwrap().as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_lints_clean() {
+        let r = Registry::default();
+        r.requests_completed.add(3);
+        r.kv_blocks_in_use.add(2);
+        r.set_ttft_slo(0.25);
+        for v in [0.1, 0.2, 0.3] {
+            r.ttft.record(v);
+        }
+        r.set("policy_calls_scheme_fp4/e2m1", 5.0); // needs sanitizing
+        let text = r.to_prometheus();
+        // line lint: every non-comment line is `name[{labels}] value`
+        // with a valid metric name and a parseable float
+        let mut metric_lines = 0;
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            metric_lines += 1;
+            let (name_part, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                name.starts_with("tpcc_")
+                    && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in: {line}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+        }
+        assert!(metric_lines > 10, "suspiciously small exposition:\n{text}");
+        assert!(text.contains("tpcc_requests_completed 3\n"));
+        assert!(text.contains("tpcc_kv_blocks_in_use 2\n"));
+        assert!(text.contains("# TYPE tpcc_ttft_seconds summary\n"));
+        assert!(text.contains("tpcc_ttft_seconds_count 3\n"));
+        assert!(text.contains("tpcc_ttft_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("tpcc_policy_calls_scheme_fp4_e2m1 5\n"));
+        // empty histograms still expose _sum/_count, no NaN quantiles
+        assert!(text.contains("tpcc_e2e_seconds_count 0\n"));
+        assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn sample_history_captures_counters_and_slo_hits() {
+        let r = Registry::default();
+        r.set_ttft_slo(0.25);
+        r.requests_completed.add(4);
+        r.tokens_generated.add(40);
+        for v in [0.1, 0.2, 0.3, 0.4] {
+            r.ttft.record(v);
+        }
+        r.sample_history();
+        let s = r.history.latest().unwrap();
+        assert_eq!(s.requests_completed, 4);
+        assert_eq!(s.tokens_generated, 40);
+        assert_eq!(s.ttft_count, 4);
+        assert_eq!(s.ttft_slo_hits, 2); // 0.1, 0.2 meet the 0.25 SLO
+        let body = r.history_json().to_string();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("samples").unwrap().as_i64(), Some(1));
     }
 
     #[test]

@@ -1,0 +1,505 @@
+//! Per-request flight recorder: a bounded exemplar store of structured
+//! request records behind `GET /debug/requests` and `tpcc explain`.
+//!
+//! Every completed request leaves one [`RequestRecord`] — queue wait,
+//! prefill/decode phase breakdown (folded from the engine's per-step
+//! timings), wire bytes per site group, batch occupancy, rank
+//! fabric-wait — in two bounded views: the most-recent-K (a ring) and
+//! the slowest-K by end-to-end latency (a sorted keep-list). Recent
+//! answers "what is the server doing now"; slowest keeps the tail
+//! exemplars that a sampling profiler would lose, so p99 regressions
+//! stay attributable after the fact.
+//!
+//! [`attribution`] turns a record set into the p50-vs-tail table
+//! `tpcc explain` prints: per phase/site, the mean cost in the p50
+//! cohort vs the tail cohort and each component's share of the
+//! end-to-end gap — i.e. *which phase grows in the tail*.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{self, Json};
+
+/// Most-recent retention (ring).
+pub const DEFAULT_RECENT_K: usize = 256;
+/// Slowest-by-e2e retention (keep-list).
+pub const DEFAULT_SLOWEST_K: usize = 64;
+
+/// Site-group labels matching the engine's `(kind × phase)` rollup
+/// order (see `TpEngine::group_wire_bytes`).
+pub const SITE_GROUPS: [&str; 4] = ["attn.prefill", "attn.decode", "mlp.prefill", "mlp.decode"];
+
+/// One phase's cost breakdown (prefill or the summed decode steps).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    pub compute_s: f64,
+    pub codec_s: f64,
+    pub link_s: f64,
+    pub wire_bytes: u64,
+}
+
+/// The flight record of one completed request.
+///
+/// Decode-phase costs and the engine-level deltas (`site_wire_bytes`,
+/// `fabric_wait_s`) are *window* attributions: decode batches are
+/// shared, so a step's cost is charged to every request active in it,
+/// and the wire/fabric deltas cover the request's residency window
+/// including concurrent traffic. That is the honest per-request view a
+/// continuous batcher can give without per-row cost splitting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    /// Peak decode-batch occupancy while this request was resident.
+    pub batch_peak: usize,
+    pub queue_wait_s: f64,
+    pub ttft_s: f64,
+    pub e2e_s: f64,
+    pub tpot_s: f64,
+    pub prefill: PhaseCost,
+    pub decode: PhaseCost,
+    /// Rank fabric-wait accumulated engine-wide over this request's
+    /// residency (parallel rank runtime only; 0 under `--rank-threads off`).
+    pub fabric_wait_s: f64,
+    /// Engine wire bytes per site group ([`SITE_GROUPS`] order) over
+    /// this request's residency window.
+    pub site_wire_bytes: [u64; 4],
+}
+
+struct FlightInner {
+    recent: VecDeque<Arc<RequestRecord>>,
+    /// Sorted slowest-first by `e2e_s`, truncated to `slowest_k`.
+    slowest: Vec<Arc<RequestRecord>>,
+    total: u64,
+}
+
+/// Bounded exemplar store of [`RequestRecord`]s.
+pub struct FlightRecorder {
+    recent_k: usize,
+    slowest_k: usize,
+    inner: Mutex<FlightInner>,
+    /// Resolved compression scheme summary per site group, set once at
+    /// engine bind ([`SITE_GROUPS`] order) — lets `/debug/requests`
+    /// say which scheme each group's wire bytes were paid under.
+    schemes: Mutex<[String; 4]>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> FlightRecorder {
+        FlightRecorder::new(DEFAULT_RECENT_K, DEFAULT_SLOWEST_K)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(recent_k: usize, slowest_k: usize) -> FlightRecorder {
+        FlightRecorder {
+            recent_k: recent_k.max(1),
+            slowest_k: slowest_k.max(1),
+            inner: Mutex::new(FlightInner {
+                recent: VecDeque::with_capacity(recent_k.max(1)),
+                slowest: Vec::with_capacity(slowest_k.max(1) + 1),
+                total: 0,
+            }),
+            schemes: Mutex::new(std::array::from_fn(|_| String::new())),
+        }
+    }
+
+    pub fn set_group_schemes(&self, schemes: [String; 4]) {
+        *self.schemes.lock().unwrap() = schemes;
+    }
+
+    pub fn record(&self, rec: RequestRecord) {
+        let rec = Arc::new(rec);
+        let mut inner = self.inner.lock().unwrap();
+        inner.total += 1;
+        if inner.recent.len() == self.recent_k {
+            inner.recent.pop_front();
+        }
+        inner.recent.push_back(rec.clone());
+        // keep `slowest` sorted descending by e2e; NaN sorts last so it
+        // can never displace a real exemplar
+        let key = |r: &RequestRecord| if r.e2e_s.is_finite() { r.e2e_s } else { f64::NEG_INFINITY };
+        let pos = inner
+            .slowest
+            .partition_point(|r| key(r) >= key(&rec));
+        if pos < self.slowest_k {
+            inner.slowest.insert(pos, rec);
+            inner.slowest.truncate(self.slowest_k);
+        }
+    }
+
+    /// Requests recorded over the recorder's lifetime (≥ retained).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Union of the recent and slowest views, deduplicated by id.
+    pub fn records(&self) -> Vec<Arc<RequestRecord>> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<Arc<RequestRecord>> = inner.recent.iter().cloned().collect();
+        for r in &inner.slowest {
+            if !out.iter().any(|o| o.id == r.id) {
+                out.push(r.clone());
+            }
+        }
+        out
+    }
+
+    /// The `GET /debug/requests` body.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let schemes = self.schemes.lock().unwrap();
+        let dump = |list: &mut dyn Iterator<Item = &Arc<RequestRecord>>| {
+            Json::Arr(list.map(|r| record_json(r)).collect())
+        };
+        json::obj(vec![
+            ("total", json::num(inner.total as f64)),
+            ("recent_k", json::num(self.recent_k as f64)),
+            ("slowest_k", json::num(self.slowest_k as f64)),
+            ("site_groups", Json::Arr(SITE_GROUPS.iter().map(|g| json::s(g)).collect())),
+            ("group_schemes", Json::Arr(schemes.iter().map(|g| json::s(g)).collect())),
+            ("recent", dump(&mut inner.recent.iter())),
+            ("slowest", dump(&mut inner.slowest.iter())),
+        ])
+    }
+}
+
+fn phase_json(p: &PhaseCost) -> Json {
+    json::obj(vec![
+        ("compute_s", json::num(p.compute_s)),
+        ("codec_s", json::num(p.codec_s)),
+        ("link_s", json::num(p.link_s)),
+        ("wire_bytes", json::num(p.wire_bytes as f64)),
+    ])
+}
+
+fn record_json(r: &RequestRecord) -> Json {
+    json::obj(vec![
+        ("id", json::num(r.id as f64)),
+        ("prompt_tokens", json::num(r.prompt_tokens as f64)),
+        ("new_tokens", json::num(r.new_tokens as f64)),
+        ("batch_peak", json::num(r.batch_peak as f64)),
+        ("queue_wait_s", json::num_or_null(r.queue_wait_s)),
+        ("ttft_s", json::num_or_null(r.ttft_s)),
+        ("e2e_s", json::num_or_null(r.e2e_s)),
+        ("tpot_s", json::num_or_null(r.tpot_s)),
+        ("prefill", phase_json(&r.prefill)),
+        ("decode", phase_json(&r.decode)),
+        ("fabric_wait_s", json::num(r.fabric_wait_s)),
+        (
+            "site_wire_bytes",
+            Json::Arr(r.site_wire_bytes.iter().map(|&b| json::num(b as f64)).collect()),
+        ),
+    ])
+}
+
+fn phase_from_json(j: &Json) -> PhaseCost {
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    PhaseCost {
+        compute_s: f("compute_s"),
+        codec_s: f("codec_s"),
+        link_s: f("link_s"),
+        wire_bytes: f("wire_bytes") as u64,
+    }
+}
+
+fn record_from_json(j: &Json) -> RequestRecord {
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let u = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let mut site_wire_bytes = [0u64; 4];
+    if let Some(arr) = j.get("site_wire_bytes").and_then(Json::as_arr) {
+        for (i, v) in arr.iter().take(4).enumerate() {
+            site_wire_bytes[i] = v.as_f64().unwrap_or(0.0) as u64;
+        }
+    }
+    RequestRecord {
+        id: u("id"),
+        prompt_tokens: u("prompt_tokens") as usize,
+        new_tokens: u("new_tokens") as usize,
+        batch_peak: u("batch_peak") as usize,
+        queue_wait_s: f("queue_wait_s"),
+        ttft_s: f("ttft_s"),
+        e2e_s: f("e2e_s"),
+        tpot_s: f("tpot_s"),
+        prefill: j.get("prefill").map(phase_from_json).unwrap_or_default(),
+        decode: j.get("decode").map(phase_from_json).unwrap_or_default(),
+        fabric_wait_s: j.get("fabric_wait_s").and_then(Json::as_f64).unwrap_or(0.0),
+        site_wire_bytes,
+    }
+}
+
+/// Parse a `GET /debug/requests` body back into records (deduplicated
+/// by id) — the remote half of `tpcc explain --addr`.
+pub fn records_from_json(body: &Json) -> Vec<RequestRecord> {
+    let mut out: Vec<RequestRecord> = Vec::new();
+    for key in ["recent", "slowest"] {
+        if let Some(arr) = body.get(key).and_then(Json::as_arr) {
+            for j in arr {
+                let r = record_from_json(j);
+                if !out.iter().any(|o| o.id == r.id) {
+                    out.push(r);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One row of the p50-vs-tail attribution table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttrRow {
+    pub name: &'static str,
+    /// Mean over the p50 cohort.
+    pub p50: f64,
+    /// Mean over the tail cohort.
+    pub tail: f64,
+    pub delta: f64,
+    /// This component's share of the cohorts' e2e gap, in percent
+    /// (phases only; NaN when the gap is ~0).
+    pub share_pct: f64,
+}
+
+/// The `tpcc explain` attribution: which phase/site grows in the tail.
+#[derive(Debug, Clone, Default)]
+pub struct Attribution {
+    pub n: usize,
+    pub p50_n: usize,
+    pub tail_n: usize,
+    pub p50_e2e_s: f64,
+    pub tail_e2e_s: f64,
+    /// Per-phase rows in seconds.
+    pub phases: Vec<AttrRow>,
+    /// Per-site-group rows in wire bytes.
+    pub sites: Vec<AttrRow>,
+}
+
+/// Split records into a p50 cohort (the faster half by e2e) and a tail
+/// cohort (the slowest ~5%, at least one) and attribute the e2e gap to
+/// phases and site groups. Records without a finite e2e are excluded.
+pub fn attribution(records: &[RequestRecord]) -> Option<Attribution> {
+    let mut recs: Vec<&RequestRecord> = records.iter().filter(|r| r.e2e_s.is_finite()).collect();
+    if recs.len() < 2 {
+        return None;
+    }
+    recs.sort_by(|a, b| a.e2e_s.partial_cmp(&b.e2e_s).unwrap());
+    let n = recs.len();
+    let p50_n = n.div_ceil(2);
+    let tail_n = (n / 20).max(1);
+    let p50 = &recs[..p50_n];
+    let tail = &recs[n - tail_n..];
+    fn mean(cohort: &[&RequestRecord], f: &dyn Fn(&RequestRecord) -> f64) -> f64 {
+        cohort.iter().map(|r| f(r)).filter(|v| v.is_finite()).sum::<f64>() / cohort.len() as f64
+    }
+    let p50_e2e = mean(p50, &|r| r.e2e_s);
+    let tail_e2e = mean(tail, &|r| r.e2e_s);
+    let gap = tail_e2e - p50_e2e;
+    type Field = fn(&RequestRecord) -> f64;
+    let phase_fields: [(&'static str, Field); 8] = [
+        ("queue_wait", |r| r.queue_wait_s),
+        ("prefill.compute", |r| r.prefill.compute_s),
+        ("prefill.codec", |r| r.prefill.codec_s),
+        ("prefill.link", |r| r.prefill.link_s),
+        ("decode.compute", |r| r.decode.compute_s),
+        ("decode.codec", |r| r.decode.codec_s),
+        ("decode.link", |r| r.decode.link_s),
+        ("fabric_wait", |r| r.fabric_wait_s),
+    ];
+    let phases = phase_fields
+        .iter()
+        .map(|&(name, f)| {
+            let a = mean(p50, &f);
+            let b = mean(tail, &f);
+            let delta = b - a;
+            let share_pct = if gap.abs() > 1e-12 { delta / gap * 100.0 } else { f64::NAN };
+            AttrRow { name, p50: a, tail: b, delta, share_pct }
+        })
+        .collect();
+    let sites = SITE_GROUPS
+        .iter()
+        .enumerate()
+        .map(|(gi, &name)| {
+            let f = move |r: &RequestRecord| r.site_wire_bytes[gi] as f64;
+            let a = mean(p50, &f);
+            let b = mean(tail, &f);
+            AttrRow { name, p50: a, tail: b, delta: b - a, share_pct: f64::NAN }
+        })
+        .collect();
+    Some(Attribution {
+        n,
+        p50_n,
+        tail_n,
+        p50_e2e_s: p50_e2e,
+        tail_e2e_s: tail_e2e,
+        phases,
+        sites,
+    })
+}
+
+/// Render the attribution as the table `tpcc explain` prints.
+pub fn render_attribution(a: &Attribution) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tail attribution over {} requests (p50 cohort n={}, tail cohort n={})\n",
+        a.n, a.p50_n, a.tail_n
+    ));
+    out.push_str(&format!(
+        "e2e: p50-cohort mean {:.4}s, tail-cohort mean {:.4}s, gap {:+.4}s\n\n",
+        a.p50_e2e_s,
+        a.tail_e2e_s,
+        a.tail_e2e_s - a.p50_e2e_s
+    ));
+    out.push_str(&format!(
+        "{:<18} {:>12} {:>12} {:>12} {:>10}\n",
+        "phase", "p50 (s)", "tail (s)", "delta (s)", "share"
+    ));
+    for row in &a.phases {
+        let share = if row.share_pct.is_finite() {
+            format!("{:.1}%", row.share_pct)
+        } else {
+            "-".to_string()
+        };
+        out.push_str(&format!(
+            "{:<18} {:>12.6} {:>12.6} {:>+12.6} {:>10}\n",
+            row.name, row.p50, row.tail, row.delta, share
+        ));
+    }
+    out.push_str(&format!(
+        "\n{:<18} {:>12} {:>12} {:>12}\n",
+        "site group", "p50 (MB)", "tail (MB)", "delta (MB)"
+    ));
+    for row in &a.sites {
+        out.push_str(&format!(
+            "{:<18} {:>12.3} {:>12.3} {:>+12.3}\n",
+            row.name,
+            row.p50 / 1e6,
+            row.tail / 1e6,
+            row.delta / 1e6
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, e2e: f64) -> RequestRecord {
+        RequestRecord { id, e2e_s: e2e, ttft_s: e2e / 2.0, ..RequestRecord::default() }
+    }
+
+    #[test]
+    fn recent_ring_keeps_latest_k() {
+        let fr = FlightRecorder::new(3, 2);
+        for i in 0..10 {
+            fr.record(rec(i, 0.1));
+        }
+        assert_eq!(fr.total(), 10);
+        let inner = fr.inner.lock().unwrap();
+        let ids: Vec<u64> = inner.recent.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn slowest_list_keeps_tail_exemplars() {
+        let fr = FlightRecorder::new(2, 3);
+        // slow outliers arrive early, then a flood of fast requests
+        fr.record(rec(0, 9.0));
+        fr.record(rec(1, 7.0));
+        for i in 2..50 {
+            fr.record(rec(i, 0.01 * i as f64));
+        }
+        fr.record(rec(50, 8.0));
+        let inner = fr.inner.lock().unwrap();
+        let slowest: Vec<(u64, f64)> = inner.slowest.iter().map(|r| (r.id, r.e2e_s)).collect();
+        assert_eq!(slowest, vec![(0, 9.0), (50, 8.0), (1, 7.0)]);
+        // the recent ring has long forgotten the outliers
+        assert!(inner.recent.iter().all(|r| r.id >= 49));
+    }
+
+    #[test]
+    fn nan_e2e_never_displaces_real_exemplars() {
+        let fr = FlightRecorder::new(4, 2);
+        fr.record(rec(0, 1.0));
+        fr.record(rec(1, f64::NAN));
+        fr.record(rec(2, 2.0));
+        let inner = fr.inner.lock().unwrap();
+        let ids: Vec<u64> = inner.slowest.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 0]);
+    }
+
+    #[test]
+    fn records_union_dedups_by_id() {
+        let fr = FlightRecorder::new(4, 4);
+        for i in 0..3 {
+            fr.record(rec(i, i as f64));
+        }
+        // all three are in both views; union must not double-count
+        assert_eq!(fr.records().len(), 3);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let fr = FlightRecorder::new(4, 4);
+        let mut r = rec(7, 1.25);
+        r.prompt_tokens = 12;
+        r.new_tokens = 5;
+        r.batch_peak = 3;
+        r.prefill = PhaseCost { compute_s: 0.5, codec_s: 0.1, link_s: 0.2, wire_bytes: 1024 };
+        r.site_wire_bytes = [1, 2, 3, 4];
+        fr.record(r.clone());
+        fr.set_group_schemes(std::array::from_fn(|_| "none".to_string()));
+        let body = fr.to_json().to_string();
+        let parsed = Json::parse(&body).unwrap();
+        let back = records_from_json(&parsed);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].id, 7);
+        assert_eq!(back[0].prefill, r.prefill);
+        assert_eq!(back[0].site_wire_bytes, [1, 2, 3, 4]);
+        assert_eq!(back[0].e2e_s, 1.25);
+        assert_eq!(
+            parsed.get("group_schemes").unwrap().idx(0).unwrap().as_str(),
+            Some("none")
+        );
+    }
+
+    #[test]
+    fn attribution_blames_the_growing_phase() {
+        // fast cohort: decode.compute 10ms; tail: decode.link blows up
+        let mut records = Vec::new();
+        for i in 0..40u64 {
+            let mut r = rec(i, 0.1);
+            r.decode.compute_s = 0.01;
+            r.decode.link_s = 0.001;
+            records.push(r);
+        }
+        for i in 40..42u64 {
+            let mut r = rec(i, 0.5);
+            r.decode.compute_s = 0.01;
+            r.decode.link_s = 0.4;
+            r.site_wire_bytes = [0, 8_000_000, 0, 0];
+            records.push(r);
+        }
+        let a = attribution(&records).unwrap();
+        assert_eq!(a.n, 42);
+        assert!(a.tail_e2e_s > a.p50_e2e_s);
+        let link = a.phases.iter().find(|r| r.name == "decode.link").unwrap();
+        let comp = a.phases.iter().find(|r| r.name == "decode.compute").unwrap();
+        assert!(link.delta > 0.3, "link delta {}", link.delta);
+        assert!(comp.delta.abs() < 1e-9);
+        assert!(link.share_pct > 90.0, "share {}", link.share_pct);
+        let attn_dec = a.sites.iter().find(|r| r.name == "attn.decode").unwrap();
+        assert!(attn_dec.delta > 1e6);
+        // render never panics and names the culprit
+        let table = render_attribution(&a);
+        assert!(table.contains("decode.link"));
+        assert!(table.contains("attn.decode"));
+    }
+
+    #[test]
+    fn attribution_needs_two_finite_records() {
+        assert!(attribution(&[]).is_none());
+        assert!(attribution(&[rec(0, 1.0)]).is_none());
+        assert!(attribution(&[rec(0, 1.0), rec(1, f64::NAN)]).is_none());
+    }
+}

@@ -38,6 +38,7 @@
 //! and link time is *modeled* (virtual clock), not walled.
 
 pub mod export;
+pub mod flight;
 
 use std::cell::RefCell;
 use std::collections::VecDeque;

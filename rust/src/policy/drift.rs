@@ -1,0 +1,410 @@
+//! Online compression-error sentinel: does the calibration-time error
+//! budget still hold under live traffic?
+//!
+//! The `paper`/`auto` policies pick per-site schemes from errors
+//! measured on a *calibration* sample ([`super::Calibration`]). Live
+//! activations drift — longer prompts, different domains, deeper decode
+//! positions — and a site whose observed error exceeds its budget is
+//! silently degrading quality. The sentinel streams the same metric the
+//! calibrator uses (relative RMS of the fake-quantized reduce vs the
+//! exact reduce, [`observed_error`]) on a sampled subset of live
+//! collectives: every [`DEFAULT_SAMPLE_EVERY`]-th forward pass measures
+//! every compressed site it touches on a bounded prefix of the real
+//! partials, so the steady-state cost is a few microseconds per sampled
+//! forward.
+//!
+//! A site *trips* after [`DEFAULT_TRIP_AFTER`] consecutive over-budget
+//! samples (one outlier prompt must not flip policy). Tripped sites are
+//! reported as drift counters on `/metrics`, as a `policy_drift`
+//! section on `GET /policy`, and through
+//! `TpEngine::apply_drift_fallback`, which rebinds them to `none` —
+//! the never-worse scheme (bit-exact, zero error) — and marks them
+//! `fell_back` so they are not re-tripped.
+
+use crate::mxfmt::Compressor;
+use crate::util::json::{self, Json};
+
+use super::{PolicyTable, Site};
+
+/// Measure (and pay for) the error on every 16th forward pass.
+pub const DEFAULT_SAMPLE_EVERY: u64 = 16;
+
+/// Consecutive over-budget samples before a site trips.
+pub const DEFAULT_TRIP_AFTER: u64 = 3;
+
+/// Cap on values measured per sample (same target the calibrator uses).
+const TARGET_SAMPLE_VALUES: usize = 512;
+
+/// Relative RMS error (a fraction, not percent) of fake-quantizing each
+/// rank's partial with `comp` and summing, vs the exact sum — the live
+/// twin of [`super::Calibration::site_error`], computed on a bounded
+/// prefix of the partials. `align` (the model's `d_model`) keeps the
+/// prefix a whole number of channel rows so channel-wise schemes see
+/// well-formed input; prefixes shorter than one row use the full
+/// available length.
+pub fn observed_error(partials: &[&[f32]], comp: &dyn Compressor, align: usize) -> f64 {
+    if partials.is_empty() {
+        return 0.0;
+    }
+    let len = partials.iter().map(|p| p.len()).min().unwrap_or(0);
+    if len == 0 {
+        return 0.0;
+    }
+    let align = align.max(1);
+    let take = if len <= TARGET_SAMPLE_VALUES.max(align) {
+        len
+    } else {
+        let rows = (TARGET_SAMPLE_VALUES.max(align) / align).max(1);
+        (rows * align).min(len)
+    };
+    let mut exact = vec![0.0f32; take];
+    for p in partials {
+        for (e, v) in exact.iter_mut().zip(&p[..take]) {
+            *e += v;
+        }
+    }
+    let mut acc = vec![0.0f32; take];
+    let mut scratch = Vec::new();
+    for p in partials {
+        comp.requant_add(&p[..take], &mut acc, &mut scratch);
+    }
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..take {
+        num += ((acc[i] - exact[i]) as f64).powi(2);
+        den += (exact[i] as f64).powi(2);
+    }
+    if den <= 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+/// Streaming drift state for one site.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SiteDrift {
+    pub samples: u64,
+    pub err_sum_pct: f64,
+    pub err_max_pct: f64,
+    pub over_budget: u64,
+    pub consecutive_over: u64,
+    /// Sustained over-budget drift detected.
+    pub tripped: bool,
+    /// The policy engine already rebound this site to its never-worse
+    /// scheme; it is excluded from further tripping.
+    pub fell_back: bool,
+}
+
+impl SiteDrift {
+    pub fn err_mean_pct(&self) -> f64 {
+        if self.samples == 0 {
+            f64::NAN
+        } else {
+            self.err_sum_pct / self.samples as f64
+        }
+    }
+}
+
+/// The online error sentinel bound to one engine policy binding.
+pub struct Sentinel {
+    budget_pct: f64,
+    sample_every: u64,
+    trip_after: u64,
+    forwards: u64,
+    sampling: bool,
+    sites: Vec<SiteDrift>,
+    version: u64,
+}
+
+impl Sentinel {
+    pub fn new(n_sites: usize, budget_pct: f64) -> Sentinel {
+        Sentinel::with_tuning(n_sites, budget_pct, DEFAULT_SAMPLE_EVERY, DEFAULT_TRIP_AFTER)
+    }
+
+    pub fn with_tuning(
+        n_sites: usize,
+        budget_pct: f64,
+        sample_every: u64,
+        trip_after: u64,
+    ) -> Sentinel {
+        Sentinel {
+            budget_pct,
+            sample_every: sample_every.max(1),
+            trip_after: trip_after.max(1),
+            forwards: 0,
+            sampling: false,
+            sites: vec![SiteDrift::default(); n_sites],
+            version: 0,
+        }
+    }
+
+    pub fn budget_pct(&self) -> f64 {
+        self.budget_pct
+    }
+
+    /// Called once per forward pass; returns whether this pass measures
+    /// observed error at its sites. The first pass always samples so a
+    /// short run still produces sentinel data.
+    pub fn begin_forward(&mut self) -> bool {
+        self.sampling = self.forwards % self.sample_every == 0;
+        self.forwards += 1;
+        self.sampling
+    }
+
+    /// Whether the forward pass opened by the last
+    /// [`begin_forward`](Self::begin_forward) is a sampling pass.
+    pub fn sampling_now(&self) -> bool {
+        self.sampling
+    }
+
+    /// Fold one observed-error measurement (percent) for a site.
+    pub fn observe(&mut self, site_index: usize, err_pct: f64) {
+        let Some(s) = self.sites.get_mut(site_index) else { return };
+        if !err_pct.is_finite() {
+            return;
+        }
+        s.samples += 1;
+        s.err_sum_pct += err_pct;
+        s.err_max_pct = s.err_max_pct.max(err_pct);
+        if err_pct > self.budget_pct {
+            s.over_budget += 1;
+            s.consecutive_over += 1;
+            if s.consecutive_over >= self.trip_after && !s.tripped && !s.fell_back {
+                s.tripped = true;
+            }
+        } else {
+            s.consecutive_over = 0;
+        }
+        self.version += 1;
+    }
+
+    /// Site indices currently tripped and not yet fallen back — what
+    /// `apply_drift_fallback` acts on.
+    pub fn tripped(&self) -> Vec<usize> {
+        self.sites
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.tripped && !s.fell_back)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Record that the policy engine rebound `site_index` to its
+    /// never-worse scheme.
+    pub fn mark_fallback(&mut self, site_index: usize) {
+        if let Some(s) = self.sites.get_mut(site_index) {
+            s.tripped = false;
+            s.fell_back = true;
+            s.consecutive_over = 0;
+            self.version += 1;
+        }
+    }
+
+    pub fn site(&self, site_index: usize) -> Option<&SiteDrift> {
+        self.sites.get(site_index)
+    }
+
+    /// Bumped on every state change — the coordinator refreshes the
+    /// cached `/policy` body only when this moves.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Drift counters mirrored onto `/metrics`.
+    pub fn metrics(&self) -> Vec<(&'static str, f64)> {
+        let samples: u64 = self.sites.iter().map(|s| s.samples).sum();
+        let over: u64 = self.sites.iter().map(|s| s.over_budget).sum();
+        let tripped = self.sites.iter().filter(|s| s.tripped).count();
+        let fell_back = self.sites.iter().filter(|s| s.fell_back).count();
+        let max_err = self.sites.iter().map(|s| s.err_max_pct).fold(0.0f64, f64::max);
+        vec![
+            ("drift_budget_pct", self.budget_pct),
+            ("drift_samples_total", samples as f64),
+            ("drift_over_budget_total", over as f64),
+            ("drift_sites_tripped", tripped as f64),
+            ("drift_sites_fell_back", fell_back as f64),
+            ("drift_max_err_pct", max_err),
+        ]
+    }
+
+    /// The `policy_drift` section of `GET /policy`. Only sites with at
+    /// least one sample get a row.
+    pub fn to_json(&self, n_layers: usize) -> Json {
+        let all = Site::all(n_layers);
+        let label = |i: usize| {
+            all.get(i).map(|s| s.label()).unwrap_or_else(|| format!("site{i}"))
+        };
+        let mut rows = Vec::new();
+        let mut tripped = Vec::new();
+        let mut fell_back = Vec::new();
+        for (i, s) in self.sites.iter().enumerate() {
+            if s.tripped {
+                tripped.push(json::s(&label(i)));
+            }
+            if s.fell_back {
+                fell_back.push(json::s(&label(i)));
+            }
+            if s.samples == 0 {
+                continue;
+            }
+            rows.push(json::obj(vec![
+                ("site", json::s(&label(i))),
+                ("samples", json::num(s.samples as f64)),
+                ("err_mean_pct", json::num_or_null(s.err_mean_pct())),
+                ("err_max_pct", json::num(s.err_max_pct)),
+                ("over_budget", json::num(s.over_budget as f64)),
+                ("tripped", Json::Bool(s.tripped)),
+                ("fell_back", Json::Bool(s.fell_back)),
+            ]));
+        }
+        json::obj(vec![
+            ("budget_pct", json::num(self.budget_pct)),
+            ("sample_every", json::num(self.sample_every as f64)),
+            ("trip_after", json::num(self.trip_after as f64)),
+            ("forwards", json::num(self.forwards as f64)),
+            ("tripped", Json::Arr(tripped)),
+            ("fell_back", Json::Arr(fell_back)),
+            ("sites", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// The fallback transform `apply_drift_fallback` binds: every tripped
+/// site moves to `none`, the never-worse scheme (bit-exact wire, zero
+/// observed error, never slower than itself under drift). Pure —
+/// testable without artifacts.
+pub fn fallback_table(table: &PolicyTable, tripped: &[usize]) -> PolicyTable {
+    let mut out = table.clone();
+    for site in Site::all(table.n_layers) {
+        if tripped.contains(&site.index()) {
+            out.set(site, "none");
+        }
+    }
+    if !tripped.is_empty() && !out.name.ends_with("+drift-fallback") {
+        out.name = format!("{}+drift-fallback", out.name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxfmt::{compressor_from_spec_ch, NoCompress};
+    use crate::policy::Calibration;
+
+    #[test]
+    fn observed_error_matches_calibrator_semantics() {
+        // the sentinel's live metric on the calibrator's own samples
+        // must agree with site_error: same math, same prefix policy
+        let calib = Calibration::synthetic(2, 192, 2, 3);
+        let comp = compressor_from_spec_ch("fp4_e2m1_b32_e8m0", 192).unwrap();
+        for site in Site::all(2) {
+            let refs: Vec<&[f32]> = calib.sample(site).iter().map(|v| v.as_slice()).collect();
+            let live = observed_error(&refs, comp.as_ref(), 192);
+            let cal = calib.site_error(site, Some(comp.as_ref()));
+            assert!(
+                (live - cal).abs() < 1e-12,
+                "{}: live {live} vs calib {cal}",
+                site.label()
+            );
+        }
+    }
+
+    #[test]
+    fn lossless_scheme_observes_zero_error() {
+        let parts: Vec<Vec<f32>> = vec![vec![0.5f32; 64], vec![-0.25f32; 64]];
+        let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(observed_error(&refs, &NoCompress, 64), 0.0);
+        // degenerate inputs never panic
+        assert_eq!(observed_error(&[], &NoCompress, 64), 0.0);
+        let empty: &[f32] = &[];
+        assert_eq!(observed_error(&[empty], &NoCompress, 64), 0.0);
+    }
+
+    #[test]
+    fn prefix_is_bounded_and_row_aligned() {
+        // a huge partial must be cut to ~TARGET values on a d_model grid
+        let parts: Vec<Vec<f32>> = vec![vec![1.0f32; 192 * 64]; 2];
+        let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
+        // NoCompress => 0 regardless; this is a no-panic/shape test
+        assert_eq!(observed_error(&refs, &NoCompress, 192), 0.0);
+    }
+
+    #[test]
+    fn sentinel_trips_on_sustained_over_budget_drift() {
+        let mut s = Sentinel::with_tuning(4, 3.0, 4, 3);
+        // pass cadence: first forward samples, then every 4th
+        assert!(s.begin_forward());
+        assert!(!s.begin_forward());
+        assert!(!s.begin_forward());
+        assert!(!s.begin_forward());
+        assert!(s.begin_forward());
+        // one outlier does not trip
+        s.observe(1, 9.0);
+        assert!(s.tripped().is_empty());
+        s.observe(1, 1.0); // back under budget resets the streak
+        s.observe(1, 9.0);
+        s.observe(1, 9.0);
+        assert!(s.tripped().is_empty());
+        s.observe(1, 9.0); // third consecutive
+        assert_eq!(s.tripped(), vec![1]);
+        // counters reflect the history
+        let m: std::collections::BTreeMap<_, _> = s.metrics().into_iter().collect();
+        assert_eq!(m["drift_sites_tripped"], 1.0);
+        assert_eq!(m["drift_over_budget_total"], 4.0);
+        assert_eq!(m["drift_samples_total"], 6.0);
+        assert_eq!(m["drift_max_err_pct"], 9.0);
+        // fallback clears the trip and pins the site
+        let v0 = s.version();
+        s.mark_fallback(1);
+        assert!(s.version() > v0);
+        assert!(s.tripped().is_empty());
+        assert!(s.site(1).unwrap().fell_back);
+        // a fallen-back site never re-trips
+        for _ in 0..10 {
+            s.observe(1, 9.0);
+        }
+        assert!(s.tripped().is_empty());
+    }
+
+    #[test]
+    fn under_budget_stream_never_trips() {
+        let mut s = Sentinel::new(8, 3.0);
+        for _ in 0..100 {
+            s.observe(3, 1.5);
+        }
+        assert!(s.tripped().is_empty());
+        assert_eq!(s.site(3).unwrap().over_budget, 0);
+        assert!((s.site(3).unwrap().err_mean_pct() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_json_names_sites() {
+        let mut s = Sentinel::with_tuning(8, 3.0, 1, 1);
+        s.observe(0, 5.0); // l0.attn.prefill trips immediately (trip_after=1)
+        s.observe(5, 1.0);
+        let j = s.to_json(2);
+        let body = j.to_string();
+        let parsed = crate::util::json::Json::parse(&body).unwrap();
+        assert_eq!(parsed.get("budget_pct").unwrap().as_f64(), Some(3.0));
+        let tripped = parsed.get("tripped").unwrap().as_arr().unwrap();
+        assert_eq!(tripped.len(), 1);
+        assert_eq!(tripped[0].as_str(), Some("l0.attn.prefill"));
+        assert_eq!(parsed.get("sites").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn fallback_table_rebinds_tripped_sites_to_none() {
+        let table = PolicyTable::uniform(2, "fp4_e2m1_b32_e8m0");
+        let tripped = vec![1usize, 6];
+        let out = fallback_table(&table, &tripped);
+        for site in Site::all(2) {
+            let want = if tripped.contains(&site.index()) { "none" } else { "fp4_e2m1_b32_e8m0" };
+            assert_eq!(out.spec(site), want, "{}", site.label());
+        }
+        assert!(out.name.ends_with("+drift-fallback"));
+        // no trips => identity
+        let same = fallback_table(&table, &[]);
+        assert_eq!(same, table);
+    }
+}

@@ -22,6 +22,10 @@
 //! * [`SiteCosts`] / [`auto_search`] / [`paper_policy`] — the built-in
 //!   `paper` (§5.1 selection rule applied per-site) and `auto` (greedy
 //!   sensitivity search under an error budget) policies.
+//! * [`Sentinel`] / [`observed_error`] — the online drift sentinel:
+//!   streams the calibrator's error metric over sampled live
+//!   collectives and trips sites whose observed error sustains above
+//!   the calibrated budget (`policy_drift` on `GET /policy`).
 //!
 //! Seed equivalence: `uniform:<spec>` resolves every site to `<spec>`,
 //! which the engine binds to exactly the same compressor object and
@@ -30,6 +34,7 @@
 
 pub mod auto;
 pub mod calibration;
+pub mod drift;
 pub mod spec;
 
 pub use auto::{
@@ -37,6 +42,7 @@ pub use auto::{
     DEFAULT_AUTO_BUDGET_PCT, PAPER_ERR_BUDGET_PCT,
 };
 pub use calibration::Calibration;
+pub use drift::{fallback_table, observed_error, Sentinel, SiteDrift};
 pub use spec::{CompressionPolicy, PolicyTable, Selector};
 
 /// Which row-parallel collective inside a transformer layer a site

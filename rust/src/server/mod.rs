@@ -4,7 +4,13 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": "...", "max_tokens": 32, "greedy": true}
 //!   GET  /metrics   -> JSON snapshot of the registry
+//!                      (?format=prom -> Prometheus text exposition)
+//!   GET  /metrics/history -> bounded time-series ring of registry
+//!                      snapshots with windowed rates + SLO burn rate
+//!   GET  /debug/requests -> flight recorder: per-request records
+//!                      (recent-K + slowest-K), read by `tpcc explain`
 //!   GET  /policy    -> JSON of the engine's per-site compression policy
+//!                      (+ `policy_drift` from the error sentinel)
 //!   GET  /trace     -> Chrome-trace JSON of recorded spans (?last=N
 //!                      keeps the newest N; snapshot, non-destructive)
 //!   GET  /healthz
@@ -244,6 +250,18 @@ fn parse_request(stream: &mut TcpStream) -> anyhow::Result<HttpRequest> {
 }
 
 fn respond(stream: &mut TcpStream, status: u32, body: &str) -> anyhow::Result<()> {
+    respond_typed(stream, status, "application/json", body)
+}
+
+/// Prometheus text exposition content type (`/metrics?format=prom`).
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn respond_typed(
+    stream: &mut TcpStream,
+    status: u32,
+    content_type: &str,
+    body: &str,
+) -> anyhow::Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -253,7 +271,7 @@ fn respond(stream: &mut TcpStream, status: u32, body: &str) -> anyhow::Result<()
     };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
         body.len(),
         body
     )?;
@@ -275,10 +293,28 @@ fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Resu
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
         ("GET", "/metrics") => {
-            let body = handle.metrics.to_json().to_string();
+            // ?format=prom switches to the Prometheus text exposition
+            let prom = query.split('&').any(|kv| kv == "format=prom" || kv == "format=prometheus");
+            if prom {
+                let body = handle.metrics.to_prometheus();
+                respond_typed(&mut stream, 200, PROM_CONTENT_TYPE, &body)
+            } else {
+                let body = handle.metrics.to_json().to_string();
+                respond(&mut stream, 200, &body)
+            }
+        }
+        ("GET", "/metrics/history") => {
+            let body = handle.metrics.history_json().to_string();
             respond(&mut stream, 200, &body)
         }
-        ("GET", "/policy") => respond(&mut stream, 200, &handle.policy_json),
+        ("GET", "/debug/requests") => {
+            let body = handle.flight.to_json().to_string();
+            respond(&mut stream, 200, &body)
+        }
+        ("GET", "/policy") => {
+            let body = handle.policy_json.lock().unwrap().clone();
+            respond(&mut stream, 200, &body)
+        }
         ("GET", "/trace") => {
             // ?last=N trims to the newest N spans (by end time)
             let last = query

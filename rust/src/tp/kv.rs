@@ -15,6 +15,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::metrics::Gauge;
 use crate::model::ModelConfig;
 use crate::runtime::lit_f32;
 
@@ -108,6 +109,11 @@ impl KvShard {
 pub struct BatchKv {
     /// [rank] -> that rank's shard
     shards: Vec<KvShardRef>,
+    /// [slot] -> holds a live sequence's history (tracks the attached
+    /// occupancy gauge; adopt/clear are idempotent per slot)
+    occupied: Vec<bool>,
+    /// occupancy gauge (`kv_blocks_in_use`), when attached
+    gauge: Option<Gauge>,
     pub batch: usize,
     pub heads: usize, // per-rank heads (Hn)
     pub cap: usize,   // T
@@ -129,11 +135,29 @@ impl BatchKv {
                     )))
                 })
                 .collect(),
+            occupied: vec![false; batch],
+            gauge: None,
             batch,
             heads: hn,
             cap: cfg.max_seq,
             head_dim: cfg.head_dim,
         }
+    }
+
+    /// Attach an occupancy gauge: `adopt_slot` / `clear_slot` keep it at
+    /// the number of slots holding a live sequence. The gauge is only
+    /// meaningful on the cache whose slots track sequence lifetime (the
+    /// coordinator's decode cache); per-request prefill caches go
+    /// without.
+    pub fn with_gauge(mut self, gauge: Gauge) -> BatchKv {
+        gauge.add(self.occupied.iter().filter(|&&o| o).count() as i64);
+        self.gauge = Some(gauge);
+        self
+    }
+
+    /// Slots currently holding a live sequence.
+    pub fn slots_in_use(&self) -> usize {
+        self.occupied.iter().filter(|&&o| o).count()
     }
 
     /// Handle to rank `r`'s shard, for the worker thread that owns it.
@@ -177,12 +201,23 @@ impl BatchKv {
             let s = src.shards[rank].lock().unwrap();
             dst.adopt_slot(dst_slot, &s, src_slot, len);
         }
+        if !std::mem::replace(&mut self.occupied[dst_slot], true) {
+            if let Some(g) = &self.gauge {
+                g.inc();
+            }
+        }
     }
 
-    /// Zero one slot (sequence retired).
+    /// Zero one slot (sequence retired). Idempotent: the occupancy
+    /// gauge only moves when the slot actually held a sequence.
     pub fn clear_slot(&mut self, slot: usize) {
         for shard in &self.shards {
             shard.lock().unwrap().clear_slot(slot);
+        }
+        if std::mem::replace(&mut self.occupied[slot], false) {
+            if let Some(g) = &self.gauge {
+                g.dec();
+            }
         }
     }
 
@@ -286,6 +321,30 @@ mod tests {
         let kv = BatchKv::new(&c, 2, 3);
         // per rank/layer: 3*2*6*2 floats; 2 ranks * 2 layers * 2 (k+v)
         assert_eq!(kv.bytes(), 3 * 2 * 6 * 2 * 4 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn occupancy_gauge_tracks_slot_lifetime_idempotently() {
+        let c = cfg();
+        let g = Gauge::default();
+        let pre = BatchKv::new(&c, 1, 1);
+        let mut kv = BatchKv::new(&c, 1, 4).with_gauge(g.clone());
+        assert_eq!(g.get(), 0);
+        kv.adopt_slot(2, &pre, 0, 1);
+        kv.adopt_slot(0, &pre, 0, 1);
+        assert_eq!(g.get(), 2);
+        assert_eq!(kv.slots_in_use(), 2);
+        // re-adopting an occupied slot must not double-count
+        kv.adopt_slot(2, &pre, 0, 1);
+        assert_eq!(g.get(), 2);
+        kv.clear_slot(2);
+        assert_eq!(g.get(), 1);
+        // clearing an empty slot must not go negative
+        kv.clear_slot(2);
+        kv.clear_slot(3);
+        assert_eq!(g.get(), 1);
+        kv.clear_slot(0);
+        assert_eq!(g.get(), 0);
     }
 
     #[test]

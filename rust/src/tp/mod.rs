@@ -344,6 +344,11 @@ pub struct TpEngine {
     /// coordinator); disabled until serving / `tpcc trace` / the
     /// rankpar bench turns it on
     tracer: Arc<Tracer>,
+    /// online compression-error sentinel: streams observed quantization
+    /// error on sampled forwards against the calibrated budget. Rebuilt
+    /// (drift history reset) whenever a new policy binds —
+    /// `apply_drift_fallback` carries the history across its own rebind.
+    sentinel: policy::Sentinel,
     /// monotonically increasing forward-step id, stamped as the span
     /// `pid` of engine-level timelines
     next_step: u64,
@@ -399,6 +404,7 @@ impl TpEngine {
             pool: None,
             rank_busy: vec![RankBusy::default(); opts_tp],
             tracer,
+            sentinel: policy::Sentinel::new(n_sites, policy::DEFAULT_AUTO_BUDGET_PCT),
             next_step: 0,
             reduce_buf: Vec::new(),
             comm_scratch: collective::CommScratch::default(),
@@ -523,9 +529,17 @@ impl TpEngine {
         &self.policy
     }
 
-    /// JSON description of the bound policy (served at `GET /policy`).
+    /// JSON description of the bound policy (served at `GET /policy`),
+    /// with a `policy_drift` section from the online sentinel.
     pub fn policy_json(&self) -> Json {
-        self.policy.to_json()
+        let mut j = self.policy.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "policy_drift".to_string(),
+                self.sentinel.to_json(self.cfg.n_layers),
+            );
+        }
+        j
     }
 
     /// Per-site collective telemetry, indexed by [`Site::index`].
@@ -620,7 +634,107 @@ impl TpEngine {
         if let Some(pool) = &self.pool {
             pool.bind(self.bind_spec());
         }
+        // a new binding means a new error budget and a clean drift slate
+        self.sentinel =
+            policy::Sentinel::new(Site::count(self.cfg.n_layers), self.sentinel_budget());
         Ok(())
+    }
+
+    /// Error budget (percent) the drift sentinel compares observed
+    /// per-site error against: the budget the bound policy was searched
+    /// under, or the default auto budget for uniform/rule policies.
+    fn sentinel_budget(&self) -> f64 {
+        let p = self.opts.policy.as_str();
+        if p == "paper" {
+            policy::PAPER_ERR_BUDGET_PCT
+        } else if p == "auto" || p.starts_with("auto:") {
+            parse_budget(p, "auto").unwrap_or(policy::DEFAULT_AUTO_BUDGET_PCT)
+        } else if p == "auto-live" || p.starts_with("auto-live:") {
+            parse_budget(p, "auto-live").unwrap_or(policy::DEFAULT_AUTO_BUDGET_PCT)
+        } else {
+            policy::DEFAULT_AUTO_BUDGET_PCT
+        }
+    }
+
+    /// The online drift sentinel bound to the current policy.
+    pub fn sentinel(&self) -> &policy::Sentinel {
+        &self.sentinel
+    }
+
+    /// Mutable sentinel access (tuning cadence, injecting drift in
+    /// tests).
+    pub fn sentinel_mut(&mut self) -> &mut policy::Sentinel {
+        &mut self.sentinel
+    }
+
+    /// Drift counters the coordinator mirrors onto `/metrics`.
+    pub fn sentinel_metrics(&self) -> Vec<(&'static str, f64)> {
+        self.sentinel.metrics()
+    }
+
+    /// Rebind every tripped site to the never-worse `none` scheme,
+    /// keeping the drift history (and the fallback pins) across the
+    /// rebind. Returns the sites that fell back; empty when no site has
+    /// tripped.
+    pub fn apply_drift_fallback(&mut self) -> anyhow::Result<Vec<Site>> {
+        let tripped = self.sentinel.tripped();
+        if tripped.is_empty() {
+            return Ok(Vec::new());
+        }
+        let table = policy::fallback_table(&self.policy, &tripped);
+        // bind_policy resets the sentinel; swap the live one out so the
+        // accumulated drift evidence survives its own consequence
+        let live = std::mem::replace(&mut self.sentinel, policy::Sentinel::new(0, 1.0));
+        let bound = self.bind_policy(table);
+        self.sentinel = live;
+        bound?;
+        for &si in &tripped {
+            self.sentinel.mark_fallback(si);
+        }
+        let sites = Site::all(self.cfg.n_layers);
+        Ok(tripped.iter().filter_map(|&si| sites.get(si).copied()).collect())
+    }
+
+    /// Total fabric-wait seconds across rank workers (flight-recorder
+    /// attribution input; 0 under the sequential core).
+    pub fn fabric_wait_total(&self) -> f64 {
+        self.rank_busy.iter().map(|b| b.fabric_wait_s).sum()
+    }
+
+    /// Cumulative wire bytes per (kind × phase) site group, in
+    /// [`crate::obs::flight::SITE_GROUPS`] order: attn.prefill,
+    /// attn.decode, mlp.prefill, mlp.decode.
+    pub fn group_wire_bytes(&self) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for (ki, row) in self.group_stats.iter().enumerate() {
+            for (pi, g) in row.iter().enumerate() {
+                out[ki * 2 + pi] = g.wire_bytes;
+            }
+        }
+        out
+    }
+
+    /// Bound scheme per (kind × phase) site group, same order as
+    /// [`TpEngine::group_wire_bytes`]: the single spec when the group is
+    /// uniform, else `mixed(<n distinct>)`.
+    pub fn group_schemes(&self) -> [String; 4] {
+        std::array::from_fn(|gi| {
+            let (ki, pi) = (gi / 2, gi % 2);
+            let mut specs: Vec<&str> = Site::all(self.cfg.n_layers)
+                .into_iter()
+                .filter(|s| {
+                    let si = s.index();
+                    (si / 2) % 2 == ki && si % 2 == pi
+                })
+                .map(|s| self.policy.spec(s))
+                .collect();
+            specs.sort_unstable();
+            specs.dedup();
+            match specs.as_slice() {
+                [one] => (*one).to_string(),
+                many => format!("mixed({})", many.len()),
+            }
+        })
     }
 
     /// Synthetic per-site calibration for this engine's shape.
@@ -899,6 +1013,16 @@ impl TpEngine {
         timing.raw_bytes += rep.raw_bytes as u64;
         self.record_site(site, ci, rep.wire_bytes as u64, rep.raw_bytes as u64);
         self.clock.add_comm(total_s, rep.wire_bytes, rep.raw_bytes);
+        // drift sentinel: on sampling passes, replay a bounded prefix of
+        // the live pre-quantization partials through the bound
+        // compressor and stream the observed relative error
+        if self.sentinel.sampling_now() {
+            if let Some(c) = self.policy_comps[ci].as_deref() {
+                let refs: Vec<&[f32]> = partials.iter().map(|p| p.as_slice()).collect();
+                let err = policy::observed_error(&refs, c, self.cfg.d_model);
+                self.sentinel.observe(si, err * 100.0);
+            }
+        }
         let result = out.clone();
         self.reduce_buf = out;
         result
@@ -926,6 +1050,9 @@ impl TpEngine {
         self.next_step += 1;
         obs::set_pid(self.next_step);
         obs::set_tid(obs::TID_COORD);
+        // one drift-sampling cadence decision per forward pass; both the
+        // sequential and rank-thread cores read `sampling_now()` from it
+        self.sentinel.begin_forward();
         let _step = obs::span(if decode { "decode" } else { "prefill" }, Cat::Step);
         if self.pool.is_some() && self.calib_capture.is_none() {
             return self.forward_parallel(tokens, bb, sb, pos, kv, decode);
@@ -964,6 +1091,7 @@ impl TpEngine {
             fused: self.opts.fused,
             algo: self.algo_choice,
             pid: self.next_step,
+            sentinel_due: self.sentinel.sampling_now(),
         };
         let outcomes = {
             let pool = self.pool.as_ref().expect("forward_parallel without pool");
@@ -990,6 +1118,7 @@ impl TpEngine {
                     raw_bytes,
                     codec_s,
                     total_s,
+                    err_pct,
                 } => {
                     let (mut codec, mut total) = (*codec_s, *total_s);
                     for o in &outcomes[1..] {
@@ -1014,6 +1143,11 @@ impl TpEngine {
                     *self.algo_calls.entry(*algo).or_insert(0) += 1;
                     self.record_site(*site, *scheme_idx, *wire_bytes, *raw_bytes);
                     self.clock.add_comm(total, *wire_bytes as usize, *raw_bytes as usize);
+                    // the leader worker samples observed quantization
+                    // error on sentinel passes (NaN = unsampled)
+                    if err_pct.is_finite() {
+                        self.sentinel.observe(site.index(), *err_pct);
+                    }
                 }
             }
         }

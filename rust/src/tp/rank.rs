@@ -74,6 +74,9 @@ pub enum TraceEvent {
         raw_bytes: u64,
         codec_s: f64,
         total_s: f64,
+        /// observed quantization error (percent) sampled by the leader
+        /// worker on drift-sentinel passes; NaN when unsampled
+        err_pct: f64,
     },
 }
 
@@ -112,6 +115,9 @@ pub struct RankJob {
     pub overhead: OverheadModel,
     pub fused: bool,
     pub algo: AlgoChoice,
+    /// drift sentinel sampling flag for this pass: the leader worker
+    /// measures observed quantization error at every compressed site
+    pub sentinel_due: bool,
 }
 
 enum RankCmd {
@@ -699,6 +705,15 @@ impl Worker {
         for b in busy.iter_mut() {
             b.1.codec_s += codec_s;
         }
+        // drift sentinel: the leader worker alone samples observed
+        // quantization error on sentinel passes (identical inputs on
+        // every worker make duplicate samples pure waste)
+        let err_pct = match comp {
+            Some(c) if job.sentinel_due && self.ranks[0] == 0 => {
+                crate::policy::observed_error(&refs, c, self.cfg.d_model) * 100.0
+            }
+            _ => f64::NAN,
+        };
         trace.push(TraceEvent::Comm {
             site,
             scheme_idx: ci,
@@ -707,6 +722,7 @@ impl Worker {
             raw_bytes: rep.raw_bytes as u64,
             codec_s,
             total_s,
+            err_pct,
         });
         // the consumed x becomes next collective's scratch buffer
         self.reduce_buf = x;
@@ -800,6 +816,9 @@ impl Worker {
             raw_bytes: (values * 2 * (tp - 1)) as u64,
             codec_s,
             total_s: link_s + codec_s,
+            // the fused path round-trips through the accelerator codec;
+            // drift sampling stays on the host-codec path
+            err_pct: f64::NAN,
         });
         Ok(reduced)
     }

@@ -414,6 +414,10 @@ fn record_response(report: &mut LoadReport, resp: &GenResponse) {
 /// [`LoadReport`].
 pub fn drive(handle: &CoordinatorHandle, trace: &Trace, opts: &DriveOptions) -> LoadReport {
     let mut report = LoadReport::new(trace.events.len(), opts.slo_ttft_s);
+    // bracket the run with time-series samples (and add one per
+    // completion) so `GET /metrics/history` has edges to rate over even
+    // when the run is shorter than the background sampler's period
+    handle.metrics.sample_history();
     let t0 = Instant::now();
     if let Some(cl) = trace.closed_loop {
         // closed loop: `concurrency` outstanding; ANY completion (not
@@ -432,6 +436,7 @@ pub fn drive(handle: &CoordinatorHandle, trace: &Trace, opts: &DriveOptions) -> 
                 match window[i].try_recv() {
                     Ok(resp) => {
                         record_response(&mut report, &resp);
+                        handle.metrics.sample_history();
                     }
                     Err(std::sync::mpsc::TryRecvError::Empty) => {
                         i += 1;
@@ -477,12 +482,16 @@ pub fn drive(handle: &CoordinatorHandle, trace: &Trace, opts: &DriveOptions) -> 
             // collect on this thread while the clock thread submits
             for pending in rx {
                 match pending.recv() {
-                    Ok(resp) => record_response(&mut report, &resp),
+                    Ok(resp) => {
+                        record_response(&mut report, &resp);
+                        handle.metrics.sample_history();
+                    }
                     Err(_) => report.failed += 1,
                 }
             }
         });
     }
+    handle.metrics.sample_history();
     report.makespan_s = t0.elapsed().as_secs_f64();
     report
 }

@@ -1,0 +1,148 @@
+//! Integration tests for the telemetry subsystem's HTTP surface —
+//! Prometheus text exposition, the `/metrics/history` time-series, and
+//! the `/debug/requests` flight-recorder dump — exercised through a
+//! detached coordinator handle so they run without AOT artifacts.
+
+use tpcc::coordinator::CoordinatorHandle;
+use tpcc::obs::flight::{self, RequestRecord};
+use tpcc::server::{http_get, Server};
+use tpcc::util::json::Json;
+
+fn boot(handle: CoordinatorHandle, requests: usize) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", handle).unwrap().with_pool(2, 8);
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.serve_n(requests).unwrap());
+    (addr, srv)
+}
+
+/// Minimal Prometheus text-format lint: every non-comment, non-blank
+/// line is `name[{labels}] value` with a finite numeric value and a
+/// name in the legal charset.
+fn lint_prometheus(body: &str) -> usize {
+    let mut samples = 0;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("prometheus sample line has no value: {line:?}");
+        });
+        let name = name_part.split('{').next().unwrap();
+        assert!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in {line:?}"
+        );
+        let v: f64 = value.parse().unwrap_or_else(|_| {
+            panic!("unparseable sample value in {line:?}");
+        });
+        assert!(v.is_finite(), "non-finite sample in {line:?}");
+        samples += 1;
+    }
+    samples
+}
+
+#[test]
+fn metrics_endpoint_serves_lintable_prometheus_text() {
+    let handle = CoordinatorHandle::detached();
+    handle.metrics.requests_received.add(3);
+    handle.metrics.requests_completed.add(2);
+    handle.metrics.tokens_generated.add(40);
+    handle.metrics.comm_bytes_sent.add(1 << 20);
+    handle.metrics.ttft.record(0.12);
+    handle.metrics.set("drift_sites_tripped", 0.0);
+
+    let (addr, srv) = boot(handle, 3);
+
+    // prom format behind the query knob (both spellings)
+    let (code, body) = http_get(&addr, "/metrics?format=prom").unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("# TYPE tpcc_requests_completed counter"), "{body}");
+    assert!(body.contains("# TYPE tpcc_kv_blocks_in_use gauge"), "{body}");
+    assert!(body.contains("tpcc_ttft_seconds_count 1"), "{body}");
+    assert!(body.contains("tpcc_drift_sites_tripped"), "{body}");
+    assert!(lint_prometheus(&body) >= 10, "suspiciously few samples:\n{body}");
+
+    let (code, prom2) = http_get(&addr, "/metrics?format=prometheus").unwrap();
+    assert_eq!(code, 200);
+    assert!(prom2.contains("tpcc_requests_received 3"), "{prom2}");
+
+    // the default /metrics stays JSON
+    let (code, body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).expect("JSON metrics");
+    assert_eq!(doc.get("requests_completed").and_then(|v| v.as_f64()), Some(2.0));
+    srv.join().unwrap();
+}
+
+#[test]
+fn metrics_history_endpoint_reports_windowed_rates() {
+    let handle = CoordinatorHandle::detached();
+    handle.metrics.sample_history();
+    handle.metrics.requests_completed.add(5);
+    handle.metrics.tokens_generated.add(100);
+    handle.metrics.comm_bytes_sent.add(10 << 20);
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    handle.metrics.sample_history();
+
+    let (addr, srv) = boot(handle, 1);
+    let (code, body) = http_get(&addr, "/metrics/history").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).expect("history JSON");
+    assert!(doc.get("samples").and_then(|v| v.as_f64()).unwrap() >= 2.0);
+    assert!(doc.get("span_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    let rates = doc.get("rates").and_then(|r| r.as_arr()).expect("rates array");
+    assert_eq!(rates.len(), 4);
+    // the 10 s window holds both samples, so the counter delta shows up
+    // as a positive rate (the window clamps to the actual tiny span)
+    let short = &rates[0];
+    assert_eq!(short.get("requested_window_s").and_then(|v| v.as_f64()), Some(10.0));
+    assert!(short.get("qps").and_then(|v| v.as_f64()).unwrap() > 0.0, "{body}");
+    assert!(short.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert!(short.get("wire_gb_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    let burn = doc.get("burn").and_then(|b| b.as_arr()).expect("burn array");
+    assert_eq!(burn.len(), 3);
+    srv.join().unwrap();
+}
+
+#[test]
+fn debug_requests_endpoint_round_trips_flight_records() {
+    let handle = CoordinatorHandle::detached();
+    for i in 0..3u64 {
+        let mut r = RequestRecord {
+            id: i,
+            prompt_tokens: 64,
+            new_tokens: 8,
+            batch_peak: 2,
+            ttft_s: 0.05,
+            e2e_s: 0.1 + 0.2 * i as f64,
+            ..RequestRecord::default()
+        };
+        r.decode.compute_s = 0.02 * (i + 1) as f64;
+        r.site_wire_bytes = [1000, 2000, 3000, 4000];
+        handle.flight.record(r);
+    }
+
+    let (addr, srv) = boot(handle, 1);
+    let (code, body) = http_get(&addr, "/debug/requests").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).expect("flight JSON");
+    assert_eq!(doc.get("total").and_then(|v| v.as_f64()), Some(3.0));
+    assert_eq!(doc.get("site_groups").and_then(|g| g.as_arr()).unwrap().len(), 4);
+    assert_eq!(doc.get("recent").and_then(|g| g.as_arr()).unwrap().len(), 3);
+    assert!(!doc.get("slowest").and_then(|g| g.as_arr()).unwrap().is_empty());
+
+    // the dump is exactly what `tpcc explain --addr` consumes
+    let records = flight::records_from_json(&doc);
+    assert_eq!(records.len(), 3);
+    let a = flight::attribution(&records).expect("attribution over 3 records");
+    let table = flight::render_attribution(&a);
+    assert!(table.contains("tail attribution over 3 requests"), "{table}");
+    assert!(table.contains("decode.compute"), "{table}");
+    assert!(table.contains("site group"), "{table}");
+    srv.join().unwrap();
+}
