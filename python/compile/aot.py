@@ -145,6 +145,19 @@ def export_model_stages(ex: Exporter, cfg: ModelConfig):
                     [spec((b, s, d))] + wspecs + [spec((b,), I32)],
                     {"kind": "attn_prefill", "tp": tp, **meta},
                 )
+                if b == 1:
+                    # chunked prefill: the KV-aware attn stage at (1, s)
+                    # lets the coordinator slice a long prompt across
+                    # decode steps (attn_stage is seq-generic — causal
+                    # over the slice, history via the cache inputs)
+                    ex.export(
+                        f"{cfg.name}/attn_tp{tp}_b{b}_s{s}",
+                        functools.partial(M.attn_stage, cfg, tp),
+                        [spec((b, s, d))]
+                        + wspecs
+                        + [spec((b, hn, t, hd)), spec((b, hn, t, hd)), spec((b,), I32)],
+                        {"kind": "attn", "tp": tp, **meta},
+                    )
             else:
                 # decode: history cache as input, new-token slice as output
                 ex.export(

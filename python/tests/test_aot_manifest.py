@@ -96,14 +96,41 @@ def test_attn_prefill_signature_shapes(manifest):
 
 
 def test_decode_attn_takes_cache(manifest):
+    """KV-aware attn exists at seq 1 (decode) and, for chunked prefill,
+    at batch 1 over the wider seq buckets — every instance takes the
+    full-length cache as input."""
+    seen_chunk = False
     for a in manifest["artifacts"]:
         if a["kind"] != "attn":
             continue
         cfg = MODELS[a["model"]]
-        assert a["seq"] == 1
+        assert a["seq"] in SEQ_BUCKETS
+        if a["seq"] > 1:
+            assert a["batch"] == 1, "chunked-prefill attn is batch-1 only"
+            seen_chunk = True
         ins = [tuple(i["shape"]) for i in a["inputs"]]
         hn = cfg.n_heads // a["tp"]
         assert (a["batch"], hn, cfg.max_seq, cfg.head_dim) in ins  # k_cache
+    assert seen_chunk, "no chunked-prefill attn artifacts exported"
+
+
+def test_chunked_prefill_attn_covers_primary_tp_grid(manifest):
+    """The live coordinator only enables chunked prefill when every
+    prefill bucket at or below the chunk size has a KV-aware attn
+    executable; the primary TP degree must export the full batch-1
+    seq grid."""
+    arts = manifest["artifacts"]
+    for model in MODELS:
+        for s in SEQ_BUCKETS:
+            if s <= 1:
+                continue
+            found = [
+                a
+                for a in arts
+                if a["model"] == model and a["kind"] == "attn"
+                and a.get("tp") == PRIMARY_TP and a["batch"] == 1 and a["seq"] == s
+            ]
+            assert found, f"{model} tp{PRIMARY_TP} missing chunk attn s{s}"
 
 
 def test_fused_schemes_exported(manifest):

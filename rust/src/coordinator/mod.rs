@@ -5,25 +5,37 @@
 //! engine loop on a dedicated thread (the `xla` client is not `Send`);
 //! front ends (HTTP server, trace replayer, examples) submit
 //! [`GenRequest`]s over a channel and receive [`GenResponse`]s on a
-//! per-request reply channel. Under `--rank-threads` the engine itself
-//! fans each forward out to its per-rank worker pool; the pool is
-//! spawned by the engine builder on this thread and joined when the
-//! coordinator's engine drops at loop exit (clean shutdown).
+//! per-request reply channel — or a per-token [`StreamEvent`] feed via
+//! [`CoordinatorHandle::submit_stream`]. Under `--rank-threads` the
+//! engine itself fans each forward out to its per-rank worker pool; the
+//! pool is spawned by the engine builder on this thread and joined when
+//! the coordinator's engine drops at loop exit (clean shutdown).
+//!
+//! Batching is **in-flight** (continuous): new requests join the decode
+//! group between steps under a token-budget admission policy
+//! ([`scheduler::admit_budget`]); long prompts are sliced into
+//! chunked-prefill steps ([`scheduler::chunk_plan`]) that interleave
+//! with decode instead of monopolizing a bucket; KV lives in a paged
+//! block pool ([`BatchKv::paged`]) and exhausting it preempts the
+//! youngest session (blocks swapped out bit-exactly, session requeued
+//! with restore priority — [`scheduler::pick_victim`]).
 
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::collective::AlgoKind;
 use crate::metrics::{Registry, DEFAULT_SAMPLE_PERIOD_S};
 use crate::obs::flight::{FlightRecorder, PhaseCost, RequestRecord};
 use crate::obs::{self, Cat, Tracer};
 use crate::tokenizer::ByteTokenizer;
-use crate::tp::{BatchKv, StepTiming, TpEngine};
+use crate::tp::{BatchKv, StepTiming, SwappedKv, TpEngine};
 
 pub use sampler::{Sampler, Sampling};
 pub use session::{Session, SessionState};
@@ -54,11 +66,38 @@ pub struct GenResponse {
     pub virtual_prefill_s: f64,
 }
 
+/// Incremental output of a streaming generation
+/// ([`CoordinatorHandle::submit_stream`]): one event per token as it is
+/// sampled, then the final response.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Token {
+        /// 0-based index of this token within the generation
+        index: usize,
+        token: i32,
+        /// decoded text of just this token
+        text: String,
+    },
+    Done(GenResponse),
+}
+
 pub struct CoordinatorOptions {
     /// decode batch group size (must be an exported batch bucket)
     pub decode_batch: usize,
-    /// max seconds a queued request waits before a partial prefill flush
+    /// max seconds a queued request waits before a partial prefill
+    /// flush. Governs the *bucketed* baseline (the virtual-time
+    /// simulator's default mode); the live continuous batcher admits on
+    /// the token budget alone.
     pub max_wait_s: f64,
+    /// per-step admission token budget (`--max-batch-tokens`): decoding
+    /// sessions count one token each, admitted prompts their (chunked)
+    /// prefill cost
+    pub max_batch_tokens: usize,
+    /// tokens per KV block (`--kv-block`)
+    pub kv_block: usize,
+    /// total KV pool blocks per rank shard (`--kv-pool`); None sizes the
+    /// pool so every decode slot can reach `max_seq` (no preemption)
+    pub kv_pool_blocks: Option<usize>,
     pub sampling: Sampling,
     pub seed: u64,
     /// enable the engine's span recorder at startup (`tpcc serve` /
@@ -78,6 +117,9 @@ impl Default for CoordinatorOptions {
         CoordinatorOptions {
             decode_batch: 8,
             max_wait_s: 0.05,
+            max_batch_tokens: 2048,
+            kv_block: crate::tp::DEFAULT_KV_BLOCK,
+            kv_pool_blocks: None,
             sampling: Sampling::Greedy,
             seed: 0,
             trace: false,
@@ -87,7 +129,9 @@ impl Default for CoordinatorOptions {
     }
 }
 
-type Submission = (GenRequest, Sender<GenResponse>);
+/// One submitted request: the request, its reply channel, and (for
+/// streaming front ends) the per-token event channel.
+pub type Submission = (GenRequest, Sender<GenResponse>, Option<Sender<StreamEvent>>);
 
 /// Fold one engine step's cost into a flight-recorder phase bucket.
 fn add_timing(c: &mut PhaseCost, t: &StepTiming) {
@@ -119,8 +163,18 @@ pub struct CoordinatorHandle {
 impl CoordinatorHandle {
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (rtx, rrx) = channel();
-        let _ = self.tx.send((req, rtx));
+        let _ = self.tx.send((req, rtx, None));
         rrx
+    }
+
+    /// Submit a streaming generation: one [`StreamEvent::Token`] per
+    /// sampled token as the batcher produces it, then
+    /// [`StreamEvent::Done`] with the final response.
+    pub fn submit_stream(&self, req: GenRequest) -> Receiver<StreamEvent> {
+        let (etx, erx) = channel();
+        let (rtx, _) = channel();
+        let _ = self.tx.send((req, rtx, Some(etx)));
+        erx
     }
 
     /// Blocking convenience call.
@@ -138,15 +192,23 @@ impl CoordinatorHandle {
     /// tests exercise the HTTP substrate (connection pool, shedding)
     /// without AOT artifacts.
     pub fn detached() -> CoordinatorHandle {
-        let (tx, _) = channel();
-        CoordinatorHandle {
+        Self::stubbed().0
+    }
+
+    /// Like [`CoordinatorHandle::detached`], but hands back the
+    /// submission receiver so a test can play the engine side (answer
+    /// `/generate`, drip stream tokens) without AOT artifacts.
+    pub fn stubbed() -> (CoordinatorHandle, Receiver<Submission>) {
+        let (tx, rx) = channel();
+        let handle = CoordinatorHandle {
             tx,
             metrics: Arc::new(Registry::default()),
             policy_json: Arc::new(Mutex::new("{}".to_string())),
             tracer: Tracer::new(),
             flight: Arc::new(FlightRecorder::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
-        }
+        };
+        (handle, rx)
     }
 }
 
@@ -169,6 +231,7 @@ pub struct Coordinator {
 struct ActiveSlot {
     session: Session,
     reply: Sender<GenResponse>,
+    stream: Option<Sender<StreamEvent>>,
     virtual_prefill_s: f64,
     /// this request's prefill batch cost (window attribution: the whole
     /// batch's cost, charged to each request admitted in it)
@@ -183,6 +246,55 @@ struct ActiveSlot {
     fabric_at_admit: f64,
     /// widest decode batch this request was resident in
     batch_peak: usize,
+}
+
+impl ActiveSlot {
+    fn admit(
+        session: Session,
+        reply: Sender<GenResponse>,
+        stream: Option<Sender<StreamEvent>>,
+        eng: &TpEngine,
+    ) -> ActiveSlot {
+        ActiveSlot {
+            session,
+            reply,
+            stream,
+            virtual_prefill_s: 0.0,
+            prefill_cost: PhaseCost::default(),
+            decode_cost: PhaseCost::default(),
+            wire_at_admit: eng.group_wire_bytes(),
+            fabric_at_admit: eng.fabric_wait_total(),
+            batch_peak: 1,
+        }
+    }
+
+    fn send_token(&self, tokenizer: &ByteTokenizer, tok: i32) {
+        if let Some(tx) = &self.stream {
+            let _ = tx.send(StreamEvent::Token {
+                index: self.session.generated.len().saturating_sub(1),
+                token: tok,
+                text: tokenizer.decode(&[tok]),
+            });
+        }
+    }
+}
+
+/// A long prompt being prefilled one bucket-sized slice per step.
+struct ChunkJob {
+    slot: ActiveSlot,
+    /// per-slice seq buckets ([`scheduler::chunk_plan`])
+    plan: Vec<usize>,
+    next: usize,
+    /// batch-1 scratch cache the slices write through; adopted into the
+    /// decode pool when the last slice lands
+    kv: BatchKv,
+}
+
+/// A session evicted from the KV pool: its state plus the swapped-out
+/// block image, awaiting FIFO restore.
+struct PreemptedSession {
+    slot: ActiveSlot,
+    img: SwappedKv,
 }
 
 impl Coordinator {
@@ -247,20 +359,40 @@ impl Coordinator {
         let cfg = self.eng.cfg.clone();
         let db = self.opts.decode_batch;
         let tp = self.eng.opts.tp;
-        let mut decode_kv =
-            BatchKv::new(&cfg, tp, db).with_gauge(self.metrics.kv_blocks_in_use.clone());
-        let mut slots: Vec<Option<ActiveSlot>> = (0..db).map(|_| None).collect();
-        let mut waiting: Vec<(Session, Sender<GenResponse>)> = Vec::new();
-
         let seq_buckets = self.eng.rt.manifest.seq_buckets.clone();
-        let batch_buckets = self.eng.rt.manifest.batch_buckets.clone();
-        let max_prompt = *seq_buckets.iter().max().unwrap_or(&256);
+
+        // paged KV pool: at minimum one max-length sequence must fit, so
+        // a lone session can always run to completion
+        let block = self.opts.kv_block.clamp(1, cfg.max_seq.max(1));
+        let seq_blocks = BatchKv::blocks_per_seq(cfg.max_seq, block);
+        let pool = self.opts.kv_pool_blocks.unwrap_or(db * seq_blocks).max(seq_blocks);
+        let mut decode_kv = BatchKv::paged(&cfg, tp, db, block, pool)
+            .with_gauge(self.metrics.kv_blocks_in_use.clone())
+            .with_free_gauge(self.metrics.kv_blocks_free.clone());
+
+        // chunked prefill is live only when the KV-aware attention stage
+        // is exported at every chunk-sized bucket (`make artifacts`
+        // exports them; older artifact sets fall back to whole-prompt
+        // prefill, and the virtual-time simulator models chunking
+        // regardless)
+        let chunk = scheduler::chunk_tokens(self.opts.max_batch_tokens, &seq_buckets);
+        let chunk_live = chunk > 1
+            && seq_buckets.iter().all(|&s| s <= 1 || s > chunk || self.eng.has_decode_attn(1, s));
+        let top_bucket = *seq_buckets.iter().max().unwrap_or(&256);
+        let max_prompt =
+            if chunk_live { cfg.max_seq.saturating_sub(1).max(1) } else { top_bucket };
+
+        let mut slots: Vec<Option<ActiveSlot>> = (0..db).map(|_| None).collect();
+        let mut waiting: VecDeque<(Session, Sender<GenResponse>, Option<Sender<StreamEvent>>)> =
+            VecDeque::new();
+        let mut preempted: VecDeque<PreemptedSession> = VecDeque::new();
+        let mut chunk_job: Option<ChunkJob> = None;
 
         loop {
             // ---- intake ----
             loop {
                 match self.rx.try_recv() {
-                    Ok((req, reply)) => {
+                    Ok((req, reply, stream)) => {
                         let mut toks = self.tokenizer.encode(&req.prompt);
                         toks.truncate(max_prompt);
                         if toks.is_empty() {
@@ -270,11 +402,15 @@ impl Coordinator {
                         s.stop_token = req.stop_token;
                         self.next_id += 1;
                         self.metrics.requests_received.inc();
-                        waiting.push((s, reply));
+                        waiting.push_back((s, reply, stream));
                     }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
-                        if waiting.is_empty() && slots.iter().all(Option::is_none) {
+                        if waiting.is_empty()
+                            && preempted.is_empty()
+                            && chunk_job.is_none()
+                            && slots.iter().all(Option::is_none)
+                        {
                             // raise the flag so the sampler thread exits
                             self.shutdown.store(true, Ordering::SeqCst);
                             return Ok(());
@@ -284,34 +420,116 @@ impl Coordinator {
                 }
             }
 
-            let free: Vec<usize> =
-                (0..db).filter(|&i| slots[i].is_none()).collect();
-            let oldest_wait = waiting
-                .first()
-                .map(|(s, _)| s.arrived.elapsed().as_secs_f64())
-                .unwrap_or(0.0);
-            let n_admit = scheduler::admit_count(
-                waiting.len(),
-                free.len(),
-                *batch_buckets.iter().max().unwrap_or(&8),
-            );
+            // ---- restore preempted sessions (FIFO, before any new
+            // admission: starvation-freedom) ----
+            while let Some(front) = preempted.front() {
+                let Some(fs) = slots.iter().position(Option::is_none) else { break };
+                let need = decode_kv.blocks_for(front.slot.session.pos + 1);
+                if decode_kv.free_blocks() < need {
+                    break;
+                }
+                let mut p = preempted.pop_front().expect("front exists");
+                anyhow::ensure!(decode_kv.swap_in(fs, &p.img), "restore failed with free blocks");
+                p.slot.session.state = SessionState::Decoding;
+                p.slot.session.slot = Some(fs);
+                slots[fs] = Some(p.slot);
+            }
 
-            // ---- prefill a batch of admitted requests ----
-            if scheduler::should_flush(oldest_wait, n_admit, free.len().min(8), self.opts.max_wait_s)
-                && n_admit > 0
-            {
-                let admitted: Vec<(Session, Sender<GenResponse>)> =
-                    waiting.drain(..n_admit).collect();
+            // ---- start a chunk job when the queue head is long ----
+            if chunk_live && chunk_job.is_none() {
+                let head_long =
+                    waiting.front().is_some_and(|(s, _, _)| s.prompt_tokens.len() > chunk);
+                if head_long {
+                    let (mut s, reply, stream) = waiting.pop_front().expect("head exists");
+                    let plan = scheduler::chunk_plan(s.prompt_tokens.len(), chunk, &seq_buckets);
+                    anyhow::ensure!(!plan.is_empty(), "no chunk plan for admitted prompt");
+                    self.admit_metrics(&mut s);
+                    chunk_job = Some(ChunkJob {
+                        slot: ActiveSlot::admit(s, reply, stream, &self.eng),
+                        plan,
+                        next: 0,
+                        kv: BatchKv::new(&cfg, tp, 1),
+                    });
+                }
+            }
+
+            // ---- token-budget admission of short prompts ----
+            let free: Vec<usize> = (0..db).filter(|&i| slots[i].is_none()).collect();
+            let decoding = db - free.len();
+            let committed = decoding
+                + chunk_job
+                    .as_ref()
+                    .map_or(0, |j| j.plan.get(j.next).copied().unwrap_or(0));
+            let mut costs = Vec::new();
+            for (s, _, _) in waiting.iter() {
+                let len = s.prompt_tokens.len();
+                if chunk_live && len > chunk {
+                    break; // strict FIFO: a long prompt waits for the chunk lane
+                }
+                costs.push(len);
+            }
+            let mut n_admit = scheduler::admit_budget(
+                &costs,
+                committed,
+                self.opts.max_batch_tokens,
+                free.len(),
+            );
+            // shrink until the admitted prompts' KV blocks fit the pool
+            // (admission under zero free blocks admits nothing; blocks
+            // free up as sessions finish or the pool preempts)
+            while n_admit > 0 {
+                let need: usize = waiting
+                    .iter()
+                    .take(n_admit)
+                    .map(|(s, _, _)| decode_kv.blocks_for(s.prompt_tokens.len() + 1))
+                    .sum();
+                if need <= decode_kv.free_blocks() {
+                    break;
+                }
+                n_admit -= 1;
+            }
+            if n_admit > 0 {
+                let admitted: Vec<_> = waiting.drain(..n_admit).collect();
                 self.prefill_admit(admitted, &free, &mut slots, &mut decode_kv)?;
             }
 
+            // ---- one chunked-prefill slice, interleaved with decode ----
+            if let Some(mut job) = chunk_job.take() {
+                let finished = self.chunk_step(&mut job)?;
+                if finished {
+                    self.chunk_finish(job, &mut slots, &mut decode_kv, &mut preempted)?;
+                } else {
+                    chunk_job = Some(job);
+                }
+            }
+
             // ---- decode step over active slots ----
+            // every active row needs a block mapped for this step's KV
+            // write; when the pool is dry, evict the youngest session
+            for i in 0..db {
+                loop {
+                    let Some(slot) = slots[i].as_ref() else { break };
+                    if decode_kv.ensure_tokens(i, slot.session.pos + 1) {
+                        break;
+                    }
+                    let vi = Self::youngest_active(&slots).expect("an active slot exists");
+                    self.preempt(vi, &mut slots, &mut decode_kv, &mut preempted);
+                    if vi == i {
+                        break; // evicted itself; row sits out this step
+                    }
+                }
+            }
+
             let active: Vec<usize> = (0..db).filter(|&i| slots[i].is_some()).collect();
             if active.is_empty() {
-                if self.shutdown.load(Ordering::SeqCst) && waiting.is_empty() {
+                if self.shutdown.load(Ordering::SeqCst)
+                    && waiting.is_empty()
+                    && preempted.is_empty()
+                    && chunk_job.is_none()
+                {
                     return Ok(());
                 }
-                if waiting.is_empty() {
+                if waiting.is_empty() && preempted.is_empty() && chunk_job.is_none() {
                     std::thread::sleep(std::time::Duration::from_millis(1));
                 }
                 continue;
@@ -339,8 +557,11 @@ impl Coordinator {
                 let slot = slots[i].as_mut().unwrap();
                 let row = &logits[i * v..(i + 1) * v];
                 let tok = self.sampler.sample(row, self.sampling_for());
-                slot.session.record_token(tok);
+                let gap = slot.session.record_token(tok);
+                // per-step inter-token latency feeds the TPOT histogram
+                self.metrics.tpot.record(gap);
                 self.metrics.tokens_generated.inc();
+                slot.send_token(&self.tokenizer, tok);
                 if slot.session.is_done() || slot.session.pos + 1 >= cfg.max_seq {
                     let done = slots[i].take().unwrap();
                     decode_kv.clear_slot(i);
@@ -354,15 +575,127 @@ impl Coordinator {
         self.opts.sampling
     }
 
+    /// Index of the youngest (latest-arrived) active session.
+    fn youngest_active(slots: &[Option<ActiveSlot>]) -> Option<usize> {
+        let act: Vec<(usize, Instant)> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.session.arrived)))
+            .collect();
+        let keys: Vec<Instant> = act.iter().map(|&(_, a)| a).collect();
+        scheduler::pick_victim(&keys).map(|k| act[k].0)
+    }
+
+    /// Evict slot `vi` from the decode group: swap its KV blocks out to
+    /// host memory and requeue the session for a bit-identical restore.
+    fn preempt(
+        &mut self,
+        vi: usize,
+        slots: &mut [Option<ActiveSlot>],
+        decode_kv: &mut BatchKv,
+        preempted: &mut VecDeque<PreemptedSession>,
+    ) {
+        let mut slot = slots[vi].take().expect("victim slot active");
+        let img = decode_kv.swap_out(vi, slot.session.pos);
+        slot.session.record_preemption();
+        slot.session.slot = None;
+        self.metrics.preemptions_total.inc();
+        preempted.push_back(PreemptedSession { slot, img });
+    }
+
+    /// Queue-wait accounting at first admission (chunked or classic).
+    fn admit_metrics(&self, s: &mut Session) {
+        s.record_prefill_start();
+        if let Some(w) = s.queue_wait() {
+            self.metrics.queue_wait.record(w);
+            // queue-wait span on the request's own timeline (pid =
+            // request id), stamped retroactively from arrival
+            obs::record_abs("queue", Cat::Queue, s.id, obs::TID_COORD, s.arrived, w);
+        }
+    }
+
+    /// Run one prefill slice of a chunk job. Returns true when the last
+    /// slice (and the first token) landed.
+    fn chunk_step(&mut self, job: &mut ChunkJob) -> anyhow::Result<bool> {
+        let cfg = self.eng.cfg.clone();
+        let sb = job.plan[job.next];
+        let done = job.slot.session.prefilled;
+        let plen = job.slot.session.prompt_tokens.len();
+        let take = sb.min(plen - done);
+        let mut tokens = vec![0i32; sb];
+        tokens[..take].copy_from_slice(&job.slot.session.prompt_tokens[done..done + take]);
+        let (logits, timing) = if job.next == 0 {
+            // first slice has no history: the regular prefill stage
+            self.eng.prefill(&tokens, 1, sb, &[0], Some(&mut job.kv))?
+        } else {
+            // later slices attend to the scratch cache via the KV-aware
+            // stage at (1, sb)
+            self.eng.prefill_chunk(&tokens, 1, sb, &[done as i32], &mut job.kv)?
+        };
+        self.metrics.batches_executed.inc();
+        self.record_comm(&timing);
+        add_timing(&mut job.slot.prefill_cost, &timing);
+        job.slot.virtual_prefill_s += timing.virtual_total();
+        job.slot.session.record_chunk(take);
+        job.next += 1;
+        if job.next < job.plan.len() {
+            return Ok(false);
+        }
+        // last slice: sample the first token at the prompt's final row
+        self.metrics.prefill_tokens.add(plen as u64);
+        let v = cfg.vocab;
+        let row = &logits[(take - 1) * v..take * v];
+        let tok = self.sampler.sample(row, self.sampling_for());
+        job.slot.session.record_first_token(tok);
+        self.metrics.tokens_generated.inc();
+        if let Some(ttft) = job.slot.session.ttft() {
+            self.metrics.ttft.record(ttft);
+        }
+        job.slot.send_token(&self.tokenizer, tok);
+        Ok(true)
+    }
+
+    /// Move a finished chunk job into the decode group, preempting the
+    /// youngest resident sessions if the pool or slots are full.
+    fn chunk_finish(
+        &mut self,
+        job: ChunkJob,
+        slots: &mut [Option<ActiveSlot>],
+        decode_kv: &mut BatchKv,
+        preempted: &mut VecDeque<PreemptedSession>,
+    ) -> anyhow::Result<()> {
+        let ChunkJob { mut slot, kv, .. } = job;
+        if slot.session.is_done() {
+            self.finish(slot);
+            return Ok(());
+        }
+        let plen = slot.session.prompt_tokens.len();
+        loop {
+            let fs = slots.iter().position(Option::is_none);
+            if let Some(fs) = fs {
+                if decode_kv.free_blocks() >= decode_kv.blocks_for(plen) {
+                    decode_kv.adopt_slot(fs, &kv, 0, plen)?;
+                    slot.session.slot = Some(fs);
+                    slots[fs] = Some(slot);
+                    return Ok(());
+                }
+            }
+            let Some(vi) = Self::youngest_active(slots) else {
+                anyhow::bail!("kv pool too small for a {plen}-token prompt");
+            };
+            self.preempt(vi, slots, decode_kv, preempted);
+        }
+    }
+
     fn prefill_admit(
         &mut self,
-        mut admitted: Vec<(Session, Sender<GenResponse>)>,
+        mut admitted: Vec<(Session, Sender<GenResponse>, Option<Sender<StreamEvent>>)>,
         free: &[usize],
         slots: &mut [Option<ActiveSlot>],
         decode_kv: &mut BatchKv,
     ) -> anyhow::Result<()> {
         let cfg = self.eng.cfg.clone();
-        let lens: Vec<usize> = admitted.iter().map(|(s, _)| s.prompt_tokens.len()).collect();
+        let lens: Vec<usize> = admitted.iter().map(|(s, _, _)| s.prompt_tokens.len()).collect();
         let seq_buckets = self.eng.rt.manifest.seq_buckets.clone();
         let batch_buckets = self.eng.rt.manifest.batch_buckets.clone();
         let (bb, sb) = scheduler::pick_prefill_bucket(&lens, &batch_buckets, &seq_buckets)
@@ -370,18 +703,12 @@ impl Coordinator {
 
         // queue wait ends here: admission into the prefill batch, before
         // the batch executes
-        for (s, _) in admitted.iter_mut() {
-            s.record_prefill_start();
-            if let Some(w) = s.queue_wait() {
-                self.metrics.queue_wait.record(w);
-                // queue-wait span on the request's own timeline (pid =
-                // request id), stamped retroactively from arrival
-                obs::record_abs("queue", Cat::Queue, s.id, obs::TID_COORD, s.arrived, w);
-            }
+        for (s, _, _) in admitted.iter_mut() {
+            self.admit_metrics(s);
         }
 
         let mut tokens = vec![0i32; bb * sb];
-        for (row, (s, _)) in admitted.iter().enumerate() {
+        for (row, (s, _, _)) in admitted.iter().enumerate() {
             tokens[row * sb..row * sb + s.prompt_tokens.len()]
                 .copy_from_slice(&s.prompt_tokens);
         }
@@ -398,7 +725,7 @@ impl Coordinator {
         add_timing(&mut prefill_cost, &timing);
 
         let v = cfg.vocab;
-        for (row, (mut session, reply)) in admitted.into_iter().enumerate() {
+        for (row, (mut session, reply, stream)) in admitted.into_iter().enumerate() {
             let len = session.prompt_tokens.len();
             self.metrics.prefill_tokens.add(len as u64);
             let row_logits = &logits[(row * sb + len - 1) * v..(row * sb + len) * v];
@@ -409,11 +736,12 @@ impl Coordinator {
                 self.metrics.ttft.record(ttft);
             }
             let slot_idx = free[row];
-            decode_kv.adopt_slot(slot_idx, &kv, row, len);
+            decode_kv.adopt_slot(slot_idx, &kv, row, len)?;
             session.slot = Some(slot_idx);
             let active = ActiveSlot {
                 session,
                 reply,
+                stream,
                 virtual_prefill_s: timing.virtual_total(),
                 prefill_cost,
                 decode_cost: PhaseCost::default(),
@@ -421,6 +749,7 @@ impl Coordinator {
                 fabric_at_admit,
                 batch_peak: bb,
             };
+            active.send_token(&self.tokenizer, tok);
             if active.session.is_done() {
                 // done at first token: release the slot it was adopted
                 // into (keeps the kv_blocks_in_use gauge honest)
@@ -501,9 +830,6 @@ impl Coordinator {
             // whole-request span (arrival → last token) on pid = req id
             obs::record_abs("request", Cat::Request, s.id, obs::TID_COORD, s.arrived, e2e);
         }
-        if let Some(tpot) = s.tpot() {
-            self.metrics.tpot.record(tpot);
-        }
         // flight recorder: structured per-request record (slowest-K +
         // recent-K retention), attribution source for `tpcc explain`
         let wire_now = self.eng.group_wire_bytes();
@@ -524,7 +850,12 @@ impl Coordinator {
             decode: slot.decode_cost,
             fabric_wait_s: (self.eng.fabric_wait_total() - slot.fabric_at_admit).max(0.0),
             site_wire_bytes,
+            preemptions: s.preemptions,
+            prefill_chunks: s.prefill_chunks,
         });
+        if let Some(tx) = &slot.stream {
+            let _ = tx.send(StreamEvent::Done(resp.clone()));
+        }
         let _ = slot.reply.send(resp);
     }
 }

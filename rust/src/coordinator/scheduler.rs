@@ -33,6 +33,92 @@ pub fn should_flush(oldest_wait_s: f64, count: usize, max_batch: usize, max_wait
     count > 0 && (count >= max_batch || oldest_wait_s >= max_wait_s)
 }
 
+// ---- continuous-batching policy (shared by the live coordinator and
+// the virtual-time simulator, so Table 7 compares the same scheduler
+// it serves with) ----
+
+/// Chunked-prefill slice size for a given admission token budget: the
+/// largest exported prefill bucket that fits the budget *and* stays
+/// below the top bucket, so a sliced long prompt never drags a cohort
+/// into the worst-padded shape. Returns 0 when no bucket qualifies
+/// (chunking disabled; prompts prefill whole).
+pub fn chunk_tokens(max_batch_tokens: usize, seq_buckets: &[usize]) -> usize {
+    let top = seq_buckets.iter().copied().max().unwrap_or(0);
+    let fits = |s: &&usize| **s > 1 && **s <= max_batch_tokens;
+    seq_buckets
+        .iter()
+        .filter(fits)
+        .filter(|&&s| s < top)
+        .max()
+        .or_else(|| seq_buckets.iter().filter(fits).max())
+        .copied()
+        .unwrap_or(0)
+}
+
+/// Slice a prompt into per-step prefill bucket sizes: full `chunk`-sized
+/// slices, then the smallest exported bucket covering the remainder.
+/// A prompt at or under `chunk` gets its single covering bucket. Empty
+/// when no legal bucket exists (caller falls back to whole-prompt
+/// prefill via [`pick_prefill_bucket`]).
+pub fn chunk_plan(prompt_len: usize, chunk: usize, seq_buckets: &[usize]) -> Vec<usize> {
+    if chunk == 0 || !seq_buckets.contains(&chunk) {
+        return Vec::new();
+    }
+    let mut plan = Vec::new();
+    let mut remaining = prompt_len;
+    while remaining > chunk {
+        plan.push(chunk);
+        remaining -= chunk;
+    }
+    if remaining > 0 {
+        match seq_buckets.iter().copied().filter(|&s| s > 1 && s >= remaining).min() {
+            Some(tail) => plan.push(tail),
+            None => return Vec::new(),
+        }
+    }
+    plan
+}
+
+/// Token-budget admission for in-flight batching: admit the FIFO prefix
+/// of the waiting queue whose per-step prefill costs fit in
+/// `max_batch_tokens` alongside `used_tokens` already committed this
+/// step (one per decoding session plus in-flight chunk work), bounded
+/// by free decode slots. Work-conserving: an idle engine always admits
+/// the head of the queue, however expensive.
+pub fn admit_budget(
+    costs: &[usize],
+    used_tokens: usize,
+    max_batch_tokens: usize,
+    free_slots: usize,
+) -> usize {
+    let mut used = used_tokens;
+    let mut n = 0usize;
+    for &c in costs.iter().take(free_slots) {
+        if used + c > max_batch_tokens && !(n == 0 && used == 0) {
+            break;
+        }
+        used += c;
+        n += 1;
+    }
+    n
+}
+
+/// Preemption victim: the **youngest** session by arrival order (the
+/// index of the maximum key). Restores run before new admissions and
+/// the oldest session is never evicted while a younger one holds
+/// blocks, so every preempted session eventually reaches the front and
+/// finishes — starvation-free by induction on arrival order.
+pub fn pick_victim<T: PartialOrd + Copy>(arrived: &[T]) -> Option<usize> {
+    let mut best: Option<(usize, T)> = None;
+    for (i, &a) in arrived.iter().enumerate() {
+        match best {
+            Some((_, b)) if !(a > b) => {}
+            _ => best = Some((i, a)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +167,88 @@ mod tests {
         // and a single waiting request in a zero-slot round still
         // counts as a full batch
         assert!(should_flush(0.0, 1, 0, 10.0));
+    }
+
+    #[test]
+    fn chunk_size_stays_below_the_top_bucket() {
+        assert_eq!(chunk_tokens(2048, SB), 128);
+        assert_eq!(chunk_tokens(128, SB), 128);
+        assert_eq!(chunk_tokens(100, SB), 64);
+        // budget only fits the top bucket -> still usable
+        assert_eq!(chunk_tokens(2048, &[1, 256]), 256);
+        // no prefill bucket at all -> chunking disabled
+        assert_eq!(chunk_tokens(2048, &[1]), 0);
+        assert_eq!(chunk_tokens(4, SB), 0);
+    }
+
+    #[test]
+    fn chunk_plan_covers_the_prompt_with_buckets() {
+        assert_eq!(chunk_plan(300, 128, SB), vec![128, 128, 64]);
+        assert_eq!(chunk_plan(256, 128, SB), vec![128, 128]);
+        // short prompts take one covering bucket
+        assert_eq!(chunk_plan(40, 128, SB), vec![64]);
+        assert_eq!(chunk_plan(5, 128, SB), vec![16]);
+        // every slice is an exported bucket and the plan covers the
+        // prompt without a short middle chunk
+        for plen in 1..600usize {
+            let plan = chunk_plan(plen, 128, SB);
+            assert!(!plan.is_empty(), "plan must exist for {plen}");
+            assert!(plan.iter().all(|s| SB.contains(s)));
+            let total: usize = plan.iter().sum();
+            assert!(total >= plen, "{plen}: plan {plan:?} too short");
+            assert!(total - plan.last().unwrap() < plen, "{plen}: overlong {plan:?}");
+            for s in &plan[..plan.len().saturating_sub(1)] {
+                assert_eq!(*s, 128, "non-tail slices are whole chunks");
+            }
+        }
+        // a disabled or non-bucket chunk size yields no plan
+        assert!(chunk_plan(300, 0, SB).is_empty());
+        assert!(chunk_plan(300, 100, SB).is_empty());
+    }
+
+    #[test]
+    fn budget_admission_bounds_and_work_conservation() {
+        // decode work already uses 6 of 8: only one 2-cost fits
+        assert_eq!(admit_budget(&[2, 2, 2], 6, 8, 8), 1);
+        // free slots cap admissions regardless of budget
+        assert_eq!(admit_budget(&[1, 1, 1, 1], 0, 100, 2), 2);
+        assert_eq!(admit_budget(&[1; 4], 0, 100, 0), 0);
+        // an idle engine admits even an over-budget head request ...
+        assert_eq!(admit_budget(&[500], 0, 128, 8), 1);
+        // ... but a busy one does not
+        assert_eq!(admit_budget(&[500], 1, 128, 8), 0);
+        // FIFO: admission stops at the first over-budget request even
+        // when a later one would fit
+        assert_eq!(admit_budget(&[100, 10], 50, 128, 8), 0);
+    }
+
+    #[test]
+    fn victim_is_youngest_and_restores_prevent_starvation() {
+        assert_eq!(pick_victim(&[3.0, 9.0, 5.0]), Some(1));
+        assert_eq!(pick_victim::<f64>(&[]), None);
+        // ties resolve to the first maximum (stable, deterministic)
+        assert_eq!(pick_victim(&[7, 7, 2]), Some(0));
+
+        // starvation-freedom: sessions arrive in order; each round the
+        // youngest active is evicted and the oldest preempted restores
+        // first. The oldest session is never evicted while a younger
+        // one is active, so it always finishes first.
+        let arrivals: Vec<usize> = (0..6).collect();
+        let mut active: Vec<usize> = arrivals.clone();
+        let mut preempted: std::collections::VecDeque<usize> = Default::default();
+        for _ in 0..100 {
+            if let Some(v) = pick_victim(&active.iter().map(|&i| arrivals[i]).collect::<Vec<_>>())
+            {
+                let evicted = active.remove(v);
+                assert_ne!(evicted, 0, "oldest session must never be the victim");
+                preempted.push_back(evicted);
+            }
+            if let Some(r) = preempted.pop_front() {
+                active.push(r);
+            }
+            active.sort_unstable();
+        }
+        assert!(active.contains(&0));
     }
 
     #[test]

@@ -7,6 +7,8 @@ pub enum SessionState {
     Queued,
     Prefilling,
     Decoding,
+    /// Evicted from the KV pool (blocks swapped out); awaiting restore.
+    Preempted,
     Done,
 }
 
@@ -29,6 +31,14 @@ pub struct Session {
     pub slot: Option<usize>,
     /// stop byte (e.g. b'\n' for line-oriented demos); 0 disables
     pub stop_token: i32,
+    /// when the previous token was produced (per-step TPOT feed)
+    pub last_token_at: Option<Instant>,
+    /// prompt tokens already prefilled (chunked prefill progress)
+    pub prefilled: usize,
+    /// chunked-prefill steps this session has run
+    pub prefill_chunks: u64,
+    /// times this session was evicted from the KV pool
+    pub preemptions: u64,
 }
 
 impl Session {
@@ -46,27 +56,56 @@ impl Session {
             finished_at: None,
             slot: None,
             stop_token: -1,
+            last_token_at: None,
+            prefilled: 0,
+            prefill_chunks: 0,
+            preemptions: 0,
         }
     }
 
     /// Mark admission into a prefill batch (the end of the queue wait).
+    /// Idempotent: a chunked prompt's later slices and a preempted
+    /// session's restore keep the original admission time.
     pub fn record_prefill_start(&mut self) {
-        self.prefill_started_at = Some(Instant::now());
+        if self.prefill_started_at.is_none() {
+            self.prefill_started_at = Some(Instant::now());
+        }
         self.state = SessionState::Prefilling;
     }
 
+    /// One chunked-prefill slice of `tokens` prompt tokens completed.
+    pub fn record_chunk(&mut self, tokens: usize) {
+        self.prefilled = (self.prefilled + tokens).min(self.prompt_tokens.len());
+        self.prefill_chunks += 1;
+    }
+
+    /// Evicted from the KV pool; the session requeues for restore.
+    pub fn record_preemption(&mut self) {
+        self.preemptions += 1;
+        self.state = SessionState::Preempted;
+    }
+
     pub fn record_first_token(&mut self, tok: i32) {
-        self.first_token_at = Some(Instant::now());
+        let now = Instant::now();
+        self.first_token_at = Some(now);
+        self.last_token_at = Some(now);
         self.generated.push(tok);
         self.pos = self.prompt_tokens.len();
+        self.prefilled = self.prompt_tokens.len();
         self.state = SessionState::Decoding;
         self.maybe_finish(tok);
     }
 
-    pub fn record_token(&mut self, tok: i32) {
+    /// Record one decoded token; returns the inter-token gap in seconds
+    /// (the per-step TPOT sample).
+    pub fn record_token(&mut self, tok: i32) -> f64 {
+        let now = Instant::now();
+        let gap = self.last_token_at.map(|t| (now - t).as_secs_f64()).unwrap_or(0.0);
+        self.last_token_at = Some(now);
         self.generated.push(tok);
         self.pos += 1;
         self.maybe_finish(tok);
+        gap
     }
 
     fn maybe_finish(&mut self, tok: i32) {
@@ -126,6 +165,29 @@ mod tests {
         assert!(s.is_done());
         assert_eq!(s.generated, vec![42, 43]);
         assert!(s.e2e().unwrap() >= s.ttft().unwrap());
+    }
+
+    #[test]
+    fn chunk_and_preemption_counters_accumulate() {
+        let mut s = Session::new(1, vec![0; 300], 4);
+        s.record_prefill_start();
+        let t0 = s.prefill_started_at;
+        s.record_chunk(128);
+        s.record_chunk(128);
+        assert_eq!((s.prefilled, s.prefill_chunks), (256, 2));
+        s.record_preemption();
+        assert_eq!(s.state, SessionState::Preempted);
+        // restore re-enters prefill without moving the admission time
+        s.record_prefill_start();
+        assert_eq!(s.prefill_started_at, t0);
+        s.record_chunk(44);
+        assert_eq!(s.prefilled, 300);
+        s.record_first_token(9);
+        assert_eq!(s.pos, 300);
+        let gap = s.record_token(10);
+        assert!(gap >= 0.0);
+        assert_eq!(s.preemptions, 1);
+        assert!(s.ttft().unwrap() <= s.e2e().unwrap_or(f64::MAX));
     }
 
     #[test]

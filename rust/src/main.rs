@@ -54,6 +54,28 @@ fn rank_threads_arg(args: &Args) -> anyhow::Result<RankThreads> {
     }
 }
 
+/// Continuous-batching knobs shared by `serve` and `load`:
+/// `--decode-batch`, `--max-batch-tokens` (per-step admission token
+/// budget), `--kv-block` (paged-KV block size in tokens) and
+/// `--kv-pool` (total KV blocks per rank shard; small pools force
+/// preemption — useful for stress runs).
+fn batcher_opts(args: &Args) -> anyhow::Result<CoordinatorOptions> {
+    let base = CoordinatorOptions::default();
+    let kv_pool_blocks = match args.get("kv-pool") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--kv-pool: expected a block count, got {v:?}")
+        })?),
+        None => None,
+    };
+    Ok(CoordinatorOptions {
+        decode_batch: args.get_usize("decode-batch", base.decode_batch),
+        max_batch_tokens: args.get_usize("max-batch-tokens", base.max_batch_tokens),
+        kv_block: args.get_usize("kv-block", base.kv_block),
+        kv_pool_blocks,
+        ..base
+    })
+}
+
 fn build_engine(args: &Args) -> anyhow::Result<TpEngine> {
     let model = args.get_or("model", "micro").to_string();
     let tp = args.get_usize("tp", 2);
@@ -107,14 +129,11 @@ fn run_load(args: &Args, explain: bool) -> anyhow::Result<()> {
     }
     let slo_ttft_s = args.get_f64("slo-ttft", 0.25);
     let args2 = args.clone();
-    let (handle, join) = spawn(
-        move || build_engine(&args2),
-        CoordinatorOptions {
-            decode_batch: args.get_usize("decode-batch", 8),
-            drift_fallback: args.has("drift-fallback"),
-            ..Default::default()
-        },
-    )?;
+    let copts = CoordinatorOptions {
+        drift_fallback: args.has("drift-fallback"),
+        ..batcher_opts(args)?
+    };
+    let (handle, join) = spawn(move || build_engine(&args2), copts)?;
     handle.metrics.set_ttft_slo(slo_ttft_s);
     println!(
         "tpcc load: {} requests, {} events span {:.1}s",
@@ -125,6 +144,15 @@ fn run_load(args: &Args, explain: bool) -> anyhow::Result<()> {
     let report = workload::drive(&handle, &trace, &DriveOptions { slo_ttft_s });
     report.publish(&handle.metrics);
     report.print("load");
+    // --metrics-out FILE: dump the full metric registry (the same JSON
+    // GET /metrics serves) so scripts can assert on counters like
+    // preemptions_total without standing up the HTTP server
+    if let Some(path) = args.get("metrics-out") {
+        let mut body = handle.metrics.to_json().to_string();
+        body.push('\n');
+        std::fs::write(path, body)?;
+        println!("metrics written to {path}");
+    }
     if explain {
         let records: Vec<_> =
             handle.flight.records().iter().map(|r| (**r).clone()).collect();
@@ -150,7 +178,6 @@ fn run() -> anyhow::Result<()> {
             let algo = args.get_or("algo", "auto").to_string();
             let rank_threads = rank_threads_arg(&args)?;
             let copts = CoordinatorOptions {
-                decode_batch: args.get_usize("decode-batch", 8),
                 sampling: if args.has("greedy") {
                     Sampling::Greedy
                 } else {
@@ -163,7 +190,7 @@ fn run() -> anyhow::Result<()> {
                 // --drift-fallback: auto-rebind sites the error
                 // sentinel trips to the never-worse `none` scheme
                 drift_fallback: args.has("drift-fallback"),
-                ..Default::default()
+                ..batcher_opts(&args)?
             };
             let (handle, _join) = spawn(
                 move || {
@@ -187,8 +214,9 @@ fn run() -> anyhow::Result<()> {
             handle.metrics.set_ttft_slo(args.get_f64("slo-ttft", 0.25));
             let server = Server::bind(&addr, handle)?;
             println!(
-                "tpcc serving on http://{addr}  (POST /generate, GET /metrics[?format=prom], \
-                 GET /metrics/history, GET /debug/requests, GET /policy, GET /trace)"
+                "tpcc serving on http://{addr}  (POST /generate [\"stream\":true for NDJSON], \
+                 GET /metrics[?format=prom], GET /metrics/history, GET /debug/requests, \
+                 GET /policy, GET /trace)"
             );
             server.serve_forever()
         }
@@ -465,8 +493,10 @@ fn run() -> anyhow::Result<()> {
                  load flags:   --arrival poisson:R|bursty:R[:CV]|closed:N[:THINK]\n\
                                --prompt-len sharegpt|N|uniform:LO:HI|lognormal:MED:SIG[:CAP]\n\
                                --output-len ... --requests N --seed S --slo-ttft S\n\
-                               --trace FILE | --save-trace FILE | --explain\n\
+                               --trace FILE | --save-trace FILE | --explain | --metrics-out FILE\n\
                  explain flags: --addr HOST:PORT (read a live server) | load flags\n\
+                 batch flags (serve|load): --decode-batch N --max-batch-tokens N (admission budget)\n\
+                               --kv-block TOKENS --kv-pool BLOCKS (small pool forces preemption)\n\
                  serve flags:  --drift-fallback (sentinel rebinds drifting sites to none)",
                 tpcc::version()
             );

@@ -146,11 +146,15 @@ const BUILTIN_KEYS: &[&str] = &[
     "batches_executed",
     "comm_bytes_sent",
     "comm_bytes_saved",
+    "preemptions_total",
     "kv_blocks_in_use",
+    "kv_blocks_free",
     "ttft_p50_s",
     "ttft_p95_s",
     "ttft_p99_s",
     "tpot_p50_s",
+    "tpot_p90_s",
+    "tpot_p99_s",
     "e2e_p50_s",
     "e2e_p95_s",
     "e2e_p99_s",
@@ -171,11 +175,20 @@ pub struct Registry {
     pub batches_executed: Counter,
     pub comm_bytes_sent: Counter,
     pub comm_bytes_saved: Counter,
-    /// Decode KV slots currently holding a live sequence. A real gauge:
-    /// the coordinator clones it into its decode [`crate::tp::kv::BatchKv`],
-    /// which incs on slot adoption and decs on retirement.
+    /// Sessions evicted from the paged KV pool (blocks swapped out,
+    /// session requeued for restore).
+    pub preemptions_total: Counter,
+    /// KV blocks currently mapped into session block tables. A real
+    /// gauge: the coordinator clones it into its decode
+    /// [`crate::tp::kv::BatchKv`], which moves it on every block
+    /// map/unmap, so the value can never drift from the allocator.
     pub kv_blocks_in_use: Gauge,
+    /// KV blocks on the pool's free list (the same allocator carries
+    /// this handle; in_use + free == pool size at rest).
+    pub kv_blocks_free: Gauge,
     pub ttft: Histogram,
+    /// Inter-token gaps, one sample per decode step per session (a real
+    /// distribution, not the per-request mean).
     pub tpot: Histogram,
     pub e2e_latency: Histogram,
     pub queue_wait: Histogram,
@@ -258,11 +271,15 @@ impl Registry {
             ("batches_executed", json::num(self.batches_executed.get() as f64)),
             ("comm_bytes_sent", json::num(self.comm_bytes_sent.get() as f64)),
             ("comm_bytes_saved", json::num(self.comm_bytes_saved.get() as f64)),
+            ("preemptions_total", json::num(self.preemptions_total.get() as f64)),
             ("kv_blocks_in_use", json::num(self.kv_blocks_in_use.get() as f64)),
+            ("kv_blocks_free", json::num(self.kv_blocks_free.get() as f64)),
             ("ttft_p50_s", json::num_or_null(ttft.percentile(50.0))),
             ("ttft_p95_s", json::num_or_null(ttft.percentile(95.0))),
             ("ttft_p99_s", json::num_or_null(ttft.percentile(99.0))),
             ("tpot_p50_s", json::num_or_null(tpot.percentile(50.0))),
+            ("tpot_p90_s", json::num_or_null(tpot.percentile(90.0))),
+            ("tpot_p99_s", json::num_or_null(tpot.percentile(99.0))),
             ("e2e_p50_s", json::num_or_null(e2e.percentile(50.0))),
             ("e2e_p95_s", json::num_or_null(e2e.percentile(95.0))),
             ("e2e_p99_s", json::num_or_null(e2e.percentile(99.0))),
@@ -318,17 +335,28 @@ impl Registry {
             "Wire bytes saved by compression.",
             self.comm_bytes_saved.get(),
         );
+        counter(
+            "preemptions_total",
+            "Sessions evicted from the KV pool.",
+            self.preemptions_total.get(),
+        );
         out.push_str(&format!(
-            "# HELP tpcc_kv_blocks_in_use Decode KV slots holding a live sequence.\n\
+            "# HELP tpcc_kv_blocks_in_use KV blocks mapped into session block tables.\n\
              # TYPE tpcc_kv_blocks_in_use gauge\n\
              tpcc_kv_blocks_in_use {}\n",
             self.kv_blocks_in_use.get()
+        ));
+        out.push_str(&format!(
+            "# HELP tpcc_kv_blocks_free KV blocks on the pool free list.\n\
+             # TYPE tpcc_kv_blocks_free gauge\n\
+             tpcc_kv_blocks_free {}\n",
+            self.kv_blocks_free.get()
         ));
         let mut summary = |name: &str, help: &str, h: &Histogram| {
             let s = h.snapshot();
             out.push_str(&format!("# HELP tpcc_{name} {help}\n# TYPE tpcc_{name} summary\n"));
             if s.count() > 0 {
-                for q in [0.5, 0.95, 0.99] {
+                for q in [0.5, 0.9, 0.95, 0.99] {
                     out.push_str(&format!(
                         "tpcc_{name}{{quantile=\"{q}\"}} {}\n",
                         s.percentile(q * 100.0)
@@ -555,6 +583,31 @@ mod tests {
         // empty histograms still expose _sum/_count, no NaN quantiles
         assert!(text.contains("tpcc_e2e_seconds_count 0\n"));
         assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn tpot_distribution_and_pool_metrics_are_exposed() {
+        let r = Registry::default();
+        for i in 1..=100 {
+            r.tpot.record(i as f64 / 100.0);
+        }
+        r.preemptions_total.add(2);
+        r.kv_blocks_free.set(5);
+        r.kv_blocks_in_use.set(11);
+        let j = r.to_json();
+        let p50 = j.get("tpot_p50_s").unwrap().as_f64().unwrap();
+        let p90 = j.get("tpot_p90_s").unwrap().as_f64().unwrap();
+        let p99 = j.get("tpot_p99_s").unwrap().as_f64().unwrap();
+        assert!(p50 <= p90 && p90 <= p99, "quantiles must be ordered: {p50} {p90} {p99}");
+        assert!(p90 > 0.8 && p90 < 1.0, "p90 of 0.01..=1.00 near 0.9, got {p90}");
+        assert_eq!(j.get("preemptions_total").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("kv_blocks_free").unwrap().as_f64(), Some(5.0));
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE tpcc_preemptions_total counter\n"));
+        assert!(text.contains("tpcc_preemptions_total 2\n"));
+        assert!(text.contains("# TYPE tpcc_kv_blocks_free gauge\n"));
+        assert!(text.contains("tpcc_kv_blocks_free 5\n"));
+        assert!(text.contains("tpcc_tpot_seconds{quantile=\"0.9\"}"));
     }
 
     #[test]

@@ -65,6 +65,12 @@ pub struct RequestRecord {
     /// Engine wire bytes per site group ([`SITE_GROUPS`] order) over
     /// this request's residency window.
     pub site_wire_bytes: [u64; 4],
+    /// Times this request was evicted from the KV pool (each eviction
+    /// adds a swap-out/restore round trip to its tail).
+    pub preemptions: u64,
+    /// Chunked-prefill slices this request's prompt ran as (0 = single
+    /// whole-prompt prefill batch).
+    pub prefill_chunks: u64,
 }
 
 struct FlightInner {
@@ -191,6 +197,8 @@ fn record_json(r: &RequestRecord) -> Json {
             "site_wire_bytes",
             Json::Arr(r.site_wire_bytes.iter().map(|&b| json::num(b as f64)).collect()),
         ),
+        ("preemptions", json::num(r.preemptions as f64)),
+        ("prefill_chunks", json::num(r.prefill_chunks as f64)),
     ])
 }
 
@@ -226,6 +234,8 @@ fn record_from_json(j: &Json) -> RequestRecord {
         decode: j.get("decode").map(phase_from_json).unwrap_or_default(),
         fabric_wait_s: j.get("fabric_wait_s").and_then(Json::as_f64).unwrap_or(0.0),
         site_wire_bytes,
+        preemptions: u("preemptions"),
+        prefill_chunks: u("prefill_chunks"),
     }
 }
 
@@ -272,6 +282,10 @@ pub struct Attribution {
     pub phases: Vec<AttrRow>,
     /// Per-site-group rows in wire bytes.
     pub sites: Vec<AttrRow>,
+    /// Scheduler-event rows in plain counts (preemptions,
+    /// chunked-prefill slices): was the tail cohort preempted or
+    /// chunked more than the p50 cohort?
+    pub counts: Vec<AttrRow>,
 }
 
 /// Split records into a p50 cohort (the faster half by e2e) and a tail
@@ -325,6 +339,18 @@ pub fn attribution(records: &[RequestRecord]) -> Option<Attribution> {
             AttrRow { name, p50: a, tail: b, delta: b - a, share_pct: f64::NAN }
         })
         .collect();
+    let count_fields: [(&'static str, Field); 2] = [
+        ("preemptions", |r| r.preemptions as f64),
+        ("prefill_chunks", |r| r.prefill_chunks as f64),
+    ];
+    let counts = count_fields
+        .iter()
+        .map(|&(name, f)| {
+            let a = mean(p50, &f);
+            let b = mean(tail, &f);
+            AttrRow { name, p50: a, tail: b, delta: b - a, share_pct: f64::NAN }
+        })
+        .collect();
     Some(Attribution {
         n,
         p50_n,
@@ -333,6 +359,7 @@ pub fn attribution(records: &[RequestRecord]) -> Option<Attribution> {
         tail_e2e_s: tail_e2e,
         phases,
         sites,
+        counts,
     })
 }
 
@@ -375,6 +402,16 @@ pub fn render_attribution(a: &Attribution) -> String {
             row.p50 / 1e6,
             row.tail / 1e6,
             row.delta / 1e6
+        ));
+    }
+    out.push_str(&format!(
+        "\n{:<18} {:>12} {:>12} {:>12}\n",
+        "scheduler", "p50 (mean)", "tail (mean)", "delta"
+    ));
+    for row in &a.counts {
+        out.push_str(&format!(
+            "{:<18} {:>12.2} {:>12.2} {:>+12.2}\n",
+            row.name, row.p50, row.tail, row.delta
         ));
     }
     out
@@ -447,6 +484,8 @@ mod tests {
         r.batch_peak = 3;
         r.prefill = PhaseCost { compute_s: 0.5, codec_s: 0.1, link_s: 0.2, wire_bytes: 1024 };
         r.site_wire_bytes = [1, 2, 3, 4];
+        r.preemptions = 2;
+        r.prefill_chunks = 3;
         fr.record(r.clone());
         fr.set_group_schemes(std::array::from_fn(|_| "none".to_string()));
         let body = fr.to_json().to_string();
@@ -457,6 +496,7 @@ mod tests {
         assert_eq!(back[0].prefill, r.prefill);
         assert_eq!(back[0].site_wire_bytes, [1, 2, 3, 4]);
         assert_eq!(back[0].e2e_s, 1.25);
+        assert_eq!((back[0].preemptions, back[0].prefill_chunks), (2, 3));
         assert_eq!(
             parsed.get("group_schemes").unwrap().idx(0).unwrap().as_str(),
             Some("none")
@@ -478,6 +518,8 @@ mod tests {
             r.decode.compute_s = 0.01;
             r.decode.link_s = 0.4;
             r.site_wire_bytes = [0, 8_000_000, 0, 0];
+            r.preemptions = 2;
+            r.prefill_chunks = 4;
             records.push(r);
         }
         let a = attribution(&records).unwrap();
@@ -490,10 +532,18 @@ mod tests {
         assert!(link.share_pct > 90.0, "share {}", link.share_pct);
         let attn_dec = a.sites.iter().find(|r| r.name == "attn.decode").unwrap();
         assert!(attn_dec.delta > 1e6);
+        // scheduler-event counts: the tail cohort was preempted and
+        // chunked, the p50 cohort was not
+        let pre = a.counts.iter().find(|r| r.name == "preemptions").unwrap();
+        assert!((pre.tail - 2.0).abs() < 1e-9 && pre.p50 == 0.0);
+        let ch = a.counts.iter().find(|r| r.name == "prefill_chunks").unwrap();
+        assert!((ch.delta - 4.0).abs() < 1e-9);
         // render never panics and names the culprit
         let table = render_attribution(&a);
         assert!(table.contains("decode.link"));
         assert!(table.contains("attn.decode"));
+        assert!(table.contains("preemptions"));
+        assert!(table.contains("prefill_chunks"));
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": "...", "max_tokens": 32, "greedy": true}
+//!                   (+ "stream": true -> chunked NDJSON: one line per
+//!                   token as the batcher emits it, then a final line
+//!                   with "done": true and the full response)
 //!   GET  /metrics   -> JSON snapshot of the registry
 //!                      (?format=prom -> Prometheus text exposition)
 //!   GET  /metrics/history -> bounded time-series ring of registry
@@ -29,7 +32,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{CoordinatorHandle, GenRequest};
+use crate::coordinator::{CoordinatorHandle, GenRequest, StreamEvent};
 use crate::util::json::{self, Json};
 
 /// Observable pool behaviour (tests assert the cap holds under burst).
@@ -70,6 +73,7 @@ pub struct Server {
     handle: CoordinatorHandle,
     workers: usize,
     backlog: usize,
+    io_timeout: std::time::Duration,
     stats: Arc<PoolStats>,
 }
 
@@ -79,12 +83,15 @@ pub struct Server {
 pub const DEFAULT_WORKERS: usize = 8;
 /// Default bound on queued-but-unhandled connections before shedding.
 pub const DEFAULT_BACKLOG: usize = 64;
-/// Per-connection socket I/O timeout. A fixed pool turns a client that
+/// Per-*operation* socket I/O timeout. A fixed pool turns a client that
 /// connects and sends nothing into a wedged worker; with the timeout
 /// the read errors out and the worker moves on (the old
-/// thread-per-connection model merely leaked the thread). Generous
-/// enough for slow clients — engine *compute* between read and write
-/// is not bounded by this.
+/// thread-per-connection model merely leaked the thread). The deadline
+/// is armed per socket operation — and for streaming responses re-armed
+/// after every successful token write — never once for the whole
+/// request, so a long generation streaming steadily is never killed
+/// mid-stream no matter its total duration. Engine *compute* between
+/// read and write is not bounded by this.
 pub const CLIENT_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 
 impl Server {
@@ -94,6 +101,7 @@ impl Server {
             handle,
             workers: DEFAULT_WORKERS,
             backlog: DEFAULT_BACKLOG,
+            io_timeout: CLIENT_IO_TIMEOUT,
             stats: Arc::new(PoolStats::default()),
         })
     }
@@ -102,6 +110,13 @@ impl Server {
     pub fn with_pool(mut self, workers: usize, backlog: usize) -> Server {
         self.workers = workers.max(1);
         self.backlog = backlog.max(1);
+        self
+    }
+
+    /// Override the per-operation socket I/O timeout (tests shrink it to
+    /// keep slow-client regressions fast).
+    pub fn with_io_timeout(mut self, t: std::time::Duration) -> Server {
+        self.io_timeout = t;
         self
     }
 
@@ -124,6 +139,7 @@ impl Server {
                 let rx = rx.clone();
                 let handle = self.handle.clone();
                 let stats = self.stats.clone();
+                let io_timeout = self.io_timeout;
                 std::thread::Builder::new()
                     .name(format!("tpcc-http{i}"))
                     .spawn(move || loop {
@@ -140,15 +156,15 @@ impl Server {
                             }
                         };
                         // a silent client must not wedge a pool worker
-                        let _ = stream.set_read_timeout(Some(CLIENT_IO_TIMEOUT));
-                        let _ = stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT));
+                        let _ = stream.set_read_timeout(Some(io_timeout));
+                        let _ = stream.set_write_timeout(Some(io_timeout));
                         stats.enter();
                         // a handler panic costs this connection, not the
                         // worker (thread-per-connection parity)
                         let handle = handle.clone();
                         let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                             move || {
-                                let _ = handle_conn(stream, handle);
+                                let _ = handle_conn(stream, handle, io_timeout);
                             },
                         ));
                         stats.exit();
@@ -278,7 +294,90 @@ fn respond_typed(
     Ok(())
 }
 
-fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Result<()> {
+/// Serialize a completed generation as the response JSON object.
+/// Latency fields can be NaN (e.g. a request that never decoded a
+/// second token has no TPOT) — those serialize as null, NaN is not
+/// valid JSON.
+fn response_json(resp: &crate::coordinator::GenResponse) -> Json {
+    json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("text", json::s(&resp.text)),
+        ("prompt_tokens", json::num(resp.prompt_tokens as f64)),
+        ("new_tokens", json::num(resp.new_tokens as f64)),
+        ("ttft_s", json::num_or_null(resp.ttft_s)),
+        ("e2e_s", json::num_or_null(resp.e2e_s)),
+        ("tpot_s", json::num_or_null(resp.tpot_s)),
+        ("queue_wait_s", json::num_or_null(resp.queue_wait_s)),
+        ("virtual_prefill_s", json::num(resp.virtual_prefill_s)),
+    ])
+}
+
+/// Write one HTTP/1.1 chunk (hex size line + payload).
+fn write_chunk(stream: &mut TcpStream, data: &str) -> anyhow::Result<()> {
+    write!(stream, "{:x}\r\n{}\r\n", data.len(), data)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Stream a generation as chunked NDJSON: one
+/// `{"index":i,"token":t,"text":"..."}` line per token as the batcher
+/// emits it, then a final `{"done":true,...}` line with the full
+/// response. The socket deadline is re-armed after every successful
+/// token write, so the stream lives as long as tokens keep flowing —
+/// only a *stalled* client (or engine) for more than `io_timeout` kills
+/// it, never total generation time.
+fn stream_generate(
+    stream: &mut TcpStream,
+    events: std::sync::mpsc::Receiver<StreamEvent>,
+    io_timeout: std::time::Duration,
+) -> anyhow::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    loop {
+        match events.recv_timeout(io_timeout) {
+            Ok(StreamEvent::Token { index, token, text }) => {
+                let line = json::obj(vec![
+                    ("index", json::num(index as f64)),
+                    ("token", json::num(token as f64)),
+                    ("text", json::s(&text)),
+                ])
+                .to_string();
+                write_chunk(stream, &format!("{line}\n"))?;
+                // the write above succeeded: the client is draining.
+                // Re-arm the per-token deadline for the next one.
+                let _ = stream.set_write_timeout(Some(io_timeout));
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                let mut obj = response_json(&resp);
+                if let Json::Obj(map) = &mut obj {
+                    map.insert("done".to_string(), Json::Bool(true));
+                }
+                let line = obj.to_string();
+                write_chunk(stream, &format!("{line}\n"))?;
+                break;
+            }
+            Err(_) => {
+                // engine stalled or died mid-stream: say so in-band
+                // before terminating the chunk stream
+                let line = json::obj(vec![("error", json::s("generation stalled"))]).to_string();
+                write_chunk(stream, &format!("{line}\n"))?;
+                break;
+            }
+        }
+    }
+    write!(stream, "0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    handle: CoordinatorHandle,
+    io_timeout: std::time::Duration,
+) -> anyhow::Result<()> {
     // a malformed request (empty request line, truncated body) is the
     // client's fault: answer 400 instead of dropping the connection
     let req = match parse_request(&mut stream) {
@@ -340,31 +439,19 @@ fn handle_conn(mut stream: TcpStream, handle: CoordinatorHandle) -> anyhow::Resu
             };
             let max_tokens = doc.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
             let greedy = doc.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
+            let streaming = doc.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
             let gen = GenRequest {
                 prompt: prompt.to_string(),
                 max_new_tokens: max_tokens,
                 greedy,
                 stop_token: -1,
             };
+            if streaming {
+                let events = handle.submit_stream(gen);
+                return stream_generate(&mut stream, events, io_timeout);
+            }
             match handle.generate(gen) {
-                Ok(resp) => {
-                    // latency fields can be NaN (e.g. a request that
-                    // never decoded a second token has no TPOT) —
-                    // serialize those as null, NaN is not valid JSON
-                    let body = json::obj(vec![
-                        ("id", json::num(resp.id as f64)),
-                        ("text", json::s(&resp.text)),
-                        ("prompt_tokens", json::num(resp.prompt_tokens as f64)),
-                        ("new_tokens", json::num(resp.new_tokens as f64)),
-                        ("ttft_s", json::num_or_null(resp.ttft_s)),
-                        ("e2e_s", json::num_or_null(resp.e2e_s)),
-                        ("tpot_s", json::num_or_null(resp.tpot_s)),
-                        ("queue_wait_s", json::num_or_null(resp.queue_wait_s)),
-                        ("virtual_prefill_s", json::num(resp.virtual_prefill_s)),
-                    ])
-                    .to_string();
-                    respond(&mut stream, 200, &body)
-                }
+                Ok(resp) => respond(&mut stream, 200, &response_json(&resp).to_string()),
                 // error text goes through the JSON writer: a raw
                 // format! would break the body on quotes/newlines in
                 // the message
@@ -395,6 +482,66 @@ pub fn http_get(addr: &str, path: &str) -> anyhow::Result<(u32, String)> {
     let mut stream = TcpStream::connect(addr)?;
     write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
     read_response(stream)
+}
+
+/// POST and read a chunked (streaming) response: returns the status and
+/// each chunk's payload in arrival order. `on_chunk` fires as each
+/// chunk is read — timing-sensitive tests use it to timestamp arrivals.
+pub fn http_post_stream(
+    addr: &str,
+    path: &str,
+    body: &str,
+    mut on_chunk: impl FnMut(&str),
+) -> anyhow::Result<(u32, Vec<String>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u32 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("transfer-encoding")
+                && v.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    anyhow::ensure!(chunked, "response is not chunked (status {status})");
+    let mut chunks = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| anyhow::anyhow!("bad chunk size line: {size_line:?}"))?;
+        let mut payload = vec![0u8; size + 2]; // chunk data + trailing CRLF
+        reader.read_exact(&mut payload)?;
+        if size == 0 {
+            break;
+        }
+        payload.truncate(size);
+        let text = String::from_utf8_lossy(&payload).into_owned();
+        on_chunk(&text);
+        chunks.push(text);
+    }
+    Ok((status, chunks))
 }
 
 fn read_response(stream: TcpStream) -> anyhow::Result<(u32, String)> {

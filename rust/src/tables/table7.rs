@@ -24,7 +24,7 @@ use crate::policy::{
     auto_search, paper_policy, Calibration, PolicyTable, SearchScenario, SiteCosts, CANDIDATES,
     PAPER_ERR_BUDGET_PCT,
 };
-use crate::workload::{capacity, LoadShape, ModeledEngine, SimOptions, SloSpec};
+use crate::workload::{capacity, BatchMode, LoadShape, ModeledEngine, SimOptions, SloSpec};
 
 /// One (deployment, policy) capacity row.
 #[derive(Debug, Clone)]
@@ -33,8 +33,12 @@ pub struct Table7Row {
     pub accelerators: String,
     /// `uniform:none` / `uniform:fp4...` / `paper` / `auto`
     pub policy: String,
-    /// max sustainable arrival rate at the SLO (requests/s)
+    /// max sustainable arrival rate at the SLO (requests/s), bucketed
+    /// (batch-at-a-time) serving loop
     pub qps: f64,
+    /// max sustainable rate under the continuous (in-flight) batcher —
+    /// same engine, same trace seed, [`BatchMode::Continuous`] loop
+    pub qps_cont: f64,
     /// TTFT percentiles at that rate (seconds)
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
@@ -111,6 +115,10 @@ pub fn run_for(
         for (policy, table) in policies(&model, profile, tp)? {
             let mut eng = ModeledEngine::new(model, profile, tp, &table)?;
             let cap = capacity(&mut eng, &cfg.shape, &cfg.slo, &SimOptions::default(), cfg.iters);
+            // same engine (shared interval memo), same trace seed, the
+            // continuous serving loop
+            let cont_opts = SimOptions { mode: BatchMode::Continuous, ..SimOptions::default() };
+            let cap_cont = capacity(&mut eng, &cfg.shape, &cfg.slo, &cont_opts, cfg.iters);
             let (p50, p99, goodput, tok_s) = match &cap.report {
                 Some(r) => (
                     r.ttft.percentile(50.0),
@@ -125,6 +133,7 @@ pub fn run_for(
                 accelerators: label.to_string(),
                 policy,
                 qps: cap.qps,
+                qps_cont: cap_cont.qps,
                 ttft_p50_s: p50,
                 ttft_p99_s: p99,
                 goodput,
@@ -153,6 +162,20 @@ pub fn run_for(
                 );
             }
         }
+        // and the continuous batcher never loses capacity to bucketed
+        // on these deployments, compressed or not (0.5% tolerance for
+        // bisection-bracket granularity)
+        for r in chunk {
+            anyhow::ensure!(
+                r.qps_cont >= r.qps * 0.995,
+                "{} {} {}: continuous sustains {:.2} qps < bucketed {:.2}",
+                r.model,
+                r.accelerators,
+                r.policy,
+                r.qps_cont,
+                r.qps
+            );
+        }
     }
     Ok(rows)
 }
@@ -171,17 +194,18 @@ pub fn print(rows: &[Table7Row], cfg: &Table7Config) {
         cfg.shape.requests
     );
     println!(
-        "{:<12} {:<8} {:<24} {:>8} {:>10} {:>10} {:>9} {:>10}",
-        "model", "accel", "policy", "qps", "ttft-p50", "ttft-p99", "goodput", "tok/s"
+        "{:<12} {:<8} {:<24} {:>8} {:>9} {:>10} {:>10} {:>9} {:>10}",
+        "model", "accel", "policy", "qps", "qps-cont", "ttft-p50", "ttft-p99", "goodput", "tok/s"
     );
-    common::hr(100);
+    common::hr(110);
     for r in rows {
         println!(
-            "{:<12} {:<8} {:<24} {:>8.2} {:>9.0}ms {:>9.0}ms {:>8.1}% {:>10.1}",
+            "{:<12} {:<8} {:<24} {:>8.2} {:>9.2} {:>9.0}ms {:>9.0}ms {:>8.1}% {:>10.1}",
             r.model,
             r.accelerators,
             r.policy,
             r.qps,
+            r.qps_cont,
             r.ttft_p50_s * 1e3,
             r.ttft_p99_s * 1e3,
             r.goodput * 100.0,
@@ -189,8 +213,8 @@ pub fn print(rows: &[Table7Row], cfg: &Table7Config) {
         );
     }
     println!(
-        "(per deployment: compressed policies vs the uncompressed baseline; \
-         L4 rows assert compressed ≥ uncompressed capacity)"
+        "(qps = bucketed batch-at-a-time loop, qps-cont = continuous in-flight batcher; \
+         L4 rows assert compressed ≥ uncompressed and continuous ≥ bucketed capacity)"
     );
 }
 
@@ -215,6 +239,7 @@ mod tests {
         assert!(base.qps > 0.0, "uncompressed deployment must sustain some load");
         for r in &rows {
             assert!(r.qps > 0.0, "{}: zero capacity", r.policy);
+            assert!(r.qps_cont > 0.0, "{}: zero continuous capacity", r.policy);
             if r.qps > 0.0 {
                 assert!(r.goodput >= cfg.slo.min_goodput - 1e-9, "{}: {}", r.policy, r.goodput);
                 assert!(r.ttft_p50_s.is_finite() && r.ttft_p50_s <= cfg.slo.ttft_s);

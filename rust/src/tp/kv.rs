@@ -1,17 +1,34 @@
-//! Batched KV cache owned by the coordinator, sharded per TP rank.
+//! Paged, batched KV cache owned by the coordinator, sharded per TP rank.
 //!
-//! The authoritative cache lives here as contiguous `[B, Hn, T, hd]` f32
-//! buffers per (rank, layer) — exactly the literal layout the decode
-//! attention stage expects, so handing it to PJRT is a single memcpy.
-//! Stage programs only *output* the new-token slices; `write_slices`
-//! mirrors the HLO-side `dynamic_update_slice` on the rust side.
+//! Storage is a fixed pool of fixed-size **blocks** per rank shard: each
+//! block holds `block` token positions (all heads, one layer stride per
+//! arena) and sequences map tokens to blocks through a per-slot block
+//! table, vLLM-style. The decode attention stage still consumes one
+//! contiguous `[B, Hn, T, hd]` f32 literal per (rank, layer), so
+//! [`KvShard::cache_literals`] gathers the mapped blocks into that layout
+//! on demand (we gather on the host instead of running a paged-attention
+//! kernel — see DESIGN.md for the deviation rationale). Stage programs
+//! only *output* new-token slices; `write_slices` routes them through the
+//! block table, mirroring the HLO-side `dynamic_update_slice`.
 //!
-//! Each rank's buffers sit behind their own `Arc<Mutex<KvShard>>` so the
+//! Two allocation modes share one code path:
+//! * [`BatchKv::new`] pre-maps every slot to full capacity — the
+//!   transient per-prefill cache and the engine tests use this, and it
+//!   behaves exactly like the old monolithic cache.
+//! * [`BatchKv::paged`] starts with an empty table per slot and a free
+//!   list; the coordinator maps blocks on demand ([`BatchKv::ensure_tokens`])
+//!   and reclaims them by preempting a session ([`BatchKv::swap_out`] /
+//!   [`BatchKv::swap_in`], bit-exact host copies) when the pool runs dry.
+//!
+//! Each rank's arena sits behind its own `Arc<Mutex<KvShard>>` so the
 //! rank-thread runtime can hand rank `r`'s shard to the worker that owns
 //! rank `r` ([`BatchKv::shard_handle`]) while the coordinator keeps the
 //! whole-cache view for slot management. Access never contends: during a
 //! forward only the owning worker touches a shard, and the coordinator's
-//! slot operations (`adopt_slot`, `clear_slot`) run between forwards.
+//! slot operations (map/adopt/clear/swap) run between forwards. Block
+//! tables are mirrored into every shard under its mutex, and all shards
+//! perform the identical alloc/free sequence, so the tables stay
+//! congruent across ranks by construction.
 
 use std::sync::{Arc, Mutex};
 
@@ -19,30 +36,46 @@ use crate::metrics::Gauge;
 use crate::model::ModelConfig;
 use crate::runtime::lit_f32;
 
-/// One rank's KV cache: per-layer contiguous `[B, Hn, T, hd]` buffers.
+/// Default tokens per KV block (`--kv-block`).
+pub const DEFAULT_KV_BLOCK: usize = 16;
+
+/// One rank's KV cache: per-layer block arenas + per-slot block tables.
 pub struct KvShard {
-    /// [layer] -> contiguous [B, Hn, T, hd]
+    /// [layer] -> arena `[total_blocks, Hn, block, hd]`
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    /// [slot] -> block ids mapping token ranges `[i*block, (i+1)*block)`
+    tables: Vec<Vec<u32>>,
     batch: usize,
     heads: usize, // per-rank heads (Hn)
     cap: usize,   // T
     head_dim: usize,
+    block: usize, // tokens per block
 }
 
 /// Cloneable handle to one rank's shard (what a rank worker receives).
 pub type KvShardRef = Arc<Mutex<KvShard>>;
 
 impl KvShard {
-    fn new(n_layers: usize, batch: usize, heads: usize, cap: usize, head_dim: usize) -> KvShard {
-        let size = batch * heads * cap * head_dim;
+    fn new(
+        n_layers: usize,
+        batch: usize,
+        heads: usize,
+        cap: usize,
+        head_dim: usize,
+        block: usize,
+        total_blocks: usize,
+    ) -> KvShard {
+        let size = total_blocks * heads * block * head_dim;
         KvShard {
             k: (0..n_layers).map(|_| vec![0.0f32; size]).collect(),
             v: (0..n_layers).map(|_| vec![0.0f32; size]).collect(),
+            tables: vec![Vec::new(); batch],
             batch,
             heads,
             cap,
             head_dim,
+            block,
         }
     }
 
@@ -50,79 +83,202 @@ impl KvShard {
         self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
     }
 
+    /// Arena offset of (block, head, in-block token offset).
+    #[inline]
+    fn at(&self, blk: u32, h: usize, off: usize) -> usize {
+        ((blk as usize * self.heads + h) * self.block + off) * self.head_dim
+    }
+
+    fn map_block(&mut self, slot: usize, blk: u32) {
+        self.tables[slot].push(blk);
+    }
+
+    fn unmap_slot(&mut self, slot: usize) -> Vec<u32> {
+        let blocks = std::mem::take(&mut self.tables[slot]);
+        let n = self.heads * self.block * self.head_dim;
+        for layer in 0..self.k.len() {
+            for &b in &blocks {
+                let base = b as usize * n;
+                self.k[layer][base..base + n].fill(0.0);
+                self.v[layer][base..base + n].fill(0.0);
+            }
+        }
+        blocks
+    }
+
     /// Write the new-token K/V slices returned by an attention stage.
     /// `ks`/`vs` are `[B, Hn, S, hd]` row-major; row `b`'s tokens land at
-    /// positions `pos[b] .. pos[b]+s` of its cache slot.
+    /// positions `pos[b] .. pos[b]+s` of its cache slot. Positions past
+    /// capacity or past the slot's mapped blocks are dropped (a padded
+    /// decode batch writes rows for vacant slots that map nowhere).
     pub fn write_slices(&mut self, layer: usize, s: usize, pos: &[i32], ks: &[f32], vs: &[f32]) {
         let (bn, hn, t, hd) = (self.batch, self.heads, self.cap, self.head_dim);
         debug_assert_eq!(ks.len(), bn * hn * s * hd);
         for b in 0..bn {
             let p = pos[b] as usize;
             let end = (p + s).min(t);
-            let copy_s = end.saturating_sub(p);
-            for h in 0..hn {
-                let src_base = (b * hn + h) * s * hd;
-                let dst_base = ((b * hn + h) * t + p) * hd;
-                let kdst = &mut self.k[layer][dst_base..dst_base + copy_s * hd];
-                kdst.copy_from_slice(&ks[src_base..src_base + copy_s * hd]);
-                let vdst = &mut self.v[layer][dst_base..dst_base + copy_s * hd];
-                vdst.copy_from_slice(&vs[src_base..src_base + copy_s * hd]);
+            for tok in p..end {
+                let Some(&blk) = self.tables[b].get(tok / self.block) else {
+                    continue;
+                };
+                let off = tok % self.block;
+                for h in 0..hn {
+                    let src = ((b * hn + h) * s + (tok - p)) * hd;
+                    let dst = self.at(blk, h, off);
+                    self.k[layer][dst..dst + hd].copy_from_slice(&ks[src..src + hd]);
+                    self.v[layer][dst..dst + hd].copy_from_slice(&vs[src..src + hd]);
+                }
             }
         }
+    }
+
+    /// Gather one layer into the contiguous `[B, Hn, T, hd]` layout the
+    /// decode attention stage expects. Unmapped positions read as zeros
+    /// (attention masks beyond each row's `pos`, so they are never
+    /// observable in logits).
+    fn gather_layer(&self, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        let (bn, hn, t, hd) = (self.batch, self.heads, self.cap, self.head_dim);
+        let mut k = vec![0.0f32; bn * hn * t * hd];
+        let mut v = vec![0.0f32; bn * hn * t * hd];
+        for b in 0..bn {
+            for (j, &blk) in self.tables[b].iter().enumerate() {
+                let t0 = j * self.block;
+                let run = self.block.min(t - t0);
+                for h in 0..hn {
+                    let src = self.at(blk, h, 0);
+                    let dst = ((b * hn + h) * t + t0) * hd;
+                    k[dst..dst + run * hd].copy_from_slice(&self.k[layer][src..src + run * hd]);
+                    v[dst..dst + run * hd].copy_from_slice(&self.v[layer][src..src + run * hd]);
+                }
+            }
+        }
+        (k, v)
     }
 
     /// Materialize the (k, v) history literals for a decode call.
     pub fn cache_literals(&self, layer: usize) -> anyhow::Result<(xla::Literal, xla::Literal)> {
         let dims = [self.batch, self.heads, self.cap, self.head_dim];
-        Ok((lit_f32(&dims, &self.k[layer])?, lit_f32(&dims, &self.v[layer])?))
+        let (k, v) = self.gather_layer(layer);
+        Ok((lit_f32(&dims, &k)?, lit_f32(&dims, &v)?))
     }
 
-    fn adopt_slot(&mut self, dst_slot: usize, src: &KvShard, src_slot: usize, len: usize) {
-        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
-        assert_eq!(src.heads, hn);
-        assert_eq!(src.head_dim, hd);
-        let n = len.min(t) * hd;
-        for layer in 0..self.k.len() {
+    /// Gather one slot's first `len` tokens of a layer as `[Hn, len, hd]`.
+    fn read_slot(&self, layer: usize, slot: usize, len: usize) -> (Vec<f32>, Vec<f32>) {
+        let (hn, hd) = (self.heads, self.head_dim);
+        let len = len.min(self.cap);
+        let mut k = vec![0.0f32; hn * len * hd];
+        let mut v = vec![0.0f32; hn * len * hd];
+        for (j, &blk) in self.tables[slot].iter().enumerate() {
+            let t0 = j * self.block;
+            if t0 >= len {
+                break;
+            }
+            let run = self.block.min(len - t0);
             for h in 0..hn {
-                let dst_base = ((dst_slot * hn + h) * t) * hd;
-                let src_base = ((src_slot * hn + h) * src.cap) * hd;
-                self.k[layer][dst_base..dst_base + n]
-                    .copy_from_slice(&src.k[layer][src_base..src_base + n]);
-                self.v[layer][dst_base..dst_base + n]
-                    .copy_from_slice(&src.v[layer][src_base..src_base + n]);
+                let src = self.at(blk, h, 0);
+                let dst = (h * len + t0) * hd;
+                k[dst..dst + run * hd].copy_from_slice(&self.k[layer][src..src + run * hd]);
+                v[dst..dst + run * hd].copy_from_slice(&self.v[layer][src..src + run * hd]);
             }
         }
+        (k, v)
     }
 
-    fn clear_slot(&mut self, slot: usize) {
-        let (hn, t, hd) = (self.heads, self.cap, self.head_dim);
-        let base = slot * hn * t * hd;
-        let n = hn * t * hd;
-        for layer in 0..self.k.len() {
-            self.k[layer][base..base + n].fill(0.0);
-            self.v[layer][base..base + n].fill(0.0);
+    /// Scatter `[Hn, len, hd]` data into a slot's blocks at positions
+    /// `0..len`. The caller must have mapped enough blocks.
+    fn write_slot(&mut self, layer: usize, slot: usize, len: usize, k: &[f32], v: &[f32]) {
+        let (hn, hd) = (self.heads, self.head_dim);
+        let len = len.min(self.cap);
+        for tok in 0..len {
+            let Some(&blk) = self.tables[slot].get(tok / self.block) else {
+                continue;
+            };
+            let off = tok % self.block;
+            for h in 0..hn {
+                let src = (h * len + tok) * hd;
+                let dst = self.at(blk, h, off);
+                self.k[layer][dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                self.v[layer][dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+            }
         }
     }
 }
 
-/// The whole-batch KV cache: one [`KvShard`] per TP rank.
+/// One preempted sequence's KV history, swapped out of the block pool
+/// into host buffers. Swapping (rather than recompute-on-restore) keeps
+/// the restore **bit-identical**: the cache after `swap_in` is the exact
+/// f32 image the session had when evicted.
+pub struct SwappedKv {
+    pub len: usize,
+    /// [rank][layer] -> `[Hn, len, hd]`
+    k: Vec<Vec<Vec<f32>>>,
+    v: Vec<Vec<Vec<f32>>>,
+}
+
+impl SwappedKv {
+    /// Host bytes held by this swapped image.
+    pub fn bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .flat_map(|layers| layers.iter())
+            .map(|b| b.len() * 4)
+            .sum()
+    }
+}
+
+/// The whole-batch KV cache: one [`KvShard`] per TP rank plus the block
+/// allocator state (free list, per-slot mapped counts, gauges).
 pub struct BatchKv {
     /// [rank] -> that rank's shard
     shards: Vec<KvShardRef>,
-    /// [slot] -> holds a live sequence's history (tracks the attached
-    /// occupancy gauge; adopt/clear are idempotent per slot)
+    /// [slot] -> holds a live sequence's history (tracks `slots_in_use`;
+    /// adopt/clear are idempotent per slot)
     occupied: Vec<bool>,
-    /// occupancy gauge (`kv_blocks_in_use`), when attached
-    gauge: Option<Gauge>,
+    /// [slot] -> mapped block count (mirror of the shards' table lens)
+    slot_blocks: Vec<usize>,
+    /// unmapped block ids, shared across shards (tables are congruent)
+    free: Vec<u32>,
+    total_blocks: usize,
+    n_layers: usize,
+    /// mapped-block gauge (`kv_blocks_in_use`), when attached
+    in_use_gauge: Option<Gauge>,
+    /// free-block gauge (`kv_blocks_free`), when attached
+    free_gauge: Option<Gauge>,
     pub batch: usize,
     pub heads: usize, // per-rank heads (Hn)
     pub cap: usize,   // T
     pub head_dim: usize,
+    pub block: usize, // tokens per block
 }
 
 impl BatchKv {
+    /// Fully-mapped cache: every slot pre-mapped to capacity, exactly the
+    /// old monolithic behavior. Used for transient prefill caches and
+    /// anywhere allocation pressure is not being modeled.
     pub fn new(cfg: &ModelConfig, tp: usize, batch: usize) -> BatchKv {
+        let block = DEFAULT_KV_BLOCK.min(cfg.max_seq.max(1));
+        let pool = batch * Self::blocks_per_seq(cfg.max_seq, block);
+        let mut kv = Self::paged(cfg, tp, batch, block, pool);
+        for slot in 0..batch {
+            let ok = kv.ensure_tokens(slot, cfg.max_seq);
+            debug_assert!(ok, "full pool must map every slot");
+        }
+        kv
+    }
+
+    /// Paged cache: `pool_blocks` blocks per rank shard, nothing mapped.
+    /// The coordinator maps blocks per slot on demand and preempts when
+    /// `ensure_tokens` fails.
+    pub fn paged(
+        cfg: &ModelConfig,
+        tp: usize,
+        batch: usize,
+        block: usize,
+        pool_blocks: usize,
+    ) -> BatchKv {
         let hn = cfg.shard_heads(tp);
+        let block = block.clamp(1, cfg.max_seq.max(1));
         BatchKv {
             shards: (0..tp)
                 .map(|_| {
@@ -132,32 +288,103 @@ impl BatchKv {
                         hn,
                         cfg.max_seq,
                         cfg.head_dim,
+                        block,
+                        pool_blocks,
                     )))
                 })
                 .collect(),
             occupied: vec![false; batch],
-            gauge: None,
+            slot_blocks: vec![0; batch],
+            free: (0..pool_blocks as u32).rev().collect(),
+            total_blocks: pool_blocks,
+            n_layers: cfg.n_layers,
+            in_use_gauge: None,
+            free_gauge: None,
             batch,
             heads: hn,
             cap: cfg.max_seq,
             head_dim: cfg.head_dim,
+            block,
         }
     }
 
-    /// Attach an occupancy gauge: `adopt_slot` / `clear_slot` keep it at
-    /// the number of slots holding a live sequence. The gauge is only
-    /// meaningful on the cache whose slots track sequence lifetime (the
-    /// coordinator's decode cache); per-request prefill caches go
-    /// without.
+    /// Blocks needed to cover `tokens` positions of a `cap`-long slot.
+    pub fn blocks_per_seq(tokens: usize, block: usize) -> usize {
+        tokens.div_ceil(block.max(1))
+    }
+
+    /// Blocks needed for a sequence of `tokens` tokens in this pool.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        Self::blocks_per_seq(tokens.min(self.cap), self.block)
+    }
+
+    /// Attach the mapped-block gauge (`kv_blocks_in_use`). Meaningful on
+    /// the cache whose blocks track sequence lifetime (the coordinator's
+    /// paged decode pool); per-request prefill caches go without.
     pub fn with_gauge(mut self, gauge: Gauge) -> BatchKv {
-        gauge.add(self.occupied.iter().filter(|&&o| o).count() as i64);
-        self.gauge = Some(gauge);
+        gauge.add(self.mapped_blocks() as i64 - gauge.get());
+        self.in_use_gauge = Some(gauge);
         self
+    }
+
+    /// Attach the free-block gauge (`kv_blocks_free`).
+    pub fn with_free_gauge(mut self, gauge: Gauge) -> BatchKv {
+        gauge.add(self.free.len() as i64 - gauge.get());
+        self.free_gauge = Some(gauge);
+        self
+    }
+
+    fn sync_gauges(&self) {
+        if let Some(g) = &self.in_use_gauge {
+            g.add(self.mapped_blocks() as i64 - g.get());
+        }
+        if let Some(g) = &self.free_gauge {
+            g.add(self.free.len() as i64 - g.get());
+        }
+    }
+
+    /// Blocks currently mapped to some slot.
+    pub fn mapped_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Blocks available for mapping.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total blocks in the pool.
+    pub fn pool_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Blocks mapped to one slot (test/introspection).
+    pub fn slot_mapped(&self, slot: usize) -> usize {
+        self.slot_blocks[slot]
     }
 
     /// Slots currently holding a live sequence.
     pub fn slots_in_use(&self) -> usize {
         self.occupied.iter().filter(|&&o| o).count()
+    }
+
+    /// Map blocks until `slot` covers `tokens` positions. Returns false
+    /// (leaving any partial mapping in place for a retry after the
+    /// caller frees blocks by preempting) when the free list runs dry.
+    pub fn ensure_tokens(&mut self, slot: usize, tokens: usize) -> bool {
+        let need = self.blocks_for(tokens);
+        while self.slot_blocks[slot] < need {
+            let Some(blk) = self.free.pop() else {
+                self.sync_gauges();
+                return false;
+            };
+            for shard in &self.shards {
+                shard.lock().unwrap().map_block(slot, blk);
+            }
+            self.slot_blocks[slot] += 1;
+        }
+        self.sync_gauges();
+        true
     }
 
     /// Handle to rank `r`'s shard, for the worker thread that owns it.
@@ -193,40 +420,102 @@ impl BatchKv {
         self.shards[rank].lock().unwrap().cache_literals(layer)
     }
 
-    /// Copy one sequence slot's cache rows from another BatchKv (used
-    /// when a freshly-prefilled sequence joins a decode batch).
-    pub fn adopt_slot(&mut self, dst_slot: usize, src: &BatchKv, src_slot: usize, len: usize) {
+    /// Copy one sequence slot's first `len` tokens from another BatchKv
+    /// (a freshly-prefilled sequence joining the decode pool). Maps
+    /// destination blocks on demand; fails when the pool is exhausted
+    /// (the caller preempts and retries).
+    pub fn adopt_slot(
+        &mut self,
+        dst_slot: usize,
+        src: &BatchKv,
+        src_slot: usize,
+        len: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(src.heads == self.heads && src.head_dim == self.head_dim);
+        anyhow::ensure!(
+            self.ensure_tokens(dst_slot, len),
+            "kv pool exhausted adopting {len} tokens into slot {dst_slot}"
+        );
+        let len = len.min(self.cap).min(src.cap);
         for rank in 0..self.shards.len() {
             let mut dst = self.shards[rank].lock().unwrap();
             let s = src.shards[rank].lock().unwrap();
-            dst.adopt_slot(dst_slot, &s, src_slot, len);
-        }
-        if !std::mem::replace(&mut self.occupied[dst_slot], true) {
-            if let Some(g) = &self.gauge {
-                g.inc();
+            for layer in 0..self.n_layers {
+                let (k, v) = s.read_slot(layer, src_slot, len);
+                dst.write_slot(layer, dst_slot, len, &k, &v);
             }
         }
+        self.occupied[dst_slot] = true;
+        Ok(())
     }
 
-    /// Zero one slot (sequence retired). Idempotent: the occupancy
-    /// gauge only moves when the slot actually held a sequence.
+    /// Unmap and zero one slot (sequence retired or evicted). Idempotent:
+    /// clearing an empty slot is a no-op.
     pub fn clear_slot(&mut self, slot: usize) {
+        let mut freed: Option<Vec<u32>> = None;
         for shard in &self.shards {
-            shard.lock().unwrap().clear_slot(slot);
+            let blocks = shard.lock().unwrap().unmap_slot(slot);
+            freed.get_or_insert(blocks);
         }
-        if std::mem::replace(&mut self.occupied[slot], false) {
-            if let Some(g) = &self.gauge {
-                g.dec();
-            }
+        if let Some(blocks) = freed {
+            self.free.extend(blocks);
         }
+        self.slot_blocks[slot] = 0;
+        self.occupied[slot] = false;
+        self.sync_gauges();
     }
 
-    /// Raw copies for tests.
+    /// Preempt one slot: copy its first `len` tokens out to host buffers
+    /// and free its blocks. The returned image restores bit-identically
+    /// via [`BatchKv::swap_in`].
+    pub fn swap_out(&mut self, slot: usize, len: usize) -> SwappedKv {
+        let len = len.min(self.cap);
+        let mut k = Vec::with_capacity(self.shards.len());
+        let mut v = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let sh = shard.lock().unwrap();
+            let mut kl = Vec::with_capacity(self.n_layers);
+            let mut vl = Vec::with_capacity(self.n_layers);
+            for layer in 0..self.n_layers {
+                let (klay, vlay) = sh.read_slot(layer, slot, len);
+                kl.push(klay);
+                vl.push(vlay);
+            }
+            k.push(kl);
+            v.push(vl);
+        }
+        self.clear_slot(slot);
+        SwappedKv { len, k, v }
+    }
+
+    /// Restore a preempted sequence into `slot`. Returns false without
+    /// side effects on the image when the pool cannot map enough blocks.
+    pub fn swap_in(&mut self, slot: usize, sw: &SwappedKv) -> bool {
+        if !self.ensure_tokens(slot, sw.len) {
+            return false;
+        }
+        for (rank, shard) in self.shards.iter().enumerate() {
+            let mut sh = shard.lock().unwrap();
+            for layer in 0..self.n_layers {
+                sh.write_slot(layer, slot, sw.len, &sw.k[rank][layer], &sw.v[rank][layer]);
+            }
+        }
+        self.occupied[slot] = true;
+        true
+    }
+
+    /// Mark a slot live without copying (a chunk-prefilled sequence that
+    /// wrote its history in place).
+    pub fn mark_occupied(&mut self, slot: usize) {
+        self.occupied[slot] = true;
+    }
+
+    /// Gathered contiguous `[B, Hn, T, hd]` copies for tests.
     pub fn k_at(&self, rank: usize, layer: usize) -> Vec<f32> {
-        self.shards[rank].lock().unwrap().k[layer].clone()
+        self.shards[rank].lock().unwrap().gather_layer(layer).0
     }
     pub fn v_at(&self, rank: usize, layer: usize) -> Vec<f32> {
-        self.shards[rank].lock().unwrap().v[layer].clone()
+        self.shards[rank].lock().unwrap().gather_layer(layer).1
     }
 }
 
@@ -234,6 +523,7 @@ impl BatchKv {
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
+    use crate::util::rng::Rng;
 
     fn cfg() -> ModelConfig {
         ModelConfig {
@@ -294,7 +584,7 @@ mod tests {
         let ks: Vec<f32> = (0..4 * s * 2).map(|i| i as f32 + 1.0).collect();
         pre.write_slices(0, 0, s, &[0], &ks, &ks);
         let mut dec = BatchKv::new(&c, 1, 4);
-        dec.adopt_slot(2, &pre, 0, s);
+        dec.adopt_slot(2, &pre, 0, s).unwrap();
         let k = dec.k_at(0, 0);
         let hn_t_hd = 4 * 6 * 2;
         let slot2 = 2 * hn_t_hd;
@@ -319,32 +609,160 @@ mod tests {
     fn bytes_accounting() {
         let c = cfg();
         let kv = BatchKv::new(&c, 2, 3);
-        // per rank/layer: 3*2*6*2 floats; 2 ranks * 2 layers * 2 (k+v)
+        // block clamps to cap (6), one block per slot: arena bytes equal
+        // the dense layout. per rank/layer: 3*2*6*2 floats; 2 ranks *
+        // 2 layers * 2 (k+v)
         assert_eq!(kv.bytes(), 3 * 2 * 6 * 2 * 4 * 2 * 2 * 2);
     }
 
     #[test]
-    fn occupancy_gauge_tracks_slot_lifetime_idempotently() {
-        let c = cfg();
-        let g = Gauge::default();
-        let pre = BatchKv::new(&c, 1, 1);
-        let mut kv = BatchKv::new(&c, 1, 4).with_gauge(g.clone());
-        assert_eq!(g.get(), 0);
-        kv.adopt_slot(2, &pre, 0, 1);
-        kv.adopt_slot(0, &pre, 0, 1);
-        assert_eq!(g.get(), 2);
-        assert_eq!(kv.slots_in_use(), 2);
-        // re-adopting an occupied slot must not double-count
-        kv.adopt_slot(2, &pre, 0, 1);
-        assert_eq!(g.get(), 2);
-        kv.clear_slot(2);
-        assert_eq!(g.get(), 1);
-        // clearing an empty slot must not go negative
-        kv.clear_slot(2);
-        kv.clear_slot(3);
-        assert_eq!(g.get(), 1);
+    fn paged_pool_maps_on_demand_and_gauges_follow() {
+        let c = cfg(); // cap 6
+        let used = Gauge::default();
+        let free = Gauge::default();
+        // block=2 -> 3 blocks/seq; pool of 4 can't hold two full seqs
+        let mut kv = BatchKv::paged(&c, 1, 2, 2, 4)
+            .with_gauge(used.clone())
+            .with_free_gauge(free.clone());
+        assert_eq!((used.get(), free.get()), (0, 4));
+        assert!(kv.ensure_tokens(0, 6));
+        assert_eq!((used.get(), free.get()), (3, 1));
+        // slot 1 can only take one more block
+        assert!(kv.ensure_tokens(1, 2));
+        assert_eq!((used.get(), free.get()), (4, 0));
+        assert!(!kv.ensure_tokens(1, 4), "pool must be exhausted");
+        // freeing slot 0 makes the retry succeed
         kv.clear_slot(0);
-        assert_eq!(g.get(), 0);
+        assert_eq!((used.get(), free.get()), (1, 3));
+        assert!(kv.ensure_tokens(1, 4));
+        assert_eq!(used.get() + free.get(), 4);
+    }
+
+    #[test]
+    fn unmapped_slots_drop_writes_and_read_zero() {
+        let c = cfg();
+        let mut kv = BatchKv::paged(&c, 1, 2, 2, 6);
+        assert!(kv.ensure_tokens(1, 2));
+        let ks = vec![7.0f32; 2 * 4 * 1 * 2]; // B=2, Hn=4, S=1, hd=2
+        kv.write_slices(0, 0, 1, &[0, 0], &ks, &ks);
+        let k = kv.k_at(0, 0);
+        let slot = 4 * 6 * 2;
+        // slot 0 is unmapped: its write was dropped
+        assert!(k[..slot].iter().all(|&x| x == 0.0));
+        assert_eq!(k[slot], 7.0);
+    }
+
+    #[test]
+    fn swap_roundtrip_is_bit_identical() {
+        let c = cfg();
+        let mut rng = Rng::new(7);
+        let mut kv = BatchKv::paged(&c, 2, 2, 2, 8);
+        assert!(kv.ensure_tokens(0, 5));
+        for layer in 0..2 {
+            let ks: Vec<f32> = (0..2 * 2 * 5 * 2).map(|_| rng.f64() as f32).collect();
+            let vs: Vec<f32> = (0..2 * 2 * 5 * 2).map(|_| rng.f64() as f32).collect();
+            for rank in 0..2 {
+                kv.write_slices(rank, layer, 5, &[0, 0], &ks, &vs);
+            }
+        }
+        let before: Vec<Vec<f32>> = (0..2).map(|r| kv.k_at(r, 1)).collect();
+        let sw = kv.swap_out(0, 5);
+        assert!(sw.bytes() > 0);
+        assert_eq!(kv.slot_mapped(0), 0);
+        assert!(kv.k_at(0, 1).iter().all(|&x| x == 0.0));
+        // interloper takes blocks, then releases them
+        assert!(kv.ensure_tokens(1, 6));
+        kv.clear_slot(1);
+        assert!(kv.swap_in(0, &sw));
+        for (r, want) in before.iter().enumerate() {
+            assert_eq!(&kv.k_at(r, 1), want, "rank {r} not bit-identical after restore");
+        }
+    }
+
+    #[test]
+    fn swap_in_fails_cleanly_when_pool_full() {
+        let c = cfg();
+        let mut kv = BatchKv::paged(&c, 1, 2, 2, 3);
+        assert!(kv.ensure_tokens(0, 4));
+        let sw = kv.swap_out(0, 4);
+        assert!(kv.ensure_tokens(1, 6)); // steal the whole pool
+        assert!(!kv.swap_in(0, &sw));
+        kv.clear_slot(1);
+        assert!(kv.swap_in(0, &sw));
+    }
+
+    /// Random alloc/free/preempt sequences: the pool never leaks or
+    /// double-maps a block, and mapped + free always equals the pool.
+    #[test]
+    fn prop_paged_allocator_never_leaks_or_double_frees() {
+        let c = cfg();
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..50 {
+            let pool = 1 + rng.below(10);
+            let batch = 1 + rng.below(4);
+            let mut kv = BatchKv::paged(&c, 1, batch, 2, pool);
+            let mut swapped: Vec<(usize, SwappedKv)> = Vec::new();
+            for _ in 0..200 {
+                let slot = rng.below(batch);
+                match rng.below(4) {
+                    0 => {
+                        let _ = kv.ensure_tokens(slot, 1 + rng.below(6));
+                    }
+                    1 => kv.clear_slot(slot),
+                    2 => {
+                        if kv.slot_mapped(slot) > 0 {
+                            let len = kv.slot_mapped(slot) * kv.block;
+                            swapped.push((slot, kv.swap_out(slot, len.min(kv.cap))));
+                        }
+                    }
+                    _ => {
+                        if let Some((s, sw)) = swapped.pop() {
+                            let _ = kv.swap_in(s, &sw);
+                        }
+                    }
+                }
+                // conservation: every block is exactly mapped or free
+                let mapped: usize = (0..batch).map(|s| kv.slot_mapped(s)).sum();
+                assert_eq!(mapped, kv.mapped_blocks());
+                assert_eq!(mapped + kv.free_blocks(), pool);
+            }
+        }
+    }
+
+    /// Block-table reads reconstruct exactly what `write_slices` wrote:
+    /// gather output matches a dense reference model under random writes.
+    #[test]
+    fn prop_block_table_reads_match_dense_reference() {
+        let c = cfg(); // hn(tp=1)=4, cap=6, hd=2
+        let (hn, cap, hd) = (4usize, 6usize, 2usize);
+        let mut rng = Rng::new(0xCAFE);
+        for _ in 0..30 {
+            let batch = 1 + rng.below(3);
+            let mut kv = BatchKv::paged(&c, 1, batch, 1 + rng.below(3), batch * 6);
+            for slot in 0..batch {
+                assert!(kv.ensure_tokens(slot, cap));
+            }
+            let mut dense = vec![0.0f32; batch * hn * cap * hd];
+            for _ in 0..20 {
+                let s = 1 + rng.below(3);
+                let pos: Vec<i32> = (0..batch).map(|_| rng.below(cap) as i32).collect();
+                let ks: Vec<f32> =
+                    (0..batch * hn * s * hd).map(|_| (rng.below(1000) as f32) / 10.0).collect();
+                kv.write_slices(0, 0, s, &pos, &ks, &ks);
+                for b in 0..batch {
+                    let p = pos[b] as usize;
+                    for tok in p..(p + s).min(cap) {
+                        for h in 0..hn {
+                            for d in 0..hd {
+                                dense[((b * hn + h) * cap + tok) * hd + d] =
+                                    ks[((b * hn + h) * s + (tok - p)) * hd + d];
+                            }
+                        }
+                    }
+                }
+                assert_eq!(kv.k_at(0, 0), dense);
+            }
+        }
     }
 
     #[test]
@@ -360,6 +778,6 @@ mod tests {
         assert_eq!(kv.k_at(1, 0)[0], 3.0);
         // and vice versa
         kv.clear_slot(0);
-        assert!(h.lock().unwrap().k[0].iter().all(|&x| x == 0.0));
+        assert!(h.lock().unwrap().gather_layer(0).0.iter().all(|&x| x == 0.0));
     }
 }

@@ -49,7 +49,7 @@ use crate::policy::{
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use crate::util::json::Json;
 
-pub use kv::BatchKv;
+pub use kv::{BatchKv, KvShard, SwappedKv, DEFAULT_KV_BLOCK};
 pub use rank::RankPool;
 
 /// How the quantize/dequantize overhead enters virtual time.
@@ -1356,6 +1356,32 @@ impl TpEngine {
         kv: Option<&mut BatchKv>,
     ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
         self.forward(tokens, bb, sb, pos, kv, false)
+    }
+
+    /// One chunked-prefill slice: run `sb` prompt tokens through the
+    /// KV-aware stage so they attend to the `pos[0]` tokens already in
+    /// the cache (logits [bb, sb, vocab]). Requires the decode-kind
+    /// attention executable at (bb, sb) — gate on
+    /// [`TpEngine::has_decode_attn`].
+    pub fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        bb: usize,
+        sb: usize,
+        pos: &[i32],
+        kv: &mut BatchKv,
+    ) -> anyhow::Result<(Vec<f32>, StepTiming)> {
+        self.forward(tokens, bb, sb, pos, Some(kv), true)
+    }
+
+    /// Is the KV-aware (decode-kind) attention stage exported at bucket
+    /// (bb, sb)? Decode itself uses (batch, 1); chunked prefill needs it
+    /// at (1, chunk) — artifact sets exported before chunked prefill
+    /// lack those, and the coordinator falls back to whole-prompt
+    /// prefill.
+    pub fn has_decode_attn(&self, bb: usize, sb: usize) -> bool {
+        let name = format!("{}/attn_tp{}_b{bb}_s{sb}", self.opts.model, self.opts.tp);
+        self.rt.manifest.by_name(&name).is_some()
     }
 
     /// One decode step for a batch (logits [bb, 1, vocab]).

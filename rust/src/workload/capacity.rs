@@ -293,7 +293,7 @@ pub fn capacity(
 mod tests {
     use super::*;
     use crate::model::perf_model::LLAMA2_7B;
-    use crate::workload::driver::FixedService;
+    use crate::workload::driver::{BatchMode, FixedService};
 
     #[test]
     fn bisection_finds_known_knee() {
@@ -320,6 +320,24 @@ mod tests {
         let rep = cf.report.unwrap();
         assert!(rep.goodput() >= slo.min_goodput);
         assert!(rep.ttft.percentile(50.0).is_finite());
+    }
+
+    #[test]
+    fn continuous_capacity_is_at_least_bucketed() {
+        // the heavy-tailed default shape (prompts capped at 224) drags
+        // bucketed cohorts into the padded (8, 256) prefill whenever a
+        // long prompt lands in the batch; the continuous loop slices
+        // those on the chunk lane, so its SLO capacity cannot be lower
+        let profile = HwProfile::by_name("l4").unwrap();
+        let table = PolicyTable::uniform(LLAMA2_7B.n_layers, "none");
+        let shape = LoadShape { requests: 120, ..LoadShape::default() };
+        let slo = SloSpec::default();
+        let mut eng = ModeledEngine::new(LLAMA2_7B, profile, 2, &table).unwrap();
+        let qb = capacity(&mut eng, &shape, &slo, &SimOptions::default(), 6).qps;
+        let cont = SimOptions { mode: BatchMode::Continuous, ..SimOptions::default() };
+        let qc = capacity(&mut eng, &shape, &slo, &cont, 6).qps;
+        assert!(qb > 0.0, "bucketed capacity must be positive");
+        assert!(qc >= qb * 0.99, "continuous {qc} < bucketed {qb}");
     }
 
     #[test]

@@ -55,6 +55,22 @@ impl ServiceModel for FixedService {
     }
 }
 
+/// Which serving loop the virtual driver mirrors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Batch-at-a-time: every admitted cohort prefills in one bucket
+    /// sized by its longest prompt (the seed behaviour).
+    #[default]
+    Bucketed,
+    /// In-flight batching: long prompts are sliced into chunk-sized
+    /// prefill steps on a dedicated lane ([`scheduler::chunk_plan`]) so
+    /// they never drag a cohort into the worst-padded bucket, and
+    /// admission is capped by the token budget
+    /// ([`scheduler::admit_budget`]). On traces with no long prompts
+    /// and a non-binding budget this is *identical* to `Bucketed`.
+    Continuous,
+}
+
 /// Batcher shape the virtual driver mirrors (defaults match the AOT
 /// manifest's exported buckets and [`crate::coordinator::CoordinatorOptions`]).
 #[derive(Debug, Clone)]
@@ -65,6 +81,10 @@ pub struct SimOptions {
     pub seq_buckets: Vec<usize>,
     /// TTFT SLO the report's goodput is measured against
     pub slo_ttft_s: f64,
+    /// serving loop to model (Table 7's continuous-vs-bucketed column)
+    pub mode: BatchMode,
+    /// per-step admission token budget (continuous mode)
+    pub max_batch_tokens: usize,
 }
 
 impl Default for SimOptions {
@@ -75,6 +95,8 @@ impl Default for SimOptions {
             batch_buckets: vec![1, 8],
             seq_buckets: vec![1, 16, 64, 128, 256],
             slo_ttft_s: 0.25,
+            mode: BatchMode::Bucketed,
+            max_batch_tokens: 2048,
         }
     }
 }
@@ -235,27 +257,35 @@ struct SimActive {
 const MAX_SIM_STEPS: usize = 50_000_000;
 
 /// Replay `trace` against `svc` in virtual time, mirroring the live
-/// coordinator's continuous batcher: FIFO admission through
-/// [`scheduler::admit_count`]/[`scheduler::should_flush`], prefill
+/// coordinator's batcher: FIFO admission through the same
+/// [`scheduler`] policy functions the live loop runs, prefill
 /// bucketing through [`scheduler::pick_prefill_bucket`], and a fixed
 /// `decode_batch`-slot decode group. The engine is one serial
 /// resource; when it idles, the virtual clock jumps to the next
-/// arrival (or the pending flush deadline).
+/// arrival (or the pending flush deadline). `opts.mode` selects the
+/// bucketed (batch-at-a-time) or continuous (chunked long prompts +
+/// token-budget admission) loop.
 pub fn simulate(trace: &Trace, svc: &mut dyn ServiceModel, opts: &SimOptions) -> LoadReport {
-    let db = opts.decode_batch.max(1);
-    let max_pb = *opts.batch_buckets.iter().max().unwrap_or(&8);
-    let max_seq = opts
-        .seq_buckets
-        .iter()
-        .copied()
-        .filter(|&s| s > 1)
-        .max()
-        .expect("sim needs a prefill seq bucket (> 1)");
+    match opts.mode {
+        BatchMode::Bucketed => simulate_bucketed(trace, svc, opts),
+        BatchMode::Continuous => {
+            let chunk = scheduler::chunk_tokens(opts.max_batch_tokens, &opts.seq_buckets);
+            if chunk == 0 {
+                // no chunkable bucket: continuous degenerates to bucketed
+                simulate_bucketed(trace, svc, opts)
+            } else {
+                simulate_continuous(trace, svc, opts, chunk)
+            }
+        }
+    }
+}
 
-    let mut report = LoadReport::new(trace.events.len(), opts.slo_ttft_s);
-    let mut upcoming: VecDeque<SimReq> = VecDeque::new();
-    // closed loop: completions release the next pending request
-    let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+/// Seed the arrival queues from the trace (shared by both modes).
+fn seed_arrivals(
+    trace: &Trace,
+    upcoming: &mut VecDeque<SimReq>,
+    pending: &mut VecDeque<(usize, usize)>,
+) {
     if let Some(cl) = trace.closed_loop {
         for (i, ev) in trace.events.iter().enumerate() {
             if i < cl.concurrency {
@@ -279,6 +309,24 @@ pub fn simulate(trace: &Trace, svc: &mut dyn ServiceModel, opts: &SimOptions) ->
             });
         }
     }
+}
+
+fn simulate_bucketed(trace: &Trace, svc: &mut dyn ServiceModel, opts: &SimOptions) -> LoadReport {
+    let db = opts.decode_batch.max(1);
+    let max_pb = *opts.batch_buckets.iter().max().unwrap_or(&8);
+    let max_seq = opts
+        .seq_buckets
+        .iter()
+        .copied()
+        .filter(|&s| s > 1)
+        .max()
+        .expect("sim needs a prefill seq bucket (> 1)");
+
+    let mut report = LoadReport::new(trace.events.len(), opts.slo_ttft_s);
+    let mut upcoming: VecDeque<SimReq> = VecDeque::new();
+    // closed loop: completions release the next pending request
+    let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+    seed_arrivals(trace, &mut upcoming, &mut pending);
     let think_s = trace.closed_loop.map(|cl| cl.think_s).unwrap_or(0.0);
 
     let mut now = 0.0f64;
@@ -353,6 +401,204 @@ pub fn simulate(trace: &Trace, svc: &mut dyn ServiceModel, opts: &SimOptions) ->
                     *slot = None;
                 }
             }
+            continue;
+        }
+
+        // ---- idle: jump the virtual clock ----
+        let flush_at = waiting.front().map(|r| r.arrive_s + opts.max_wait_s);
+        let next_arrival = upcoming.front().map(|r| r.arrive_s);
+        match (flush_at, next_arrival) {
+            (Some(f), Some(a)) => now = f.min(a).max(now),
+            (Some(f), None) => now = f.max(now),
+            (None, Some(a)) => now = a.max(now),
+            (None, None) => break, // drained
+        }
+    }
+    report.makespan_s = now;
+    report
+}
+
+/// One long prompt being chunk-prefilled on the dedicated lane.
+#[derive(Debug, Clone)]
+struct SimChunk {
+    arrive_s: f64,
+    out: usize,
+    /// per-slice seq buckets, [`scheduler::chunk_plan`] order
+    plan: Vec<usize>,
+    next: usize,
+    /// decode slot reserved for it at lane entry
+    slot: usize,
+}
+
+/// The continuous (in-flight) serving loop in virtual time. Identical
+/// to [`simulate_bucketed`] except: a prompt longer than `chunk` leaves
+/// the FIFO head for a one-at-a-time chunk lane whose slices interleave
+/// with decode steps (so it never drags a cohort of shorts into the
+/// top padded bucket), and grouped admission is additionally capped by
+/// [`scheduler::admit_budget`]. On a trace with no long prompts and a
+/// non-binding budget the control flow is step-for-step the same as
+/// bucketed — the modes then produce identical reports.
+fn simulate_continuous(
+    trace: &Trace,
+    svc: &mut dyn ServiceModel,
+    opts: &SimOptions,
+    chunk: usize,
+) -> LoadReport {
+    let db = opts.decode_batch.max(1);
+    let max_pb = *opts.batch_buckets.iter().max().unwrap_or(&8);
+    let max_seq = opts
+        .seq_buckets
+        .iter()
+        .copied()
+        .filter(|&s| s > 1)
+        .max()
+        .expect("sim needs a prefill seq bucket (> 1)");
+
+    let mut report = LoadReport::new(trace.events.len(), opts.slo_ttft_s);
+    let mut upcoming: VecDeque<SimReq> = VecDeque::new();
+    let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+    seed_arrivals(trace, &mut upcoming, &mut pending);
+    let think_s = trace.closed_loop.map(|cl| cl.think_s).unwrap_or(0.0);
+
+    let mut now = 0.0f64;
+    let mut waiting: VecDeque<SimReq> = VecDeque::new();
+    let mut slots: Vec<Option<SimActive>> = vec![None; db];
+    let mut chunk_job: Option<SimChunk> = None;
+    let mut steps = 0usize;
+
+    loop {
+        steps += 1;
+        if steps > MAX_SIM_STEPS {
+            report.failed = report.submitted - report.completed;
+            break;
+        }
+        // ---- intake ----
+        while upcoming.front().is_some_and(|r| r.arrive_s <= now + 1e-12) {
+            waiting.push_back(upcoming.pop_front().unwrap());
+        }
+
+        // ---- chunk lane: a long prompt at the FIFO head claims it
+        // (and reserves a decode slot) when the lane is idle ----
+        if chunk_job.is_none() && waiting.front().is_some_and(|r| r.prompt > chunk) {
+            if let Some(slot) = (0..db).find(|&i| slots[i].is_none()) {
+                let r = waiting.pop_front().expect("head exists");
+                report.queue_wait.record(now - r.arrive_s);
+                let plan = scheduler::chunk_plan(r.prompt, chunk, &opts.seq_buckets);
+                debug_assert!(plan.len() > 1, "long prompt must chunk");
+                // reserve the slot with a placeholder so grouped
+                // admission cannot take it while the prompt prefills
+                slots[slot] = Some(SimActive {
+                    arrive_s: r.arrive_s,
+                    first_token_s: f64::INFINITY,
+                    out: r.out,
+                    produced: 0,
+                });
+                chunk_job = Some(SimChunk { arrive_s: r.arrive_s, out: r.out, plan, next: 0, slot });
+            }
+        }
+
+        // ---- grouped admission of short prompts, budget-capped ----
+        // strict FIFO: the prefix stops at the first long prompt (it
+        // waits for the chunk lane), exactly like the live loop
+        let free: Vec<usize> = (0..db).filter(|&i| slots[i].is_none()).collect();
+        let mut costs = Vec::new();
+        for r in waiting.iter() {
+            if r.prompt > chunk {
+                break;
+            }
+            costs.push(r.prompt.min(max_seq));
+        }
+        let decoding = slots.iter().flatten().filter(|a| a.produced > 0).count();
+        let committed = decoding
+            + chunk_job.as_ref().map_or(0, |j| j.plan.get(j.next).copied().unwrap_or(0));
+        let n_budget =
+            scheduler::admit_budget(&costs, committed, opts.max_batch_tokens, free.len());
+        let oldest_wait = waiting.front().map(|r| now - r.arrive_s).unwrap_or(0.0);
+        let n_admit = scheduler::admit_count(costs.len(), free.len(), max_pb).min(n_budget);
+        if scheduler::should_flush(oldest_wait, n_admit, free.len().min(8), opts.max_wait_s)
+            && n_admit > 0
+        {
+            let admitted: Vec<SimReq> = waiting.drain(..n_admit).collect();
+            let lens: Vec<usize> = admitted.iter().map(|r| r.prompt.min(max_seq)).collect();
+            let (bb, sb) =
+                scheduler::pick_prefill_bucket(&lens, &opts.batch_buckets, &opts.seq_buckets)
+                    .expect("prompt fits the largest bucket after clamping");
+            let dt = svc.prefill_s(bb, sb);
+            let end = now + dt;
+            for (i, r) in admitted.into_iter().enumerate() {
+                report.queue_wait.record(now - r.arrive_s);
+                if r.out <= 1 {
+                    report.record(end - r.arrive_s, end - r.arrive_s, f64::NAN, f64::NAN, 1);
+                    if let Some((p, o)) = pending.pop_front() {
+                        upcoming.push_back(SimReq { arrive_s: end + think_s, prompt: p, out: o });
+                    }
+                } else {
+                    slots[free[i]] = Some(SimActive {
+                        arrive_s: r.arrive_s,
+                        first_token_s: end,
+                        out: r.out,
+                        produced: 1,
+                    });
+                }
+            }
+            now = end;
+            continue;
+        }
+
+        // ---- one chunk-lane slice, interleaved with decode ----
+        let mut worked = false;
+        if let Some(job) = chunk_job.as_mut() {
+            worked = true;
+            let sb = job.plan[job.next];
+            now += svc.prefill_s(1, sb);
+            job.next += 1;
+            if job.next >= job.plan.len() {
+                // last slice lands the first token
+                let job = chunk_job.take().expect("job exists");
+                if job.out <= 1 {
+                    slots[job.slot] = None;
+                    report.record(now - job.arrive_s, now - job.arrive_s, f64::NAN, f64::NAN, 1);
+                    if let Some((p, o)) = pending.pop_front() {
+                        upcoming.push_back(SimReq { arrive_s: now + think_s, prompt: p, out: o });
+                    }
+                } else {
+                    slots[job.slot] = Some(SimActive {
+                        arrive_s: job.arrive_s,
+                        first_token_s: now,
+                        out: job.out,
+                        produced: 1,
+                    });
+                }
+            }
+        }
+
+        // ---- decode step over sessions holding a first token ----
+        if slots.iter().flatten().any(|a| a.produced > 0) {
+            worked = true;
+            now += svc.decode_s(db);
+            for slot in slots.iter_mut() {
+                let Some(a) = slot else { continue };
+                if a.produced == 0 {
+                    continue; // chunk-lane reservation, not decoding yet
+                }
+                a.produced += 1;
+                if a.produced >= a.out {
+                    let ttft = a.first_token_s - a.arrive_s;
+                    let e2e = now - a.arrive_s;
+                    let tpot = if a.produced > 1 {
+                        (e2e - ttft) / (a.produced - 1) as f64
+                    } else {
+                        f64::NAN
+                    };
+                    report.record(ttft, e2e, tpot, f64::NAN, a.produced);
+                    if let Some((p, o)) = pending.pop_front() {
+                        upcoming.push_back(SimReq { arrive_s: now + think_s, prompt: p, out: o });
+                    }
+                    *slot = None;
+                }
+            }
+        }
+        if worked {
             continue;
         }
 
@@ -564,6 +810,100 @@ mod tests {
         // small slack: batch-formation timing can differ between the runs
         assert!(rf.ttft.percentile(95.0) <= rs.ttft.percentile(95.0) + 5e-3);
         assert!(rf.makespan_s <= rs.makespan_s + 1e-9);
+    }
+
+    fn trace_with(arrival: Arrival, n: usize, lo: usize, hi: usize) -> Trace {
+        TraceSpec {
+            arrival,
+            prompt_len: LenDist::Uniform { lo, hi },
+            output_len: LenDist::Fixed(8),
+            requests: n,
+            seed: 7,
+        }
+        .generate()
+    }
+
+    /// Prefill cost linear in padded tokens, decode in group width — the
+    /// shape that makes bucket padding (and its removal) visible.
+    struct TokenLinear;
+    impl ServiceModel for TokenLinear {
+        fn prefill_s(&mut self, batch: usize, seq: usize) -> f64 {
+            1e-4 * (batch * seq) as f64
+        }
+        fn decode_s(&mut self, batch: usize) -> f64 {
+            2e-4 * batch as f64
+        }
+    }
+
+    #[test]
+    fn sim_continuous_equals_bucketed_without_long_prompts() {
+        // chunk = 128 under the default buckets/budget; with every
+        // prompt at or below it the continuous loop never engages the
+        // chunk lane and the budget never binds, so the two modes run
+        // the exact same virtual-time steps
+        let t = trace_with(Arrival::Poisson { rate: 30.0 }, 200, 8, 120);
+        let mut svc_b = FixedService { prefill_s: 0.02, decode_s: 0.01 };
+        let mut svc_c = svc_b;
+        let bucketed = simulate(&t, &mut svc_b, &SimOptions::default());
+        let opts = SimOptions { mode: BatchMode::Continuous, ..SimOptions::default() };
+        let cont = simulate(&t, &mut svc_c, &opts);
+        assert_eq!(cont.completed, bucketed.completed);
+        assert_eq!(cont.makespan_s, bucketed.makespan_s);
+        assert_eq!(cont.goodput(), bucketed.goodput());
+        assert_eq!(cont.ttft.percentile(99.0), bucketed.ttft.percentile(99.0));
+        assert_eq!(cont.queue_wait.percentile(95.0), bucketed.queue_wait.percentile(95.0));
+    }
+
+    #[test]
+    fn sim_continuous_beats_bucketed_on_long_prompt_mixes() {
+        // prompts span 8..240: roughly half exceed the 128-token chunk,
+        // so bucketed drags every mixed cohort into the padded (8, 256)
+        // shape while continuous prefills shorts in small buckets and
+        // slices longs on the chunk lane
+        let t = trace_with(Arrival::Poisson { rate: 25.0 }, 220, 8, 240);
+        let mut svc_b = TokenLinear;
+        let mut svc_c = TokenLinear;
+        let opts_b = SimOptions { slo_ttft_s: 0.1, ..SimOptions::default() };
+        let opts_c = SimOptions { mode: BatchMode::Continuous, ..opts_b.clone() };
+        let bucketed = simulate(&t, &mut svc_b, &opts_b);
+        let cont = simulate(&t, &mut svc_c, &opts_c);
+        assert_eq!(bucketed.completed, 220);
+        assert_eq!(cont.completed, 220);
+        // strictly less padded prefill work: continuous must not lose
+        // throughput, and median TTFT improves outright
+        assert!(
+            cont.qps() >= bucketed.qps() * 0.99,
+            "continuous qps {} vs bucketed {}",
+            cont.qps(),
+            bucketed.qps()
+        );
+        assert!(
+            cont.goodput() + 1e-9 >= bucketed.goodput(),
+            "continuous goodput {} vs bucketed {}",
+            cont.goodput(),
+            bucketed.goodput()
+        );
+        assert!(
+            cont.ttft.percentile(50.0) < bucketed.ttft.percentile(50.0),
+            "continuous ttft p50 {} vs bucketed {}",
+            cont.ttft.percentile(50.0),
+            bucketed.ttft.percentile(50.0)
+        );
+    }
+
+    #[test]
+    fn sim_continuous_chunked_prompts_complete_with_finite_ttft() {
+        // every prompt needs the chunk lane (all > 128); closed loop
+        // keeps four outstanding so lane + decode interleave constantly
+        let t = trace_with(Arrival::Closed { concurrency: 4, think_s: 0.0 }, 48, 150, 250);
+        let mut svc = TokenLinear;
+        let opts = SimOptions { mode: BatchMode::Continuous, ..SimOptions::default() };
+        let r = simulate(&t, &mut svc, &opts);
+        assert_eq!(r.completed, 48);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.ttft.count(), 48);
+        assert_eq!(r.queue_wait.count(), 48);
+        assert!(r.ttft.percentile(99.0).is_finite());
     }
 
     #[test]

@@ -32,6 +32,8 @@ pub mod stats;
 pub mod trace;
 
 pub use capacity::{capacity, max_sustainable_rate, CapacityResult, LoadShape, ModeledEngine, SloSpec};
-pub use driver::{drive, simulate, DriveOptions, FixedService, LoadReport, ServiceModel, SimOptions};
+pub use driver::{
+    drive, simulate, BatchMode, DriveOptions, FixedService, LoadReport, ServiceModel, SimOptions,
+};
 pub use stats::LogHistogram;
 pub use trace::{Arrival, ClosedLoop, LenDist, Trace, TraceEvent, TraceSpec};

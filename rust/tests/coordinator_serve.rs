@@ -168,6 +168,54 @@ fn http_server_generate_and_metrics() {
     join.join().unwrap().unwrap();
 }
 
+/// Streaming `/generate` against the real engine: token lines must be
+/// on the wire while the engine is still decoding, not replayed after
+/// completion, and the final line carries the full response summary.
+#[test]
+fn streaming_generate_emits_tokens_before_completion() {
+    use std::time::{Duration, Instant};
+
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (handle, join) = spawn_nano("none");
+    let server = Server::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.serve_n(1).unwrap());
+
+    let mut stamps: Vec<Instant> = Vec::new();
+    let (code, chunks) = tpcc::server::http_post_stream(
+        &addr,
+        "/generate",
+        r#"{"prompt": "The abbey of ", "max_tokens": 24, "greedy": true, "stream": true}"#,
+        |_| stamps.push(Instant::now()),
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(chunks.len(), 25, "24 token lines + 1 done line: {chunks:?}");
+    let first = tpcc::util::json::Json::parse(chunks[0].trim()).unwrap();
+    assert_eq!(first.get("index").unwrap().as_i64(), Some(0));
+    assert!(first.get("done").is_none());
+    let last = tpcc::util::json::Json::parse(chunks.last().unwrap().trim()).unwrap();
+    assert_eq!(last.get("done").unwrap().as_bool(), Some(true));
+    assert_eq!(last.get("new_tokens").unwrap().as_i64(), Some(24));
+    let ttft = last.get("ttft_s").unwrap().as_f64().unwrap();
+    let e2e = last.get("e2e_s").unwrap().as_f64().unwrap();
+    assert!(ttft > 0.0 && ttft < e2e, "ttft {ttft} vs e2e {e2e}");
+    // the whole point of streaming: the first token led the done line by
+    // real decode time, not by the microseconds of draining a buffer
+    let lead = stamps.last().unwrap().duration_since(stamps[0]);
+    assert!(lead >= Duration::from_millis(2), "stream arrived all at once (lead {lead:?})");
+    // the streaming path still feeds per-request accounting
+    assert_eq!(handle.metrics.requests_completed.get(), 1);
+
+    srv.join().unwrap();
+    handle.shutdown();
+    drop(handle);
+    join.join().unwrap().unwrap();
+}
+
 #[test]
 fn http_server_rejects_malformed_requests_with_400_and_404() {
     use std::io::{Read as _, Write as _};

@@ -1,0 +1,142 @@
+//! Streaming `/generate` tests against a stub coordinator — no AOT
+//! artifacts needed. The stub plays the engine side of the submission
+//! channel, dripping tokens on a schedule, so these pin the HTTP
+//! streaming substrate: chunked framing, first-token-before-completion,
+//! and the per-token (not per-request) socket deadline.
+
+use std::time::{Duration, Instant};
+
+use tpcc::coordinator::{CoordinatorHandle, GenResponse, StreamEvent};
+use tpcc::server::{http_post_stream, Server};
+use tpcc::util::json::Json;
+
+/// Spawn a stub engine that answers every streaming submission with
+/// `n_tokens` one-byte tokens spaced `gap` apart, then a Done event.
+fn stub_engine(n_tokens: usize, gap: Duration) -> CoordinatorHandle {
+    let (handle, rx) = CoordinatorHandle::stubbed();
+    std::thread::spawn(move || {
+        for (req, _reply, stream) in rx.iter() {
+            let Some(events) = stream else { continue };
+            for i in 0..n_tokens {
+                if events
+                    .send(StreamEvent::Token { index: i, token: b'a' as i32, text: "a".into() })
+                    .is_err()
+                {
+                    break;
+                }
+                std::thread::sleep(gap);
+            }
+            let _ = events.send(StreamEvent::Done(GenResponse {
+                id: 1,
+                text: "a".repeat(n_tokens),
+                prompt_tokens: req.prompt.len(),
+                new_tokens: n_tokens,
+                ttft_s: 0.001,
+                e2e_s: gap.as_secs_f64() * n_tokens as f64,
+                tpot_s: gap.as_secs_f64(),
+                queue_wait_s: 0.0,
+                virtual_prefill_s: 0.0,
+            }));
+        }
+    });
+    handle
+}
+
+fn serve_one(handle: CoordinatorHandle, io_timeout: Duration) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", handle)
+        .unwrap()
+        .with_pool(2, 8)
+        .with_io_timeout(io_timeout);
+    let addr = server.local_addr().unwrap().to_string();
+    let join = std::thread::spawn(move || server.serve_n(1).unwrap());
+    (addr, join)
+}
+
+#[test]
+fn first_token_arrives_before_the_stream_completes() {
+    // 6 tokens at 120ms: total generation (~720ms) far exceeds the
+    // 400ms io timeout — per-token deadline re-arm keeps it alive, and
+    // the first token must land long before the done line
+    let handle = stub_engine(6, Duration::from_millis(120));
+    let (addr, join) = serve_one(handle, Duration::from_millis(400));
+    let mut stamps: Vec<Instant> = Vec::new();
+    let (status, chunks) = http_post_stream(
+        &addr,
+        "/generate",
+        r#"{"prompt":"hi","max_tokens":6,"stream":true}"#,
+        |_| stamps.push(Instant::now()),
+    )
+    .unwrap();
+    join.join().unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(chunks.len(), 7, "6 token lines + 1 done line: {chunks:?}");
+    let first = Json::parse(chunks[0].trim()).unwrap();
+    assert_eq!(first.get("index").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(first.get("text").and_then(Json::as_str), Some("a"));
+    assert!(first.get("done").is_none());
+    let last = Json::parse(chunks.last().unwrap().trim()).unwrap();
+    assert_eq!(last.get("done").and_then(Json::as_bool), Some(true));
+    assert_eq!(last.get("new_tokens").and_then(Json::as_f64), Some(6.0));
+    // the whole point of streaming: the first token arrived well before
+    // the generation finished, not alongside it
+    let lead = stamps.last().unwrap().duration_since(stamps[0]);
+    assert!(
+        lead >= Duration::from_millis(400),
+        "first token should lead the done line by the generation time, got {lead:?}"
+    );
+}
+
+#[test]
+fn slow_drain_client_is_not_killed_mid_stream() {
+    // tokens arrive on a schedule while the client also drains slowly:
+    // total stream time (~1s) is far beyond the 250ms io timeout, which
+    // must apply per token write, never to the whole response
+    let handle = stub_engine(8, Duration::from_millis(60));
+    let (addr, join) = serve_one(handle, Duration::from_millis(250));
+    let (status, chunks) = http_post_stream(
+        &addr,
+        "/generate",
+        r#"{"prompt":"hi","stream":true}"#,
+        |_| std::thread::sleep(Duration::from_millis(70)),
+    )
+    .unwrap();
+    join.join().unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(chunks.len(), 9, "a slow-drain client must still see every chunk");
+    assert!(chunks.last().unwrap().contains("\"done\":true"));
+}
+
+#[test]
+fn engine_stall_surfaces_as_in_band_error() {
+    // a dead engine (stub receiver dropped, so no events ever arrive)
+    // must terminate the stream with an in-band error line within the io
+    // timeout instead of wedging the worker
+    let (handle, rx) = CoordinatorHandle::stubbed();
+    drop(rx);
+    let (addr, join) = serve_one(handle, Duration::from_millis(200));
+    let t0 = Instant::now();
+    let (status, chunks) =
+        http_post_stream(&addr, "/generate", r#"{"prompt":"hi","stream":true}"#, |_| {}).unwrap();
+    join.join().unwrap();
+    assert_eq!(status, 200);
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    assert_eq!(chunks.len(), 1);
+    assert!(chunks[0].contains("error"), "got: {chunks:?}");
+}
+
+#[test]
+fn non_streaming_generate_still_answers_plain_json() {
+    // "stream": false (or absent) keeps the old single-body contract;
+    // against a stub with no engine the reply channel dies and the
+    // server answers 500 with a JSON error
+    let (handle, rx) = CoordinatorHandle::stubbed();
+    drop(rx);
+    let server = Server::bind("127.0.0.1:0", handle).unwrap().with_pool(1, 4);
+    let addr = server.local_addr().unwrap().to_string();
+    let join = std::thread::spawn(move || server.serve_n(1).unwrap());
+    let (status, body) =
+        tpcc::server::http_post(&addr, "/generate", r#"{"prompt":"hi"}"#).unwrap();
+    join.join().unwrap();
+    assert_eq!(status, 500);
+    assert!(body.contains("error"));
+}
