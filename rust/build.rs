@@ -1,0 +1,20 @@
+//! Build-time stamp for `tpcc_build_info`: best-effort short git sha in
+//! the `TPCC_GIT_SHA` env var. Never load-bearing — when git (or the
+//! .git dir) is unavailable the var is left empty and the runtime
+//! reports "unknown" (`crate::metrics::build_git`).
+
+use std::process::Command;
+
+fn main() {
+    let sha = Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default();
+    println!("cargo:rustc-env=TPCC_GIT_SHA={sha}");
+    // restamp when the checked-out commit moves, not on every build
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+}

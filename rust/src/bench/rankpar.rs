@@ -12,8 +12,9 @@
 //!
 //! A third leg re-runs the parallel engine with the **full telemetry
 //! stack** enabled — the span recorder, a live metrics time-series
-//! sampler at the serving cadence, and one flight-recorder record per
-//! pass: the per-phase breakdown columns (compute / codec / fabric
+//! sampler at the serving cadence, one flight-recorder record per
+//! pass, a structured-log event per pass, and an alert-rule evaluation
+//! per pass: the per-phase breakdown columns (compute / codec / fabric
 //! wait / link) come from the recorder's measured phase accumulators,
 //! and `trace_overhead_pct` pins the whole stack's cost against the
 //! untraced parallel wall (asserted under `TPCC_TRACE_OVERHEAD_PCT`,
@@ -24,7 +25,9 @@ use std::sync::Arc;
 
 use crate::metrics::{Registry, DEFAULT_SAMPLE_PERIOD_S};
 use crate::model::weights::Weights;
+use crate::obs::alert::AlertEngine;
 use crate::obs::flight::{FlightRecorder, PhaseCost, RequestRecord};
+use crate::obs::log::Logger;
 use crate::runtime::Runtime;
 use crate::tp::{BatchKv, EngineOptions, RankThreads, TpEngine};
 use crate::util::json::{self, Json};
@@ -107,9 +110,10 @@ fn measure(eng: &mut TpEngine, batch: usize, seq: usize, reps: usize) -> anyhow:
 }
 
 /// Re-measure with the full telemetry stack on — span recorder, a
-/// background time-series sampler at the serving cadence, and one
-/// flight-recorder record per pass — returning the median wall and the
-/// per-rep phase deltas [compute, codec, fabric_wait, link]. The
+/// background time-series sampler at the serving cadence, one
+/// flight-recorder record, one structured-log event, and one alert-rule
+/// evaluation per pass — returning the median wall and the per-rep
+/// phase deltas [compute, codec, fabric_wait, link]. The
 /// traced/untraced delta is therefore the cost of everything a serving
 /// deployment's observability adds.
 fn measure_traced(
@@ -132,6 +136,8 @@ fn measure_traced(
         })
     };
     let flight = FlightRecorder::default();
+    let log = Logger::new();
+    let alerts = AlertEngine::new();
     let tokens: Vec<i32> = (0..batch * seq).map(|i| (i * 31 + 7) as i32 % 256).collect();
     let pos = vec![0i32; batch];
     let mut kv = BatchKv::new(&eng.cfg.clone(), eng.opts.tp, batch);
@@ -165,8 +171,17 @@ fn measure_traced(
             decode: PhaseCost::default(),
             fabric_wait_s: eng.fabric_wait_total(),
             site_wire_bytes: eng.group_wire_bytes(),
+            ..RequestRecord::default()
         });
         registry.sample_history();
+        // one log event + one full alert-rule sweep per pass, exactly
+        // the per-tick work the serving sampler thread does
+        log.debug(
+            "bench",
+            "request finished",
+            vec![("rep", json::num(rep as f64)), ("wall_s", json::num(t.wall_s))],
+        );
+        alerts.tick_at(&registry, &log, registry.history.elapsed_s());
         walls.push(t.wall_s);
     }
     stop.store(true, Ordering::Relaxed);

@@ -32,8 +32,11 @@ use std::time::Instant;
 
 use crate::collective::AlgoKind;
 use crate::metrics::{Registry, DEFAULT_SAMPLE_PERIOD_S};
+use crate::obs::alert::AlertEngine;
 use crate::obs::flight::{FlightRecorder, PhaseCost, RequestRecord};
+use crate::obs::log::Logger;
 use crate::obs::{self, Cat, Tracer};
+use crate::util::json;
 use crate::tokenizer::ByteTokenizer;
 use crate::tp::{BatchKv, StepTiming, SwappedKv, TpEngine};
 
@@ -157,6 +160,12 @@ pub struct CoordinatorHandle {
     /// per-request flight recorder (slowest-K + recent-K), served at
     /// `GET /debug/requests` and read by `tpcc explain`
     pub flight: Arc<FlightRecorder>,
+    /// structured event log (shared with the engine and its rank
+    /// workers), served at `GET /logs`
+    pub log: Arc<Logger>,
+    /// alert-rule engine the sampler thread ticks, served at
+    /// `GET /alerts` and as `tpcc_alert_firing` Prometheus gauges
+    pub alerts: Arc<AlertEngine>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -206,6 +215,8 @@ impl CoordinatorHandle {
             policy_json: Arc::new(Mutex::new("{}".to_string())),
             tracer: Tracer::new(),
             flight: Arc::new(FlightRecorder::default()),
+            log: Logger::new(),
+            alerts: Arc::new(AlertEngine::new()),
             shutdown: Arc::new(AtomicBool::new(false)),
         };
         (handle, rx)
@@ -224,6 +235,7 @@ pub struct Coordinator {
     tokenizer: ByteTokenizer,
     flight: Arc<FlightRecorder>,
     policy_json: Arc<Mutex<String>>,
+    log: Arc<Logger>,
     /// sentinel version the served `/policy` body was rendered at
     drift_version: u64,
 }
@@ -311,25 +323,36 @@ impl Coordinator {
         let flight = Arc::new(FlightRecorder::default());
         flight.set_group_schemes(eng.group_schemes());
         let policy_json = Arc::new(Mutex::new(eng.policy_json().to_string()));
+        // the engine's event log becomes the process-wide sink: rank
+        // workers already emit into it, the coordinator and HTTP server
+        // join, and `GET /logs` serves its ring
+        let log = eng.logger().clone();
+        let alerts = Arc::new(AlertEngine::new());
         let handle = CoordinatorHandle {
             tx,
             metrics: metrics.clone(),
             policy_json: policy_json.clone(),
             tracer,
             flight: flight.clone(),
+            log: log.clone(),
+            alerts: alerts.clone(),
             shutdown: shutdown.clone(),
         };
         // background time-series sampler: one registry snapshot per
         // period into the bounded history ring, until shutdown (the run
         // loop raises the flag on its way out, so drained coordinators
-        // reap the thread too)
+        // reap the thread too). The alert engine rides the same tick:
+        // rules are windowed over the history the tick just extended.
         {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
+            let log = log.clone();
+            let alerts = alerts.clone();
             let period = opts.sample_period_s.clamp(0.01, 60.0);
             let _ = std::thread::Builder::new().name("tpcc-sampler".into()).spawn(move || {
                 while !shutdown.load(Ordering::SeqCst) {
                     metrics.sample_history();
+                    alerts.tick_at(&metrics, &log, metrics.history.elapsed_s());
                     std::thread::sleep(std::time::Duration::from_secs_f64(period));
                 }
             });
@@ -348,6 +371,7 @@ impl Coordinator {
                 tokenizer: ByteTokenizer,
                 flight,
                 policy_json,
+                log,
                 drift_version,
             },
             handle,
@@ -402,6 +426,15 @@ impl Coordinator {
                         s.stop_token = req.stop_token;
                         self.next_id += 1;
                         self.metrics.requests_received.inc();
+                        self.log.debug(
+                            "coordinator",
+                            "request received",
+                            vec![
+                                ("id", json::num(s.id as f64)),
+                                ("prompt_tokens", json::num(s.prompt_tokens.len() as f64)),
+                                ("max_new_tokens", json::num(s.max_new_tokens as f64)),
+                            ],
+                        );
                         waiting.push_back((s, reply, stream));
                     }
                     Err(TryRecvError::Empty) => break,
@@ -600,6 +633,17 @@ impl Coordinator {
         slot.session.record_preemption();
         slot.session.slot = None;
         self.metrics.preemptions_total.inc();
+        self.log.info(
+            "coordinator",
+            "session preempted",
+            vec![
+                ("id", json::num(slot.session.id as f64)),
+                ("slot", json::num(vi as f64)),
+                ("pos", json::num(slot.session.pos as f64)),
+                ("preemptions", json::num(slot.session.preemptions as f64)),
+                ("kv_blocks_free", json::num(decode_kv.free_blocks() as f64)),
+            ],
+        );
         preempted.push_back(PreemptedSession { slot, img });
     }
 
@@ -611,6 +655,15 @@ impl Coordinator {
             // queue-wait span on the request's own timeline (pid =
             // request id), stamped retroactively from arrival
             obs::record_abs("queue", Cat::Queue, s.id, obs::TID_COORD, s.arrived, w);
+            self.log.debug(
+                "coordinator",
+                "request admitted",
+                vec![
+                    ("id", json::num(s.id as f64)),
+                    ("queue_wait_s", json::num(w)),
+                    ("prompt_tokens", json::num(s.prompt_tokens.len() as f64)),
+                ],
+            );
         }
     }
 
@@ -637,6 +690,16 @@ impl Coordinator {
         add_timing(&mut job.slot.prefill_cost, &timing);
         job.slot.virtual_prefill_s += timing.virtual_total();
         job.slot.session.record_chunk(take);
+        self.log.debug(
+            "coordinator",
+            "prefill chunk slice",
+            vec![
+                ("id", json::num(job.slot.session.id as f64)),
+                ("slice", json::num(job.next as f64)),
+                ("slices", json::num(job.plan.len() as f64)),
+                ("tokens", json::num(take as f64)),
+            ],
+        );
         job.next += 1;
         if job.next < job.plan.len() {
             return Ok(false);
@@ -772,10 +835,21 @@ impl Coordinator {
             match self.eng.apply_drift_fallback() {
                 Ok(sites) => {
                     let labels: Vec<String> = sites.iter().map(|s| s.label()).collect();
-                    eprintln!("[coordinator] drift fallback: {} -> none", labels.join(", "));
+                    self.log.warn(
+                        "coordinator",
+                        "drift fallback: tripped sites rebound to none",
+                        vec![(
+                            "sites",
+                            json::Json::Arr(labels.iter().map(|l| json::s(l)).collect()),
+                        )],
+                    );
                     self.flight.set_group_schemes(self.eng.group_schemes());
                 }
-                Err(e) => eprintln!("[coordinator] drift fallback failed: {e:#}"),
+                Err(e) => self.log.error(
+                    "coordinator",
+                    "drift fallback failed",
+                    vec![("err", json::s(&format!("{e:#}")))],
+                ),
             }
         }
         for (key, v) in self.eng.sentinel_metrics() {
@@ -853,6 +927,17 @@ impl Coordinator {
             preemptions: s.preemptions,
             prefill_chunks: s.prefill_chunks,
         });
+        self.log.debug(
+            "coordinator",
+            "request finished",
+            vec![
+                ("id", json::num(s.id as f64)),
+                ("new_tokens", json::num(s.generated.len() as f64)),
+                ("ttft_s", json::num_or_null(resp.ttft_s)),
+                ("e2e_s", json::num_or_null(resp.e2e_s)),
+                ("preemptions", json::num(s.preemptions as f64)),
+            ],
+        );
         if let Some(tx) = &slot.stream {
             let _ = tx.send(StreamEvent::Done(resp.clone()));
         }

@@ -42,15 +42,24 @@
 //!                    Chrome-trace/Perfetto export (`tpcc trace`,
 //!                    `GET /trace`), per-phase gauges on `/metrics`;
 //!                    per-request flight recorder ([`obs::flight`],
-//!                    `GET /debug/requests`, `tpcc explain`).
+//!                    `GET /debug/requests`, `tpcc explain`); leveled
+//!                    structured event log ([`obs::log`], `GET /logs`,
+//!                    stderr sink behind `--log-level`); declarative
+//!                    alert-rule engine over the metrics time-series
+//!                    ([`obs::alert`], `GET /alerts`, `tpcc_alert_firing`
+//!                    gauges); terminal operator dashboard
+//!                    ([`obs::top`], `tpcc top [--once]`).
 //! * [`metrics`]    — counters/gauges/histograms plus a bounded
 //!                    time-series ring ([`metrics::MetricsHistory`]):
-//!                    windowed QPS / tokens-per-s / wire rates and
-//!                    TTFT-SLO burn rate over 1m/5m/30m windows
-//!                    (`GET /metrics/history`), Prometheus text
-//!                    exposition (`GET /metrics?format=prom`).
+//!                    gap-aware windowed QPS / tokens-per-s / wire /
+//!                    preemption / shed rates and TTFT-SLO burn rate
+//!                    over 1m/5m/30m windows (`GET /metrics/history`),
+//!                    per-(route, status) HTTP counters, build info +
+//!                    uptime, Prometheus text exposition
+//!                    (`GET /metrics?format=prom`).
 //! * [`server`]     — minimal HTTP/1.1 front end (per-algorithm
-//!                    collective counters on `/metrics`).
+//!                    collective counters on `/metrics`; every answered
+//!                    connection counted and access-logged).
 //! * [`eval`]       — perplexity harness (Tables 1/2/5).
 //! * [`model`]      — model configs, weight loading, analytic perf model.
 //! * [`workload`]   — serving-under-load engine: trace generation

@@ -3,6 +3,9 @@
 //!
 //! Commands:
 //!   serve   --model micro --tp 2 --compress fp4_e2m1_b32_e8m0 --addr 127.0.0.1:8080
+//!           [--log-level debug|info|warn|error] [--log-json]
+//!   top     --addr 127.0.0.1:8080 [--once] [--interval S]
+//!           (terminal dashboard over /metrics, /alerts, /logs)
 //!   gen     --model micro --tp 2 --prompt "..." [--max-tokens 48]
 //!   eval    --model small --tp 2 --compress <spec> [--split test] [--tokens 4096]
 //!   table1|table2|table3|table4|table5   (regenerate a paper table)
@@ -31,6 +34,8 @@
 
 use tpcc::coordinator::{spawn, CoordinatorOptions, GenRequest, Sampling};
 use tpcc::model::weights::Weights;
+use tpcc::obs::log::{cli as log_cli, Level};
+use tpcc::util::json;
 use tpcc::runtime::Runtime;
 use tpcc::server::Server;
 use tpcc::tables::{common, table1, table2, table3, table4, table5, table6, table7};
@@ -40,7 +45,7 @@ use tpcc::workload::{self, Arrival, DriveOptions, LenDist, LoadShape, SloSpec, T
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        log_cli(Level::Error, "command failed", vec![("err", json::s(&format!("{e:#}")))]);
         std::process::exit(1);
     }
 }
@@ -212,13 +217,29 @@ fn run() -> anyhow::Result<()> {
             )?;
             // goodput on /metrics is measured against this TTFT SLO
             handle.metrics.set_ttft_slo(args.get_f64("slo-ttft", 0.25));
+            // stderr log sink: warn-and-above by default so shed/drift/
+            // alert events reach the terminal without access-log noise;
+            // --log-level opens it up, --log-json emits JSON lines
+            let stderr_level = match args.get("log-level") {
+                Some(v) => Some(tpcc::obs::log::Level::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("--log-level: expected debug|info|warn|error, got {v:?}")
+                })?),
+                None => Some(tpcc::obs::log::Level::Warn),
+            };
+            handle.log.set_stderr(stderr_level, args.has("log-json"));
             let server = Server::bind(&addr, handle)?;
             println!(
                 "tpcc serving on http://{addr}  (POST /generate [\"stream\":true for NDJSON], \
                  GET /metrics[?format=prom], GET /metrics/history, GET /debug/requests, \
-                 GET /policy, GET /trace)"
+                 GET /policy, GET /trace, GET /logs, GET /alerts)"
             );
             server.serve_forever()
+        }
+        "top" => {
+            // operator dashboard against a running server; --once is
+            // the non-interactive single-frame mode CI exercises
+            let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+            tpcc::obs::top::run(&addr, args.has("once"), args.get_f64("interval", 2.0))
         }
         "load" => run_load(&args, args.has("explain")),
         "explain" => {
@@ -416,17 +437,25 @@ fn run() -> anyhow::Result<()> {
                 let _ = rx.recv();
             }
             let dump = handle.tracer.drain();
-            eprintln!(
-                "tpcc trace: {} spans captured ({} dropped) across {requests} requests",
-                dump.spans.len(),
-                dump.dropped
+            log_cli(
+                Level::Info,
+                "trace captured",
+                vec![
+                    ("spans", json::num(dump.spans.len() as f64)),
+                    ("dropped", json::num(dump.dropped as f64)),
+                    ("requests", json::num(requests as f64)),
+                ],
             );
             let mut body = dump.to_chrome_json().to_string();
             body.push('\n');
             match args.get("out") {
                 Some(path) => {
                     std::fs::write(path, &body)?;
-                    eprintln!("chrome-trace JSON written to {path}");
+                    log_cli(
+                        Level::Info,
+                        "chrome-trace JSON written",
+                        vec![("path", json::s(path))],
+                    );
                 }
                 None => print!("{body}"),
             }
@@ -449,7 +478,14 @@ fn run() -> anyhow::Result<()> {
             match args.get("out") {
                 Some(path) => {
                     std::fs::write(path, &body)?;
-                    eprintln!("golden vectors written to {path} (n={})", tpcc::mxfmt::golden::GOLDEN_N);
+                    log_cli(
+                        Level::Info,
+                        "golden vectors written",
+                        vec![
+                            ("path", json::s(path)),
+                            ("n", json::num(tpcc::mxfmt::golden::GOLDEN_N as f64)),
+                        ],
+                    );
                 }
                 None => print!("{body}"),
             }
@@ -479,7 +515,7 @@ fn run() -> anyhow::Result<()> {
         _ => {
             println!(
                 "tpcc {} — TP communication-compression serving stack\n\
-                 commands: serve | gen | eval | load | explain | bench | golden | trace | table1..table7 | info\n\
+                 commands: serve | top | gen | eval | load | explain | bench | golden | trace | table1..table7 | info\n\
                  common flags: --model nano|micro|small --tp N --compress SPEC\n\
                                --policy uniform:SPEC|paper|auto[:BUDGET%]|RULES\n\
                                --profile l4|a100|2x4l4|2x4a100|cpu\n\
@@ -497,7 +533,9 @@ fn run() -> anyhow::Result<()> {
                  explain flags: --addr HOST:PORT (read a live server) | load flags\n\
                  batch flags (serve|load): --decode-batch N --max-batch-tokens N (admission budget)\n\
                                --kv-block TOKENS --kv-pool BLOCKS (small pool forces preemption)\n\
-                 serve flags:  --drift-fallback (sentinel rebinds drifting sites to none)",
+                 serve flags:  --drift-fallback (sentinel rebinds drifting sites to none)\n\
+                               --log-level debug|info|warn|error --log-json (stderr event sink)\n\
+                 top flags:    --addr HOST:PORT --once (single frame, no TTY) --interval S",
                 tpcc::version()
             );
             Ok(())

@@ -45,6 +45,10 @@ pub const BURN_WINDOWS_S: [f64; 3] = [60.0, 300.0, 1800.0];
 /// target). Burn-rate 1.0 == missing exactly this fraction.
 pub const DEFAULT_SLO_ERROR_BUDGET: f64 = 0.01;
 
+/// Rows of the compact `recent` tail `GET /metrics/history` ships for
+/// dashboard sparklines (~16 s at the default cadence).
+pub const DEFAULT_RECENT_ROWS: usize = 64;
+
 /// One cumulative snapshot of the registry's counters. Fixed fields
 /// (no map) keep the ring footprint bounded: ~72 bytes per sample,
 /// ~590 KiB at the default capacity.
@@ -63,6 +67,10 @@ pub struct Sample {
     /// Of those, how many met the TTFT SLO (== `ttft_count` when no SLO
     /// is set, so burn deltas read zero misses).
     pub ttft_slo_hits: u64,
+    /// Cumulative KV-pool preemptions (alert engine's storm rate).
+    pub preemptions: u64,
+    /// Cumulative 503-shed connections (alert engine's saturation rate).
+    pub sheds: u64,
 }
 
 /// Windowed rates derived from a pair of samples.
@@ -76,6 +84,8 @@ pub struct Rates {
     pub prefill_tokens_per_s: f64,
     pub wire_gb_per_s: f64,
     pub saved_gb_per_s: f64,
+    pub preemptions_per_s: f64,
+    pub sheds_per_s: f64,
 }
 
 /// Bounded ring of [`Sample`]s with windowed delta queries. All pushes
@@ -159,14 +169,32 @@ impl MetricsHistory {
     /// retained sample anchors the delta (clamped window). None with
     /// fewer than two samples.
     pub fn window_pair(&self, window_s: f64) -> Option<(Sample, Sample)> {
+        self.window_pair_at(window_s, f64::NEG_INFINITY).map(|(a, b, _)| (a, b))
+    }
+
+    /// Gap-aware variant: the lookback is anchored at
+    /// `max(newest.t_s, now_s)` instead of the newest sample, and the
+    /// effective span (third tuple element) stretches to that anchor.
+    /// When the sampler thread stalls, `now_s` keeps advancing while
+    /// `newest.t_s` freezes — anchoring at the newest sample would make
+    /// a pre-gap burst look like a *current* rate forever. Returns
+    /// `(base, newest, span_s)`.
+    pub fn window_pair_at(
+        &self,
+        window_s: f64,
+        now_s: f64,
+    ) -> Option<(Sample, Sample, f64)> {
         let ring = self.inner.lock().unwrap();
         let newest = *ring.back()?;
         if ring.len() < 2 {
             return None;
         }
-        let cutoff = newest.t_s - window_s;
+        let now = newest.t_s.max(now_s);
+        let cutoff = now - window_s;
         // the oldest sample at-or-after the cutoff, but never the
-        // newest itself (a delta needs two distinct points)
+        // newest itself (a delta needs two distinct points); when the
+        // whole ring predates the cutoff (long stall) the front anchors
+        // and the widened span deflates the rate toward zero
         let mut base = *ring.front().unwrap();
         for s in ring.iter() {
             if s.t_s >= cutoff {
@@ -177,13 +205,19 @@ impl MetricsHistory {
         if base.t_s >= newest.t_s {
             base = ring[ring.len() - 2];
         }
-        Some((base, newest))
+        Some((base, newest, now - base.t_s))
     }
 
     /// Windowed rates, None with fewer than two samples or zero span.
     pub fn rates(&self, window_s: f64) -> Option<Rates> {
-        let (a, b) = self.window_pair(window_s)?;
-        let dt = b.t_s - a.t_s;
+        self.rates_at(window_s, f64::NEG_INFINITY)
+    }
+
+    /// Gap-aware windowed rates: deltas divide by the stretched span
+    /// from [`window_pair_at`](Self::window_pair_at), so a stalled
+    /// sampler widens the window instead of reporting inflated rates.
+    pub fn rates_at(&self, window_s: f64, now_s: f64) -> Option<Rates> {
+        let (a, b, dt) = self.window_pair_at(window_s, now_s)?;
         if dt <= 0.0 {
             return None;
         }
@@ -195,6 +229,8 @@ impl MetricsHistory {
             prefill_tokens_per_s: d(b.prefill_tokens, a.prefill_tokens),
             wire_gb_per_s: d(b.comm_bytes_sent, a.comm_bytes_sent) / 1e9,
             saved_gb_per_s: d(b.comm_bytes_saved, a.comm_bytes_saved) / 1e9,
+            preemptions_per_s: d(b.preemptions, a.preemptions),
+            sheds_per_s: d(b.sheds, a.sheds),
         })
     }
 
@@ -202,10 +238,21 @@ impl MetricsHistory {
     /// 0.0 when no first tokens landed in the window; None with fewer
     /// than two samples or a non-positive budget.
     pub fn burn_rate(&self, window_s: f64, error_budget: f64) -> Option<f64> {
+        self.burn_rate_at(window_s, error_budget, f64::NEG_INFINITY)
+    }
+
+    /// Gap-aware burn-rate: the lookback cutoff is anchored at `now_s`
+    /// so a stalled sampler's stale misses age out of the window.
+    pub fn burn_rate_at(
+        &self,
+        window_s: f64,
+        error_budget: f64,
+        now_s: f64,
+    ) -> Option<f64> {
         if error_budget <= 0.0 {
             return None;
         }
-        let (a, b) = self.window_pair(window_s)?;
+        let (a, b, _) = self.window_pair_at(window_s, now_s)?;
         let observed = b.ttft_count.saturating_sub(a.ttft_count);
         if observed == 0 {
             return Some(0.0);
@@ -215,12 +262,37 @@ impl MetricsHistory {
         Some((missed as f64 / observed as f64) / error_budget)
     }
 
+    /// Compact newest-last tail of the ring for dashboard sparklines:
+    /// up to `last` rows of
+    /// `[t_s, requests_completed, tokens_generated, comm_bytes_sent]`
+    /// (cumulative counters — the consumer differentiates adjacent
+    /// rows). Arrays, not objects: ~64 rows must stay cheap to ship on
+    /// every `tpcc top` poll.
+    pub fn recent(&self, last: usize) -> Vec<Json> {
+        let ring = self.inner.lock().unwrap();
+        let skip = ring.len().saturating_sub(last);
+        ring.iter()
+            .skip(skip)
+            .map(|s| {
+                Json::Arr(vec![
+                    json::num(s.t_s),
+                    json::num(s.requests_completed as f64),
+                    json::num(s.tokens_generated as f64),
+                    json::num(s.comm_bytes_sent as f64),
+                ])
+            })
+            .collect()
+    }
+
     /// The `GET /metrics/history` body. `slo_ttft_s` <= 0 suppresses
-    /// burn-rates (no SLO to burn against).
+    /// burn-rates (no SLO to burn against). Rates and burn-rates are
+    /// anchored at the current clock ([`elapsed_s`](Self::elapsed_s)),
+    /// so a stalled sampler reads as decaying rates, not frozen ones.
     pub fn to_json(&self, slo_ttft_s: f64) -> Json {
+        let now_s = self.elapsed_s();
         let rates = RATE_WINDOWS_S
             .iter()
-            .map(|&w| match self.rates(w) {
+            .map(|&w| match self.rates_at(w, now_s) {
                 Some(r) => json::obj(vec![
                     ("requested_window_s", json::num(w)),
                     ("window_s", json::num(r.window_s)),
@@ -229,6 +301,8 @@ impl MetricsHistory {
                     ("prefill_tokens_per_s", json::num(r.prefill_tokens_per_s)),
                     ("wire_gb_per_s", json::num(r.wire_gb_per_s)),
                     ("saved_gb_per_s", json::num(r.saved_gb_per_s)),
+                    ("preemptions_per_s", json::num(r.preemptions_per_s)),
+                    ("sheds_per_s", json::num(r.sheds_per_s)),
                 ]),
                 None => json::obj(vec![
                     ("requested_window_s", json::num(w)),
@@ -240,7 +314,7 @@ impl MetricsHistory {
             .iter()
             .map(|&w| {
                 let rate = if slo_ttft_s > 0.0 {
-                    self.burn_rate(w, DEFAULT_SLO_ERROR_BUDGET)
+                    self.burn_rate_at(w, DEFAULT_SLO_ERROR_BUDGET, now_s)
                 } else {
                     None
                 };
@@ -261,6 +335,8 @@ impl MetricsHistory {
                 ("comm_bytes_saved", json::num(s.comm_bytes_saved as f64)),
                 ("ttft_count", json::num(s.ttft_count as f64)),
                 ("ttft_slo_hits", json::num(s.ttft_slo_hits as f64)),
+                ("preemptions", json::num(s.preemptions as f64)),
+                ("sheds", json::num(s.sheds as f64)),
             ]),
             None => Json::Null,
         };
@@ -274,6 +350,7 @@ impl MetricsHistory {
             ("slo_error_budget", json::num(DEFAULT_SLO_ERROR_BUDGET)),
             ("rates", Json::Arr(rates)),
             ("burn", Json::Arr(burn)),
+            ("recent", Json::Arr(self.recent(DEFAULT_RECENT_ROWS))),
             ("last", last),
         ])
     }
@@ -378,6 +455,69 @@ mod tests {
         h.push(s(0.0, 1, 1));
         assert!(h.rates(60.0).is_none());
         assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn stalled_sampler_widens_window_instead_of_inflating_rates() {
+        let h = MetricsHistory::new(64);
+        // a 10-second burst at 10 qps, then the sampler stalls
+        for i in 0..=10u64 {
+            h.push(s(i as f64, 10 * i, 100 * i));
+        }
+        // anchored at the newest sample the burst reads 10 qps
+        let r = h.rates_at(10.0, 10.0).unwrap();
+        assert!((r.qps - 10.0).abs() < 1e-9, "qps {}", r.qps);
+        // 90 seconds into the stall, a 10 s lookback holds no samples:
+        // the window stretches back to the retained ring and the burst
+        // is amortized over the full 100 s, not reported as current
+        let r = h.rates_at(10.0, 100.0).unwrap();
+        assert!((r.window_s - 100.0).abs() < 1e-9, "window {}", r.window_s);
+        assert!((r.qps - 1.0).abs() < 1e-9, "stale qps must deflate, got {}", r.qps);
+        // a window long enough to reach back into the data still
+        // anchors the cutoff at now: 95 s lookback from t=100 keeps
+        // base at t=5, span 95
+        let r = h.rates_at(95.0, 100.0).unwrap();
+        assert!((r.window_s - 95.0).abs() < 1e-9, "window {}", r.window_s);
+        assert!(((r.qps) - (50.0 / 95.0)).abs() < 1e-9, "qps {}", r.qps);
+        // the non-_at entry points are unchanged (newest-anchored)
+        let r = h.rates(10.0).unwrap();
+        assert!((r.qps - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preemption_and_shed_rates_from_samples() {
+        let h = MetricsHistory::new(16);
+        for i in 0..=4u64 {
+            h.push(Sample {
+                t_s: i as f64,
+                preemptions: 3 * i,
+                sheds: i,
+                ..Sample::default()
+            });
+        }
+        let r = h.rates(10.0).unwrap();
+        assert!((r.preemptions_per_s - 3.0).abs() < 1e-9);
+        assert!((r.sheds_per_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recent_tail_is_compact_and_newest_last() {
+        let h = MetricsHistory::new(128);
+        for i in 0..100u64 {
+            h.push(s(i as f64, i, 2 * i));
+        }
+        let rows = h.recent(8);
+        assert_eq!(rows.len(), 8);
+        let first = rows[0].as_arr().unwrap();
+        let last = rows[7].as_arr().unwrap();
+        assert_eq!(first[0].as_f64(), Some(92.0));
+        assert_eq!(last[0].as_f64(), Some(99.0));
+        assert_eq!(last[1].as_f64(), Some(99.0)); // requests_completed
+        assert_eq!(last[2].as_f64(), Some(198.0)); // tokens_generated
+        // and it rides along in the JSON body
+        let j = h.to_json(0.0);
+        let recent = j.get("recent").unwrap().as_arr().unwrap();
+        assert_eq!(recent.len(), DEFAULT_RECENT_ROWS);
     }
 
     #[test]

@@ -141,6 +141,11 @@ impl HistogramSnapshot {
 const BUILTIN_KEYS: &[&str] = &[
     "requests_received",
     "requests_completed",
+    "requests_shed",
+    "http_requests",
+    "uptime_seconds",
+    "build_version",
+    "build_git",
     "tokens_generated",
     "prefill_tokens",
     "batches_executed",
@@ -178,6 +183,13 @@ pub struct Registry {
     /// Sessions evicted from the paged KV pool (blocks swapped out,
     /// session requeued for restore).
     pub preemptions_total: Counter,
+    /// Connections answered `503` because the server's pending queue
+    /// was full (the accept loop sheds instead of backlogging).
+    pub requests_shed: Counter,
+    /// Per-(endpoint, status) request counts — the server records one
+    /// entry per answered connection. Keys are normalized route
+    /// literals (bounded cardinality), never raw request paths.
+    http: Mutex<BTreeMap<(String, u16), u64>>,
     /// KV blocks currently mapped into session block tables. A real
     /// gauge: the coordinator clones it into its decode
     /// [`crate::tp::kv::BatchKv`], which moves it on every block
@@ -213,6 +225,30 @@ impl Registry {
         self.custom.lock().unwrap().insert(key, v);
     }
 
+    /// Read back a custom gauge (e.g. the drift sentinel's
+    /// `drift_sites_tripped` mirror, consumed by the alert engine).
+    pub fn get_custom(&self, key: &str) -> Option<f64> {
+        self.custom.lock().unwrap().get(key).copied()
+    }
+
+    /// Count one answered HTTP request against a (route, status) pair.
+    /// `path` must be a normalized route literal — the server maps
+    /// unknown paths to `(other)`, parse failures to `(malformed)` and
+    /// queue-full sheds to `(shed)` — so cardinality stays bounded.
+    pub fn record_http(&self, path: &str, status: u16) {
+        *self.http.lock().unwrap().entry((path.to_string(), status)).or_insert(0) += 1;
+    }
+
+    /// Snapshot of the per-(route, status) request counts.
+    pub fn http_requests(&self) -> Vec<(String, u16, u64)> {
+        self.http
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((p, s), n)| (p.clone(), *s, *n))
+            .collect()
+    }
+
     /// Capture one cumulative [`Sample`] of this registry into the
     /// time-series ring, stamped on the ring's own clock. Called by the
     /// coordinator's sampler thread at the
@@ -239,6 +275,8 @@ impl Registry {
             comm_bytes_saved: self.comm_bytes_saved.get(),
             ttft_count: count,
             ttft_slo_hits: hits,
+            preemptions: self.preemptions_total.get(),
+            sheds: self.requests_shed.get(),
         });
     }
 
@@ -272,6 +310,10 @@ impl Registry {
             ("comm_bytes_sent", json::num(self.comm_bytes_sent.get() as f64)),
             ("comm_bytes_saved", json::num(self.comm_bytes_saved.get() as f64)),
             ("preemptions_total", json::num(self.preemptions_total.get() as f64)),
+            ("requests_shed", json::num(self.requests_shed.get() as f64)),
+            ("uptime_seconds", json::num(self.history.elapsed_s())),
+            ("build_version", json::s(build_version())),
+            ("build_git", json::s(build_git())),
             ("kv_blocks_in_use", json::num(self.kv_blocks_in_use.get() as f64)),
             ("kv_blocks_free", json::num(self.kv_blocks_free.get() as f64)),
             ("ttft_p50_s", json::num_or_null(ttft.percentile(50.0))),
@@ -293,6 +335,19 @@ impl Registry {
             // fraction of completed requests meeting the TTFT SLO
             pairs.push(("ttft_goodput", json::num_or_null(ttft.fraction_below(slo))));
         }
+        // per-(route, status) request counts as a nested object:
+        // {"/generate": {"200": 5, "503": 1}, ...}
+        let http = self.http_requests();
+        let mut by_path: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+        for (path, status, n) in http {
+            by_path
+                .entry(path)
+                .or_default()
+                .insert(status.to_string(), json::num(n as f64));
+        }
+        let http_obj: BTreeMap<String, Json> =
+            by_path.into_iter().map(|(p, statuses)| (p, Json::Obj(statuses))).collect();
+        pairs.push(("http_requests", Json::Obj(http_obj)));
         let custom = self.custom.lock().unwrap();
         for (k, v) in custom.iter() {
             pairs.push((k.as_str(), json::num_or_null(*v)));
@@ -340,6 +395,33 @@ impl Registry {
             "Sessions evicted from the KV pool.",
             self.preemptions_total.get(),
         );
+        counter(
+            "requests_shed",
+            "Connections answered 503 because the pending queue was full.",
+            self.requests_shed.get(),
+        );
+        out.push_str(
+            "# HELP tpcc_http_requests_total Answered HTTP requests by route and status.\n\
+             # TYPE tpcc_http_requests_total counter\n",
+        );
+        for (path, status, n) in self.http_requests() {
+            out.push_str(&format!(
+                "tpcc_http_requests_total{{path=\"{path}\",status=\"{status}\"}} {n}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP tpcc_build_info Build identity (constant 1; labels carry the info).\n\
+             # TYPE tpcc_build_info gauge\n\
+             tpcc_build_info{{version=\"{}\",git=\"{}\"}} 1\n",
+            build_version(),
+            build_git()
+        ));
+        out.push_str(&format!(
+            "# HELP tpcc_uptime_seconds Seconds since the registry (coordinator) started.\n\
+             # TYPE tpcc_uptime_seconds gauge\n\
+             tpcc_uptime_seconds {}\n",
+            self.history.elapsed_s()
+        ));
         out.push_str(&format!(
             "# HELP tpcc_kv_blocks_in_use KV blocks mapped into session block tables.\n\
              # TYPE tpcc_kv_blocks_in_use gauge\n\
@@ -393,6 +475,21 @@ impl Registry {
             out.push_str(&format!("# TYPE tpcc_{name} gauge\ntpcc_{name} {v}\n"));
         }
         out
+    }
+}
+
+/// Crate version baked into the binary at compile time.
+pub fn build_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Git short SHA baked in at compile time. `build.rs` stamps
+/// `TPCC_GIT_SHA` when the tree is a git checkout; builds from a
+/// tarball report `unknown` rather than failing.
+pub fn build_git() -> &'static str {
+    match option_env!("TPCC_GIT_SHA") {
+        Some(sha) if !sha.is_empty() => sha,
+        _ => "unknown",
     }
 }
 
@@ -608,6 +705,58 @@ mod tests {
         assert!(text.contains("# TYPE tpcc_kv_blocks_free gauge\n"));
         assert!(text.contains("tpcc_kv_blocks_free 5\n"));
         assert!(text.contains("tpcc_tpot_seconds{quantile=\"0.9\"}"));
+    }
+
+    #[test]
+    fn http_counters_by_route_and_status() {
+        let r = Registry::default();
+        r.record_http("/generate", 200);
+        r.record_http("/generate", 200);
+        r.record_http("/generate", 400);
+        r.record_http("(shed)", 503);
+        let j = r.to_json();
+        let http = j.get("http_requests").unwrap();
+        assert_eq!(http.get("/generate").unwrap().get("200").unwrap().as_i64(), Some(2));
+        assert_eq!(http.get("/generate").unwrap().get("400").unwrap().as_i64(), Some(1));
+        assert_eq!(http.get("(shed)").unwrap().get("503").unwrap().as_i64(), Some(1));
+        let text = r.to_prometheus();
+        assert!(text.contains("tpcc_http_requests_total{path=\"/generate\",status=\"200\"} 2\n"));
+        assert!(text.contains("tpcc_http_requests_total{path=\"(shed)\",status=\"503\"} 1\n"));
+    }
+
+    #[test]
+    fn build_info_and_uptime_are_exposed() {
+        let r = Registry::default();
+        let j = r.to_json();
+        assert!(j.get("build_version").unwrap().as_str().is_some());
+        assert!(j.get("build_git").unwrap().as_str().is_some());
+        assert!(j.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        let text = r.to_prometheus();
+        assert!(text.contains("tpcc_build_info{version=\""));
+        assert!(text.contains("\"} 1\n"));
+        assert!(text.contains("tpcc_uptime_seconds "));
+        assert!(!build_version().is_empty());
+        assert!(!build_git().is_empty());
+    }
+
+    #[test]
+    fn shed_counter_feeds_history_samples() {
+        let r = Registry::default();
+        r.requests_shed.add(3);
+        r.preemptions_total.add(5);
+        r.sample_history();
+        let s = r.history.latest().unwrap();
+        assert_eq!(s.sheds, 3);
+        assert_eq!(s.preemptions, 5);
+        assert_eq!(r.to_json().get("requests_shed").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn get_custom_reads_back_set_values() {
+        let r = Registry::default();
+        assert_eq!(r.get_custom("drift_sites_tripped"), None);
+        r.set("drift_sites_tripped", 2.0);
+        assert_eq!(r.get_custom("drift_sites_tripped"), Some(2.0));
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Declarative alert rules evaluated over [`MetricsHistory`] windows.
+//!
+//! The rule set is fixed at construction (the serving stack's failure
+//! modes are known; we want zero-config alerting, not a DSL): TTFT SLO
+//! burn-rate (SRE multi-window — 1 m **and** 5 m must both burn so a
+//! brief blip can't page), drift-sentinel trips, preemption storms, KV
+//! pool exhaustion, queue-wait growth, and worker-pool saturation
+//! (shed rate).
+//!
+//! Each rule runs a three-state machine with hysteresis:
+//!
+//! ```text
+//!  Inactive --breach--> Pending --breach held for_s--> Firing
+//!     ^                    |                             |
+//!     +----- !breach ------+<----------- !breach --------+
+//! ```
+//!
+//! `Pending -> Inactive` is silent (the for-duration *is* the flap
+//! filter); `-> Firing` and `Firing -> Inactive` each emit exactly one
+//! [`Transition`], which the caller logs as a structured event. Missing
+//! inputs (empty history, NaN percentile) never breach — a freshly
+//! booted server with no traffic must not page anyone.
+//!
+//! The engine has **no internal clock**: [`AlertEngine::evaluate`]
+//! takes `now_s` on the history ring's time base, so the coordinator's
+//! sampler drives it in production and tests drive it with synthetic
+//! time — hysteresis becomes deterministic instead of sleep-based.
+//!
+//! [`MetricsHistory`]: crate::metrics::MetricsHistory
+
+use std::sync::Mutex;
+
+use super::log::{Level, Logger};
+use crate::metrics::Registry;
+use crate::util::json::{self, Json};
+
+/// Burn-rate (both 1 m and 5 m) above which the TTFT SLO alert trips.
+/// At a 1% error budget this is >10% of first tokens missing the SLO.
+pub const BURN_RATE_LIMIT: f64 = 10.0;
+
+/// Preemptions per second (10 s window) that count as a storm.
+pub const PREEMPTION_STORM_PER_S: f64 = 0.5;
+
+/// Free-block fraction below which the KV pool counts as exhausted.
+pub const KV_EXHAUSTED_FREE_FRAC: f64 = 0.05;
+
+/// Queue-wait p95 (seconds) above which admission is backing up.
+pub const QUEUE_WAIT_P95_LIMIT_S: f64 = 1.0;
+
+/// 503 sheds per second (10 s window) that count as pool saturation.
+pub const SHED_RATE_PER_S: f64 = 0.1;
+
+/// Window the storm/shed rates are measured over.
+pub const RATE_WINDOW_S: f64 = 10.0;
+
+/// Hysteresis: a rule with `for_s > 0` must breach continuously this
+/// long before firing. Two seconds spans ~8 sampler ticks at the
+/// default cadence — enough to ignore a single-tick spike.
+pub const DEFAULT_FOR_S: f64 = 2.0;
+
+/// How a rule's measured value compares against its threshold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cmp {
+    /// breach when value > threshold
+    Above,
+    /// breach when value < threshold
+    Below,
+}
+
+/// One declarative rule (static description; runtime state lives in
+/// [`RuleState`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub name: &'static str,
+    /// Human-readable condition, served on `GET /alerts`.
+    pub expr: &'static str,
+    /// Severity the firing transition is logged at.
+    pub severity: Level,
+    /// Continuous-breach duration required before firing (0 = immediate).
+    pub for_s: f64,
+    pub threshold: f64,
+    cmp: Cmp,
+}
+
+/// Everything the rule set reads, pre-extracted so the state machine is
+/// a pure function of (inputs, now). `None`/`NaN` means "no data" and
+/// never breaches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AlertInputs {
+    pub burn_1m: Option<f64>,
+    pub burn_5m: Option<f64>,
+    /// Sentinel sites currently tripped (from the `drift_sites_tripped`
+    /// custom gauge).
+    pub drift_sites_tripped: f64,
+    pub preemptions_per_s: Option<f64>,
+    pub kv_blocks_free: f64,
+    /// free + in_use; 0 means "no pool" and the exhaustion rule stays
+    /// quiet.
+    pub kv_blocks_total: f64,
+    /// NaN when no queue waits were recorded.
+    pub queue_wait_p95_s: f64,
+    pub sheds_per_s: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Inactive,
+    /// breaching since `since_s`, not yet held for `for_s`
+    Pending { since_s: f64 },
+    Firing { since_s: f64 },
+}
+
+impl State {
+    fn name(self) -> &'static str {
+        match self {
+            State::Inactive => "inactive",
+            State::Pending { .. } => "pending",
+            State::Firing { .. } => "firing",
+        }
+    }
+}
+
+struct RuleState {
+    rule: Rule,
+    state: State,
+    /// last measured value (None = no data at the last tick)
+    value: Option<f64>,
+    fired_total: u64,
+    resolved_total: u64,
+}
+
+/// One state-machine edge worth telling the operator about.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub rule: &'static str,
+    pub severity: Level,
+    /// true = fired, false = resolved
+    pub firing: bool,
+    /// measured value at the transition tick (NaN on resolve with no
+    /// data, e.g. history went empty)
+    pub value: f64,
+    pub threshold: f64,
+    pub at_s: f64,
+}
+
+/// The fixed rule set + per-rule state machines (one per coordinator).
+pub struct AlertEngine {
+    rules: Mutex<Vec<RuleState>>,
+}
+
+impl Default for AlertEngine {
+    fn default() -> AlertEngine {
+        AlertEngine::new()
+    }
+}
+
+impl AlertEngine {
+    pub fn new() -> AlertEngine {
+        let rules = vec![
+            Rule {
+                name: "ttft_slo_burn",
+                expr: "ttft burn_rate(1m) > 10 and burn_rate(5m) > 10",
+                severity: Level::Error,
+                // the multi-window condition is itself the flap filter
+                for_s: 0.0,
+                threshold: BURN_RATE_LIMIT,
+                cmp: Cmp::Above,
+            },
+            Rule {
+                name: "drift_tripped",
+                expr: "drift_sites_tripped > 0",
+                severity: Level::Warn,
+                for_s: 0.0,
+                threshold: 0.0,
+                cmp: Cmp::Above,
+            },
+            Rule {
+                name: "preemption_storm",
+                expr: "rate(preemptions_total[10s]) > 0.5/s for 2s",
+                severity: Level::Warn,
+                for_s: DEFAULT_FOR_S,
+                threshold: PREEMPTION_STORM_PER_S,
+                cmp: Cmp::Above,
+            },
+            Rule {
+                name: "kv_pool_exhausted",
+                expr: "kv_blocks_free / kv_blocks_total < 0.05 for 2s",
+                severity: Level::Warn,
+                for_s: DEFAULT_FOR_S,
+                threshold: KV_EXHAUSTED_FREE_FRAC,
+                cmp: Cmp::Below,
+            },
+            Rule {
+                name: "queue_wait_growth",
+                expr: "queue_wait_p95_s > 1.0 for 2s",
+                severity: Level::Warn,
+                for_s: DEFAULT_FOR_S,
+                threshold: QUEUE_WAIT_P95_LIMIT_S,
+                cmp: Cmp::Above,
+            },
+            Rule {
+                name: "pool_saturated",
+                expr: "rate(requests_shed[10s]) > 0.1/s",
+                severity: Level::Error,
+                for_s: 0.0,
+                threshold: SHED_RATE_PER_S,
+                cmp: Cmp::Above,
+            },
+        ];
+        AlertEngine {
+            rules: Mutex::new(
+                rules
+                    .into_iter()
+                    .map(|rule| RuleState {
+                        rule,
+                        state: State::Inactive,
+                        value: None,
+                        fired_total: 0,
+                        resolved_total: 0,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// The value each rule compares against its threshold. `None` (no
+    /// data) never breaches.
+    fn measure(rule: &Rule, inp: &AlertInputs) -> Option<f64> {
+        let finite = |v: f64| v.is_finite().then_some(v);
+        match rule.name {
+            // multi-window: the *smaller* burn must clear the limit, so
+            // comparing min(burn1m, burn5m) > limit is the AND
+            "ttft_slo_burn" => match (inp.burn_1m, inp.burn_5m) {
+                (Some(a), Some(b)) => finite(a.min(b)),
+                _ => None,
+            },
+            "drift_tripped" => finite(inp.drift_sites_tripped),
+            "preemption_storm" => inp.preemptions_per_s.and_then(finite),
+            "kv_pool_exhausted" => {
+                if inp.kv_blocks_total <= 0.0 {
+                    return None;
+                }
+                finite(inp.kv_blocks_free / inp.kv_blocks_total)
+            }
+            "queue_wait_growth" => finite(inp.queue_wait_p95_s),
+            "pool_saturated" => inp.sheds_per_s.and_then(finite),
+            _ => None,
+        }
+    }
+
+    /// Advance every rule's state machine one tick. Returns the edges
+    /// (fired / resolved) this tick produced — at most one per rule.
+    pub fn evaluate(&self, inputs: &AlertInputs, now_s: f64) -> Vec<Transition> {
+        let mut out = Vec::new();
+        let mut rules = self.rules.lock().unwrap();
+        for rs in rules.iter_mut() {
+            let value = AlertEngine::measure(&rs.rule, inputs);
+            rs.value = value;
+            let breach = match (value, rs.rule.cmp) {
+                (Some(v), Cmp::Above) => v > rs.rule.threshold,
+                (Some(v), Cmp::Below) => v < rs.rule.threshold,
+                (None, _) => false,
+            };
+            let fire = |rs: &mut RuleState, out: &mut Vec<Transition>| {
+                rs.state = State::Firing { since_s: now_s };
+                rs.fired_total += 1;
+                out.push(Transition {
+                    rule: rs.rule.name,
+                    severity: rs.rule.severity,
+                    firing: true,
+                    value: value.unwrap_or(f64::NAN),
+                    threshold: rs.rule.threshold,
+                    at_s: now_s,
+                });
+            };
+            match rs.state {
+                State::Inactive if breach => {
+                    if rs.rule.for_s <= 0.0 {
+                        fire(rs, &mut out);
+                    } else {
+                        rs.state = State::Pending { since_s: now_s };
+                    }
+                }
+                State::Pending { since_s } if breach => {
+                    if now_s - since_s >= rs.rule.for_s {
+                        fire(rs, &mut out);
+                    }
+                }
+                State::Pending { .. } => {
+                    // flap below the for-duration: silent reset
+                    rs.state = State::Inactive;
+                }
+                State::Firing { .. } if !breach => {
+                    rs.state = State::Inactive;
+                    rs.resolved_total += 1;
+                    out.push(Transition {
+                        rule: rs.rule.name,
+                        severity: rs.rule.severity,
+                        firing: false,
+                        value: value.unwrap_or(f64::NAN),
+                        threshold: rs.rule.threshold,
+                        at_s: now_s,
+                    });
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Build [`AlertInputs`] from a live registry and advance the state
+    /// machines at `now_s` (the history ring's time base), logging each
+    /// transition. Called by the coordinator's sampler every tick; tests
+    /// call it with synthetic time.
+    pub fn tick_at(&self, metrics: &Registry, log: &Logger, now_s: f64) -> Vec<Transition> {
+        let budget = crate::metrics::history::DEFAULT_SLO_ERROR_BUDGET;
+        let slo = metrics.ttft_slo();
+        let (burn_1m, burn_5m) = if slo > 0.0 {
+            (
+                metrics.history.burn_rate_at(60.0, budget, now_s),
+                metrics.history.burn_rate_at(300.0, budget, now_s),
+            )
+        } else {
+            (None, None)
+        };
+        let short = metrics.history.rates_at(RATE_WINDOW_S, now_s);
+        let free = metrics.kv_blocks_free.get() as f64;
+        let in_use = metrics.kv_blocks_in_use.get() as f64;
+        let inputs = AlertInputs {
+            burn_1m,
+            burn_5m,
+            drift_sites_tripped: metrics.get_custom("drift_sites_tripped").unwrap_or(0.0),
+            preemptions_per_s: short.map(|r| r.preemptions_per_s),
+            kv_blocks_free: free,
+            kv_blocks_total: free + in_use,
+            queue_wait_p95_s: metrics.queue_wait.snapshot().percentile(95.0),
+            sheds_per_s: short.map(|r| r.sheds_per_s),
+        };
+        let transitions = self.evaluate(&inputs, now_s);
+        for t in &transitions {
+            let (level, msg) = if t.firing {
+                (t.severity, "alert firing")
+            } else {
+                (Level::Info, "alert resolved")
+            };
+            log.log(
+                level,
+                "alert",
+                msg,
+                vec![
+                    ("rule", json::s(t.rule)),
+                    ("value", json::num_or_null(t.value)),
+                    ("threshold", json::num(t.threshold)),
+                    ("at_s", json::num(t.at_s)),
+                ],
+            );
+        }
+        transitions
+    }
+
+    /// Rules currently in the firing state.
+    pub fn firing(&self) -> Vec<&'static str> {
+        self.rules
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|rs| matches!(rs.state, State::Firing { .. }))
+            .map(|rs| rs.rule.name)
+            .collect()
+    }
+
+    /// The `GET /alerts` body.
+    pub fn to_json(&self) -> Json {
+        let rules = self.rules.lock().unwrap();
+        let mut firing = 0usize;
+        let rows: Vec<Json> = rules
+            .iter()
+            .map(|rs| {
+                if matches!(rs.state, State::Firing { .. }) {
+                    firing += 1;
+                }
+                let since = match rs.state {
+                    State::Pending { since_s } | State::Firing { since_s } => json::num(since_s),
+                    State::Inactive => Json::Null,
+                };
+                json::obj(vec![
+                    ("name", json::s(rs.rule.name)),
+                    ("expr", json::s(rs.rule.expr)),
+                    ("severity", json::s(rs.rule.severity.name())),
+                    ("state", json::s(rs.state.name())),
+                    ("for_s", json::num(rs.rule.for_s)),
+                    ("threshold", json::num(rs.rule.threshold)),
+                    ("value", rs.value.map(json::num_or_null).unwrap_or(Json::Null)),
+                    ("since_s", since),
+                    ("fired_total", json::num(rs.fired_total as f64)),
+                    ("resolved_total", json::num(rs.resolved_total as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("firing", json::num(firing as f64)),
+            ("rules", Json::Arr(rows)),
+        ])
+    }
+
+    /// Per-rule gauges appended to the Prometheus exposition:
+    /// `tpcc_alert_firing{rule="…"} 0|1` plus cumulative fired/resolved
+    /// counters.
+    pub fn to_prometheus(&self) -> String {
+        let rules = self.rules.lock().unwrap();
+        let mut out = String::with_capacity(512);
+        out.push_str(
+            "# HELP tpcc_alert_firing Whether the alert rule is currently firing.\n\
+             # TYPE tpcc_alert_firing gauge\n",
+        );
+        for rs in rules.iter() {
+            let v = matches!(rs.state, State::Firing { .. }) as u8;
+            out.push_str(&format!("tpcc_alert_firing{{rule=\"{}\"}} {v}\n", rs.rule.name));
+        }
+        out.push_str(
+            "# HELP tpcc_alert_fired_total Times the rule transitioned to firing.\n\
+             # TYPE tpcc_alert_fired_total counter\n",
+        );
+        for rs in rules.iter() {
+            out.push_str(&format!(
+                "tpcc_alert_fired_total{{rule=\"{}\"}} {}\n",
+                rs.rule.name, rs.fired_total
+            ));
+        }
+        out.push_str(
+            "# HELP tpcc_alert_resolved_total Times the rule resolved.\n\
+             # TYPE tpcc_alert_resolved_total counter\n",
+        );
+        for rs in rules.iter() {
+            out.push_str(&format!(
+                "tpcc_alert_resolved_total{{rule=\"{}\"}} {}\n",
+                rs.rule.name, rs.resolved_total
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drift(n: f64) -> AlertInputs {
+        AlertInputs { drift_sites_tripped: n, ..AlertInputs::default() }
+    }
+
+    #[test]
+    fn empty_inputs_never_fire() {
+        let eng = AlertEngine::new();
+        // queue_wait_p95_s defaults to 0.0 here; force the no-data shape
+        let inputs = AlertInputs { queue_wait_p95_s: f64::NAN, ..AlertInputs::default() };
+        for tick in 0..20 {
+            let tr = eng.evaluate(&inputs, tick as f64 * 0.25);
+            assert!(tr.is_empty(), "tick {tick} produced {tr:?}");
+        }
+        assert!(eng.firing().is_empty());
+    }
+
+    #[test]
+    fn immediate_rule_fires_and_resolves_with_one_event_each() {
+        let eng = AlertEngine::new();
+        let tr = eng.evaluate(&drift(2.0), 1.0);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].rule, "drift_tripped");
+        assert!(tr[0].firing);
+        assert_eq!(tr[0].value, 2.0);
+        // still breaching: no duplicate event
+        assert!(eng.evaluate(&drift(2.0), 1.25).is_empty());
+        assert_eq!(eng.firing(), vec!["drift_tripped"]);
+        // recovers: exactly one resolved event
+        let tr = eng.evaluate(&drift(0.0), 2.0);
+        assert_eq!(tr.len(), 1);
+        assert!(!tr[0].firing);
+        assert!(eng.firing().is_empty());
+        // and quiet afterwards
+        assert!(eng.evaluate(&drift(0.0), 2.25).is_empty());
+    }
+
+    #[test]
+    fn hysteresis_holds_fire_until_for_duration() {
+        let eng = AlertEngine::new();
+        let storm = AlertInputs {
+            preemptions_per_s: Some(3.0),
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        // breaching from t=0; must stay silent until t >= 2.0
+        assert!(eng.evaluate(&storm, 0.0).is_empty());
+        assert!(eng.evaluate(&storm, 1.0).is_empty());
+        assert!(eng.evaluate(&storm, 1.9).is_empty());
+        let tr = eng.evaluate(&storm, 2.0);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].rule, "preemption_storm");
+        assert!(tr[0].firing);
+    }
+
+    #[test]
+    fn flap_below_for_duration_never_fires() {
+        let eng = AlertEngine::new();
+        let storm = AlertInputs {
+            preemptions_per_s: Some(3.0),
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        let calm = AlertInputs {
+            preemptions_per_s: Some(0.0),
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        // 1.5 s bursts separated by calm ticks: pending resets each time
+        for cycle in 0..5 {
+            let t0 = cycle as f64 * 10.0;
+            assert!(eng.evaluate(&storm, t0).is_empty());
+            assert!(eng.evaluate(&storm, t0 + 1.5).is_empty());
+            assert!(eng.evaluate(&calm, t0 + 2.0).is_empty(), "silent pending reset");
+        }
+        assert!(eng.firing().is_empty());
+        let body = eng.to_json().to_string();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("firing").unwrap().as_i64(), Some(0));
+    }
+
+    #[test]
+    fn multi_window_burn_requires_both_windows() {
+        let eng = AlertEngine::new();
+        // short-window spike alone (5 m still calm): no page
+        let spike = AlertInputs {
+            burn_1m: Some(50.0),
+            burn_5m: Some(2.0),
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        assert!(eng.evaluate(&spike, 0.0).is_empty());
+        // both windows burning: fires immediately (for_s = 0)
+        let sustained = AlertInputs {
+            burn_1m: Some(50.0),
+            burn_5m: Some(20.0),
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        let tr = eng.evaluate(&sustained, 0.25);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].rule, "ttft_slo_burn");
+        assert_eq!(tr[0].value, 20.0, "reports the min of the two windows");
+    }
+
+    #[test]
+    fn kv_exhaustion_needs_a_pool() {
+        let eng = AlertEngine::new();
+        // no pool (total 0): quiet
+        let none = AlertInputs { queue_wait_p95_s: f64::NAN, ..AlertInputs::default() };
+        assert!(eng.evaluate(&none, 0.0).is_empty());
+        // 2 of 100 blocks free = 2% < 5%: pending, then firing
+        let tight = AlertInputs {
+            kv_blocks_free: 2.0,
+            kv_blocks_total: 100.0,
+            queue_wait_p95_s: f64::NAN,
+            ..AlertInputs::default()
+        };
+        assert!(eng.evaluate(&tight, 0.0).is_empty());
+        let tr = eng.evaluate(&tight, 2.5);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].rule, "kv_pool_exhausted");
+    }
+
+    #[test]
+    fn json_and_prometheus_shapes() {
+        let eng = AlertEngine::new();
+        eng.evaluate(&drift(1.0), 0.5);
+        let body = eng.to_json().to_string();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("firing").unwrap().as_i64(), Some(1));
+        let rules = j.get("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), 6);
+        let drift_row = rules
+            .iter()
+            .find(|r| r.get("name").and_then(|n| n.as_str()) == Some("drift_tripped"))
+            .unwrap();
+        assert_eq!(drift_row.get("state").unwrap().as_str(), Some("firing"));
+        assert_eq!(drift_row.get("fired_total").unwrap().as_i64(), Some(1));
+        assert_eq!(drift_row.get("since_s").unwrap().as_f64(), Some(0.5));
+
+        let prom = eng.to_prometheus();
+        assert!(prom.contains("tpcc_alert_firing{rule=\"drift_tripped\"} 1\n"));
+        assert!(prom.contains("tpcc_alert_firing{rule=\"preemption_storm\"} 0\n"));
+        assert!(prom.contains("tpcc_alert_fired_total{rule=\"drift_tripped\"} 1\n"));
+        // same line lint the registry exposition test enforces
+        for line in prom.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (name_part, value) = line.rsplit_once(' ').unwrap();
+            let name = name_part.split('{').next().unwrap();
+            assert!(name.starts_with("tpcc_alert_"));
+            assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+        }
+    }
+}

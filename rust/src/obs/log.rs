@@ -1,0 +1,448 @@
+//! Structured event log: the third observability pillar next to the
+//! span recorder ([`super::Tracer`]) and the flight recorder
+//! ([`super::flight`]).
+//!
+//! Spans answer *where the wall-clock went* and flight records answer
+//! *what one request cost*; the event log answers *what happened* —
+//! admissions, preemptions, chunk-lane slices, drift trips, shed
+//! connections, worker panics — as leveled, structured events an
+//! operator can tail (`GET /logs?last=N&level=warn`), scrape, or watch
+//! in `tpcc top`.
+//!
+//! Design constraints mirror the span recorder's:
+//!
+//! 1. **Near-zero cost when filtered.** [`Logger::log`] checks one
+//!    relaxed atomic against the event's level and returns before
+//!    formatting anything. Lifecycle events are per-request (never
+//!    per-token), so the surviving path — a brief mutex push into a
+//!    bounded ring — is off the token hot path by construction.
+//! 2. **Bounded memory.** The ring holds [`DEFAULT_LOG_CAP`] events;
+//!    overflow drops the *oldest* event and counts it, so a long-running
+//!    server keeps the recent window.
+//! 3. **One sink.** Every diagnostic — coordinator, HTTP server, rank
+//!    pool, alert engine, CLI — flows through [`Event`] formatting, so
+//!    `--log-json` switches the whole process to JSON lines at once.
+//!
+//! Events carry a monotonic sequence number and seconds since the
+//! logger's epoch; `GET /logs` serves the newest-N tail newest-last.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Default ring capacity (events). Lifecycle events are per-request,
+/// so this retains thousands of requests' worth of history.
+pub const DEFAULT_LOG_CAP: usize = 4096;
+
+/// Sentinel level byte meaning "sink disabled".
+const LEVEL_OFF: u8 = u8::MAX;
+
+/// Event severity, ordered. The ring gate and the stderr sink each keep
+/// events at-or-above their configured level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse a level name (`--log-level`, `/logs?level=`).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Debug,
+            1 => Level::Info,
+            2 => Level::Warn,
+            _ => Level::Error,
+        }
+    }
+}
+
+/// One structured log event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Seconds since the logger's epoch (its construction instant).
+    pub t_s: f64,
+    /// Global emit-order sequence number (unique per logger).
+    pub seq: u64,
+    pub level: Level,
+    /// Emitting subsystem: `coordinator`, `server`, `rank`, `alert`,
+    /// `cli`, `bench`.
+    pub target: &'static str,
+    pub message: String,
+    /// Structured payload; keys are static (the event vocabulary is
+    /// fixed at the call site), values arbitrary JSON.
+    pub fields: Vec<(&'static str, Json)>,
+}
+
+impl Event {
+    /// The JSON-lines object: fixed envelope keys plus the structured
+    /// fields inlined (a field cannot shadow the envelope — envelope
+    /// keys win by insertion into the map last).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = self
+            .fields
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        pairs.push(("t_s", json::num(self.t_s)));
+        pairs.push(("seq", json::num(self.seq as f64)));
+        pairs.push(("level", json::s(self.level.name())));
+        pairs.push(("target", json::s(self.target)));
+        pairs.push(("msg", json::s(&self.message)));
+        json::obj(pairs)
+    }
+
+    /// Plain-text rendering: `t=12.345 WARN  server msg k=v k=v`.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "t={:.3} {:<5} {:<11} {}",
+            self.t_s,
+            self.level.name().to_ascii_uppercase(),
+            self.target,
+            self.message
+        );
+        for (k, v) in &self.fields {
+            out.push(' ');
+            out.push_str(k);
+            out.push('=');
+            match v {
+                Json::Str(s) => out.push_str(s),
+                other => out.push_str(&other.to_string()),
+            }
+        }
+        out
+    }
+}
+
+struct LogInner {
+    buf: VecDeque<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Bounded, leveled, structured event log (one per engine/coordinator;
+/// detached test handles own a fresh one).
+pub struct Logger {
+    /// minimum level kept in the ring — the relaxed-atomic emit gate
+    level: AtomicU8,
+    /// minimum level echoed to stderr ([`LEVEL_OFF`] = silent)
+    stderr_level: AtomicU8,
+    /// stderr format: JSON lines (`--log-json`) vs plain text
+    stderr_json: AtomicBool,
+    epoch: Instant,
+    seq: AtomicU64,
+    /// cumulative events that passed the gate (not reset by reads)
+    total: AtomicU64,
+    inner: Mutex<LogInner>,
+}
+
+impl Logger {
+    /// A logger keeping everything at-or-above [`Level::Debug`] in the
+    /// ring, echoing nothing to stderr until [`Logger::set_stderr`].
+    pub fn new() -> Arc<Logger> {
+        Logger::with_capacity(DEFAULT_LOG_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Arc<Logger> {
+        Arc::new(Logger {
+            level: AtomicU8::new(Level::Debug as u8),
+            stderr_level: AtomicU8::new(LEVEL_OFF),
+            stderr_json: AtomicBool::new(false),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            inner: Mutex::new(LogInner {
+                buf: VecDeque::with_capacity(cap.clamp(1, DEFAULT_LOG_CAP)),
+                cap: cap.max(1),
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// Set the minimum level the ring keeps (the emit gate).
+    pub fn set_level(&self, level: Level) {
+        self.level.store(level as u8, Ordering::Relaxed);
+    }
+
+    pub fn level(&self) -> Level {
+        Level::from_u8(self.level.load(Ordering::Relaxed))
+    }
+
+    /// Configure the stderr sink: echo events at-or-above `level`
+    /// (`None` silences it), as JSON lines when `json`.
+    pub fn set_stderr(&self, level: Option<Level>, json: bool) {
+        self.stderr_level
+            .store(level.map_or(LEVEL_OFF, |l| l as u8), Ordering::Relaxed);
+        self.stderr_json.store(json, Ordering::Relaxed);
+    }
+
+    /// Whether an event at `level` would pass the gate — lets call
+    /// sites skip building expensive fields for filtered events.
+    pub fn enabled(&self, level: Level) -> bool {
+        (level as u8) >= self.level.load(Ordering::Relaxed)
+    }
+
+    /// Emit one event. Filtered levels cost one relaxed atomic load;
+    /// surviving events take a brief mutex to push into the bounded
+    /// ring (never on a per-token path).
+    pub fn log(
+        &self,
+        level: Level,
+        target: &'static str,
+        message: &str,
+        fields: Vec<(&'static str, Json)>,
+    ) {
+        if !self.enabled(level) {
+            return;
+        }
+        let ev = Event {
+            t_s: self.epoch.elapsed().as_secs_f64(),
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            level,
+            target,
+            message: message.to_string(),
+            fields,
+        };
+        if (level as u8) >= self.stderr_level.load(Ordering::Relaxed) {
+            let line = if self.stderr_json.load(Ordering::Relaxed) {
+                ev.to_json().to_string()
+            } else {
+                ev.render()
+            };
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "{line}");
+        }
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() == g.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(ev);
+    }
+
+    pub fn debug(&self, target: &'static str, msg: &str, fields: Vec<(&'static str, Json)>) {
+        self.log(Level::Debug, target, msg, fields);
+    }
+    pub fn info(&self, target: &'static str, msg: &str, fields: Vec<(&'static str, Json)>) {
+        self.log(Level::Info, target, msg, fields);
+    }
+    pub fn warn(&self, target: &'static str, msg: &str, fields: Vec<(&'static str, Json)>) {
+        self.log(Level::Warn, target, msg, fields);
+    }
+    pub fn error(&self, target: &'static str, msg: &str, fields: Vec<(&'static str, Json)>) {
+        self.log(Level::Error, target, msg, fields);
+    }
+
+    /// Events that passed the gate since construction (not reset).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Newest-last tail of the ring: up to `last` events at-or-above
+    /// `min_level`. Non-destructive (polling observers must not steal
+    /// each other's events).
+    pub fn snapshot(&self, last: usize, min_level: Level) -> Vec<Event> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Event> = g
+            .buf
+            .iter()
+            .rev()
+            .filter(|e| e.level >= min_level)
+            .take(last)
+            .cloned()
+            .collect();
+        out.reverse();
+        out
+    }
+
+    /// The `GET /logs` body.
+    pub fn to_json(&self, last: usize, min_level: Level) -> Json {
+        let events: Vec<Json> = self.snapshot(last, min_level).iter().map(Event::to_json).collect();
+        json::obj(vec![
+            ("total", json::num(self.total() as f64)),
+            ("dropped", json::num(self.dropped() as f64)),
+            ("level", json::s(self.level().name())),
+            ("min_level", json::s(min_level.name())),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+impl Default for Logger {
+    fn default() -> Logger {
+        Logger {
+            level: AtomicU8::new(Level::Debug as u8),
+            stderr_level: AtomicU8::new(LEVEL_OFF),
+            stderr_json: AtomicBool::new(false),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            inner: Mutex::new(LogInner {
+                buf: VecDeque::new(),
+                cap: DEFAULT_LOG_CAP,
+                dropped: 0,
+            }),
+        }
+    }
+}
+
+/// One-shot stderr diagnostic for engine-less CLI paths (`main`'s
+/// top-level error handler, `golden --emit`): same [`Event`] formatting
+/// as the logger's stderr sink, so every line in the process renders
+/// identically, without requiring a coordinator to exist.
+pub fn cli(level: Level, message: &str, fields: Vec<(&'static str, Json)>) {
+    let ev = Event { t_s: 0.0, seq: 0, level, target: "cli", message: message.to_string(), fields };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{}", ev.render());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error > Level::Warn && Level::Warn > Level::Info && Level::Info > Level::Debug);
+    }
+
+    #[test]
+    fn gate_filters_below_level() {
+        let log = Logger::new();
+        log.set_level(Level::Warn);
+        log.info("server", "dropped", vec![]);
+        log.warn("server", "kept", vec![]);
+        assert_eq!(log.total(), 1);
+        let evs = log.snapshot(10, Level::Debug);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].message, "kept");
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let log = Logger::with_capacity(3);
+        for i in 0..7u64 {
+            log.info("server", &format!("e{i}"), vec![]);
+        }
+        assert_eq!(log.dropped(), 4);
+        assert_eq!(log.total(), 7);
+        let evs = log.snapshot(10, Level::Debug);
+        let msgs: Vec<&str> = evs.iter().map(|e| e.message.as_str()).collect();
+        assert_eq!(msgs, vec!["e4", "e5", "e6"], "newest kept, oldest dropped");
+        // seq is monotonic across the ring
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn snapshot_tail_and_level_filter() {
+        let log = Logger::new();
+        log.debug("coordinator", "d", vec![]);
+        log.info("coordinator", "i", vec![]);
+        log.warn("coordinator", "w1", vec![]);
+        log.error("coordinator", "e", vec![]);
+        log.warn("coordinator", "w2", vec![]);
+        let warns = log.snapshot(2, Level::Warn);
+        assert_eq!(
+            warns.iter().map(|e| e.message.as_str()).collect::<Vec<_>>(),
+            vec!["e", "w2"],
+            "newest 2 at warn+, newest-last"
+        );
+        assert_eq!(log.snapshot(100, Level::Debug).len(), 5);
+    }
+
+    #[test]
+    fn event_json_roundtrips_and_keeps_envelope() {
+        let log = Logger::new();
+        log.warn(
+            "server",
+            "access",
+            vec![
+                ("path", json::s("/generate")),
+                ("status", json::num(200.0)),
+                ("latency_s", json::num(0.125)),
+                // a hostile field must not shadow the envelope
+                ("level", json::s("spoofed")),
+            ],
+        );
+        let body = log.to_json(10, Level::Debug).to_string();
+        let doc = Json::parse(&body).expect("valid JSON");
+        assert_eq!(doc.get("total").unwrap().as_i64(), Some(1));
+        let ev = doc.get("events").unwrap().idx(0).unwrap();
+        assert_eq!(ev.get("level").unwrap().as_str(), Some("warn"));
+        assert_eq!(ev.get("target").unwrap().as_str(), Some("server"));
+        assert_eq!(ev.get("msg").unwrap().as_str(), Some("access"));
+        assert_eq!(ev.get("path").unwrap().as_str(), Some("/generate"));
+        assert_eq!(ev.get("status").unwrap().as_i64(), Some(200));
+    }
+
+    #[test]
+    fn render_is_single_line() {
+        let log = Logger::new();
+        log.error("rank", "worker panicked", vec![("worker", json::num(2.0))]);
+        let ev = &log.snapshot(1, Level::Debug)[0];
+        let line = ev.render();
+        assert!(line.contains("ERROR"), "{line}");
+        assert!(line.contains("worker panicked"), "{line}");
+        assert!(line.contains("worker=2"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn cross_thread_emit_is_safe() {
+        let log = Logger::new();
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        log.info("rank", "tick", vec![("worker", json::num(i as f64))]);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(log.total(), 400);
+        let evs = log.snapshot(1000, Level::Debug);
+        assert_eq!(evs.len(), 400);
+        // seq unique across threads
+        let mut seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 400);
+    }
+}

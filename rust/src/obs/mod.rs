@@ -37,8 +37,11 @@
 //! while the phase gauge must count only the time actually blocked,
 //! and link time is *modeled* (virtual clock), not walled.
 
+pub mod alert;
 pub mod export;
 pub mod flight;
+pub mod log;
+pub mod top;
 
 use std::cell::RefCell;
 use std::collections::VecDeque;

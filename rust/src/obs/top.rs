@@ -1,0 +1,361 @@
+//! `tpcc top` — a terminal operator dashboard over the HTTP surface.
+//!
+//! Polls `/metrics`, `/metrics/history`, `/alerts`, and `/logs` on a
+//! running server and renders one self-contained text frame: throughput
+//! sparklines from the history ring's compact `recent` tail, latency
+//! percentiles, KV-pool occupancy, every alert rule with its state, and
+//! the newest warn-and-above log events. `--once` prints a single frame
+//! and exits (no TTY, no ANSI), which is what CI runs; interactive mode
+//! redraws in place every `interval_s`.
+//!
+//! Rendering is a pure function of the fetched JSON (`render`), so the
+//! layout is unit-testable against canned snapshots without a server.
+
+use crate::server::http_get;
+use crate::util::json::Json;
+
+/// One poll of the four dashboard endpoints.
+pub struct Snapshot {
+    pub addr: String,
+    pub metrics: Json,
+    pub history: Json,
+    pub alerts: Json,
+    pub logs: Json,
+}
+
+fn get_json(addr: &str, path: &str) -> anyhow::Result<Json> {
+    let (status, body) = http_get(addr, path)?;
+    anyhow::ensure!(status == 200, "GET {path} -> {status}");
+    Ok(Json::parse(&body)?)
+}
+
+/// Fetch a full dashboard snapshot from a running server.
+pub fn fetch(addr: &str) -> anyhow::Result<Snapshot> {
+    Ok(Snapshot {
+        addr: addr.to_string(),
+        metrics: get_json(addr, "/metrics")?,
+        history: get_json(addr, "/metrics/history")?,
+        alerts: get_json(addr, "/alerts")?,
+        logs: get_json(addr, "/logs?last=6&level=warn")?,
+    })
+}
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Scale a series into block-glyph heights. All-zero (or empty) input
+/// renders as a flat baseline rather than dividing by zero.
+fn sparkline(vals: &[f64]) -> String {
+    let max = vals.iter().cloned().fold(0.0f64, f64::max);
+    vals.iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() {
+                SPARK[0]
+            } else {
+                let idx = ((v / max) * (SPARK.len() - 1) as f64).round() as usize;
+                SPARK[idx.min(SPARK.len() - 1)]
+            }
+        })
+        .collect()
+}
+
+/// Difference a cumulative-counter column of the history `recent` rows
+/// (`[t_s, requests, tokens, bytes]`, newest-last) into per-second
+/// rates, one value per adjacent pair.
+fn rate_series(rows: &[Json], col: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut prev: Option<(f64, f64)> = None;
+    for row in rows {
+        let Some(cells) = row.as_arr() else { continue };
+        let (Some(t), Some(v)) = (
+            cells.first().and_then(|c| c.as_f64()),
+            cells.get(col).and_then(|c| c.as_f64()),
+        ) else {
+            continue;
+        };
+        if let Some((pt, pv)) = prev {
+            let dt = t - pt;
+            if dt > 0.0 {
+                out.push(((v - pv).max(0.0)) / dt);
+            }
+        }
+        prev = Some((t, v));
+    }
+    out
+}
+
+fn num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+fn fmt_ms(v: Option<f64>) -> String {
+    match v {
+        Some(s) if s.is_finite() => format!("{:.1}ms", s * 1e3),
+        _ => "-".to_string(),
+    }
+}
+
+fn fmt_rate(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Render one dashboard frame from a snapshot. Pure: no I/O, no ANSI
+/// control codes — the interactive loop adds clear-screen around it.
+pub fn render(snap: &Snapshot) -> String {
+    let m = &snap.metrics;
+    let mut out = String::with_capacity(2048);
+
+    let uptime = num(m, "uptime_seconds").unwrap_or(0.0);
+    let version = m.get("build_version").and_then(|v| v.as_str()).unwrap_or("?");
+    let git = m.get("build_git").and_then(|v| v.as_str()).unwrap_or("unknown");
+    out.push_str(&format!(
+        "tpcc top — {}  (v{} {}  up {:.0}s)\n",
+        snap.addr, version, git, uptime
+    ));
+    out.push_str(&format!(
+        "requests: {:.0} done / {:.0} in  tokens: {:.0}  preempt: {:.0}  shed: {:.0}\n",
+        num(m, "requests_completed").unwrap_or(0.0),
+        num(m, "requests_received").unwrap_or(0.0),
+        num(m, "tokens_generated").unwrap_or(0.0),
+        num(m, "preemptions_total").unwrap_or(0.0),
+        num(m, "requests_shed").unwrap_or(0.0),
+    ));
+
+    // throughput sparklines from the compact recent tail
+    let empty: Vec<Json> = Vec::new();
+    let rows = snap
+        .history
+        .get("recent")
+        .and_then(|r| r.as_arr())
+        .unwrap_or(&empty);
+    let qps = rate_series(rows, 1);
+    let tps = rate_series(rows, 2);
+    let wire = rate_series(rows, 3).iter().map(|b| b / 1e9).collect::<Vec<_>>();
+    let last = |s: &[f64]| s.last().cloned().unwrap_or(0.0);
+    out.push_str(&format!("qps      {:>8} {}\n", fmt_rate(last(&qps)), sparkline(&qps)));
+    out.push_str(&format!("tok/s    {:>8} {}\n", fmt_rate(last(&tps)), sparkline(&tps)));
+    out.push_str(&format!("wire GB/s{:>8} {}\n", fmt_rate(last(&wire)), sparkline(&wire)));
+
+    // latency percentiles + KV occupancy
+    out.push_str(&format!(
+        "ttft p50/p95/p99: {} / {} / {}   tpot p50/p99: {} / {}   queue p95: {}\n",
+        fmt_ms(num(m, "ttft_p50_s")),
+        fmt_ms(num(m, "ttft_p95_s")),
+        fmt_ms(num(m, "ttft_p99_s")),
+        fmt_ms(num(m, "tpot_p50_s")),
+        fmt_ms(num(m, "tpot_p99_s")),
+        fmt_ms(num(m, "queue_wait_p95_s")),
+    ));
+    let kv_used = num(m, "kv_blocks_in_use").unwrap_or(0.0);
+    let kv_free = num(m, "kv_blocks_free").unwrap_or(0.0);
+    let kv_total = kv_used + kv_free;
+    if kv_total > 0.0 {
+        let frac = kv_used / kv_total;
+        let filled = (frac * 20.0).round() as usize;
+        out.push_str(&format!(
+            "kv pool  [{}{}] {:.0}% ({:.0}/{:.0} blocks)\n",
+            "#".repeat(filled.min(20)),
+            ".".repeat(20usize.saturating_sub(filled)),
+            frac * 100.0,
+            kv_used,
+            kv_total,
+        ));
+    } else {
+        out.push_str("kv pool  [no pool]\n");
+    }
+
+    // alert rules: firing first, then pending, then a count of quiet ones
+    let rules = snap
+        .alerts
+        .get("rules")
+        .and_then(|r| r.as_arr())
+        .unwrap_or(&empty);
+    let firing = snap
+        .alerts
+        .get("firing")
+        .and_then(|f| f.as_f64())
+        .unwrap_or(0.0) as usize;
+    out.push_str(&format!("alerts ({firing} firing):\n"));
+    let mut quiet = 0usize;
+    for rule in rules {
+        let state = rule.get("state").and_then(|s| s.as_str()).unwrap_or("?");
+        if state == "inactive" {
+            quiet += 1;
+            continue;
+        }
+        let name = rule.get("name").and_then(|s| s.as_str()).unwrap_or("?");
+        let sev = rule.get("severity").and_then(|s| s.as_str()).unwrap_or("?");
+        let value = rule.get("value").and_then(|v| v.as_f64());
+        let threshold = num(rule, "threshold").unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "  {} {:<20} [{}] value {} vs {:.3}\n",
+            if state == "firing" { "●" } else { "◌" },
+            name,
+            sev,
+            value.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".to_string()),
+            threshold,
+        ));
+    }
+    if quiet > 0 {
+        out.push_str(&format!("  ({quiet} rules quiet)\n"));
+    }
+
+    // newest warn+ events, oldest first
+    let events = snap
+        .logs
+        .get("events")
+        .and_then(|e| e.as_arr())
+        .unwrap_or(&empty);
+    if !events.is_empty() {
+        out.push_str("recent warnings:\n");
+        for ev in events {
+            let t = num(ev, "t_s").unwrap_or(0.0);
+            let level = ev.get("level").and_then(|l| l.as_str()).unwrap_or("?");
+            let target = ev.get("target").and_then(|l| l.as_str()).unwrap_or("?");
+            let msg = ev.get("msg").and_then(|l| l.as_str()).unwrap_or("");
+            out.push_str(&format!(
+                "  t={t:.1} {:<5} {target}: {msg}\n",
+                level.to_uppercase()
+            ));
+        }
+    }
+    out
+}
+
+/// Drive the dashboard: one frame with `--once`, otherwise poll and
+/// redraw until killed. Fetch errors in loop mode are shown in place of
+/// a frame and retried — a restarting server should not kill the
+/// operator's terminal.
+pub fn run(addr: &str, once: bool, interval_s: f64) -> anyhow::Result<()> {
+    use std::io::Write;
+    loop {
+        match fetch(addr) {
+            Ok(snap) => {
+                let frame = render(&snap);
+                if once {
+                    print!("{frame}");
+                    return Ok(());
+                }
+                // clear + home, then the frame
+                print!("\x1b[2J\x1b[H{frame}");
+                std::io::stdout().flush().ok();
+            }
+            Err(e) if once => return Err(e),
+            Err(e) => {
+                print!("\x1b[2J\x1b[Htpcc top — {addr}: fetch failed: {e:#}\n");
+                std::io::stdout().flush().ok();
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval_s.max(0.2)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+
+    fn canned() -> Snapshot {
+        let metrics = Json::parse(
+            r#"{"requests_completed":10,"requests_received":12,"tokens_generated":320,
+                "preemptions_total":3,"requests_shed":1,"uptime_seconds":42.5,
+                "build_version":"0.1.0","build_git":"abc1234",
+                "kv_blocks_in_use":24,"kv_blocks_free":8,
+                "ttft_p50_s":0.012,"ttft_p95_s":0.040,"ttft_p99_s":0.055,
+                "tpot_p50_s":0.004,"tpot_p99_s":0.009,"queue_wait_p95_s":0.002}"#,
+        )
+        .unwrap();
+        let history = Json::parse(
+            r#"{"recent":[[0.0,0,0,0],[1.0,2,64,1000000],[2.0,6,192,3000000],[3.0,10,320,5000000]]}"#,
+        )
+        .unwrap();
+        let alerts = Json::parse(
+            r#"{"firing":1,"rules":[
+                {"name":"preemption_storm","expr":"x","severity":"warn","state":"firing",
+                 "for_s":2.0,"threshold":0.5,"value":1.25,"since_s":10.0,
+                 "fired_total":1,"resolved_total":0},
+                {"name":"ttft_slo_burn","expr":"y","severity":"error","state":"inactive",
+                 "for_s":0.0,"threshold":10.0,"value":null,"since_s":null,
+                 "fired_total":0,"resolved_total":0}]}"#,
+        )
+        .unwrap();
+        let logs = json::obj(vec![
+            ("total", json::num(5.0)),
+            ("dropped", json::num(0.0)),
+            (
+                "events",
+                Json::Arr(vec![json::obj(vec![
+                    ("t_s", json::num(9.5)),
+                    ("level", json::s("warn")),
+                    ("target", json::s("alert")),
+                    ("msg", json::s("alert firing")),
+                ])]),
+            ),
+        ]);
+        Snapshot { addr: "127.0.0.1:9".to_string(), metrics, history, alerts, logs }
+    }
+
+    #[test]
+    fn render_shows_alerts_rates_and_logs() {
+        let frame = render(&canned());
+        assert!(frame.contains("tpcc top"), "header: {frame}");
+        assert!(frame.contains("preemption_storm"), "firing rule listed: {frame}");
+        assert!(frame.contains("● "), "firing marker: {frame}");
+        assert!(frame.contains("(1 rules quiet)"), "quiet rules folded: {frame}");
+        assert!(frame.contains("alert firing"), "warn log rendered: {frame}");
+        assert!(frame.contains("kv pool"), "kv bar present: {frame}");
+        assert!(frame.contains("75%"), "kv occupancy 24/32: {frame}");
+        assert!(frame.contains("12.0ms"), "ttft p50 formatted: {frame}");
+        // sparkline glyphs present for the qps row
+        assert!(frame.chars().any(|c| SPARK.contains(&c)), "sparkline glyphs: {frame}");
+    }
+
+    #[test]
+    fn rate_series_differences_cumulative_rows() {
+        let rows: Vec<Json> = vec![
+            Json::parse("[0.0,0,0,0]").unwrap(),
+            Json::parse("[1.0,4,0,0]").unwrap(),
+            Json::parse("[3.0,10,0,0]").unwrap(),
+        ];
+        let qps = rate_series(&rows, 1);
+        assert_eq!(qps.len(), 2);
+        assert!((qps[0] - 4.0).abs() < 1e-9);
+        assert!((qps[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_series_clamps_counter_resets_to_zero() {
+        let rows: Vec<Json> = vec![
+            Json::parse("[0.0,100,0,0]").unwrap(),
+            Json::parse("[1.0,2,0,0]").unwrap(),
+        ];
+        let qps = rate_series(&rows, 1);
+        assert_eq!(qps, vec![0.0]);
+    }
+
+    #[test]
+    fn sparkline_handles_flat_and_scaled_input() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[0.0, 0.0]), "▁▁");
+        let s = sparkline(&[1.0, 8.0]);
+        assert_eq!(s.chars().count(), 2);
+        assert_eq!(s.chars().last().unwrap(), '█');
+    }
+
+    #[test]
+    fn render_survives_empty_json_documents() {
+        let snap = Snapshot {
+            addr: "x".to_string(),
+            metrics: Json::parse("{}").unwrap(),
+            history: Json::parse("{}").unwrap(),
+            alerts: Json::parse("{}").unwrap(),
+            logs: Json::parse("{}").unwrap(),
+        };
+        let frame = render(&snap);
+        assert!(frame.contains("alerts (0 firing)"), "{frame}");
+        assert!(frame.contains("[no pool]"), "{frame}");
+    }
+}

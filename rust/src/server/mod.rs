@@ -16,7 +16,17 @@
 //!                      (+ `policy_drift` from the error sentinel)
 //!   GET  /trace     -> Chrome-trace JSON of recorded spans (?last=N
 //!                      keeps the newest N; snapshot, non-destructive)
+//!   GET  /logs      -> structured event log tail (?last=N newest N,
+//!                      ?level=warn filters to warn-and-above)
+//!   GET  /alerts    -> alert-rule states (firing/pending/inactive,
+//!                      fired/resolved counts); the same rules export
+//!                      as `tpcc_alert_firing` gauges on ?format=prom
 //!   GET  /healthz
+//!
+//! Every answered connection lands in the per-(route, status) counters
+//! (`http_requests_total`) and emits one `server` access-log event
+//! (path, status, latency) — including 400s for malformed requests and
+//! 503s for shed connections.
 //!
 //! Connections are served by a **fixed worker pool** over a bounded
 //! pending queue, not thread-per-connection: a burst can never spawn an
@@ -33,6 +43,7 @@ use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{CoordinatorHandle, GenRequest, StreamEvent};
+use crate::obs::log::Level;
 use crate::util::json::{self, Json};
 
 /// Observable pool behaviour (tests assert the cap holds under burst).
@@ -175,16 +186,27 @@ impl Server {
     }
 
     /// Dispatch one accepted connection: queue it for a worker, or shed
-    /// it with a 503 when the pending queue is full.
+    /// it with a 503 when the pending queue is full. Sheds count into
+    /// the registry (`requests_shed`, `http_requests_total`) and emit a
+    /// warn event — an operator must be able to see load being turned
+    /// away.
     fn dispatch(
         stream: TcpStream,
         tx: &std::sync::mpsc::SyncSender<TcpStream>,
         stats: &PoolStats,
+        handle: &CoordinatorHandle,
     ) {
         match tx.try_send(stream) {
             Ok(()) => {}
             Err(TrySendError::Full(mut stream)) => {
                 stats.shed.fetch_add(1, Ordering::SeqCst);
+                handle.metrics.requests_shed.inc();
+                handle.metrics.record_http("(shed)", 503);
+                handle.log.warn(
+                    "server",
+                    "connection shed: pending queue full",
+                    vec![("shed_total", json::num(handle.metrics.requests_shed.get() as f64))],
+                );
                 let _ = respond(&mut stream, 503, r#"{"error":"server overloaded"}"#);
             }
             Err(TrySendError::Disconnected(_)) => {}
@@ -201,7 +223,7 @@ impl Server {
                 Ok(s) => s,
                 Err(_) => continue,
             };
-            Self::dispatch(stream, &tx, &self.stats);
+            Self::dispatch(stream, &tx, &self.stats, &self.handle);
         }
         drop(tx);
         for w in workers {
@@ -218,7 +240,7 @@ impl Server {
         let workers = self.spawn_workers(rx);
         for stream in self.listener.incoming().take(n) {
             let stream = stream?;
-            Self::dispatch(stream, &tx, &self.stats);
+            Self::dispatch(stream, &tx, &self.stats, &self.handle);
         }
         drop(tx);
         for w in workers {
@@ -373,46 +395,113 @@ fn stream_generate(
     Ok(())
 }
 
+/// Record one answered connection: bump the per-(route, status) counter
+/// and emit the access-log event. `route` is a normalized literal
+/// (known path, `"(other)"`, or `"(malformed)"`) so counter cardinality
+/// stays bounded no matter what clients send; the log keeps the raw
+/// path for debugging.
+fn finish_access(
+    handle: &CoordinatorHandle,
+    route: &str,
+    path: &str,
+    status: u32,
+    t0: std::time::Instant,
+) {
+    handle.metrics.record_http(route, status as u16);
+    handle.log.info(
+        "server",
+        "access",
+        vec![
+            ("path", json::s(path)),
+            ("status", json::num(status as f64)),
+            ("latency_s", json::num(t0.elapsed().as_secs_f64())),
+        ],
+    );
+}
+
 fn handle_conn(
     mut stream: TcpStream,
     handle: CoordinatorHandle,
     io_timeout: std::time::Duration,
 ) -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
     // a malformed request (empty request line, truncated body) is the
     // client's fault: answer 400 instead of dropping the connection
     let req = match parse_request(&mut stream) {
         Ok(r) => r,
-        Err(_) => return respond(&mut stream, 400, r#"{"error":"malformed request"}"#),
+        Err(_) => {
+            finish_access(&handle, "(malformed)", "(malformed)", 400, t0);
+            return respond(&mut stream, 400, r#"{"error":"malformed request"}"#);
+        }
     };
     // split the query string off so routes match path-only
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, q),
         None => (req.path.as_str(), ""),
     };
+    let route = match (req.method.as_str(), path) {
+        ("GET", "/healthz")
+        | ("GET", "/metrics")
+        | ("GET", "/metrics/history")
+        | ("GET", "/debug/requests")
+        | ("GET", "/policy")
+        | ("GET", "/trace")
+        | ("GET", "/logs")
+        | ("GET", "/alerts")
+        | ("POST", "/generate") => path.to_string(),
+        _ => "(other)".to_string(),
+    };
+    let outcome = route_request(&mut stream, &handle, &req, path, query, io_timeout);
+    // 499 (client closed / write failed mid-response): the route ran
+    // but the answer never fully landed
+    let status = *outcome.as_ref().unwrap_or(&499);
+    finish_access(&handle, &route, path, status, t0);
+    outcome.map(|_| ())
+}
+
+/// Serve one parsed request and return the HTTP status it was answered
+/// with (`Err` only for I/O failures writing the response).
+fn route_request(
+    stream: &mut TcpStream,
+    handle: &CoordinatorHandle,
+    req: &HttpRequest,
+    path: &str,
+    query: &str,
+    io_timeout: std::time::Duration,
+) -> anyhow::Result<u32> {
     match (req.method.as_str(), path) {
-        ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
+        ("GET", "/healthz") => {
+            respond(stream, 200, r#"{"ok":true}"#)?;
+            Ok(200)
+        }
         ("GET", "/metrics") => {
-            // ?format=prom switches to the Prometheus text exposition
+            // ?format=prom switches to the Prometheus text exposition;
+            // alert gauges ride along with the registry counters
             let prom = query.split('&').any(|kv| kv == "format=prom" || kv == "format=prometheus");
             if prom {
-                let body = handle.metrics.to_prometheus();
-                respond_typed(&mut stream, 200, PROM_CONTENT_TYPE, &body)
+                let mut body = handle.metrics.to_prometheus();
+                body.push_str(&handle.alerts.to_prometheus());
+                respond_typed(stream, 200, PROM_CONTENT_TYPE, &body)?;
             } else {
                 let body = handle.metrics.to_json().to_string();
-                respond(&mut stream, 200, &body)
+                respond(stream, 200, &body)?;
             }
+            Ok(200)
         }
         ("GET", "/metrics/history") => {
             let body = handle.metrics.history_json().to_string();
-            respond(&mut stream, 200, &body)
+            respond(stream, 200, &body)?;
+            Ok(200)
         }
         ("GET", "/debug/requests") => {
             let body = handle.flight.to_json().to_string();
-            respond(&mut stream, 200, &body)
+            respond(stream, 200, &body)?;
+            Ok(200)
         }
         ("GET", "/policy") => {
             let body = handle.policy_json.lock().unwrap().clone();
-            respond(&mut stream, 200, &body)
+            respond(stream, 200, &body)?;
+            Ok(200)
         }
         ("GET", "/trace") => {
             // ?last=N trims to the newest N spans (by end time)
@@ -425,17 +514,41 @@ fn handle_conn(
                 dump = dump.tail(n);
             }
             let body = dump.to_chrome_json().to_string();
-            respond(&mut stream, 200, &body)
+            respond(stream, 200, &body)?;
+            Ok(200)
+        }
+        ("GET", "/logs") => {
+            // ?last=N tail size (default 100), ?level=warn min level
+            let last = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("last="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(100);
+            let min_level = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("level="))
+                .and_then(Level::parse)
+                .unwrap_or(Level::Debug);
+            let body = handle.log.to_json(last, min_level).to_string();
+            respond(stream, 200, &body)?;
+            Ok(200)
+        }
+        ("GET", "/alerts") => {
+            let body = handle.alerts.to_json().to_string();
+            respond(stream, 200, &body)?;
+            Ok(200)
         }
         ("POST", "/generate") => {
             let parsed = std::str::from_utf8(&req.body)
                 .ok()
                 .and_then(|s| Json::parse(s).ok());
             let Some(doc) = parsed else {
-                return respond(&mut stream, 400, r#"{"error":"bad json"}"#);
+                respond(stream, 400, r#"{"error":"bad json"}"#)?;
+                return Ok(400);
             };
             let Some(prompt) = doc.get("prompt").and_then(|p| p.as_str()) else {
-                return respond(&mut stream, 400, r#"{"error":"missing prompt"}"#);
+                respond(stream, 400, r#"{"error":"missing prompt"}"#)?;
+                return Ok(400);
             };
             let max_tokens = doc.get("max_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
             let greedy = doc.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
@@ -448,21 +561,29 @@ fn handle_conn(
             };
             if streaming {
                 let events = handle.submit_stream(gen);
-                return stream_generate(&mut stream, events, io_timeout);
+                stream_generate(stream, events, io_timeout)?;
+                return Ok(200);
             }
             match handle.generate(gen) {
-                Ok(resp) => respond(&mut stream, 200, &response_json(&resp).to_string()),
+                Ok(resp) => {
+                    respond(stream, 200, &response_json(&resp).to_string())?;
+                    Ok(200)
+                }
                 // error text goes through the JSON writer: a raw
                 // format! would break the body on quotes/newlines in
                 // the message
                 Err(e) => {
                     let body =
                         json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_string();
-                    respond(&mut stream, 500, &body)
+                    respond(stream, 500, &body)?;
+                    Ok(500)
                 }
             }
         }
-        _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+        _ => {
+            respond(stream, 404, r#"{"error":"not found"}"#)?;
+            Ok(404)
+        }
     }
 }
 

@@ -344,6 +344,10 @@ pub struct TpEngine {
     /// coordinator); disabled until serving / `tpcc trace` / the
     /// rankpar bench turns it on
     tracer: Arc<Tracer>,
+    /// structured event log shared the same way (rank workers emit
+    /// start/panic/poison events; the coordinator adopts it as the
+    /// process-wide sink)
+    logger: Arc<obs::log::Logger>,
     /// online compression-error sentinel: streams observed quantization
     /// error on sampled forwards against the calibrated budget. Rebuilt
     /// (drift history reset) whenever a new policy binds —
@@ -384,6 +388,10 @@ impl TpEngine {
         // disabled until a caller opts in
         let tracer = Tracer::new();
         obs::install(&tracer, "engine", obs::TID_COORD);
+        // event log: created next to the tracer so rank workers can
+        // emit lifecycle events from boot onward; the coordinator
+        // shares this instance (one sink per engine)
+        let logger = obs::log::Logger::new();
         let mut eng = TpEngine {
             rt,
             cfg,
@@ -404,6 +412,7 @@ impl TpEngine {
             pool: None,
             rank_busy: vec![RankBusy::default(); opts_tp],
             tracer,
+            logger,
             sentinel: policy::Sentinel::new(n_sites, policy::DEFAULT_AUTO_BUDGET_PCT),
             next_step: 0,
             reduce_buf: Vec::new(),
@@ -422,6 +431,7 @@ impl TpEngine {
                 workers,
                 eng.bind_spec(),
                 eng.tracer.clone(),
+                eng.logger.clone(),
             )?;
             eng.pool = Some(pool);
         }
@@ -445,6 +455,12 @@ impl TpEngine {
     /// with `tracer().set_enabled(true)`; drain/snapshot for export.
     pub fn tracer(&self) -> &Arc<Tracer> {
         &self.tracer
+    }
+
+    /// The engine's structured event log, shared with its rank workers
+    /// and adopted by the coordinator as the process-wide sink.
+    pub fn logger(&self) -> &Arc<obs::log::Logger> {
+        &self.logger
     }
 
     /// `/metrics` gauges derived from the tracer — measured per-phase

@@ -38,8 +38,10 @@ use crate::interconnect::HwProfile;
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
 use crate::mxfmt::{compressor_from_spec_ch, Compressor, MxScheme};
+use crate::obs::log::Logger;
 use crate::obs::{self, Cat, Tracer};
 use crate::policy::{Phase, Site, SiteKind};
+use crate::util::json;
 use crate::runtime::{lit_f32, lit_i32, lit_u8, to_vec_f32, to_vec_u8, Runtime};
 
 use super::kv::{BatchKv, KvShardRef};
@@ -149,6 +151,7 @@ pub struct RankPool {
     joins: Vec<std::thread::JoinHandle<()>>,
     fabric: Arc<Fabric<RankPost>>,
     tp: usize,
+    log: Arc<Logger>,
 }
 
 impl RankPool {
@@ -164,6 +167,7 @@ impl RankPool {
         workers: usize,
         bind: BindSpec,
         tracer: Arc<Tracer>,
+        logger: Arc<Logger>,
     ) -> anyhow::Result<RankPool> {
         anyhow::ensure!(
             workers >= 1 && workers <= tp,
@@ -189,6 +193,7 @@ impl RankPool {
                 fabric: fabric.clone(),
                 bind: bind.clone(),
                 tracer: tracer.clone(),
+                logger: logger.clone(),
             };
             let ready = ready_tx.clone();
             let join = std::thread::Builder::new()
@@ -221,6 +226,7 @@ impl RankPool {
             }
         }
         if let Some(m) = failure {
+            logger.error("rank", "rank pool startup failed", vec![("err", json::s(&m))]);
             for tx in &txs {
                 let _ = tx.send(RankCmd::Shutdown);
             }
@@ -229,7 +235,7 @@ impl RankPool {
             }
             anyhow::bail!("rank pool startup failed: {m}");
         }
-        Ok(RankPool { txs, joins, fabric, tp })
+        Ok(RankPool { txs, joins, fabric, tp, log: logger })
     }
 
     pub fn workers(&self) -> usize {
@@ -270,6 +276,7 @@ impl RankPool {
         if let Some(e) = send_err {
             // unblock the workers that did get the job, drain their
             // replies, then re-arm the fabric for whoever calls next
+            self.log.error("rank", "fabric poisoned", vec![("reason", json::s("a rank worker is gone"))]);
             self.fabric.poison("a rank worker is gone");
             for _ in 0..delivered {
                 let _ = rrx.recv();
@@ -289,6 +296,11 @@ impl RankPool {
                 }
                 Err(_) => {
                     // every sender dropped without a reply: worker died
+                    self.log.error(
+                        "rank",
+                        "fabric poisoned",
+                        vec![("reason", json::s("rank worker died mid-forward"))],
+                    );
                     self.fabric.poison("rank worker died mid-forward");
                     return Err(anyhow::anyhow!("rank worker died mid-forward"));
                 }
@@ -327,6 +339,7 @@ struct WorkerBoot {
     fabric: Arc<Fabric<RankPost>>,
     bind: BindSpec,
     tracer: Arc<Tracer>,
+    logger: Arc<Logger>,
 }
 
 /// Thread-side state of one rank worker.
@@ -348,6 +361,7 @@ struct Worker {
     last_algo: Option<AlgoChoice>,
     /// a failed Bind is reported on the next forward
     bind_err: Option<String>,
+    log: Arc<Logger>,
     // per-worker scratch (replaces the seed's engine-wide buffers)
     reduce_buf: Vec<f32>,
     comm_scratch: CommScratch,
@@ -371,6 +385,19 @@ impl Worker {
             }
             wlits.push(lits);
         }
+        boot.logger.info(
+            "rank",
+            "worker started",
+            vec![
+                ("worker", json::num(boot.idx as f64)),
+                (
+                    "ranks",
+                    json::Json::Arr(
+                        boot.ranks.iter().map(|&r| json::num(r as f64)).collect(),
+                    ),
+                ),
+            ],
+        );
         let mut w = Worker {
             idx: boot.idx,
             ranks: boot.ranks,
@@ -384,6 +411,7 @@ impl Worker {
             plan_memo: BTreeMap::new(),
             last_algo: None,
             bind_err: None,
+            log: boot.logger,
             reduce_buf: Vec::new(),
             comm_scratch: CommScratch::default(),
         };
@@ -401,11 +429,26 @@ impl Worker {
                     let res = catch_unwind(AssertUnwindSafe(|| self.forward(&job, kv.as_deref())));
                     let res = match res {
                         Ok(r) => r,
-                        Err(_) => Err(anyhow::anyhow!("rank worker {} panicked", self.idx)),
+                        Err(_) => {
+                            self.log.error(
+                                "rank",
+                                "worker panicked",
+                                vec![("worker", json::num(self.idx as f64))],
+                            );
+                            Err(anyhow::anyhow!("rank worker {} panicked", self.idx))
+                        }
                     };
                     if let Err(e) = &res {
                         // wake peers blocked at a fabric barrier before
                         // replying, or the round would deadlock
+                        self.log.error(
+                            "rank",
+                            "fabric poisoned",
+                            vec![
+                                ("worker", json::num(self.idx as f64)),
+                                ("reason", json::s(&format!("{e:#}"))),
+                            ],
+                        );
                         self.fabric.poison(&format!("worker {}: {e:#}", self.idx));
                     }
                     let _ = reply.send((self.idx, res));

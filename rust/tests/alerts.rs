@@ -1,0 +1,212 @@
+//! Injected-fault integration tests for the alert pipeline: synthetic
+//! preemption storms and drift-sentinel trips must drive rules through
+//! fire → resolve with the transitions observable on every surface at
+//! once — `GET /alerts` JSON, `tpcc_alert_firing` Prometheus gauges,
+//! and matching structured-log events on `GET /logs`. Also covers the
+//! server's per-(route, status) request counters and build-info
+//! exposure. Everything runs against a detached coordinator handle, so
+//! no AOT artifacts are needed.
+
+use std::io::{Read, Write};
+
+use tpcc::coordinator::CoordinatorHandle;
+use tpcc::metrics::history::Sample;
+use tpcc::server::{http_get, Server};
+use tpcc::util::json::Json;
+
+fn boot(handle: CoordinatorHandle, requests: usize) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", handle).unwrap().with_pool(2, 8);
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.serve_n(requests).unwrap());
+    (addr, srv)
+}
+
+fn rule_row<'a>(doc: &'a Json, name: &str) -> &'a Json {
+    doc.get("rules")
+        .and_then(|r| r.as_arr())
+        .unwrap()
+        .iter()
+        .find(|r| r.get("name").and_then(|n| n.as_str()) == Some(name))
+        .unwrap_or_else(|| panic!("rule {name} missing"))
+}
+
+fn count_events(logs: &Json, msg: &str, rule: &str) -> usize {
+    logs.get("events")
+        .and_then(|e| e.as_arr())
+        .unwrap()
+        .iter()
+        .filter(|ev| {
+            ev.get("msg").and_then(|m| m.as_str()) == Some(msg)
+                && ev.get("rule").and_then(|r| r.as_str()) == Some(rule)
+        })
+        .count()
+}
+
+/// The acceptance path: two injected faults (a preemption storm from
+/// synthetic history samples, a forced drift-sentinel trip) drive two
+/// rules fire → resolve deterministically, with exactly one log event
+/// per edge and the gauge flip visible over HTTP.
+#[test]
+fn injected_faults_fire_and_resolve_two_rules_over_http() {
+    let handle = CoordinatorHandle::detached();
+    let m = &handle.metrics;
+
+    // storm: 16 preemptions over 3.5 s of synthetic samples (≫ 0.5/s)
+    m.history.push(Sample { t_s: 0.0, ..Sample::default() });
+    m.history.push(Sample { t_s: 1.0, preemptions: 5, ..Sample::default() });
+    // drift: the sentinel's mirrored gauge reads 2 tripped sites
+    m.set("drift_sites_tripped", 2.0);
+
+    // tick 1: drift (for 0 s) fires immediately; the storm rule only
+    // arms (for 2 s of hysteresis)
+    handle.alerts.tick_at(m, &handle.log, 1.0);
+    assert_eq!(handle.alerts.firing(), vec!["drift_tripped"]);
+
+    m.history.push(Sample { t_s: 2.0, preemptions: 10, ..Sample::default() });
+    handle.alerts.tick_at(m, &handle.log, 2.0); // held 1.0 s < 2 s: still pending
+    assert_eq!(handle.alerts.firing(), vec!["drift_tripped"]);
+
+    m.history.push(Sample { t_s: 3.5, preemptions: 16, ..Sample::default() });
+    handle.alerts.tick_at(m, &handle.log, 3.5); // held 2.5 s ≥ 2 s: fires
+    assert_eq!(handle.alerts.firing().len(), 2);
+
+    let (addr, srv) = boot(handle.clone(), 6);
+
+    // surface 1 while firing: /alerts JSON
+    let (code, body) = http_get(&addr, "/alerts").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("firing").and_then(|v| v.as_f64()), Some(2.0));
+    let storm = rule_row(&doc, "preemption_storm");
+    assert_eq!(storm.get("state").and_then(|s| s.as_str()), Some("firing"));
+    assert!(storm.get("value").and_then(|v| v.as_f64()).unwrap() > 0.5, "{body}");
+    assert_eq!(rule_row(&doc, "drift_tripped").get("state").and_then(|s| s.as_str()), Some("firing"));
+
+    // surface 2 while firing: Prometheus gauges
+    let (code, prom) = http_get(&addr, "/metrics?format=prom").unwrap();
+    assert_eq!(code, 200);
+    assert!(prom.contains("tpcc_alert_firing{rule=\"preemption_storm\"} 1\n"), "{prom}");
+    assert!(prom.contains("tpcc_alert_firing{rule=\"drift_tripped\"} 1\n"), "{prom}");
+
+    // clear both faults: a quiet sample far past the rate window ages
+    // the storm out; the sentinel gauge drops back to zero
+    handle.metrics.history.push(Sample { t_s: 20.0, preemptions: 16, ..Sample::default() });
+    handle.metrics.set("drift_sites_tripped", 0.0);
+    handle.alerts.tick_at(&handle.metrics, &handle.log, 20.0);
+    assert!(handle.alerts.firing().is_empty());
+
+    let (code, body) = http_get(&addr, "/alerts").unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("firing").and_then(|v| v.as_f64()), Some(0.0));
+    for name in ["preemption_storm", "drift_tripped"] {
+        let row = rule_row(&doc, name);
+        assert_eq!(row.get("state").and_then(|s| s.as_str()), Some("inactive"), "{name}");
+        assert_eq!(row.get("fired_total").and_then(|v| v.as_f64()), Some(1.0), "{name}");
+        assert_eq!(row.get("resolved_total").and_then(|v| v.as_f64()), Some(1.0), "{name}");
+    }
+
+    let (_, prom) = http_get(&addr, "/metrics?format=prom").unwrap();
+    assert!(prom.contains("tpcc_alert_firing{rule=\"preemption_storm\"} 0\n"), "{prom}");
+    assert!(prom.contains("tpcc_alert_fired_total{rule=\"preemption_storm\"} 1\n"), "{prom}");
+    assert!(prom.contains("tpcc_alert_resolved_total{rule=\"drift_tripped\"} 1\n"), "{prom}");
+
+    // surface 3: the log carries exactly one event per edge. Firing
+    // edges log at the rule's severity (warn), so the warn filter keeps
+    // them; resolved edges log at info and need the full tail.
+    let (code, warns) = http_get(&addr, "/logs?last=100&level=warn").unwrap();
+    assert_eq!(code, 200);
+    let warns = Json::parse(&warns).unwrap();
+    assert_eq!(count_events(&warns, "alert firing", "preemption_storm"), 1, "{warns:?}");
+    assert_eq!(count_events(&warns, "alert firing", "drift_tripped"), 1);
+    assert_eq!(count_events(&warns, "alert resolved", "preemption_storm"), 0);
+
+    let (_, all) = http_get(&addr, "/logs?last=100").unwrap();
+    let all = Json::parse(&all).unwrap();
+    assert_eq!(count_events(&all, "alert firing", "preemption_storm"), 1);
+    assert_eq!(count_events(&all, "alert resolved", "preemption_storm"), 1);
+    assert_eq!(count_events(&all, "alert resolved", "drift_tripped"), 1);
+    srv.join().unwrap();
+}
+
+/// A cumulative-counter reset (coordinator restart feeding an old ring)
+/// must read as a zero rate, not a negative or huge one — so no storm.
+#[test]
+fn counter_reset_reads_as_zero_rate_and_never_fires() {
+    let handle = CoordinatorHandle::detached();
+    let m = &handle.metrics;
+    m.history.push(Sample { t_s: 0.0, preemptions: 100, ..Sample::default() });
+    m.history.push(Sample { t_s: 1.0, preemptions: 2, ..Sample::default() });
+    let rates = m.history.rates_at(10.0, 1.0).unwrap();
+    assert_eq!(rates.preemptions_per_s, 0.0);
+    handle.alerts.tick_at(m, &handle.log, 1.0);
+    assert!(handle.alerts.firing().is_empty());
+}
+
+/// Every answered connection lands in the per-(route, status) counters:
+/// known routes by literal, unknown paths as `(other)`, unparseable
+/// requests as `(malformed)` — plus build info and uptime on both
+/// metric surfaces, and access-log events for each request.
+#[test]
+fn http_request_counters_build_info_and_access_log_over_http() {
+    let handle = CoordinatorHandle::detached();
+    let (addr, srv) = boot(handle, 6);
+
+    let (code, _) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    let (code, _) = http_get(&addr, "/no/such/route").unwrap();
+    assert_eq!(code, 404);
+
+    // a malformed request line (no path) must answer 400 and count
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    raw.read_to_string(&mut resp).unwrap();
+    assert!(resp.contains("400"), "{resp}");
+    drop(raw);
+
+    // the recorder runs right after each response is written; give the
+    // worker that instant before reading the counters back
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let (code, body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    let http = doc.get("http_requests").expect("http_requests object");
+    let count = |route: &str, status: &str| {
+        http.get(route).and_then(|r| r.get(status)).and_then(|v| v.as_f64())
+    };
+    assert_eq!(count("/healthz", "200"), Some(1.0), "{body}");
+    assert_eq!(count("(other)", "404"), Some(1.0), "{body}");
+    assert_eq!(count("(malformed)", "400"), Some(1.0), "{body}");
+    assert!(doc.get("build_version").and_then(|v| v.as_str()).is_some_and(|v| !v.is_empty()));
+    assert!(doc.get("build_git").and_then(|v| v.as_str()).is_some_and(|v| !v.is_empty()));
+    assert!(doc.get("uptime_seconds").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+
+    let (_, prom) = http_get(&addr, "/metrics?format=prom").unwrap();
+    assert!(prom.contains("tpcc_http_requests_total{path=\"/healthz\",status=\"200\"} 1\n"), "{prom}");
+    assert!(prom.contains("tpcc_http_requests_total{path=\"(malformed)\",status=\"400\"} 1\n"), "{prom}");
+    assert!(prom.contains("tpcc_build_info{version=\""), "{prom}");
+    assert!(prom.contains("tpcc_uptime_seconds "), "{prom}");
+    assert!(prom.contains("tpcc_alert_firing{rule=\"ttft_slo_burn\"} 0\n"), "{prom}");
+
+    // one access-log event per answered request, raw path preserved
+    let (code, logs) = http_get(&addr, "/logs?last=100").unwrap();
+    assert_eq!(code, 200);
+    let logs = Json::parse(&logs).unwrap();
+    let access: Vec<&Json> = logs
+        .get("events")
+        .and_then(|e| e.as_arr())
+        .unwrap()
+        .iter()
+        .filter(|ev| ev.get("msg").and_then(|m| m.as_str()) == Some("access"))
+        .collect();
+    assert!(access.len() >= 4, "access events: {}", access.len());
+    assert!(access
+        .iter()
+        .any(|ev| ev.get("path").and_then(|p| p.as_str()) == Some("/no/such/route")));
+    assert!(access
+        .iter()
+        .all(|ev| ev.get("latency_s").and_then(|l| l.as_f64()).unwrap() >= 0.0));
+    srv.join().unwrap();
+}
